@@ -1,0 +1,123 @@
+//! End-to-end driver: proves all three layers compose on a real
+//! workload.
+//!
+//! 1. **Execute**: load the AOT-compiled `tinycnn_train_step` artifact
+//!    (L1 Pallas GEMM/conv kernels inside an L2 JAX fwd+bwd+SGD graph)
+//!    on CPU PJRT and train it for a few hundred steps on synthetic
+//!    labeled data, logging the loss curve (results/e2e_loss.csv).
+//! 2. **Analyze**: feed the *same network* (as a layer table) through
+//!    the DeepNVM++ pipeline — traffic model -> EDAP-tuned caches ->
+//!    energy/EDP — and report the paper's headline metric for the
+//!    workload we just executed.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_train [steps]`
+
+use deepnvm::analysis::{evaluate, DramCost};
+use deepnvm::device::MemTech;
+use deepnvm::nvsim::explorer::tuned_cache;
+use deepnvm::runtime::{trainer, Engine};
+use deepnvm::util::csv::Csv;
+use deepnvm::workload::models::{Dnn, Layer, LayerKind, Phase};
+use deepnvm::workload::traffic::TrafficModel;
+
+const MB: u64 = 1024 * 1024;
+
+/// TinyCNN as a workload-zoo entry (must mirror python/compile/model.py).
+fn tinycnn_dnn() -> Dnn {
+    let conv = |name: &str, cin, cout, in_hw| Layer {
+        name: name.to_string(),
+        kind: LayerKind::Conv { k: 3, stride: 1, pad: 1, cin, cout, groups: 1 },
+        in_hw,
+        out_hw: in_hw,
+    };
+    let fc = |name: &str, din, dout| Layer {
+        name: name.to_string(),
+        kind: LayerKind::Fc { din, dout },
+        in_hw: 1,
+        out_hw: 1,
+    };
+    Dnn {
+        name: "TinyCNN",
+        top5_error: f64::NAN,
+        layers: vec![
+            conv("conv1", 3, 16, 16),
+            Layer { name: "pool1".into(), kind: LayerKind::Pool { k: 2, stride: 2 }, in_hw: 16, out_hw: 8 },
+            conv("conv2", 16, 32, 8),
+            Layer { name: "pool2".into(), kind: LayerKind::Pool { k: 2, stride: 2 }, in_hw: 8, out_hw: 4 },
+            fc("fc1", 512, 64),
+            fc("fc2", 64, 10),
+        ],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    // ---- 1. execute ----------------------------------------------------
+    println!("== phase 1: train TinyCNN via PJRT (AOT Pallas/JAX artifact) ==");
+    let engine = Engine::default()?;
+    println!("platform: {}", engine.platform());
+    let (report, params) = trainer::train(&engine, steps, 0.05, 7, |s, l| {
+        if s % 25 == 0 {
+            println!("  step {s:>4}  loss {l:.4}");
+        }
+    })?;
+    let acc = trainer::eval_accuracy(&engine, &params, 999)?;
+    println!(
+        "  {} steps x batch {} in {:.1}s ({:.1} steps/s)",
+        report.steps, report.batch, report.seconds, report.steps_per_sec()
+    );
+    println!(
+        "  loss {:.3} -> {:.3}; held-out accuracy {:.0}% (chance 10%)",
+        report.first_loss(),
+        report.last_loss(),
+        acc * 100.0
+    );
+    assert!(
+        report.last_loss() < report.first_loss(),
+        "training must reduce the loss"
+    );
+
+    let mut csv = Csv::new(&["step", "loss"]);
+    for (i, l) in report.losses.iter().enumerate() {
+        csv.row(&[i.to_string(), format!("{l:.6}")]);
+    }
+    csv.write("results/e2e_loss.csv")?;
+    println!("  loss curve -> results/e2e_loss.csv");
+
+    // ---- 2. analyze -----------------------------------------------------
+    println!("\n== phase 2: DeepNVM++ analysis of the same workload ==");
+    let dnn = tinycnn_dnn();
+    let stats = TrafficModel::default().run(&dnn, Phase::Training, report.batch);
+    println!(
+        "  per-step L2 traffic: {:.2} M reads / {:.2} M writes (R/W {:.1}), {:.2} M DRAM tx",
+        stats.l2_reads as f64 / 1e6,
+        stats.l2_writes as f64 / 1e6,
+        stats.rw_ratio(),
+        stats.dram_total() as f64 / 1e6
+    );
+
+    let dram = DramCost::default();
+    let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+    let base = evaluate(&stats, &sram, Some(dram));
+    println!(
+        "  SRAM 3MB baseline: {:.2} uJ, {:.1} us per training step (cache+DRAM model)",
+        base.energy() * 1e6,
+        base.time_total * 1e6
+    );
+    for tech in [MemTech::SttMram, MemTech::SotMram] {
+        let ppa = tuned_cache(tech, 3 * MB).ppa;
+        let e = evaluate(&stats, &ppa, Some(dram));
+        println!(
+            "  {:<9} energy {:.1}x lower, EDP {:.1}x lower (headline metric)",
+            tech.name(),
+            base.energy() / e.energy(),
+            base.edp() / e.edp()
+        );
+    }
+    println!("\nall three layers composed: Pallas kernel -> JAX graph -> HLO -> PJRT -> analysis");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Full iso-area study (paper §IV-B): runs the GPU hierarchy simulator
+//! to regenerate Fig 6 (DRAM-access reduction vs L2 capacity), then the
+//! iso-area energy/EDP analyses of Figs 7-8 using the measured
+//! reductions. Writes CSVs to `results/`.
+//!
+//! Run: `cargo run --release --example iso_area_study [--quick]`
+
+use deepnvm::analysis::iso_area;
+use deepnvm::coordinator::reports;
+use deepnvm::coordinator::store::Store;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let batch = if quick { 1 } else { 4 };
+    let mut store = Store::new("results");
+
+    println!("simulating AlexNet through the memory hierarchy (batch {batch})...");
+    let f6 = reports::fig6(batch);
+    println!("{}", f6.text);
+    store.save(&f6)?;
+
+    // feed the measured reductions into the energy/EDP analysis
+    let red_stt = iso_area::dram_reduction_at(iso_area::STT_MB, batch);
+    let red_sot = iso_area::dram_reduction_at(iso_area::SOT_MB, batch);
+    println!(
+        "measured DRAM reductions: STT@7MB {:.1}%, SOT@10MB {:.1}%\n",
+        red_stt * 100.0,
+        red_sot * 100.0
+    );
+    let (f7, f8) = reports::fig7_fig8(Some((red_stt, red_sot)));
+    println!("{}", f7.text);
+    println!("{}", f8.text);
+    store.save(&f7)?;
+    store.save(&f8)?;
+
+    store.finish(&[("study", "iso_area")])?;
+    println!("CSVs written to results/ (f6.csv, f7.csv, f8.csv)");
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Full iso-capacity study (paper §IV-A): regenerates Figs 3, 4 and 5
+//! across the five-DNN zoo and writes the CSVs to `results/`.
+//!
+//! Run: `cargo run --release --example iso_capacity_study`
+
+use deepnvm::coordinator::reports;
+use deepnvm::coordinator::store::Store;
+
+fn main() -> anyhow::Result<()> {
+    let mut store = Store::new("results");
+
+    let (f3, f4) = reports::fig3_fig4();
+    println!("{}", f3.text);
+    println!("{}", f4.text);
+    store.save(&f3)?;
+    store.save(&f4)?;
+
+    let f5 = reports::fig5(&[1, 4, 16, 64, 128, 256]);
+    println!("{}", f5.text);
+    store.save(&f5)?;
+
+    store.finish(&[("study", "iso_capacity")])?;
+    println!("CSVs written to results/ (f3.csv, f4.csv, f5.csv)");
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Scalability study (paper §IV-C): EDAP-tunes every memory at every
+//! capacity 1-32 MB (Fig 9) and projects normalized workload
+//! energy/latency/EDP with cross-workload error bars (Fig 10).
+//!
+//! Run: `cargo run --release --example scalability_study`
+
+use deepnvm::coordinator::reports;
+use deepnvm::coordinator::store::Store;
+
+fn main() -> anyhow::Result<()> {
+    let caps: Vec<u64> = vec![1, 2, 4, 8, 16, 32];
+    let mut store = Store::new("results");
+
+    let f9 = reports::fig9(&caps);
+    println!("{}", f9.text);
+    store.save(&f9)?;
+
+    let f10 = reports::fig10(&caps);
+    println!("{}", f10.text);
+    store.save(&f10)?;
+
+    store.finish(&[("study", "scalability")])?;
+    println!("CSVs written to results/ (f9.csv, f10.csv)");
+    Ok(())
+}

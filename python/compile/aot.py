@@ -1,0 +1,139 @@
+"""AOT compile path: lower the L2 JAX workloads to HLO **text** artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+``HloModuleProto`` — is the interchange format. jax >= 0.5 emits protos
+with 64-bit instruction ids which the runtime's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the HLO *text* parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out ../artifacts`` from ``python/``
+(the Makefile `artifacts` target). Emits one ``<name>.hlo.txt`` per
+workload plus ``manifest.json`` describing argument/result shapes so the
+Rust runtime (rust/src/runtime/artifact.rs) can allocate buffers without
+re-parsing HLO.
+
+Python runs ONLY here: never on the analysis/request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _meta(specs):
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in specs
+    ]
+
+
+def build_artifacts():
+    """Return {name: (lowered, in_specs, out_specs, extra_meta)}."""
+    arts = {}
+
+    # --- Standalone Pallas GEMM microbenchmark -------------------------
+    m = k = n = 128
+    gemm_in = [_spec((m, k)), _spec((k, n))]
+    arts["gemm_128"] = (
+        jax.jit(model.gemm).lower(*gemm_in),
+        gemm_in,
+        [_spec((m, n))],
+        {"kind": "gemm", "m": m, "k": k, "n": n},
+    )
+
+    # --- TinyCNN inference ---------------------------------------------
+    batch_i = 32
+    p0 = model.tinycnn_init(0)
+    pspecs = [_spec(p.shape) for p in p0]
+    x_i = _spec((batch_i, model.TINYCNN_IMG, model.TINYCNN_IMG, 3))
+    arts["tinycnn_infer"] = (
+        jax.jit(model.tinycnn_logits).lower(tuple(pspecs), x_i),
+        pspecs + [x_i],
+        [_spec((batch_i, model.TINYCNN_CLASSES))],
+        {"kind": "infer", "batch": batch_i, "n_params": len(pspecs)},
+    )
+
+    # --- TinyCNN fused SGD train step ----------------------------------
+    batch_t = 32
+    x_t = _spec((batch_t, model.TINYCNN_IMG, model.TINYCNN_IMG, 3))
+    y_t = _spec((batch_t,), jnp.int32)
+    lr = _spec((), jnp.float32)
+    # donate params: the runtime threads new params back each step.
+    arts["tinycnn_train_step"] = (
+        jax.jit(model.tinycnn_train_step, donate_argnums=(0,)).lower(
+            tuple(pspecs), x_t, y_t, lr
+        ),
+        pspecs + [x_t, y_t, lr],
+        [_spec(())] + pspecs,
+        {"kind": "train_step", "batch": batch_t, "n_params": len(pspecs)},
+    )
+
+    # --- MicroAlexNet inference (workload-zoo validation graph) --------
+    batch_a = 4
+    ap0 = model.microalex_init(1)
+    aspecs = [_spec(p.shape) for p in ap0]
+    x_a = _spec((batch_a, model.MICROALEX_IMG, model.MICROALEX_IMG, 3))
+    arts["microalex_infer"] = (
+        jax.jit(model.microalex_logits).lower(tuple(aspecs), x_a),
+        aspecs + [x_a],
+        [_spec((batch_a, 10))],
+        {"kind": "infer", "batch": batch_a, "n_params": len(aspecs)},
+    )
+
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, (lowered, ins, outs, extra) in build_artifacts().items():
+        if only and name not in only:
+            continue
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _meta(ins),
+            "outputs": _meta(outs),
+            **extra,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""L1 Pallas kernels: the compute hot-spot of the DL workloads that
+DeepNVM++ analyzes.
+
+Everything here is build-time only: kernels are lowered (interpret=True,
+CPU-PJRT compatible) into the L2 model HLO by ``compile/aot.py`` and then
+executed from the Rust coordinator. The BlockSpec tiling schedule in
+``matmul.py`` is mirrored by ``rust/src/workload/trace.rs`` to generate
+the L2-cache transaction traces for the architecture-level analysis.
+"""
+
+from .matmul import matmul, matmul_pallas, MatmulConfig, default_config
+from .conv import conv2d, conv2d_im2col
+from . import ref
+
+__all__ = [
+    "matmul",
+    "matmul_pallas",
+    "MatmulConfig",
+    "default_config",
+    "conv2d",
+    "conv2d_im2col",
+    "ref",
+]

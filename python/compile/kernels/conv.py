@@ -1,0 +1,59 @@
+"""Conv2D expressed as im2col + the Pallas tiled matmul (L1).
+
+This mirrors how the paper's GPU workloads (Caffe on a 1080 Ti) actually
+execute convolutions: im2col lowering followed by a blocked SGEMM. The
+per-layer L2-transaction model in rust/src/workload/traffic.rs is derived
+from exactly this schedule (ifmap patch reads, filter block reads, ofmap
+writes), so the kernel is the single source of truth for the memory
+behaviour DeepNVM++ analyzes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul, MatmulConfig, default_config
+
+
+def conv2d_im2col(
+    x: jax.Array,
+    w: jax.Array,
+    stride: int = 1,
+    padding: int = 0,
+    cfg: MatmulConfig | None = None,
+) -> jax.Array:
+    """NHWC conv via im2col + Pallas GEMM.
+
+    x: (N, H, W, Cin); w: (KH, KW, Cin, Cout) -> (N, HO, WO, Cout).
+    ``conv_general_dilated_patches`` is differentiable, and the GEMM has a
+    custom VJP, so the whole op trains.
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, f"channel mismatch {cin} vs {cin2}"
+
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (wdt + 2 * padding - kw) // stride + 1
+
+    # (N, HO, WO, Cin*KH*KW) patches; feature dim ordered (cin, kh, kw).
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    m = n * ho * wo
+    kdim = cin * kh * kw
+    a = patches.reshape(m, kdim)
+    # Match the patch feature order (cin, kh, kw).
+    b = jnp.transpose(w, (2, 0, 1, 3)).reshape(kdim, cout)
+
+    if cfg is None:
+        cfg = default_config(m, kdim, cout)
+    y = matmul(a, b, cfg)
+    return y.reshape(n, ho, wo, cout)
+
+
+def conv2d(x, w, stride=1, padding=0, cfg=None):
+    """Public conv entry point (alias for the im2col/GEMM path)."""
+    return conv2d_im2col(x, w, stride=stride, padding=padding, cfg=cfg)

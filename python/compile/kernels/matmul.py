@@ -1,0 +1,145 @@
+"""Tiled Pallas matmul kernel (L1).
+
+The kernel expresses the HBM->VMEM block schedule with BlockSpecs: grid
+(M/bm, N/bn, K/bk), blocks of A (bm x bk), B (bk x bn), accumulating into
+an output block (bm x bn) kept resident in VMEM across the K axis.
+
+TPU adaptation notes (DESIGN.md SS2): the paper's workloads ran on a GPU
+where the analogous schedule is threadblock tiling through the L2/shared
+memory. On TPU the block shapes are chosen so that
+  bm*bk + bk*bn + bm*bn  floats fit comfortably in VMEM (~16 MB/core)
+and bm/bn/bk are multiples of the MXU systolic tile (128) when the
+problem is large enough. interpret=True is mandatory here: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+A custom VJP is provided so the L2 training graph can differentiate
+through the kernel (dA = dY @ B^T, dB = A^T @ dY, both computed with the
+same Pallas kernel).
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class MatmulConfig:
+    """Block schedule for the tiled matmul.
+
+    The same numbers drive rust/src/workload/trace.rs when generating
+    cache-line traces for gpusim.
+    """
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        """Resident VMEM footprint of one grid step (A, B and O blocks)."""
+        return dtype_bytes * (
+            self.bm * self.bk + self.bk * self.bn + self.bm * self.bn
+        )
+
+    def mxu_utilization(self) -> float:
+        """Fraction of MXU 128x128 systolic tiles that carry real work."""
+        def frac(b):
+            return min(b, 128) / 128.0
+
+        return frac(self.bm) * frac(self.bn)
+
+
+def default_config(m: int, k: int, n: int) -> MatmulConfig:
+    """Pick a block schedule for the given problem.
+
+    Shrinks blocks for small problems so padding waste stays bounded,
+    keeps MXU-aligned 128 tiles for large ones.
+    """
+
+    def pick(dim, pref):
+        b = pref
+        while b > 8 and b > dim:
+            b //= 2
+        return max(b, 8)
+
+    return MatmulConfig(bm=pick(m, 128), bn=pick(n, 128), bk=pick(k, 128))
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o[bm,bn] (+)= a[bm,bk] @ b[bk,bn].
+
+    Grid is (M/bm, N/bn, K/bk) with K innermost; the output block stays
+    resident while K streams through VMEM (the "accumulate in scratch"
+    pattern - on real TPU this keeps partial sums out of HBM entirely).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, cfg: MatmulConfig) -> jax.Array:
+    """Raw pallas_call wrapper: pads to block multiples, runs the grid,
+    slices the result back. No autodiff rule - see ``matmul``."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dims mismatch: {k} vs {k2}"
+    out_dtype = jnp.result_type(a.dtype, b.dtype)
+
+    ap = _pad_to(a, cfg.bm, cfg.bk)
+    bp = _pad_to(b, cfg.bk, cfg.bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+
+    grid = (mp // cfg.bm, np_ // cfg.bn, kp // cfg.bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def matmul(a: jax.Array, b: jax.Array, cfg: MatmulConfig | None = None):
+    """Differentiable tiled matmul; the public kernel entry point."""
+    if cfg is None:
+        cfg = default_config(a.shape[0], a.shape[1], b.shape[1])
+    return matmul_pallas(a, b, cfg)
+
+
+def _matmul_fwd(a, b, cfg):
+    return matmul(a, b, cfg), (a, b)
+
+
+def _matmul_bwd(cfg, res, dy):
+    a, b = res
+    # Both grads reuse the same Pallas kernel (transposed operands), so
+    # the backward pass exercises the identical HBM<->VMEM schedule.
+    da = matmul(dy, b.T, None)
+    db = matmul(a.T, dy, None)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,26 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle to float32 tolerance;
+pytest (python/tests/test_kernels.py) enforces it with hypothesis sweeps
+over shapes and dtypes. These functions are intentionally the most naive
+correct implementations available.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference GEMM."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.result_type(a, b))
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0):
+    """Reference NHWC conv2d via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

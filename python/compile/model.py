@@ -1,0 +1,176 @@
+"""L2: JAX compute graphs for the DL workloads DeepNVM++ analyzes.
+
+Two roles:
+
+1. **Executable workloads** for the Rust runtime (AOT-lowered to HLO text
+   by ``aot.py``): a parameterized CNN family scaled so that
+   interpret-mode Pallas kernels run in reasonable time on CPU-PJRT.
+   ``tinycnn`` is trainable end-to-end (fwd + bwd + SGD step fused into a
+   single donated-buffer HLO module) and drives ``examples/e2e_train.rs``.
+
+2. **Ground truth** for the analytic per-layer memory model: every conv /
+   dense here routes through the L1 Pallas kernels, whose BlockSpec
+   schedule is what ``rust/src/workload/traffic.rs`` models analytically
+   for the full-size networks (AlexNet..SqueezeNet, Table III).
+
+All parameters travel as flat tuples (stable ordering) so the Rust side
+can allocate/feed buffers without pytree machinery.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, matmul
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+# TinyCNN: 16x16x3 -> conv3x3(16) -> relu -> pool2 -> conv3x3(32) -> relu
+#          -> pool2 -> flatten(512) -> dense(64) -> relu -> dense(10)
+TINYCNN_IMG = 16
+TINYCNN_CLASSES = 10
+TINYCNN_PARAM_SHAPES = [
+    ("conv1_w", (3, 3, 3, 16)),
+    ("conv1_b", (16,)),
+    ("conv2_w", (3, 3, 16, 32)),
+    ("conv2_b", (32,)),
+    ("fc1_w", (512, 64)),
+    ("fc1_b", (64,)),
+    ("fc2_w", (64, 10)),
+    ("fc2_b", (10,)),
+]
+
+
+def tinycnn_init(seed: int = 0):
+    """He-initialized TinyCNN parameters as a flat tuple."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(TINYCNN_PARAM_SHAPES))
+    params = []
+    for key, (name, shape) in zip(keys, TINYCNN_PARAM_SHAPES):
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(jnp.prod(jnp.array(shape[:-1])))
+            params.append(_he(key, shape, fan_in))
+    return tuple(params)
+
+
+def _maxpool2(x):
+    """2x2/2 max pool, NHWC."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def tinycnn_logits(params, x):
+    """TinyCNN forward. x: (N, 16, 16, 3) -> (N, 10). All convs and
+    denses route through the L1 Pallas kernels."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    h = conv2d(x, c1w, stride=1, padding=1) + c1b
+    h = _maxpool2(jax.nn.relu(h))
+    h = conv2d(h, c2w, stride=1, padding=1) + c2b
+    h = _maxpool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(matmul(h, f1w, None) + f1b)
+    return matmul(h, f2w, None) + f2b
+
+
+def tinycnn_loss(params, x, y):
+    """Mean softmax cross-entropy; y: (N,) int32 labels."""
+    logits = tinycnn_logits(params, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def tinycnn_train_step(params, x, y, lr):
+    """One fused SGD step: returns (loss, *new_params).
+
+    Lowered as a single HLO module; the Rust e2e driver threads the
+    returned params back in each step (buffer donation happens at the
+    PJRT level via aot.py's donate_argnums).
+    """
+    loss, grads = jax.value_and_grad(tinycnn_loss)(params, x, y)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (loss,) + new_params
+
+
+def tinycnn_accuracy(params, x, y):
+    """Top-1 accuracy over a batch."""
+    pred = jnp.argmax(tinycnn_logits(params, x), axis=1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# MicroAlexNet: a faithfully-shaped (conv-stack) AlexNet scaled to 32x32
+# inputs so interpret-mode Pallas runs on CPU. Used by the runtime to
+# validate that the workload zoo's layer walk matches an executable graph.
+# --------------------------------------------------------------------------
+
+MICROALEX_IMG = 32
+MICROALEX_LAYERS = [
+    # (name, kind, params) mirroring AlexNet's 5-conv/3-fc topology.
+    ("conv1", "conv", dict(k=3, cin=3, cout=16, stride=1, pad=1)),
+    ("pool1", "pool", {}),
+    ("conv2", "conv", dict(k=3, cin=16, cout=32, stride=1, pad=1)),
+    ("pool2", "pool", {}),
+    ("conv3", "conv", dict(k=3, cin=32, cout=48, stride=1, pad=1)),
+    ("conv4", "conv", dict(k=3, cin=48, cout=48, stride=1, pad=1)),
+    ("conv5", "conv", dict(k=3, cin=48, cout=32, stride=1, pad=1)),
+    ("pool5", "pool", {}),
+    ("fc6", "fc", dict(din=32 * 4 * 4, dout=256)),
+    ("fc7", "fc", dict(din=256, dout=128)),
+    ("fc8", "fc", dict(din=128, dout=10)),
+]
+
+
+def microalex_init(seed: int = 1):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, kind, p in MICROALEX_LAYERS:
+        if kind == "conv":
+            key, k1 = jax.random.split(key)
+            fan_in = p["k"] * p["k"] * p["cin"]
+            params.append(_he(k1, (p["k"], p["k"], p["cin"], p["cout"]), fan_in))
+            params.append(jnp.zeros((p["cout"],), jnp.float32))
+        elif kind == "fc":
+            key, k1 = jax.random.split(key)
+            params.append(_he(k1, (p["din"], p["dout"]), p["din"]))
+            params.append(jnp.zeros((p["dout"],), jnp.float32))
+    return tuple(params)
+
+
+def microalex_logits(params, x):
+    """MicroAlexNet forward, x: (N, 32, 32, 3) -> (N, 10)."""
+    it = iter(params)
+    h = x
+    for name, kind, p in MICROALEX_LAYERS:
+        if kind == "conv":
+            w, b = next(it), next(it)
+            h = jax.nn.relu(conv2d(h, w, stride=p["stride"], padding=p["pad"]) + b)
+        elif kind == "pool":
+            h = _maxpool2(h)
+        elif kind == "fc":
+            w, b = next(it), next(it)
+            if h.ndim > 2:
+                h = h.reshape(h.shape[0], -1)
+            h = matmul(h, w, None) + b
+            if name != "fc8":
+                h = jax.nn.relu(h)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Standalone GEMM workload (microbenchmark artifact for the runtime).
+# --------------------------------------------------------------------------
+
+def gemm(a, b):
+    """Single Pallas GEMM as its own artifact (runtime smoke/bench)."""
+    return matmul(a, b, None)

@@ -1,0 +1,51 @@
+"""Contract tests on the emitted HLO text: the properties the Rust
+runtime depends on (interchange format stability)."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def _hlo(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_pallas_interpret_lowers_to_plain_hlo():
+    """interpret=True must leave no Mosaic/TPU custom-calls behind —
+    otherwise the CPU PJRT client cannot execute the artifact."""
+    text = _hlo(model.gemm, _spec((32, 32)), _spec((32, 32)))
+    assert "custom-call" not in text.lower().replace("custom_call", "custom-call") or \
+        "mosaic" not in text.lower()
+    assert "mosaic" not in text.lower()
+
+
+def test_root_is_tuple_for_single_output():
+    """return_tuple=True: even single-output graphs return a 1-tuple,
+    which the Rust side unwraps with to_tuple()."""
+    text = _hlo(model.gemm, _spec((16, 16)), _spec((16, 16)))
+    entry = text[text.index("ENTRY"):]
+    root_line = next(l for l in entry.splitlines() if "ROOT" in l)
+    assert "tuple" in root_line, root_line
+
+
+def test_train_step_has_param_count_outputs():
+    arts = aot.build_artifacts()
+    lowered, ins, outs, extra = arts["tinycnn_train_step"]
+    text = aot.to_hlo_text(lowered)
+    # all params + loss come back: count the leaf types in the ROOT tuple
+    entry = text[text.index("ENTRY"):]
+    root_line = next(l for l in entry.splitlines() if "ROOT" in l)
+    assert root_line.count("f32[") >= len(outs), root_line
+
+
+def test_hlo_is_reparseable_text():
+    """No binary sections, stable header."""
+    text = _hlo(model.gemm, _spec((8, 8)), _spec((8, 8)))
+    assert text.startswith("HloModule")
+    assert text.isprintable() or "\n" in text
+    assert "\x00" not in text

@@ -1,0 +1,143 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and dtypes of the Pallas kernels and asserts
+allclose against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    MatmulConfig,
+    conv2d,
+    default_config,
+    matmul,
+    matmul_pallas,
+    ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+DIM = st.integers(min_value=1, max_value=96)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# GEMM
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    """Pallas GEMM == jnp GEMM for arbitrary (incl. non-multiple) shapes."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (m, k), jnp.float32)
+    b = _rand(k2, (k, n), jnp.float32)
+    got = matmul(a, b, None)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+)
+def test_matmul_block_config_invariance(bm, bn, bk):
+    """Result must not depend on the block schedule (pure perf knob)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = _rand(k1, (48, 40), jnp.float32)
+    b = _rand(k2, (40, 56), jnp.float32)
+    got = matmul_pallas(a, b, MatmulConfig(bm=bm, bn=bn, bk=bk))
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a = _rand(k1, (32, 24), dtype)
+    b = _rand(k2, (24, 16), dtype)
+    got = matmul(a, b, None)
+    want = ref.matmul(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_matmul_gradients_match_ref():
+    """Custom VJP must equal autodiff through the reference GEMM."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a = _rand(k1, (24, 40), jnp.float32)
+    b = _rand(k2, (40, 18), jnp.float32)
+
+    def f_pallas(a, b):
+        return jnp.sum(jnp.sin(matmul(a, b, None)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.sin(ref.matmul(a, b)))
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-4, atol=1e-4)
+
+
+def test_default_config_small_dims_shrink():
+    cfg = default_config(4, 4, 4)
+    assert cfg.bm == 8 and cfg.bn == 8 and cfg.bk == 8
+    cfg = default_config(512, 512, 512)
+    assert cfg.bm == 128 and cfg.bn == 128 and cfg.bk == 128
+
+
+def test_vmem_footprint_and_mxu_estimates():
+    cfg = MatmulConfig(bm=128, bn=128, bk=128)
+    assert cfg.vmem_bytes() == 4 * 3 * 128 * 128
+    assert cfg.mxu_utilization() == 1.0
+    assert MatmulConfig(bm=64, bn=128, bk=128).mxu_utilization() == 0.5
+
+
+# --------------------------------------------------------------------------
+# Conv2D
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(4, 14),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, hw, cin, cout, k, stride, pad, seed):
+    if hw + 2 * pad < k:
+        return
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (n, hw, hw, cin), jnp.float32)
+    w = _rand(k2, (k, k, cin, cout), jnp.float32)
+    got = conv2d(x, w, stride=stride, padding=pad)
+    want = ref.conv2d(x, w, stride=stride, padding=pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_gradient_matches_ref():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    x = _rand(k1, (2, 8, 8, 4), jnp.float32)
+    w = _rand(k2, (3, 3, 4, 8), jnp.float32)
+
+    g_p = jax.grad(lambda w: jnp.sum(conv2d(x, w, padding=1) ** 2))(w)
+    g_r = jax.grad(lambda w: jnp.sum(ref.conv2d(x, w, padding=1) ** 2))(w)
+    np.testing.assert_allclose(g_p, g_r, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,71 @@
+"""L2 model tests: shapes, loss behaviour, and trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _synth_batch(key, n):
+    """Synthetic classification data with learnable structure: class k
+    images have a bright kxk corner patch."""
+    kx, ky = jax.random.split(key)
+    y = jax.random.randint(ky, (n,), 0, model.TINYCNN_CLASSES)
+    x = jax.random.normal(kx, (n, model.TINYCNN_IMG, model.TINYCNN_IMG, 3)) * 0.1
+    # stamp a class-dependent mean into a corner region
+    stamp = (y[:, None, None, None].astype(jnp.float32) + 1.0) / 10.0
+    x = x.at[:, :4, :4, :].add(stamp)
+    return x, y
+
+
+def test_tinycnn_shapes():
+    params = model.tinycnn_init(0)
+    x = jnp.zeros((5, model.TINYCNN_IMG, model.TINYCNN_IMG, 3))
+    logits = model.tinycnn_logits(params, x)
+    assert logits.shape == (5, model.TINYCNN_CLASSES)
+
+
+def test_tinycnn_loss_at_init_near_uniform():
+    """At init the loss should be ~ln(10)."""
+    params = model.tinycnn_init(0)
+    x, y = _synth_batch(jax.random.PRNGKey(0), 32)
+    loss = model.tinycnn_loss(params, x, y)
+    assert abs(float(loss) - np.log(10.0)) < 0.5
+
+
+def test_tinycnn_train_step_reduces_loss():
+    """A few fused SGD steps on one batch must reduce the loss."""
+    params = model.tinycnn_init(0)
+    x, y = _synth_batch(jax.random.PRNGKey(1), 32)
+    step = jax.jit(model.tinycnn_train_step)
+    lr = jnp.float32(0.05)
+    out = step(params, x, y, lr)
+    first = float(out[0])
+    params = out[1:]
+    for _ in range(5):
+        out = step(params, x, y, lr)
+        params = out[1:]
+    last = float(out[0])
+    assert last < first, f"loss did not fall: {first} -> {last}"
+
+
+def test_tinycnn_param_shapes_match_spec():
+    params = model.tinycnn_init(0)
+    assert len(params) == len(model.TINYCNN_PARAM_SHAPES)
+    for p, (_, shape) in zip(params, model.TINYCNN_PARAM_SHAPES):
+        assert p.shape == shape
+
+
+def test_microalex_shapes():
+    params = model.microalex_init(1)
+    x = jnp.zeros((2, model.MICROALEX_IMG, model.MICROALEX_IMG, 3))
+    logits = model.microalex_logits(params, x)
+    assert logits.shape == (2, 10)
+
+
+def test_microalex_layer_walk_covers_5conv_3fc():
+    """Topology mirrors AlexNet: 5 conv + 3 fc (Table III row 1)."""
+    convs = [l for l in model.MICROALEX_LAYERS if l[1] == "conv"]
+    fcs = [l for l in model.MICROALEX_LAYERS if l[1] == "fc"]
+    assert len(convs) == 5 and len(fcs) == 3

@@ -1,0 +1,79 @@
+//! Ablation bench: how much each dimension of Algorithm 1's design
+//! space matters. Regenerates the EDAP-optimal 3 MB designs with parts
+//! of the search space disabled and reports the EDAP penalty — the
+//! design-choice justification DESIGN.md calls out.
+
+mod bench_common;
+
+use deepnvm::device::MemTech;
+use deepnvm::nvsim::explorer::OptTarget;
+use deepnvm::nvsim::model::evaluate;
+use deepnvm::nvsim::org::{AccessMode, CacheOrg};
+use deepnvm::nvsim::tech::{Bitcell, TechParams};
+use deepnvm::util::bench::Bench;
+use deepnvm::util::table::{f, Table};
+
+const MB: u64 = 1024 * 1024;
+
+/// Best EDAP for one memory with a restricted search space.
+fn best_edap(
+    mem: MemTech,
+    modes: &[AccessMode],
+    opts: &[OptTarget],
+) -> f64 {
+    let tech = TechParams::n16();
+    let cell = Bitcell::paper(mem);
+    let mut best = f64::INFINITY;
+    for &mode in modes {
+        for org in CacheOrg::enumerate(3 * MB, mode) {
+            let base = evaluate(&tech, &cell, &org);
+            for opt in opts {
+                best = best.min(opt.apply(&base).edap());
+            }
+        }
+    }
+    best
+}
+
+fn main() {
+    let all_modes = AccessMode::ALL;
+    let all_opts = OptTarget::ALL;
+
+    let mut t = Table::new(&["tech", "search space", "EDAP penalty"])
+        .title("Ablation: restricting Algorithm 1's search space (3 MB)");
+    for mem in MemTech::ALL {
+        let full = best_edap(mem, &all_modes, &all_opts);
+        let cases: [(&str, f64); 4] = [
+            ("full (baseline)", full),
+            (
+                "Normal mode only",
+                best_edap(mem, &[AccessMode::Normal], &all_opts),
+            ),
+            (
+                "no opt targets (ReadEDP only)",
+                best_edap(mem, &all_modes, &[OptTarget::ReadEdp]),
+            ),
+            (
+                "Normal + ReadEDP only",
+                best_edap(mem, &[AccessMode::Normal], &[OptTarget::ReadEdp]),
+            ),
+        ];
+        for (name, edap) in cases {
+            t.row(&[
+                mem.name().to_string(),
+                name.to_string(),
+                format!("{}x", f(edap / full, 3)),
+            ]);
+        }
+        t.sep();
+    }
+    println!("{}", t.to_string());
+
+    let mut b = Bench::new();
+    b.run("ablation/full_space_sram_3mb", || {
+        best_edap(MemTech::Sram, &all_modes, &all_opts)
+    });
+    b.run("ablation/restricted_space_sram_3mb", || {
+        best_edap(MemTech::Sram, &[AccessMode::Normal], &[OptTarget::ReadEdp])
+    });
+}

@@ -1,0 +1,25 @@
+#![allow(dead_code)] // each bench uses the subset it needs
+//! Shared scaffolding for the per-table/figure bench harnesses.
+//!
+//! Each bench target (a) regenerates its paper artifact and prints it
+//! (paper-vs-measured), and (b) times the underlying computation with
+//! the `util::bench` harness so `cargo bench` doubles as the perf
+//! regression suite.
+
+use deepnvm::coordinator::reports::Report;
+use deepnvm::coordinator::store::Store;
+
+/// Print a report and persist its CSV under results/.
+pub fn emit(report: &Report) {
+    println!("{}", report.text);
+    let mut store = Store::new("results");
+    if let Err(e) = store.save(report) {
+        eprintln!("warning: could not persist {}: {e}", report.id);
+    }
+    let _ = store.finish(&[("source", "bench")]);
+}
+
+/// `--quick` flag (used by CI / `make bench` smoke runs).
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}

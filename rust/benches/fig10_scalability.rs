@@ -1,0 +1,23 @@
+//! Bench F10: regenerate Fig 10 (workload-normalized scalability) and
+//! time the cross-product sweep (capacities x techs x workloads x
+//! phases).
+
+mod bench_common;
+
+use deepnvm::analysis::scalability;
+use deepnvm::coordinator::reports;
+use deepnvm::util::bench::Bench;
+
+fn main() {
+    let caps: Vec<u64> = if bench_common::quick() {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 2, 4, 8, 16, 32]
+    };
+    bench_common::emit(&reports::fig10(&caps));
+
+    let mut b = Bench::new();
+    b.run("analysis/workload_sweep_2caps", || {
+        scalability::workload_sweep(&[2, 16])
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench F3: regenerate Fig 3 (iso-capacity dynamic/leakage energy) and
+//! time the workload traffic model.
+
+mod bench_common;
+
+use deepnvm::analysis::iso_capacity;
+use deepnvm::coordinator::reports;
+use deepnvm::util::bench::Bench;
+use deepnvm::workload::models::{Dnn, Phase};
+use deepnvm::workload::traffic::TrafficModel;
+
+fn main() {
+    let (f3, _) = reports::fig3_fig4();
+    bench_common::emit(&f3);
+
+    let mut b = Bench::new();
+    b.run("analysis/iso_capacity_full_study", iso_capacity::study);
+    let vgg = Dnn::by_name("VGG-16").unwrap();
+    let m = TrafficModel::default();
+    b.run("workload/traffic_vgg16_training_b64", || {
+        m.run(&vgg, Phase::Training, 64)
+    });
+    b.run("workload/zoo_construction", Dnn::zoo);
+}

@@ -1,0 +1,25 @@
+//! Bench F4: regenerate Fig 4 (iso-capacity energy + EDP) and time the
+//! evaluation kernel.
+
+mod bench_common;
+
+use deepnvm::analysis::{evaluate, DramCost};
+use deepnvm::coordinator::reports;
+use deepnvm::device::MemTech;
+use deepnvm::nvsim::explorer::tuned_cache;
+use deepnvm::util::bench::Bench;
+use deepnvm::workload::models::{Dnn, Phase};
+use deepnvm::workload::traffic::TrafficModel;
+
+fn main() {
+    let (_, f4) = reports::fig3_fig4();
+    bench_common::emit(&f4);
+
+    let mut b = Bench::new();
+    let stats = TrafficModel::default()
+        .run_paper(&Dnn::by_name("AlexNet").unwrap(), Phase::Training);
+    let ppa = tuned_cache(MemTech::SttMram, 3 * 1024 * 1024).ppa;
+    b.run("analysis/evaluate_one_workload", || {
+        evaluate(&stats, &ppa, Some(DramCost::default()))
+    });
+}

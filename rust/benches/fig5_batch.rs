@@ -1,0 +1,18 @@
+//! Bench F5: regenerate Fig 5 (batch-size impact on AlexNet EDP) and
+//! time the batch sweep.
+
+mod bench_common;
+
+use deepnvm::analysis::iso_capacity;
+use deepnvm::coordinator::reports;
+use deepnvm::util::bench::Bench;
+
+fn main() {
+    let batches = [1usize, 4, 16, 64, 128, 256];
+    bench_common::emit(&reports::fig5(&batches));
+
+    let mut b = Bench::new();
+    b.run("analysis/batch_study_6_points", || {
+        iso_capacity::batch_study(&batches)
+    });
+}

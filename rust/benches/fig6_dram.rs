@@ -1,0 +1,29 @@
+//! Bench F6: regenerate Fig 6 (DRAM reduction vs L2 capacity) via the
+//! hierarchy simulator, and measure simulator throughput — the hot
+//! path of the whole framework (EXPERIMENTS.md §Perf target:
+//! >= 10 M trace-events/s).
+
+mod bench_common;
+
+use deepnvm::coordinator::reports;
+use deepnvm::gpusim::{GpuSim, GpuConfig};
+use deepnvm::util::bench::Bench;
+use deepnvm::workload::models::{Dnn, Phase};
+use deepnvm::workload::trace::DnnTrace;
+
+const MB: u64 = 1024 * 1024;
+
+fn main() {
+    let batch = if bench_common::quick() { 1 } else { 4 };
+    bench_common::emit(&reports::fig6(batch));
+
+    // simulator throughput on a SqueezeNet trace (~5M events)
+    let d = Dnn::by_name("SqueezeNet").unwrap();
+    let n = DnnTrace::new(&d, Phase::Inference, 1).len_estimate() as f64;
+    let mut b = Bench::new();
+    let mut f = || {
+        let mut sim = GpuSim::new(GpuConfig::gtx1080ti(3 * MB));
+        sim.run(DnnTrace::new(&d, Phase::Inference, 1)).dram_total()
+    };
+    b.run_items("gpusim/squeezenet_b1_events", n, &mut f);
+}

@@ -1,0 +1,19 @@
+//! Bench F7: regenerate Fig 7 (iso-area dynamic/leakage energy).
+
+mod bench_common;
+
+use deepnvm::analysis::iso_area;
+use deepnvm::coordinator::reports;
+use deepnvm::util::bench::Bench;
+
+fn main() {
+    // paper-measured reductions for the report (the bench times the
+    // analytic study, fig6_dram times the simulation itself)
+    let (f7, _) = reports::fig7_fig8(Some((0.146, 0.198)));
+    bench_common::emit(&f7);
+
+    let mut b = Bench::new();
+    b.run("analysis/iso_area_study_cached_reductions", || {
+        iso_area::study(Some((0.146, 0.198)))
+    });
+}

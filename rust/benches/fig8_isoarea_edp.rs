@@ -1,0 +1,22 @@
+//! Bench F8: regenerate Fig 8 (iso-area EDP without/with DRAM).
+
+mod bench_common;
+
+use deepnvm::analysis::iso_area;
+use deepnvm::coordinator::reports;
+use deepnvm::device::MemTech;
+use deepnvm::util::bench::Bench;
+
+fn main() {
+    let (_, f8) = reports::fig7_fig8(Some((0.146, 0.198)));
+    bench_common::emit(&f8);
+
+    let mut b = Bench::new();
+    b.run("analysis/iso_area_summaries", || {
+        let rows = iso_area::study(Some((0.146, 0.198)));
+        (
+            iso_area::mean_of(&rows, MemTech::SttMram, |r| r.edp_norm_with_dram),
+            iso_area::mean_of(&rows, MemTech::SotMram, |r| r.edp_norm_with_dram),
+        )
+    });
+}

@@ -1,0 +1,22 @@
+//! Bench F9: regenerate Fig 9 (capacity scaling of PPA) and time the
+//! full Algorithm 1 sweep.
+
+mod bench_common;
+
+use deepnvm::analysis::scalability;
+use deepnvm::coordinator::reports;
+use deepnvm::util::bench::Bench;
+
+fn main() {
+    let caps: Vec<u64> = if bench_common::quick() {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 2, 4, 8, 16, 32]
+    };
+    bench_common::emit(&reports::fig9(&caps));
+
+    let mut b = Bench::new();
+    b.run("nvsim/ppa_sweep_3techs_x_6caps", || {
+        scalability::ppa_sweep(&scalability::CAPACITIES_MB)
+    });
+}

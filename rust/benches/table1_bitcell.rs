@@ -1,0 +1,17 @@
+//! Bench T1: regenerate Table I (device characterization) and time the
+//! LLGS/RC characterization flow.
+
+mod bench_common;
+
+use deepnvm::coordinator::reports;
+use deepnvm::device::characterize;
+use deepnvm::util::bench::Bench;
+
+fn main() {
+    bench_common::emit(&reports::table1());
+
+    let mut b = Bench::new();
+    b.run("device/characterize_full_sweep", characterize::characterize);
+    b.run("device/stt_point_4fins", || characterize::stt_point(4));
+    b.run("device/sot_point_3fins", || characterize::sot_point(3));
+}

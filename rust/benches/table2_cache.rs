@@ -1,0 +1,35 @@
+//! Bench T2: regenerate Table II (EDAP-tuned caches) and time the
+//! design-space exploration (Algorithm 1 inner loop).
+
+mod bench_common;
+
+use deepnvm::coordinator::reports;
+use deepnvm::device::MemTech;
+use deepnvm::nvsim::explorer::tuned_cache;
+use deepnvm::nvsim::{model, org::AccessMode, CacheOrg, TechParams};
+use deepnvm::util::bench::Bench;
+
+const MB: u64 = 1024 * 1024;
+
+fn main() {
+    bench_common::emit(&reports::table2());
+
+    let mut b = Bench::new();
+    b.run("nvsim/tuned_cache_sram_3mb", || {
+        tuned_cache(MemTech::Sram, 3 * MB)
+    });
+    b.run("nvsim/tuned_cache_stt_32mb", || {
+        tuned_cache(MemTech::SttMram, 32 * MB)
+    });
+    // single-config evaluation (the innermost kernel of Algorithm 1)
+    let tech = TechParams::n16();
+    let cell = deepnvm::nvsim::tech::Bitcell::paper(MemTech::SttMram);
+    let orgs = CacheOrg::enumerate(3 * MB, AccessMode::Normal);
+    let n = orgs.len() as f64;
+    let mut f = || {
+        orgs.iter()
+            .map(|o| model::evaluate(&tech, &cell, o).edap())
+            .sum::<f64>()
+    };
+    b.run_items("nvsim/evaluate_all_3mb_orgs", n, &mut f);
+}

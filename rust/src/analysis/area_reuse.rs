@@ -1,0 +1,147 @@
+//! Area-reuse extension (paper §V, "Implications of dense NVM caches on
+//! logic usage" — left as future work there, implemented here).
+//!
+//! At iso-capacity, the MRAM cache frees 58-65% of the SRAM cache's
+//! silicon. This module quantifies what the reclaimed whitespace buys:
+//!
+//! * **More SMs**: extra streaming multiprocessors at the 1080 Ti's
+//!   per-SM area, raising peak throughput.
+//! * **More L2**: growing the MRAM cache until it refills the SRAM
+//!   footprint (this degenerates into the iso-area study, included for
+//!   continuity).
+//!
+//! The throughput model is first-order: compute-bound layers scale with
+//! SM count; memory-bound layers do not. The per-layer boundedness comes
+//! from the roofline of the traffic model.
+
+use crate::device::MemTech;
+use crate::nvsim::explorer::tuned_cache;
+use crate::workload::models::{Dnn, Phase};
+use crate::workload::traffic::{TrafficModel, TX_BYTES};
+
+const MB: u64 = 1024 * 1024;
+
+/// GTX 1080 Ti derived constants for the reuse model.
+pub mod gpu {
+    /// Die area (mm^2), GP102.
+    pub const DIE_AREA_MM2: f64 = 471.0;
+    /// SM count.
+    pub const N_SMS: f64 = 28.0;
+    /// Approximate area of one SM + its slice of fabric (mm^2):
+    /// ~60% of the die is SM tiles on GP102.
+    pub const SM_AREA_MM2: f64 = DIE_AREA_MM2 * 0.60 / N_SMS;
+    /// Peak per-SM fp32 MAC throughput (MAC/s): 128 lanes x 1.48 GHz.
+    pub const SM_MACS_PER_S: f64 = 128.0 * 1.48e9;
+    /// Sustained L2 bandwidth (B/s) for the roofline split.
+    pub const L2_BW: f64 = 1.2e12;
+}
+
+/// Outcome of spending the freed area on compute.
+///
+/// A full GP102 SM (~10 mm^2) does not fit in the ~3.4 mm^2 the MRAM
+/// cache frees — a finding in itself: at iso-capacity the reclaimed
+/// whitespace buys *fractional* SM-equivalents (extra CUDA-core
+/// clusters / wider register files), so the speedup model works in
+/// SM-equivalents rather than whole SMs.
+#[derive(Clone, Copy, Debug)]
+pub struct ReuseResult {
+    pub tech: MemTech,
+    /// Area freed by the denser cache (mm^2).
+    pub freed_mm2: f64,
+    /// Fractional SM-equivalents of compute that fit.
+    pub sm_equivalents: f64,
+    /// Workload-mean speedup from the extra compute (roofline model).
+    pub mean_speedup: f64,
+}
+
+/// Fraction of a workload's time that is compute-bound under the
+/// roofline split (MACs / SM throughput vs bytes / L2 bandwidth).
+fn compute_bound_fraction(dnn: &Dnn, phase: Phase) -> f64 {
+    let stats = TrafficModel::default().run_paper(dnn, phase);
+    let t_compute = stats.macs as f64 / (gpu::N_SMS * gpu::SM_MACS_PER_S);
+    let bytes = (stats.l2_reads + stats.l2_writes) as f64 * TX_BYTES as f64;
+    let t_mem = bytes / gpu::L2_BW;
+    t_compute / (t_compute + t_mem)
+}
+
+/// Evaluate spending the iso-capacity area savings on extra SMs.
+pub fn study() -> Vec<ReuseResult> {
+    let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+    let mut out = Vec::new();
+    for tech in [MemTech::SttMram, MemTech::SotMram] {
+        let mram = tuned_cache(tech, 3 * MB).ppa;
+        let freed_mm2 = (sram.area - mram.area) * 1e6;
+        let sm_equivalents = freed_mm2 / gpu::SM_AREA_MM2;
+        let sm_scale = (gpu::N_SMS + sm_equivalents) / gpu::N_SMS;
+
+        // Amdahl over the compute-bound fraction, averaged across zoo.
+        let mut speedups = Vec::new();
+        for dnn in Dnn::zoo() {
+            for phase in Phase::ALL {
+                let f = compute_bound_fraction(&dnn, phase);
+                speedups.push(1.0 / ((1.0 - f) + f / sm_scale));
+            }
+        }
+        out.push(ReuseResult {
+            tech,
+            freed_mm2,
+            sm_equivalents,
+            mean_speedup: crate::util::stats::mean(&speedups),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freed_area_matches_paper_percentages() {
+        // Paper §V: 58% (STT) and 65% (SOT) area reduction on average.
+        let rows = study();
+        let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa.area * 1e6;
+        for r in &rows {
+            let pct = r.freed_mm2 / sram;
+            assert!((0.45..0.75).contains(&pct), "{}: freed {pct}", r.tech);
+        }
+    }
+
+    #[test]
+    fn freed_area_buys_fractional_sms_only() {
+        // The honest §V answer: the reclaimed whitespace at 3 MB is a
+        // fraction of one SM — meaningful for core clusters, not for
+        // whole SMs.
+        for r in study() {
+            assert!(
+                (0.1..1.0).contains(&r.sm_equivalents),
+                "{}: {} SM-equivalents",
+                r.tech,
+                r.sm_equivalents
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_above_one_but_amdahl_limited() {
+        for r in study() {
+            let sm_scale = (gpu::N_SMS + r.sm_equivalents) / gpu::N_SMS;
+            assert!(r.mean_speedup > 1.0, "{}", r.tech);
+            assert!(
+                r.mean_speedup < sm_scale,
+                "{}: speedup {} exceeds SM scaling {}",
+                r.tech,
+                r.mean_speedup,
+                sm_scale
+            );
+        }
+    }
+
+    #[test]
+    fn compute_bound_fraction_sane() {
+        for d in Dnn::zoo() {
+            let f = compute_bound_fraction(&d, Phase::Inference);
+            assert!((0.0..1.0).contains(&f), "{}: {f}", d.name);
+        }
+    }
+}

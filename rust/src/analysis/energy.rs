@@ -1,0 +1,155 @@
+//! The paper's evaluation model (§III-B): transaction-weighted energy
+//! and latency, leakage x runtime, optional DRAM terms.
+
+use crate::nvsim::CachePpa;
+use crate::workload::traffic::WorkloadStats;
+
+/// Per-transaction DRAM cost (32 B). Defaults follow the gpusim DRAM
+/// timing model with 11-channel overlap; the energy figure is in line
+/// with the Eyeriss relative-cost ladder the paper cites (DRAM ~200x a
+/// MAC, global buffer ~6x).
+#[derive(Clone, Copy, Debug)]
+pub struct DramCost {
+    pub energy_per_tx: f64,
+    pub latency_per_tx: f64,
+}
+
+impl Default for DramCost {
+    fn default() -> Self {
+        DramCost {
+            energy_per_tx: 3.8e-9,
+            // 15 ns row hit / 11 channels of overlap
+            latency_per_tx: 15e-9 / 11.0,
+        }
+    }
+}
+
+/// Energy/latency breakdown of one workload on one cache design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Evaluation {
+    /// Dynamic L2 energy, reads / writes (J).
+    pub dyn_read: f64,
+    pub dyn_write: f64,
+    /// Leakage energy over the (cache-only) runtime (J).
+    pub leakage: f64,
+    /// DRAM energy (J), zero when DRAM is excluded.
+    pub dram_energy: f64,
+    /// Cache-only runtime (s): R x read_lat + W x write_lat.
+    pub time_cache: f64,
+    /// Runtime including DRAM service time (s).
+    pub time_total: f64,
+}
+
+impl Evaluation {
+    pub fn dynamic(&self) -> f64 {
+        self.dyn_read + self.dyn_write
+    }
+
+    /// Total energy (J).
+    pub fn energy(&self) -> f64 {
+        self.dynamic() + self.leakage + self.dram_energy
+    }
+
+    /// Energy-delay product (J*s).
+    pub fn edp(&self) -> f64 {
+        self.energy() * self.time_total
+    }
+
+    /// Share of dynamic energy carried by reads (paper: ~83% for SRAM).
+    pub fn read_share(&self) -> f64 {
+        self.dyn_read / self.dynamic().max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Evaluate `stats` against cache `ppa`. `dram`: include off-chip terms
+/// (Fig 4 EDP and all iso-area results include them; Fig 3 and the
+/// left chart of Fig 8 exclude them).
+pub fn evaluate(
+    stats: &WorkloadStats,
+    ppa: &CachePpa,
+    dram: Option<DramCost>,
+) -> Evaluation {
+    let r = stats.l2_reads as f64;
+    let w = stats.l2_writes as f64;
+    let time_cache = r * ppa.read_latency + w * ppa.write_latency;
+
+    let (dram_energy, dram_time) = match dram {
+        Some(d) => {
+            let tx = stats.dram_total() as f64;
+            (tx * d.energy_per_tx, tx * d.latency_per_tx)
+        }
+        None => (0.0, 0.0),
+    };
+    let time_total = time_cache + dram_time;
+    Evaluation {
+        dyn_read: r * ppa.read_energy,
+        dyn_write: w * ppa.write_energy,
+        // leakage accrues over the whole execution window
+        leakage: ppa.leakage_power * time_total,
+        dram_energy,
+        time_cache,
+        time_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::MemTech;
+    use crate::nvsim::explorer::tuned_cache;
+    use crate::workload::models::{Dnn, Phase};
+    use crate::workload::traffic::TrafficModel;
+
+    const MB: u64 = 1024 * 1024;
+
+    fn stats() -> WorkloadStats {
+        TrafficModel::default()
+            .run_paper(&Dnn::by_name("AlexNet").unwrap(), Phase::Inference)
+    }
+
+    #[test]
+    fn sram_read_share_matches_paper() {
+        // Paper: "83% of the total dynamic energy of SRAM comes from
+        // read operations ... on average across all workloads".
+        let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+        let m = TrafficModel::default();
+        let mut shares = vec![];
+        for d in Dnn::zoo() {
+            for ph in Phase::ALL {
+                let e = evaluate(&m.run_paper(&d, ph), &sram, None);
+                shares.push(e.read_share());
+            }
+        }
+        let mean = crate::util::stats::mean(&shares);
+        assert!((0.70..0.92).contains(&mean), "read share {mean}");
+    }
+
+    #[test]
+    fn leakage_dominates_sram_energy() {
+        // The paper's central observation: with SRAM's ~6.4 W leaking
+        // over the runtime, leakage energy dwarfs dynamic energy.
+        let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+        let e = evaluate(&stats(), &sram, None);
+        assert!(e.leakage > 5.0 * e.dynamic(), "leak {} dyn {}", e.leakage, e.dynamic());
+    }
+
+    #[test]
+    fn dram_terms_only_when_requested() {
+        let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+        let without = evaluate(&stats(), &sram, None);
+        let with = evaluate(&stats(), &sram, Some(DramCost::default()));
+        assert_eq!(without.dram_energy, 0.0);
+        assert!(with.dram_energy > 0.0);
+        assert!(with.time_total > without.time_total);
+        assert!(with.edp() > without.edp());
+    }
+
+    #[test]
+    fn evaluation_identities() {
+        let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+        let e = evaluate(&stats(), &sram, Some(DramCost::default()));
+        assert!((e.energy() - (e.dynamic() + e.leakage + e.dram_energy)).abs() < 1e-12);
+        assert!(e.read_share() > 0.0 && e.read_share() < 1.0);
+        assert!((e.edp() - e.energy() * e.time_total).abs() < 1e-15);
+    }
+}

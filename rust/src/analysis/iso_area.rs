@@ -1,0 +1,212 @@
+//! Iso-area study (paper §IV-B, Figs 6-8): within the SRAM baseline's
+//! silicon footprint, STT fits 7 MB and SOT fits 10 MB. The larger
+//! caches cut DRAM traffic (measured with the gpusim hierarchy
+//! simulator, Fig 6); energy/EDP follow with and without the DRAM
+//! terms (Figs 7-8).
+
+use crate::device::MemTech;
+use crate::gpusim::gpu::simulate_dnn;
+use crate::gpusim::GpuConfig;
+use crate::nvsim::explorer::tuned_cache;
+use crate::nvsim::CachePpa;
+use crate::workload::models::{Dnn, Phase};
+use crate::workload::traffic::TrafficModel;
+
+use super::energy::{evaluate, DramCost};
+
+const MB: u64 = 1024 * 1024;
+
+/// Iso-area capacities (paper Table II): SRAM 3 MB footprint holds
+/// STT 7 MB / SOT 10 MB.
+pub const SRAM_MB: u64 = 3;
+pub const STT_MB: u64 = 7;
+pub const SOT_MB: u64 = 10;
+
+/// Fig 6: DRAM-access reduction (%) vs L2 capacity, from the hierarchy
+/// simulation of AlexNet (the paper's GPGPU-Sim + DarkNet setup).
+pub fn dram_reduction_curve(capacities_mb: &[u64], batch: usize) -> Vec<(u64, f64)> {
+    let dnn = Dnn::by_name("AlexNet").expect("zoo");
+    let base = simulate_dnn(
+        GpuConfig::gtx1080ti(SRAM_MB * MB),
+        &dnn,
+        Phase::Inference,
+        batch,
+    )
+    .dram_total() as f64;
+    capacities_mb
+        .iter()
+        .map(|&mb| {
+            let s = simulate_dnn(
+                GpuConfig::gtx1080ti(mb * MB),
+                &dnn,
+                Phase::Inference,
+                batch,
+            );
+            (mb, 100.0 * (1.0 - s.dram_total() as f64 / base))
+        })
+        .collect()
+}
+
+/// DRAM reduction factor (0..1) for one capacity, from the simulation.
+pub fn dram_reduction_at(mb: u64, batch: usize) -> f64 {
+    let curve = dram_reduction_curve(&[mb], batch);
+    curve[0].1 / 100.0
+}
+
+/// One iso-area result row.
+#[derive(Clone, Debug)]
+pub struct IsoAreaRow {
+    pub dnn: &'static str,
+    pub phase: Phase,
+    pub tech: MemTech,
+    pub capacity_mb: u64,
+    pub dyn_norm: f64,
+    pub leak_norm: f64,
+    pub energy_norm: f64,
+    /// Fig 8 left: EDP normalized to SRAM, cache terms only.
+    pub edp_norm_no_dram: f64,
+    /// Fig 8 right: EDP normalized to SRAM with DRAM energy+latency.
+    pub edp_norm_with_dram: f64,
+}
+
+/// Designs at the iso-area points.
+pub fn iso_caches() -> [(MemTech, u64, CachePpa); 3] {
+    [
+        (MemTech::Sram, SRAM_MB, tuned_cache(MemTech::Sram, SRAM_MB * MB).ppa),
+        (MemTech::SttMram, STT_MB, tuned_cache(MemTech::SttMram, STT_MB * MB).ppa),
+        (MemTech::SotMram, SOT_MB, tuned_cache(MemTech::SotMram, SOT_MB * MB).ppa),
+    ]
+}
+
+/// Figs 7-8 study. DRAM reduction factors come from the gpusim curve
+/// (pass `None` to re-simulate, or supply cached factors for speed).
+pub fn study(reductions: Option<(f64, f64)>) -> Vec<IsoAreaRow> {
+    let caches = iso_caches();
+    let (red_stt, red_sot) = reductions.unwrap_or_else(|| {
+        let b = Phase::Inference.paper_batch();
+        (dram_reduction_at(STT_MB, b), dram_reduction_at(SOT_MB, b))
+    });
+    let dram = DramCost::default();
+    let mut rows = Vec::new();
+    for dnn in Dnn::zoo() {
+        for phase in Phase::ALL {
+            // L2 transactions are schedule properties (identical across
+            // technologies); DRAM traffic shrinks with the larger MRAMs.
+            let base_traffic =
+                TrafficModel { l2_bytes: SRAM_MB * MB, ..Default::default() };
+            let stats = base_traffic.run_paper(&dnn, phase);
+            let scale = |f: f64| {
+                let mut s = stats;
+                s.dram_reads = (s.dram_reads as f64 * (1.0 - f)) as u64;
+                s.dram_writes = (s.dram_writes as f64 * (1.0 - f)) as u64;
+                s
+            };
+            let sram = evaluate(&stats, &caches[0].2, None);
+            let sram_dram = evaluate(&stats, &caches[0].2, Some(dram));
+            for &(tech, mb, ppa) in &caches[1..] {
+                let red = if tech == MemTech::SttMram { red_stt } else { red_sot };
+                let s2 = scale(red);
+                let e = evaluate(&s2, &ppa, None);
+                let e_dram = evaluate(&s2, &ppa, Some(dram));
+                rows.push(IsoAreaRow {
+                    dnn: dnn.name,
+                    phase,
+                    tech,
+                    capacity_mb: mb,
+                    dyn_norm: e.dynamic() / sram.dynamic(),
+                    leak_norm: e.leakage / sram.leakage,
+                    energy_norm: e.energy() / sram.energy(),
+                    edp_norm_no_dram: e.edp() / sram.edp(),
+                    edp_norm_with_dram: e_dram.edp() / sram_dram.edp(),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Mean of a row field for one tech.
+pub fn mean_of(
+    rows: &[IsoAreaRow],
+    tech: MemTech,
+    f: impl Fn(&IsoAreaRow) -> f64,
+) -> f64 {
+    let v: Vec<f64> =
+        rows.iter().filter(|r| r.tech == tech).map(f).collect();
+    crate::util::stats::mean(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_reduction_monotone_and_in_band() {
+        // Paper (batch 4): 14.6% at 7 MB (STT), 19.8% at 10 MB (SOT);
+        // our hierarchy lands at ~11% / ~12% with the curve's shape
+        // preserved (monotone, ~20% at 24 MB) — see EXPERIMENTS.md §F6.
+        let curve = dram_reduction_curve(&[7, 10, 24], 4);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 0.5, "non-monotone: {curve:?}");
+        }
+        let at7 = curve.iter().find(|(mb, _)| *mb == 7).unwrap().1;
+        let at10 = curve.iter().find(|(mb, _)| *mb == 10).unwrap().1;
+        let at24 = curve.iter().find(|(mb, _)| *mb == 24).unwrap().1;
+        assert!((6.0..25.0).contains(&at7), "7MB reduction {at7}");
+        assert!((8.0..30.0).contains(&at10), "10MB reduction {at10}");
+        assert!(at24 > at10, "curve must keep growing to 24MB");
+    }
+
+    #[test]
+    fn fig7_fig8_shape() {
+        // cached reduction factors (paper's: 0.146 / 0.198) to keep the
+        // test independent of the simulation runtime
+        let rows = study(Some((0.146, 0.198)));
+        assert_eq!(rows.len(), 5 * 2 * 2);
+
+        // Fig 7: dynamic STT ~2.5x, SOT ~1.4x; leakage 2.1x / 2.3x lower.
+        let stt_dyn = mean_of(&rows, MemTech::SttMram, |r| r.dyn_norm);
+        let sot_dyn = mean_of(&rows, MemTech::SotMram, |r| r.dyn_norm);
+        assert!((1.5..4.0).contains(&stt_dyn), "STT dyn {stt_dyn}");
+        assert!((1.0..2.5).contains(&sot_dyn), "SOT dyn {sot_dyn}");
+
+        let stt_leak = mean_of(&rows, MemTech::SttMram, |r| r.leak_norm);
+        let sot_leak = mean_of(&rows, MemTech::SotMram, |r| r.leak_norm);
+        assert!(
+            (1.2..5.0).contains(&(1.0 / stt_leak)),
+            "STT leak red {}",
+            1.0 / stt_leak
+        );
+        assert!(
+            (1.2..6.0).contains(&(1.0 / sot_leak)),
+            "SOT leak red {}",
+            1.0 / sot_leak
+        );
+
+        // Fig 8: with DRAM included the EDP reduction must improve over
+        // the cache-only number (bigger caches pay off off-chip).
+        // Paper: ~1.1x/1.2x without DRAM -> 2x/2.3x with DRAM; our
+        // model reproduces the no-DRAM point closely and the with-DRAM
+        // direction (weaker magnitude — EXPERIMENTS.md §F8).
+        let stt_no = mean_of(&rows, MemTech::SttMram, |r| r.edp_norm_no_dram);
+        let stt_with = mean_of(&rows, MemTech::SttMram, |r| r.edp_norm_with_dram);
+        let sot_no = mean_of(&rows, MemTech::SotMram, |r| r.edp_norm_no_dram);
+        let sot_with = mean_of(&rows, MemTech::SotMram, |r| r.edp_norm_with_dram);
+        assert!(
+            stt_with < stt_no * 1.05,
+            "DRAM terms should help iso-area STT: {stt_no} -> {stt_with}"
+        );
+        assert!((1.0 / stt_no) > 0.8, "STT EDP red (no DRAM) {}", 1.0 / stt_no);
+        assert!((1.0 / sot_no) > 1.0, "SOT EDP red (no DRAM) {}", 1.0 / sot_no);
+        assert!((1.0 / stt_with) > 1.05, "STT EDP red {}", 1.0 / stt_with);
+        assert!((1.0 / sot_with) > 1.3, "SOT EDP red {}", 1.0 / sot_with);
+        assert!(sot_with < stt_with, "SOT must beat STT iso-area");
+    }
+
+    #[test]
+    fn capacity_ratio_matches_paper() {
+        // 7/3 = 2.3x, 10/3 = 3.3x — the paper's headline capacity gain.
+        assert!((STT_MB as f64 / SRAM_MB as f64 - 2.33).abs() < 0.01);
+        assert!((SOT_MB as f64 / SRAM_MB as f64 - 3.33).abs() < 0.01);
+    }
+}

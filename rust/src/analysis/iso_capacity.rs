@@ -1,0 +1,181 @@
+//! Iso-capacity study (paper §IV-A, Figs 3-5): replace the 1080 Ti's
+//! 3 MB SRAM L2 with 3 MB STT-/SOT-MRAM and evaluate every workload.
+
+use crate::device::MemTech;
+use crate::nvsim::explorer::tuned_cache;
+use crate::nvsim::CachePpa;
+use crate::workload::models::{Dnn, Phase};
+use crate::workload::traffic::TrafficModel;
+
+use super::energy::{evaluate, DramCost};
+
+/// The iso-capacity point (bytes): the GTX 1080 Ti L2.
+pub const ISO_CAPACITY: u64 = 3 * 1024 * 1024;
+
+/// One (workload, phase, technology) result, normalized to SRAM.
+#[derive(Clone, Debug)]
+pub struct IsoCapRow {
+    pub dnn: &'static str,
+    pub phase: Phase,
+    pub tech: MemTech,
+    /// Fig 3 left: dynamic energy normalized to SRAM.
+    pub dyn_norm: f64,
+    /// Fig 3 right: leakage energy normalized to SRAM.
+    pub leak_norm: f64,
+    /// Fig 4 left: total energy normalized to SRAM (cache terms).
+    pub energy_norm: f64,
+    /// Fig 4 right: EDP normalized to SRAM (DRAM included, as in the
+    /// paper's caption).
+    pub edp_norm: f64,
+    /// Read share of SRAM dynamic energy (diagnostic; ~0.83 in paper).
+    pub sram_read_share: f64,
+}
+
+/// Cache designs for the three technologies at the iso-capacity point.
+pub fn iso_caches() -> [(MemTech, CachePpa); 3] {
+    [
+        (MemTech::Sram, tuned_cache(MemTech::Sram, ISO_CAPACITY).ppa),
+        (MemTech::SttMram, tuned_cache(MemTech::SttMram, ISO_CAPACITY).ppa),
+        (MemTech::SotMram, tuned_cache(MemTech::SotMram, ISO_CAPACITY).ppa),
+    ]
+}
+
+/// Run the full Fig 3/4 study: 5 DNNs x {I, T} x {STT, SOT}.
+pub fn study() -> Vec<IsoCapRow> {
+    let caches = iso_caches();
+    let traffic = TrafficModel { l2_bytes: ISO_CAPACITY, ..Default::default() };
+    let dram = DramCost::default();
+    let mut rows = Vec::new();
+    for dnn in Dnn::zoo() {
+        for phase in Phase::ALL {
+            let stats = traffic.run_paper(&dnn, phase);
+            let eval =
+                |ppa: &CachePpa, d: Option<DramCost>| evaluate(&stats, ppa, d);
+            let sram = eval(&caches[0].1, None);
+            let sram_dram = eval(&caches[0].1, Some(dram));
+            for &(tech, ppa) in &caches[1..] {
+                let e = eval(&ppa, None);
+                let e_dram = eval(&ppa, Some(dram));
+                rows.push(IsoCapRow {
+                    dnn: dnn.name,
+                    phase,
+                    tech,
+                    dyn_norm: e.dynamic() / sram.dynamic(),
+                    leak_norm: e.leakage / sram.leakage,
+                    energy_norm: e.energy() / sram.energy(),
+                    edp_norm: e_dram.edp() / sram_dram.edp(),
+                    sram_read_share: sram.read_share(),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 5: EDP vs batch size for AlexNet (normalized to SRAM at the
+/// same batch). Returns (batch, tech, phase, edp_norm).
+pub fn batch_study(batches: &[usize]) -> Vec<(usize, MemTech, Phase, f64)> {
+    let caches = iso_caches();
+    let traffic = TrafficModel { l2_bytes: ISO_CAPACITY, ..Default::default() };
+    let dram = DramCost::default();
+    let dnn = Dnn::by_name("AlexNet").expect("zoo");
+    let mut out = Vec::new();
+    for &b in batches {
+        for phase in Phase::ALL {
+            let stats = traffic.run(&dnn, phase, b);
+            let sram = evaluate(&stats, &caches[0].1, Some(dram));
+            for &(tech, ppa) in &caches[1..] {
+                let e = evaluate(&stats, &ppa, Some(dram));
+                out.push((b, tech, phase, e.edp() / sram.edp()));
+            }
+        }
+    }
+    out
+}
+
+/// Paper-style summary over the study rows: (mean dyn, mean leak, mean
+/// energy, best edp reduction) for one technology.
+pub fn summarize(rows: &[IsoCapRow], tech: MemTech) -> (f64, f64, f64, f64) {
+    let sel: Vec<&IsoCapRow> = rows.iter().filter(|r| r.tech == tech).collect();
+    let dyn_mean =
+        crate::util::stats::mean(&sel.iter().map(|r| r.dyn_norm).collect::<Vec<_>>());
+    let leak_mean =
+        crate::util::stats::mean(&sel.iter().map(|r| r.leak_norm).collect::<Vec<_>>());
+    let energy_mean = crate::util::stats::mean(
+        &sel.iter().map(|r| r.energy_norm).collect::<Vec<_>>(),
+    );
+    let best_edp_red = 1.0
+        / sel
+            .iter()
+            .map(|r| r.edp_norm)
+            .fold(f64::INFINITY, f64::min);
+    (dyn_mean, leak_mean, energy_mean, best_edp_red)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn study_shape_matches_paper_fig3() {
+        let rows = study();
+        assert_eq!(rows.len(), 5 * 2 * 2);
+
+        // STT dynamic energy ~2.1x SRAM, SOT ~1.3x (paper averages).
+        let (stt_dyn, stt_leak, _, _) = summarize(&rows, MemTech::SttMram);
+        let (sot_dyn, sot_leak, _, _) = summarize(&rows, MemTech::SotMram);
+        assert!((1.4..3.4).contains(&stt_dyn), "STT dyn {stt_dyn}");
+        assert!((1.0..2.2).contains(&sot_dyn), "SOT dyn {sot_dyn}");
+        assert!(stt_dyn > sot_dyn, "STT reads cost more than SOT");
+
+        // Leakage: STT ~5.9x lower, SOT ~10x lower.
+        assert!((1.0 / stt_leak) > 3.5, "STT leak reduction {}", 1.0 / stt_leak);
+        assert!((1.0 / sot_leak) > 6.0, "SOT leak reduction {}", 1.0 / sot_leak);
+        assert!(sot_leak < stt_leak);
+    }
+
+    #[test]
+    fn study_shape_matches_paper_fig4() {
+        let rows = study();
+        // Total energy: STT ~5.1x lower, SOT ~8.6x lower (leakage
+        // dominance).
+        let (_, _, stt_e, stt_edp) = summarize(&rows, MemTech::SttMram);
+        let (_, _, sot_e, sot_edp) = summarize(&rows, MemTech::SotMram);
+        assert!((1.0 / stt_e) > 3.0, "STT energy red {}", 1.0 / stt_e);
+        assert!((1.0 / sot_e) > 5.0, "SOT energy red {}", 1.0 / sot_e);
+        // EDP reduction "up to 3.8x / 4.7x" (DRAM included).
+        assert!((2.0..7.0).contains(&stt_edp), "STT best EDP red {stt_edp}");
+        assert!((2.5..9.0).contains(&sot_edp), "SOT best EDP red {sot_edp}");
+    }
+
+    #[test]
+    fn sram_read_share_near_83_percent() {
+        let rows = study();
+        let shares: Vec<f64> = rows.iter().map(|r| r.sram_read_share).collect();
+        let mean = crate::util::stats::mean(&shares);
+        assert!((0.70..0.92).contains(&mean), "read share {mean}");
+    }
+
+    #[test]
+    fn batch_study_trends() {
+        // Paper Fig 5: training EDP reduction improves with batch for
+        // STT; all reductions stay > 1 (MRAM wins at every batch).
+        let rows = batch_study(&[4, 16, 64, 128]);
+        for &(b, tech, ph, norm) in &rows {
+            assert!(
+                norm < 1.0,
+                "{tech} {} b={b}: EDP norm {norm} >= 1",
+                ph.name()
+            );
+        }
+        let stt_train: Vec<f64> = rows
+            .iter()
+            .filter(|(_, t, p, _)| *t == MemTech::SttMram && *p == Phase::Training)
+            .map(|&(_, _, _, n)| 1.0 / n)
+            .collect();
+        assert!(
+            stt_train.last().unwrap() > stt_train.first().unwrap(),
+            "STT training EDP reduction must grow with batch: {stt_train:?}"
+        );
+    }
+}

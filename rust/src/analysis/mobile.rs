@@ -1,0 +1,132 @@
+//! Mobile design-space extension (paper §V, "Mobile design space
+//! exploration for NVM" — called out as meriting further research;
+//! implemented here as a first exploration).
+//!
+//! Scenario: the last-level cache of a mobile SoC running *inference
+//! only* (Wu et al., HPCA'19: most mobile inference runs on CPUs), with
+//! a small LLC (1-4 MB), battery-bound energy budgets, and latency
+//! constraints per frame. The same cross-layer models apply; only the
+//! platform constants change.
+
+use crate::device::MemTech;
+use crate::nvsim::explorer::tuned_cache;
+use crate::workload::models::{Dnn, Phase};
+use crate::workload::traffic::TrafficModel;
+
+use super::energy::{evaluate, DramCost};
+
+const MB: u64 = 1024 * 1024;
+
+/// Mobile LPDDR4X-class DRAM: slower, slightly cheaper per bit than the
+/// GDDR5X desktop part.
+pub fn mobile_dram() -> DramCost {
+    DramCost { energy_per_tx: 2.6e-9, latency_per_tx: 60e-9 / 4.0 }
+}
+
+/// One mobile result row.
+#[derive(Clone, Copy, Debug)]
+pub struct MobileRow {
+    pub tech: MemTech,
+    pub llc_mb: u64,
+    pub dnn: &'static str,
+    /// Energy per inference (J) — the battery metric.
+    pub energy_per_inference: f64,
+    /// Normalized to SRAM at the same capacity.
+    pub energy_norm: f64,
+    pub edp_norm: f64,
+}
+
+/// Mobile inference study: batch 1 (interactive latency), LLC sweep.
+pub fn study(llc_mbs: &[u64]) -> Vec<MobileRow> {
+    let dram = mobile_dram();
+    let mut out = Vec::new();
+    for &mb in llc_mbs {
+        let sram = tuned_cache(MemTech::Sram, mb * MB).ppa;
+        let traffic = TrafficModel { l2_bytes: mb * MB, ..Default::default() };
+        for dnn in Dnn::zoo() {
+            // batch 1: a user-facing mobile inference
+            let stats = traffic.run(&dnn, Phase::Inference, 1);
+            let base = evaluate(&stats, &sram, Some(dram));
+            for tech in [MemTech::SttMram, MemTech::SotMram] {
+                let ppa = tuned_cache(tech, mb * MB).ppa;
+                let e = evaluate(&stats, &ppa, Some(dram));
+                out.push(MobileRow {
+                    tech,
+                    llc_mb: mb,
+                    dnn: dnn.name,
+                    energy_per_inference: e.energy(),
+                    energy_norm: e.energy() / base.energy(),
+                    edp_norm: e.edp() / base.edp(),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn mram_saves_energy_on_mobile_inference() {
+        let rows = study(&[2]);
+        for r in &rows {
+            assert!(
+                r.energy_norm < 1.0,
+                "{} {} {}MB: energy norm {}",
+                r.tech,
+                r.dnn,
+                r.llc_mb,
+                r.energy_norm
+            );
+        }
+        // SOT (low write energy + low leak) should be the best fit for
+        // read-heavy batch-1 inference.
+        let stt: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.tech == MemTech::SttMram)
+            .map(|r| r.energy_norm)
+            .collect();
+        let sot: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.tech == MemTech::SotMram)
+            .map(|r| r.energy_norm)
+            .collect();
+        assert!(mean(&sot) < mean(&stt));
+    }
+
+    #[test]
+    fn squeezenet_is_the_frugal_mobile_network() {
+        // SqueezeNet was designed for edge deployment; it must burn the
+        // least absolute energy per inference of the zoo.
+        let rows = study(&[2]);
+        let energy = |name: &str| {
+            rows.iter()
+                .filter(|r| r.dnn == name && r.tech == MemTech::SotMram)
+                .map(|r| r.energy_per_inference)
+                .next()
+                .unwrap()
+        };
+        for other in ["AlexNet", "VGG-16", "ResNet-18", "GoogLeNet"] {
+            assert!(
+                energy("SqueezeNet") < energy(other),
+                "SqueezeNet vs {other}"
+            );
+        }
+    }
+
+    #[test]
+    fn benefits_hold_across_llc_sizes() {
+        let rows = study(&[1, 4]);
+        for mb in [1u64, 4] {
+            let sel: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.llc_mb == mb)
+                .map(|r| r.edp_norm)
+                .collect();
+            assert!(mean(&sel) < 1.0, "{}MB mean EDP norm {}", mb, mean(&sel));
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! The cross-layer analyses — DeepNVM++'s end products (paper §IV).
+//!
+//! Combines the device-calibrated cache PPA (nvsim), the workload
+//! memory statistics (workload/traffic, standing in for nvprof) and the
+//! hierarchy simulation (gpusim, standing in for GPGPU-Sim) into the
+//! paper's studies:
+//!
+//! * [`energy`] — the paper's evaluation model: "multiply the number of
+//!   read and write transactions by the corresponding latency and
+//!   energy values", leakage power x runtime, optional DRAM terms.
+//! * [`iso_capacity`] — Figs 3-5: 3 MB MRAM replacing 3 MB SRAM.
+//! * [`iso_area`] — Figs 6-8: 7 MB STT / 10 MB SOT in SRAM's footprint,
+//!   with gpusim-measured DRAM-access reduction.
+//! * [`scalability`] — Figs 9-10: 1-32 MB sweep, EDAP-optimal per
+//!   capacity.
+//! * [`trend`] — Fig 1: the public NVIDIA L2-capacity trend.
+
+pub mod area_reuse;
+pub mod energy;
+pub mod iso_area;
+pub mod iso_capacity;
+pub mod mobile;
+pub mod scalability;
+pub mod trend;
+
+pub use energy::{evaluate, DramCost};

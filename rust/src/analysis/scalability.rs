@@ -1,0 +1,186 @@
+//! Scalability study (paper §IV-C, Figs 9-10): sweep cache capacity
+//! 1-32 MB, EDAP-tune each (memory, capacity) point independently, and
+//! project workload energy/latency/EDP vs SRAM.
+
+use crate::device::MemTech;
+use crate::nvsim::explorer::{tuned_cache, TunedConfig};
+use crate::workload::models::{Dnn, Phase};
+use crate::workload::traffic::TrafficModel;
+
+use super::energy::{evaluate, DramCost};
+
+const MB: u64 = 1024 * 1024;
+
+/// The paper's sweep (Fig 9/10 x-axis).
+pub const CAPACITIES_MB: [u64; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Fig 9: PPA of the tuned design at each (tech, capacity).
+pub fn ppa_sweep(capacities_mb: &[u64]) -> Vec<TunedConfig> {
+    let mut out = Vec::new();
+    for &tech in &MemTech::ALL {
+        for &mb in capacities_mb {
+            out.push(tuned_cache(tech, mb * MB));
+        }
+    }
+    out
+}
+
+/// One Fig 10 point: normalized mean +/- std across the five workloads.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePoint {
+    pub tech: MemTech,
+    pub capacity_mb: u64,
+    pub phase: Phase,
+    pub energy_norm_mean: f64,
+    pub energy_norm_std: f64,
+    pub latency_norm_mean: f64,
+    pub latency_norm_std: f64,
+    pub edp_norm_mean: f64,
+    pub edp_norm_std: f64,
+}
+
+/// Fig 10: for each capacity and phase, normalized energy / latency /
+/// EDP of STT and SOT vs SRAM, mean and std across the workload zoo.
+pub fn workload_sweep(capacities_mb: &[u64]) -> Vec<ScalePoint> {
+    let dram = DramCost::default();
+    let mut out = Vec::new();
+    for &mb in capacities_mb {
+        let sram = tuned_cache(MemTech::Sram, mb * MB).ppa;
+        let traffic = TrafficModel { l2_bytes: mb * MB, ..Default::default() };
+        for &tech in &[MemTech::SttMram, MemTech::SotMram] {
+            let ppa = tuned_cache(tech, mb * MB).ppa;
+            for phase in Phase::ALL {
+                let mut e_norms = vec![];
+                let mut t_norms = vec![];
+                let mut edp_norms = vec![];
+                for dnn in Dnn::zoo() {
+                    let stats = traffic.run_paper(&dnn, phase);
+                    let base = evaluate(&stats, &sram, Some(dram));
+                    let e = evaluate(&stats, &ppa, Some(dram));
+                    e_norms.push(e.energy() / base.energy());
+                    t_norms.push(e.time_total / base.time_total);
+                    edp_norms.push(e.edp() / base.edp());
+                }
+                use crate::util::stats::{mean, std_dev};
+                out.push(ScalePoint {
+                    tech,
+                    capacity_mb: mb,
+                    phase,
+                    energy_norm_mean: mean(&e_norms),
+                    energy_norm_std: std_dev(&e_norms),
+                    latency_norm_mean: mean(&t_norms),
+                    latency_norm_std: std_dev(&t_norms),
+                    edp_norm_mean: mean(&edp_norms),
+                    edp_norm_std: std_dev(&edp_norms),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_area_gap_grows_with_capacity() {
+        let sweep = ppa_sweep(&[2, 16]);
+        let get = |tech, mb: u64| {
+            sweep
+                .iter()
+                .find(|c| c.tech == tech && c.capacity_bytes == mb * MB)
+                .unwrap()
+                .ppa
+        };
+        let r2 = get(MemTech::Sram, 2).area / get(MemTech::SttMram, 2).area;
+        let r16 = get(MemTech::Sram, 16).area / get(MemTech::SttMram, 16).area;
+        assert!(r16 > r2 * 0.95, "area advantage must not shrink: {r2} -> {r16}");
+        assert!(r16 > 2.0, "STT area advantage at 16MB: {r16}");
+    }
+
+    #[test]
+    fn fig9_read_latency_crossover() {
+        // Paper: SRAM reads faster below ~3-4 MB, MRAM faster beyond.
+        let sweep = ppa_sweep(&[1, 16, 32]);
+        let get = |tech, mb: u64| {
+            sweep
+                .iter()
+                .find(|c| c.tech == tech && c.capacity_bytes == mb * MB)
+                .unwrap()
+                .ppa
+        };
+        assert!(
+            get(MemTech::Sram, 1).read_latency
+                < get(MemTech::SttMram, 1).read_latency,
+            "SRAM must win small reads"
+        );
+        assert!(
+            get(MemTech::SttMram, 32).read_latency
+                < get(MemTech::Sram, 32).read_latency,
+            "STT must win large reads"
+        );
+        // STT write latency worst everywhere (device limit)
+        for mb in [1u64, 16, 32] {
+            assert!(
+                get(MemTech::SttMram, mb).write_latency
+                    > get(MemTech::Sram, mb).write_latency
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_energy_reduction_grows_with_capacity() {
+        let pts = workload_sweep(&[2, 16]);
+        let red = |tech, mb, ph| {
+            1.0 / pts
+                .iter()
+                .find(|p| p.tech == tech && p.capacity_mb == mb && p.phase == ph)
+                .unwrap()
+                .energy_norm_mean
+        };
+        for tech in [MemTech::SttMram, MemTech::SotMram] {
+            for ph in Phase::ALL {
+                let r2 = red(tech, 2, ph);
+                let r16 = red(tech, 16, ph);
+                assert!(
+                    r16 > r2,
+                    "{tech} {}: energy reduction must grow: {r2} -> {r16}",
+                    ph.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig10_edp_reduction_large_at_32mb() {
+        // Paper: up to 65x (STT) / 95x (SOT) EDP reduction at large
+        // capacity. Our structural model preserves the shape (reduction
+        // grows with capacity, SOT > STT, several-x at 32 MB) at weaker
+        // magnitude — the paper's NVSim runs degrade SRAM faster at
+        // scale than our calibration does (EXPERIMENTS.md §F10).
+        let pts = workload_sweep(&[32]);
+        let red = |tech| {
+            let v: Vec<f64> = pts
+                .iter()
+                .filter(|p| p.tech == tech)
+                .map(|p| 1.0 / p.edp_norm_mean)
+                .collect();
+            crate::util::stats::max(&v)
+        };
+        let stt = red(MemTech::SttMram);
+        let sot = red(MemTech::SotMram);
+        assert!(stt > 5.0, "STT 32MB EDP reduction {stt}");
+        assert!(sot > 8.0, "SOT 32MB EDP reduction {sot}");
+        assert!(sot > stt, "SOT must beat STT at scale");
+    }
+
+    #[test]
+    fn error_bars_are_finite_and_nonnegative() {
+        for p in workload_sweep(&[4]) {
+            assert!(p.energy_norm_std >= 0.0 && p.energy_norm_std.is_finite());
+            assert!(p.edp_norm_std >= 0.0);
+            assert!(p.latency_norm_mean > 0.0);
+        }
+    }
+}

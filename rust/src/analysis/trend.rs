@@ -1,0 +1,46 @@
+//! Fig 1: L2 cache capacity in recent NVIDIA GPUs (public data, the
+//! paper's motivation chart [17]).
+
+/// (GPU, launch year, L2 capacity in KB).
+pub const NVIDIA_L2_TREND: [(&str, u32, u32); 8] = [
+    ("GTX 580", 2010, 768),
+    ("GTX 680", 2012, 512),
+    ("GTX 780", 2013, 1536),
+    ("GTX 980", 2014, 2048),
+    ("GTX 1080 Ti", 2017, 2816),
+    ("Titan V", 2017, 4608),
+    ("RTX 2080 Ti", 2018, 5632),
+    ("RTX 3090", 2020, 6144),
+];
+
+/// Least-squares slope of capacity (KB) per year — the "current trend
+/// of GPU architectures is towards increasing last-level cache
+/// capacity" quantified.
+pub fn trend_slope_kb_per_year() -> f64 {
+    let n = NVIDIA_L2_TREND.len() as f64;
+    let xs: Vec<f64> = NVIDIA_L2_TREND.iter().map(|t| t.1 as f64).collect();
+    let ys: Vec<f64> = NVIDIA_L2_TREND.iter().map(|t| t.2 as f64).collect();
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let num: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trend_is_strongly_upward() {
+        let slope = trend_slope_kb_per_year();
+        assert!(slope > 300.0, "slope {slope} KB/year");
+    }
+
+    #[test]
+    fn data_is_chronological() {
+        for w in NVIDIA_L2_TREND.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

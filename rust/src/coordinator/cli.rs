@@ -1,0 +1,275 @@
+//! Command-line interface (hand-rolled: the offline vendor set has no
+//! clap). `deepnvm <command> [--out DIR] [--quick] [--batches a,b,c]`.
+
+use anyhow::{bail, Result};
+
+use super::reports::{self, Report};
+use super::store::Store;
+
+const USAGE: &str = "\
+DeepNVM++ — cross-layer NVM modeling for deep learning (TCAD'21 repro)
+
+USAGE: deepnvm <command> [options]
+
+COMMANDS (paper artifacts):
+  table1        Bitcell characterization (device sweep vs paper)
+  table2        EDAP-tuned cache PPA (iso-capacity + iso-area points)
+  table3        DNN zoo configurations
+  fig1          NVIDIA L2 capacity trend
+  fig3 fig4     Iso-capacity energy / EDP studies
+  fig5          Batch-size impact on AlexNet EDP
+  fig6          DRAM reduction vs L2 capacity (hierarchy simulation)
+  fig7 fig8     Iso-area energy / EDP studies
+  fig9 fig10    Scalability sweeps (1-32 MB)
+  ext-area      Extension: spend the freed area on compute (paper SSV)
+  ext-mobile    Extension: mobile inference LLC design space (paper SSV)
+  ext-hybrid    Extension: hybrid SRAM+STT way-partitioned caches (SSII)
+  ext-relaxed   Extension: relaxed-retention (volatile) STT (SSII)
+  all           Every table and figure (writes CSVs to --out)
+
+OTHER:
+  e2e-train     Train the TinyCNN artifact via PJRT (needs `make artifacts`)
+  help          This message
+
+OPTIONS:
+  --out DIR       results directory (default: results)
+  --quick         cheaper settings (fig6 batch 1, coarser sweeps)
+  --batches LIST  comma-separated batch sizes for fig5
+  --steps N       training steps for e2e-train (default 60)
+";
+
+/// Parsed options.
+#[derive(Clone, Debug)]
+pub struct CliOptions {
+    pub command: String,
+    pub out: String,
+    pub quick: bool,
+    pub batches: Vec<usize>,
+    pub steps: usize,
+}
+
+impl Default for CliOptions {
+    fn default() -> Self {
+        CliOptions {
+            command: "help".into(),
+            out: "results".into(),
+            quick: false,
+            batches: vec![1, 4, 16, 64, 128, 256],
+            steps: 60,
+        }
+    }
+}
+
+/// Parse argv (excluding the binary name).
+pub fn parse_args(args: &[String]) -> Result<CliOptions> {
+    let mut o = CliOptions::default();
+    let mut it = args.iter();
+    if let Some(cmd) = it.next() {
+        o.command = cmd.clone();
+    }
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--out" => {
+                o.out = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--out needs a value"))?
+                    .clone();
+            }
+            "--quick" => o.quick = true,
+            "--batches" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--batches needs a value"))?;
+                o.batches = v
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad --batches: {e}"))?;
+                if o.batches.is_empty() {
+                    bail!("--batches needs at least one value");
+                }
+            }
+            "--steps" => {
+                o.steps = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--steps needs a value"))?
+                    .parse()?;
+            }
+            other => bail!("unknown option '{other}' (try: deepnvm help)"),
+        }
+    }
+    Ok(o)
+}
+
+fn scal_caps(quick: bool) -> Vec<u64> {
+    if quick {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 2, 4, 8, 16, 32]
+    }
+}
+
+/// Generate the reports for one command.
+pub fn generate(o: &CliOptions) -> Result<Vec<Report>> {
+    let fig6_batch = if o.quick { 1 } else { 4 };
+    Ok(match o.command.as_str() {
+        "table1" => vec![reports::table1()],
+        "table2" => vec![reports::table2()],
+        "table3" => vec![reports::table3()],
+        "fig1" => vec![reports::fig1()],
+        "fig3" | "fig4" => {
+            let (f3, f4) = reports::fig3_fig4();
+            vec![f3, f4]
+        }
+        "fig5" => vec![reports::fig5(&o.batches)],
+        "fig6" => vec![reports::fig6(fig6_batch)],
+        "fig7" | "fig8" => {
+            let (f7, f8) = reports::fig7_fig8(if o.quick {
+                Some((0.146, 0.198)) // paper's measured reductions
+            } else {
+                None // re-simulate
+            });
+            vec![f7, f8]
+        }
+        "fig9" => vec![reports::fig9(&scal_caps(o.quick))],
+        "fig10" => vec![reports::fig10(&scal_caps(o.quick))],
+        "ext-area" => vec![reports::ext_area_reuse()],
+        "ext-mobile" => vec![reports::ext_mobile()],
+        "ext-hybrid" => vec![reports::ext_hybrid()],
+        "ext-relaxed" => vec![reports::ext_relaxed()],
+        "all" => {
+            let mut v = vec![
+                reports::table1(),
+                reports::table2(),
+                reports::table3(),
+                reports::fig1(),
+            ];
+            let (f3, f4) = reports::fig3_fig4();
+            v.push(f3);
+            v.push(f4);
+            v.push(reports::fig5(&o.batches));
+            v.push(reports::fig6(fig6_batch));
+            let (f7, f8) = reports::fig7_fig8(None);
+            v.push(f7);
+            v.push(f8);
+            v.push(reports::fig9(&scal_caps(o.quick)));
+            v.push(reports::fig10(&scal_caps(o.quick)));
+            v.push(reports::ext_area_reuse());
+            v.push(reports::ext_mobile());
+            v.push(reports::ext_hybrid());
+            v.push(reports::ext_relaxed());
+            v
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    })
+}
+
+/// Run the e2e training demo (delegates to the runtime).
+fn e2e_train(o: &CliOptions) -> Result<()> {
+    let engine = crate::runtime::Engine::default()?;
+    println!("platform: {}", engine.platform());
+    let (report, params) =
+        crate::runtime::trainer::train(&engine, o.steps, 0.05, 7, |s, l| {
+            if s % 10 == 0 {
+                println!("step {s:>4}  loss {l:.4}");
+            }
+        })?;
+    let acc = crate::runtime::trainer::eval_accuracy(&engine, &params, 999)?;
+    println!(
+        "trained {} steps (batch {}) in {:.2}s ({:.1} steps/s): loss {:.3} -> {:.3}, \
+         eval accuracy {:.0}%",
+        report.steps,
+        report.batch,
+        report.seconds,
+        report.steps_per_sec(),
+        report.first_loss(),
+        report.last_loss(),
+        acc * 100.0
+    );
+    Ok(())
+}
+
+/// Full CLI entry point. Returns the process exit code.
+pub fn run_cli(args: &[String]) -> i32 {
+    let o = match parse_args(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match o.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            0
+        }
+        "e2e-train" => match e2e_train(&o) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+        _ => match generate(&o) {
+            Ok(rs) => {
+                let mut store = Store::new(&o.out);
+                for r in &rs {
+                    println!("{}", r.text);
+                    if let Err(e) = store.save(r) {
+                        eprintln!("warning: could not save {}: {e}", r.id);
+                    }
+                }
+                let _ = store.finish(&[
+                    ("command", o.command.as_str()),
+                    ("quick", if o.quick { "true" } else { "false" }),
+                ]);
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options() {
+        let o = parse_args(&sv(&["fig5", "--batches", "2,8", "--quick", "--out", "/tmp/x"]))
+            .unwrap();
+        assert_eq!(o.command, "fig5");
+        assert_eq!(o.batches, vec![2, 8]);
+        assert!(o.quick);
+        assert_eq!(o.out, "/tmp/x");
+    }
+
+    #[test]
+    fn rejects_unknown_flags_and_bad_values() {
+        assert!(parse_args(&sv(&["fig5", "--bogus"])).is_err());
+        assert!(parse_args(&sv(&["fig5", "--batches", "a,b"])).is_err());
+        assert!(parse_args(&sv(&["fig5", "--out"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_fails_generation() {
+        let o = parse_args(&sv(&["notacmd"])).unwrap();
+        assert!(generate(&o).is_err());
+    }
+
+    #[test]
+    fn quick_table_commands_generate() {
+        for cmd in ["table2", "table3", "fig1"] {
+            let o = parse_args(&sv(&[cmd])).unwrap();
+            let rs = generate(&o).unwrap();
+            assert!(!rs.is_empty());
+        }
+    }
+}

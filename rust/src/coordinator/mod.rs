@@ -1,0 +1,15 @@
+//! L3 coordination: the framework front end.
+//!
+//! DeepNVM++'s contribution is the cross-layer methodology, so the
+//! coordinator's job is orchestration: a CLI over every experiment
+//! ([`cli`]), paper-style report rendering ([`reports`] — one function
+//! per table/figure, each returning both a printable table and a CSV),
+//! and a results store ([`store`]) that persists every run with its
+//! configuration for reproducibility.
+
+pub mod cli;
+pub mod reports;
+pub mod store;
+
+pub use cli::{run_cli, CliOptions};
+pub use reports::Report;

@@ -1,0 +1,93 @@
+//! Results store: persists every generated report (CSV per experiment
+//! plus a run-level JSON index) so studies are reproducible and
+//! diffable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::reports::Report;
+
+/// A store rooted at an output directory (default `results/`).
+pub struct Store {
+    dir: PathBuf,
+    index: Vec<(String, String)>,
+}
+
+impl Store {
+    pub fn new(dir: impl AsRef<Path>) -> Self {
+        Store { dir: dir.as_ref().to_path_buf(), index: vec![] }
+    }
+
+    /// Persist one report: `<dir>/<id>.csv`.
+    pub fn save(&mut self, report: &Report) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{}.csv", report.id.to_lowercase()));
+        report.csv.write(&path)?;
+        self.index
+            .push((report.id.to_string(), report.title.clone()));
+        Ok(path)
+    }
+
+    /// Write the run index (`index.json`) listing everything saved.
+    pub fn finish(&self, meta: &[(&str, &str)]) -> Result<PathBuf> {
+        let mut root = Json::obj();
+        let mut m = Json::obj();
+        for (k, v) in meta {
+            m.set(k, Json::Str(v.to_string()));
+        }
+        root.set("meta", m);
+        let mut arts = Json::obj();
+        for (id, title) in &self.index {
+            let mut a = Json::obj();
+            a.set("title", Json::Str(title.clone()));
+            a.set("file", Json::Str(format!("{}.csv", id.to_lowercase())));
+            arts.set(id, a);
+        }
+        root.set("experiments", arts);
+        let path = self.dir.join("index.json");
+        std::fs::create_dir_all(&self.dir)?;
+        std::fs::write(&path, root.to_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::csv::Csv;
+
+    #[test]
+    fn save_and_index_roundtrip() {
+        let dir = std::env::temp_dir().join("deepnvm_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = Store::new(&dir);
+        let mut csv = Csv::new(&["a", "b"]);
+        csv.row(&["1".into(), "2".into()]);
+        let r = Report {
+            id: "T9",
+            title: "Test table".into(),
+            text: "x".into(),
+            csv,
+        };
+        let p = store.save(&r).unwrap();
+        assert!(p.exists());
+        let idx = store.finish(&[("cmd", "test")]).unwrap();
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(idx).unwrap())
+                .unwrap();
+        assert_eq!(
+            parsed
+                .get("experiments")
+                .unwrap()
+                .get("T9")
+                .unwrap()
+                .get("file")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "t9.csv"
+        );
+    }
+}

@@ -1,0 +1,377 @@
+//! The Table I flow: sweep access-device fin counts, simulate write
+//! (LLGS) and read (RC transient) for each sizing, and pick the
+//! EDAP-balanced optimum — the paper's "optimal balance between the
+//! latency, energy, and area" (§III-A).
+//!
+//! Slonczewski polarization efficiency is state-dependent,
+//! `g(theta) = P / (2 (1 + P^2 cos(theta)))`, which makes the *set*
+//! (P->AP) transition slower than *reset* (AP->P) — exactly the
+//! asymmetry Table I reports. The write driver is modeled as the access
+//! FinFET in series with the state-dependent junction (STT) or the
+//! heavy-metal channel (SOT).
+
+use super::finfet::{FinFet, Flavor, VDD};
+use super::llgs::LlgsProblem;
+use super::mtj::{Mtj, SotChannel, HBAR, MU0, QE};
+use super::transient;
+use super::types::{BitcellParams, MemTech};
+
+/// Layout constants for the 16nm-class bitcell area model
+/// (Seo-&-Roy-style formulation, calibrated to the foundry-normalized
+/// Table I areas).
+pub mod layout {
+    /// Fin pitch (m).
+    pub const FIN_PITCH: f64 = 48e-9;
+    /// Cell height in contacted-poly-pitch units x CPP (m).
+    pub const CELL_HEIGHT: f64 = 135e-9;
+    /// Fixed width overhead: contacts, MTJ via, isolation (m).
+    pub const WIDTH_BASE: f64 = 60e-9;
+    /// Extra width for the SOT cell's separate read stack + SL contact.
+    pub const SOT_READ_OVERHEAD: f64 = 22e-9;
+    /// Foundry 6T HD SRAM bitcell area (m^2) — the normalization base.
+    pub const SRAM_CELL_AREA: f64 = 0.074e-12;
+}
+
+/// Wordline rise contribution included in the bitcell-level sense
+/// latency: the paper measures "from wordline activation", and the
+/// SPICE testbench includes the WL driver charging the segment's gate
+/// load (~50% point of a 2 kOhm x ~220 fF line).
+pub const WL_RISE: f64 = 300e-12;
+
+/// Write-pulse budgets: the cell must complete its magnetization change
+/// within the array write cycle it will be embedded in, else the sizing
+/// is rejected as non-functional ("modulated to the point of failure").
+pub const STT_PULSE_BUDGET: f64 = 10e-9;
+pub const SOT_PULSE_BUDGET: f64 = 400e-12;
+
+/// One point of the fin-count sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct FinSweepPoint {
+    pub fins_write: u32,
+    pub fins_read: u32,
+    pub write_latency_set: f64,
+    pub write_latency_reset: f64,
+    pub write_energy_set: f64,
+    pub write_energy_reset: f64,
+    pub sense_latency: f64,
+    pub sense_energy: f64,
+    pub area_rel: f64,
+    /// Whether both polarities switched within the pulse budget.
+    pub functional: bool,
+}
+
+impl FinSweepPoint {
+    /// Bitcell-level energy-delay-area product used to rank sizings.
+    pub fn edap(&self) -> f64 {
+        let lat = 0.5 * (self.write_latency_set + self.write_latency_reset)
+            + self.sense_latency;
+        let en = 0.5 * (self.write_energy_set + self.write_energy_reset)
+            + self.sense_energy;
+        lat * en * self.area_rel
+    }
+
+    fn to_params(self, tech: MemTech) -> BitcellParams {
+        BitcellParams {
+            tech,
+            sense_latency: self.sense_latency,
+            sense_energy: self.sense_energy,
+            write_latency_set: self.write_latency_set,
+            write_latency_reset: self.write_latency_reset,
+            write_energy_set: self.write_energy_set,
+            write_energy_reset: self.write_energy_reset,
+            fins_write: self.fins_write,
+            fins_read: self.fins_read,
+            area_rel: self.area_rel,
+            cell_leakage: 0.0,
+        }
+    }
+}
+
+/// Full characterization output.
+#[derive(Clone, Debug)]
+pub struct CharacterizeResult {
+    pub stt: BitcellParams,
+    pub sot: BitcellParams,
+    pub stt_sweep: Vec<FinSweepPoint>,
+    pub sot_sweep: Vec<FinSweepPoint>,
+}
+
+/// Solve the series circuit "FinFET + resistor across VDD" for the
+/// branch current: find I with I = Ids(VDD, VDD - I*R). The residual
+/// f(I) = I - Ids(VDD, VDD - I*R) is strictly increasing, so bisection
+/// on [0, Ion] converges unconditionally (a damped fixed point does
+/// not: in the steep linear region |dIds/dVds| * R >> 1).
+fn solve_series_drive(xtor: &FinFet, r_series: f64) -> f64 {
+    let mut lo = 0.0;
+    let mut hi = xtor.ion();
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        let vds = (VDD - mid * r_series).max(0.0);
+        let f = mid - xtor.ids(VDD, vds);
+        if f > 0.0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Spin-torque field (Tesla) for drive current `i` through an MTJ with
+/// polarization efficiency `eta`.
+fn a_j(mtj: &Mtj, eta: f64, i: f64) -> f64 {
+    HBAR * eta * i / (2.0 * QE * mtj.ms * mtj.volume())
+}
+
+/// Slonczewski state-dependent polarization efficiency.
+fn eta_slonczewski(p: f64, cos_theta: f64) -> f64 {
+    p / (2.0 * (1.0 + p * p * cos_theta))
+}
+
+/// Cell-level MTJ bitcell area from the layout formulation.
+fn mram_area_rel(fins_write: u32, fins_read: u32, sot: bool) -> f64 {
+    let extra_read = if sot { layout::SOT_READ_OVERHEAD } else { 0.0 };
+    // Write stack width: fins side by side; the read device of an STT
+    // cell IS the write device (shared), so only SOT adds read width.
+    let read_fins_width = if sot {
+        (fins_read.saturating_sub(1)) as f64 * layout::FIN_PITCH
+    } else {
+        0.0
+    };
+    let width = (fins_write - 1) as f64 * layout::FIN_PITCH
+        + read_fins_width
+        + layout::WIDTH_BASE
+        + extra_read;
+    width * layout::CELL_HEIGHT / layout::SRAM_CELL_AREA
+}
+
+/// Characterize an STT bitcell at the given write fin count.
+pub fn stt_point(fins: u32) -> FinSweepPoint {
+    let mtj = Mtj::stt_16nm();
+    let xtor = FinFet::new(fins, Flavor::Hp);
+    let pulse_budget = STT_PULSE_BUDGET;
+
+    // --- write: resistance-limited drive through the junction -------
+    // series: access device + junction; solve I = Ids(VDD, VDD - I*R)
+    // by bisection (f(I) = I - Ids(..) is monotone increasing in I).
+    let drive = |r_state: f64| -> f64 { solve_series_drive(&xtor, r_state) };
+
+    // set: P -> AP. Incubation happens near parallel, so the junction
+    // is mostly in R_P; efficiency at cos(theta)=+1 (low).
+    let r_set = 0.5 * (mtj.r_p() + mtj.r_ap());
+    let i_set = drive(mtj.r_p() * 0.7 + r_set * 0.3);
+    let eta_set = eta_slonczewski(mtj.polarization, 0.95);
+    let prob_set = LlgsProblem {
+        b_k: MU0 * mtj.hk,
+        easy: [0.0, 0.0, 1.0],
+        alpha: mtj.alpha,
+        a_j: a_j(&mtj, eta_set, i_set),
+        p: [0.0, 0.0, 1.0],
+        theta0: mtj.theta0(),
+    };
+    let t_set = prob_set.solve(pulse_budget);
+
+    // reset: AP -> P. Higher efficiency; junction mostly in R_AP, so
+    // the same supply pushes less current but the voltage across the
+    // junction (hence power I^2 R) is higher.
+    let i_reset = drive(mtj.r_ap() * 0.7 + r_set * 0.3);
+    let eta_reset = eta_slonczewski(mtj.polarization, -0.95);
+    let prob_reset = LlgsProblem { a_j: a_j(&mtj, eta_reset, i_reset), ..prob_set };
+    let t_reset = prob_reset.solve(pulse_budget);
+
+    // energy drawn from the supply during the pulse (+ driver caps)
+    let e_drv = 2.0 * xtor.cg() * VDD * VDD;
+    let e_set = VDD * i_set * t_set.t_switch + e_drv;
+    let e_reset = VDD * i_reset * t_reset.t_switch + e_drv;
+
+    // --- read: 25 mV differential sensing ---------------------------
+    let v_read = 0.28; // read-disturb-safe bias (shared write path)
+    let r_access_read = xtor.r_on();
+    let sense = transient::mtj_sense(
+        r_access_read,
+        mtj.r_p(),
+        mtj.r_ap(),
+        50e-15,
+        v_read,
+    );
+    let e_senseamp = 55e-15; // latch + column circuitry
+    FinSweepPoint {
+        fins_write: fins,
+        fins_read: fins,
+        write_latency_set: t_set.t_switch,
+        write_latency_reset: t_reset.t_switch,
+        write_energy_set: e_set,
+        write_energy_reset: e_reset,
+        sense_latency: WL_RISE + sense.latency,
+        sense_energy: sense.energy + e_senseamp,
+        area_rel: mram_area_rel(fins, fins, false),
+        functional: t_set.switched && t_reset.switched && sense.resolved,
+    }
+}
+
+/// Characterize a SOT bitcell at the given write fin count (read device
+/// fixed at 1 fin thanks to the decoupled read path).
+pub fn sot_point(fins_write: u32) -> FinSweepPoint {
+    let mtj = Mtj::sot_16nm();
+    let ch = SotChannel::beta_w_16nm();
+    let wr = FinFet::new(fins_write, Flavor::Hp);
+    let rd = FinFet::new(1, Flavor::Hp);
+    let pulse_budget = SOT_PULSE_BUDGET;
+
+    // charge current through the heavy-metal channel
+    let i_c = solve_series_drive(&wr, ch.r_channel);
+    let i_s = ch.spin_current(i_c, mtj.area());
+    // SOT damping-like torque efficiency ~ 1 (the spin current is
+    // already the polarized quantity); small set/reset asymmetry from
+    // the Oersted field aiding one polarity.
+    let base = LlgsProblem {
+        b_k: MU0 * mtj.hk,
+        easy: [0.0, 1.0, 0.0],
+        alpha: mtj.alpha,
+        a_j: a_j(&mtj, 1.0, i_s),
+        p: [0.0, 1.0, 0.0],
+        theta0: mtj.theta0(),
+    };
+    let t_set = base.solve(pulse_budget);
+    let t_reset =
+        LlgsProblem { a_j: base.a_j * 1.22, ..base }.solve(pulse_budget);
+
+    let e_drv = 2.0 * wr.cg() * VDD * VDD;
+    let e_set = VDD * i_c * t_set.t_switch + e_drv;
+    let e_reset = VDD * i_c * t_reset.t_switch + e_drv;
+
+    // read through the dedicated 1-fin device: a somewhat higher read
+    // bias is safe because the junction never sees write-path stress.
+    let v_read = 0.30;
+    let sense =
+        transient::mtj_sense(rd.r_on(), mtj.r_p(), mtj.r_ap(), 50e-15, v_read);
+    let e_senseamp = 12e-15;
+    FinSweepPoint {
+        fins_write,
+        fins_read: 1,
+        write_latency_set: t_set.t_switch,
+        write_latency_reset: t_reset.t_switch,
+        write_energy_set: e_set,
+        write_energy_reset: e_reset,
+        sense_latency: WL_RISE + sense.latency,
+        sense_energy: sense.energy + e_senseamp,
+        area_rel: mram_area_rel(fins_write, 1, true),
+        functional: t_set.switched && t_reset.switched && sense.resolved,
+    }
+}
+
+/// Run the full fin-count sweep (1..=8 write fins) for both MRAM
+/// flavors and pick the min-EDAP functional sizing for each.
+pub fn characterize() -> CharacterizeResult {
+    let stt_sweep: Vec<FinSweepPoint> = (1..=8).map(stt_point).collect();
+    let sot_sweep: Vec<FinSweepPoint> = (1..=8).map(sot_point).collect();
+
+    let pick = |sweep: &[FinSweepPoint]| -> FinSweepPoint {
+        *sweep
+            .iter()
+            .filter(|p| p.functional)
+            .min_by(|a, b| a.edap().partial_cmp(&b.edap()).unwrap())
+            .expect("no functional sizing in sweep")
+    };
+
+    CharacterizeResult {
+        stt: pick(&stt_sweep).to_params(MemTech::SttMram),
+        sot: pick(&sot_sweep).to_params(MemTech::SotMram),
+        stt_sweep,
+        sot_sweep,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Relative-band assertion helper.
+    fn in_band(x: f64, lo: f64, hi: f64, what: &str) {
+        assert!(
+            (lo..=hi).contains(&x),
+            "{what} = {x:.4e} outside [{lo:.3e}, {hi:.3e}]"
+        );
+    }
+
+    #[test]
+    fn stt_optimum_matches_table1_class() {
+        let r = characterize();
+        // Paper: 4 fins, 8.4/7.78 ns, 1.1/2.2 pJ, sense 650 ps/0.076 pJ.
+        // Model-vs-paper deltas are recorded in EXPERIMENTS.md §T1.
+        assert!(
+            (3..=5).contains(&r.stt.fins_write),
+            "stt fins {}",
+            r.stt.fins_write
+        );
+        in_band(r.stt.write_latency_set, 4e-9, 14e-9, "stt set latency");
+        in_band(r.stt.write_latency_reset, 3e-9, 12e-9, "stt reset latency");
+        assert!(
+            r.stt.write_latency_set > r.stt.write_latency_reset,
+            "set must be the slow polarity"
+        );
+        in_band(r.stt.write_energy_set, 0.4e-12, 2.5e-12, "stt set energy");
+        in_band(r.stt.write_energy_reset, 0.15e-12, 2.5e-12, "stt reset energy");
+        in_band(r.stt.sense_latency, 350e-12, 1000e-12, "stt sense latency");
+        in_band(r.stt.sense_energy, 0.03e-12, 0.15e-12, "stt sense energy");
+        in_band(r.stt.area_rel, 0.25, 0.45, "stt area");
+    }
+
+    #[test]
+    fn sot_optimum_matches_table1_class() {
+        let r = characterize();
+        // Paper: 3(w)+1(r) fins, 313/243 ps, 0.08 pJ, sense 650 ps/0.020 pJ.
+        assert!(
+            (2..=4).contains(&r.sot.fins_write),
+            "sot fins {}",
+            r.sot.fins_write
+        );
+        assert_eq!(r.sot.fins_read, 1);
+        in_band(r.sot.write_latency_set, 120e-12, 650e-12, "sot set latency");
+        assert!(r.sot.write_latency_reset < r.sot.write_latency_set);
+        in_band(r.sot.write_energy_set, 0.01e-12, 0.25e-12, "sot energy");
+        in_band(r.sot.sense_latency, 350e-12, 1300e-12, "sot sense latency");
+        assert!(
+            r.sot.sense_energy < r.stt.sense_energy,
+            "decoupled read path must be cheaper"
+        );
+        in_band(r.sot.area_rel, 0.18, 0.40, "sot area");
+        // Both MRAM cells are >=2.5x denser than the 6T SRAM cell. (The
+        // paper's SOT cell is also denser than its STT cell because STT
+        // needs 4 shared fins vs our sweep's 3; at equal write fins the
+        // SOT read stack adds width — recorded in EXPERIMENTS.md §T1.)
+        assert!(r.sot.area_rel < 0.4 && r.stt.area_rel < 0.4);
+    }
+
+    #[test]
+    fn sot_writes_orders_faster_than_stt() {
+        let r = characterize();
+        assert!(
+            r.stt.write_latency_set / r.sot.write_latency_set > 10.0,
+            "stt {} vs sot {}",
+            r.stt.write_latency_set,
+            r.sot.write_latency_set
+        );
+        assert!(r.stt.write_energy_set / r.sot.write_energy_set > 4.0);
+    }
+
+    #[test]
+    fn more_fins_faster_stt_writes() {
+        let p2 = stt_point(2);
+        let p6 = stt_point(6);
+        if p2.functional && p6.functional {
+            assert!(p6.write_latency_set < p2.write_latency_set);
+        }
+        assert!(p6.area_rel > p2.area_rel, "area grows with fins");
+    }
+
+    #[test]
+    fn sweep_is_complete_and_monotone_area() {
+        let r = characterize();
+        assert_eq!(r.stt_sweep.len(), 8);
+        assert_eq!(r.sot_sweep.len(), 8);
+        for w in r.stt_sweep.windows(2) {
+            assert!(w[1].area_rel > w[0].area_rel);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Analytic 16nm-class FinFET access-transistor model.
+//!
+//! Replaces the commercial PDK the paper used. Alpha-power-law I/V
+//! (Sakurai-Newton) with parameters calibrated to public 16FF data:
+//! ~55 uA/fin NMOS drive at VDD=0.8 V, ~0.45 fF/fin effective gate
+//! capacitance, ~1 nA/fin subthreshold leakage (HP flavor; the SRAM
+//! array uses the HD low-leakage flavor with ~25 pA/fin).
+
+/// Process corner / flavor of the device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    /// High-performance logic transistor (periphery, MRAM write paths).
+    Hp,
+    /// High-density low-leakage (SRAM array transistors).
+    Hd,
+}
+
+/// FinFET device model. All quantities per the full device (i.e.
+/// already multiplied by `fins`).
+#[derive(Clone, Copy, Debug)]
+pub struct FinFet {
+    pub fins: u32,
+    pub flavor: Flavor,
+    /// Threshold voltage (V).
+    pub vth: f64,
+    /// Velocity-saturation exponent (alpha-power law).
+    pub alpha: f64,
+    /// Drive transconductance coefficient per fin (A/V^alpha).
+    pub k_fin: f64,
+    /// Effective gate capacitance per fin (F).
+    pub cg_fin: f64,
+    /// Drain/source junction capacitance per fin (F).
+    pub cd_fin: f64,
+    /// Subthreshold + gate leakage per fin at VDD (A).
+    pub ileak_fin: f64,
+}
+
+/// Supply voltage of the 16nm node modeled throughout the framework.
+pub const VDD: f64 = 0.8;
+
+impl FinFet {
+    pub fn new(fins: u32, flavor: Flavor) -> Self {
+        match flavor {
+            Flavor::Hp => FinFet {
+                fins,
+                flavor,
+                vth: 0.30,
+                alpha: 1.25,
+                // calibrated: Ion(0.8 V) ~ 55 uA/fin
+                k_fin: 55e-6 / (VDD - 0.30f64).powf(1.25),
+                cg_fin: 0.45e-15,
+                cd_fin: 0.25e-15,
+                ileak_fin: 1.0e-9,
+            },
+            Flavor::Hd => FinFet {
+                fins,
+                flavor,
+                vth: 0.42,
+                alpha: 1.3,
+                // HD: ~28 uA/fin
+                k_fin: 28e-6 / (VDD - 0.42f64).powf(1.3),
+                cg_fin: 0.40e-15,
+                cd_fin: 0.22e-15,
+                ileak_fin: 25e-12,
+            },
+        }
+    }
+
+    /// Saturation drive voltage Vdsat(Vgs).
+    fn vdsat(&self, vgs: f64) -> f64 {
+        // Empirical: Vdsat scales with overdrive^(alpha/2).
+        0.35 * ((vgs - self.vth).max(0.0) / (VDD - self.vth)).powf(self.alpha / 2.0)
+            * (VDD - self.vth)
+            + 0.05
+    }
+
+    /// Drain current (A) at the given biases (alpha-power law, with a
+    /// linear region below Vdsat).
+    pub fn ids(&self, vgs: f64, vds: f64) -> f64 {
+        let ov = vgs - self.vth;
+        // subthreshold floor (continuous at ov = 0 so Ids is monotone)
+        let ss = 0.080;
+        let sub = self.fins as f64
+            * self.ileak_fin
+            * 10f64.powf(ov.min(0.0) / ss)
+            * (vds / VDD).clamp(0.0, 1.0);
+        if ov <= 0.0 {
+            return sub;
+        }
+        let isat = sub + self.fins as f64 * self.k_fin * ov.powf(self.alpha);
+        let vdsat = self.vdsat(vgs);
+        if vds >= vdsat {
+            isat
+        } else {
+            // smooth linear region: parabolic interpolation to 0 at vds=0
+            let x = vds / vdsat;
+            isat * x * (2.0 - x)
+        }
+    }
+
+    /// On-current at full bias.
+    pub fn ion(&self) -> f64 {
+        self.ids(VDD, VDD)
+    }
+
+    /// Effective on-resistance for RC delay estimation (Vdd/2 point).
+    pub fn r_on(&self) -> f64 {
+        let i_half = self.ids(VDD, VDD / 2.0);
+        if i_half <= 0.0 {
+            f64::INFINITY
+        } else {
+            (VDD / 2.0) / i_half
+        }
+    }
+
+    /// Total gate capacitance (F).
+    pub fn cg(&self) -> f64 {
+        self.fins as f64 * self.cg_fin
+    }
+
+    /// Total drain capacitance (F).
+    pub fn cd(&self) -> f64 {
+        self.fins as f64 * self.cd_fin
+    }
+
+    /// Off-state leakage at VDD (A).
+    pub fn leakage(&self) -> f64 {
+        self.fins as f64 * self.ileak_fin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drive_current_calibration() {
+        let t = FinFet::new(1, Flavor::Hp);
+        let ion = t.ion();
+        assert!(
+            (50e-6..60e-6).contains(&ion),
+            "HP Ion/fin {ion:.3e} out of 16FF band"
+        );
+        let t4 = FinFet::new(4, Flavor::Hp);
+        assert!((t4.ion() / ion - 4.0).abs() < 1e-9, "Ion scales with fins");
+    }
+
+    #[test]
+    fn hd_is_low_leakage() {
+        let hp = FinFet::new(1, Flavor::Hp);
+        let hd = FinFet::new(1, Flavor::Hd);
+        assert!(hd.leakage() < hp.leakage() / 10.0);
+        assert!(hd.ion() < hp.ion());
+    }
+
+    #[test]
+    fn current_monotone_in_vgs_and_vds() {
+        let t = FinFet::new(2, Flavor::Hp);
+        let mut prev = 0.0;
+        for i in 0..=16 {
+            let vgs = i as f64 * VDD / 16.0;
+            let ids = t.ids(vgs, VDD);
+            assert!(ids >= prev, "non-monotone in vgs at {vgs}");
+            prev = ids;
+        }
+        let mut prev = 0.0;
+        for i in 0..=16 {
+            let vds = i as f64 * VDD / 16.0;
+            let ids = t.ids(VDD, vds);
+            assert!(ids >= prev - 1e-12, "non-monotone in vds at {vds}");
+            prev = ids;
+        }
+    }
+
+    #[test]
+    fn subthreshold_slope() {
+        let t = FinFet::new(1, Flavor::Hp);
+        // 80 mV/decade below Vth
+        let i1 = t.ids(t.vth - 0.080, VDD);
+        let i2 = t.ids(t.vth - 0.160, VDD);
+        let ratio = i1 / i2;
+        assert!((ratio - 10.0).abs() < 0.5, "slope ratio {ratio}");
+    }
+
+    #[test]
+    fn r_on_is_finite_and_reasonable() {
+        let t = FinFet::new(4, Flavor::Hp);
+        let r = t.r_on();
+        // 4-fin HP: a few kOhm
+        assert!((500.0..10_000.0).contains(&r), "r_on {r}");
+    }
+}

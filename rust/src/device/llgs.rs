@@ -1,0 +1,248 @@
+//! Macrospin Landau-Lifshitz-Gilbert-Slonczewski (LLGS) solver.
+//!
+//! Replaces the paper's SPICE transient *write* analysis: given a drive
+//! current (hence a spin-torque field `a_j`), integrate the free-layer
+//! magnetization until it crosses the switched threshold, yielding the
+//! write latency that the fin-count sweep in [`super::characterize`]
+//! modulates "to the point of failure".
+//!
+//! Dynamics (explicit Landau-Lifshitz form, fields in Tesla):
+//!
+//! ```text
+//! dm/dt = -g' (m x B) - g' alpha m x (m x B) + g' a_j m x (m x p)
+//! g' = gamma / (1 + alpha^2)
+//! B  = B_k (m . e) e          (uniaxial easy axis e)
+//! a_j = hbar * eta * I / (2 e Ms V)   [Tesla]
+//! ```
+//!
+//! STT: p = easy axis (fixed layer), switching starts from the thermal
+//! tilt theta0 and shows the characteristic incubation. SOT is modeled
+//! as a type-y cell (easy axis parallel to the injected spin
+//! polarization): same equation, but `a_j` carries the spin-Hall
+//! geometric gain, so switching is sub-ns at modest charge currents.
+//! The critical spin-torque field is `a_j,c = alpha * B_k` (macrospin);
+//! tests pin this numerically.
+
+use super::mtj::GAMMA;
+
+/// Problem definition for one switching simulation.
+#[derive(Clone, Copy, Debug)]
+pub struct LlgsProblem {
+    /// Uniaxial anisotropy field (T), i.e. mu0 * Hk.
+    pub b_k: f64,
+    /// Easy-axis unit vector.
+    pub easy: [f64; 3],
+    /// Gilbert damping.
+    pub alpha: f64,
+    /// Spin-torque field magnitude (T); sign chosen to destabilize the
+    /// initial state.
+    pub a_j: f64,
+    /// Spin polarization direction (unit vector).
+    pub p: [f64; 3],
+    /// Initial tilt from the easy axis (rad) — thermal theta0.
+    pub theta0: f64,
+}
+
+/// Result of a switching simulation.
+#[derive(Clone, Copy, Debug)]
+pub struct Trajectory {
+    pub switched: bool,
+    /// Time of threshold crossing (s); `t_max` if not switched.
+    pub t_switch: f64,
+    /// Steps integrated (diagnostics / perf accounting).
+    pub steps: u64,
+    /// Final magnetization.
+    pub m_final: [f64; 3],
+}
+
+#[inline]
+fn cross(a: [f64; 3], b: [f64; 3]) -> [f64; 3] {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+#[inline]
+fn dot(a: [f64; 3], b: [f64; 3]) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+#[inline]
+fn norm(a: [f64; 3]) -> [f64; 3] {
+    let n = dot(a, a).sqrt();
+    [a[0] / n, a[1] / n, a[2] / n]
+}
+
+impl LlgsProblem {
+    /// dm/dt at magnetization `m`.
+    #[inline]
+    fn deriv(&self, m: [f64; 3]) -> [f64; 3] {
+        let g = GAMMA / (1.0 + self.alpha * self.alpha);
+        let me = dot(m, self.easy);
+        let b = [
+            self.b_k * me * self.easy[0],
+            self.b_k * me * self.easy[1],
+            self.b_k * me * self.easy[2],
+        ];
+        let mxb = cross(m, b);
+        let mxmxb = cross(m, mxb);
+        let mxp = cross(m, self.p);
+        let mxmxp = cross(m, mxp);
+        [
+            -g * (mxb[0] + self.alpha * mxmxb[0] - self.a_j * mxmxp[0]),
+            -g * (mxb[1] + self.alpha * mxmxb[1] - self.a_j * mxmxp[1]),
+            -g * (mxb[2] + self.alpha * mxmxb[2] - self.a_j * mxmxp[2]),
+        ]
+    }
+
+    /// Initial magnetization: easy axis tilted by theta0 (in a plane
+    /// orthogonal to the easy axis, deterministic direction).
+    fn m0(&self) -> [f64; 3] {
+        let e = norm(self.easy);
+        // find any unit vector orthogonal to e
+        let t = if e[0].abs() < 0.9 { [1.0, 0.0, 0.0] } else { [0.0, 1.0, 0.0] };
+        let o = norm(cross(e, t));
+        let (s, c) = self.theta0.sin_cos();
+        norm([
+            c * e[0] + s * o[0],
+            c * e[1] + s * o[1],
+            c * e[2] + s * o[2],
+        ])
+    }
+
+    /// Integrate with RK4 until `m . easy` crosses `-threshold` or
+    /// `t_max` elapses. `dt` is chosen from the precession period.
+    pub fn solve(&self, t_max: f64) -> Trajectory {
+        // Precession frequency sets the stable step: ~40 steps/period.
+        let f_prec = GAMMA * (self.b_k + self.a_j.abs()) / (2.0 * std::f64::consts::PI);
+        let dt = (1.0 / (f_prec * 40.0)).min(2e-12);
+        let threshold = 0.90;
+
+        let mut m = self.m0();
+        let mut t = 0.0;
+        let mut steps = 0u64;
+        while t < t_max {
+            // RK4 step
+            let k1 = self.deriv(m);
+            let m2 = [
+                m[0] + 0.5 * dt * k1[0],
+                m[1] + 0.5 * dt * k1[1],
+                m[2] + 0.5 * dt * k1[2],
+            ];
+            let k2 = self.deriv(m2);
+            let m3 = [
+                m[0] + 0.5 * dt * k2[0],
+                m[1] + 0.5 * dt * k2[1],
+                m[2] + 0.5 * dt * k2[2],
+            ];
+            let k3 = self.deriv(m3);
+            let m4 = [m[0] + dt * k3[0], m[1] + dt * k3[1], m[2] + dt * k3[2]];
+            let k4 = self.deriv(m4);
+            m = [
+                m[0] + dt / 6.0 * (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]),
+                m[1] + dt / 6.0 * (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]),
+                m[2] + dt / 6.0 * (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]),
+            ];
+            m = norm(m); // renormalize |m| = 1 (macrospin invariant)
+            t += dt;
+            steps += 1;
+            if dot(m, norm(self.easy)) < -threshold {
+                return Trajectory { switched: true, t_switch: t, steps, m_final: m };
+            }
+        }
+        Trajectory { switched: false, t_switch: t_max, steps, m_final: m }
+    }
+}
+
+/// Critical spin-torque field for antidamping switching (macrospin).
+pub fn critical_aj(alpha: f64, b_k: f64) -> f64 {
+    alpha * b_k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stt_problem(overdrive: f64) -> LlgsProblem {
+        let alpha = 0.012;
+        let b_k = 0.30; // ~2.4e5 A/m * mu0
+        LlgsProblem {
+            b_k,
+            easy: [0.0, 0.0, 1.0],
+            alpha,
+            a_j: overdrive * critical_aj(alpha, b_k),
+            p: [0.0, 0.0, 1.0],
+            theta0: 0.08,
+        }
+    }
+
+    #[test]
+    fn switches_above_critical() {
+        let t = stt_problem(2.0).solve(50e-9);
+        assert!(t.switched, "2x overdrive must switch");
+        assert!(t.t_switch > 0.1e-9 && t.t_switch < 50e-9);
+    }
+
+    #[test]
+    fn does_not_switch_below_critical() {
+        let t = stt_problem(0.5).solve(20e-9);
+        assert!(!t.switched, "0.5x overdrive must not switch");
+        // and it must relax back toward the easy axis
+        assert!(t.m_final[2] > 0.9, "m_z {}", t.m_final[2]);
+    }
+
+    #[test]
+    fn latency_decreases_with_overdrive() {
+        let t15 = stt_problem(1.5).solve(100e-9);
+        let t3 = stt_problem(3.0).solve(100e-9);
+        let t6 = stt_problem(6.0).solve(100e-9);
+        assert!(t15.switched && t3.switched && t6.switched);
+        assert!(
+            t15.t_switch > t3.t_switch && t3.t_switch > t6.t_switch,
+            "{} {} {}",
+            t15.t_switch,
+            t3.t_switch,
+            t6.t_switch
+        );
+    }
+
+    #[test]
+    fn smaller_theta0_longer_incubation() {
+        let mut a = stt_problem(2.0);
+        a.theta0 = 0.02;
+        let mut b = stt_problem(2.0);
+        b.theta0 = 0.2;
+        let ta = a.solve(100e-9);
+        let tb = b.solve(100e-9);
+        assert!(ta.switched && tb.switched);
+        assert!(ta.t_switch > tb.t_switch);
+    }
+
+    #[test]
+    fn magnetization_stays_unit() {
+        let t = stt_problem(2.5).solve(50e-9);
+        let n = (t.m_final[0].powi(2) + t.m_final[1].powi(2) + t.m_final[2].powi(2))
+            .sqrt();
+        assert!((n - 1.0).abs() < 1e-9, "|m| {n}");
+    }
+
+    #[test]
+    fn inplane_type_y_switches_fast() {
+        // SOT-like: easy axis y, polarization y, low damping, strong a_j.
+        let alpha = 0.010;
+        let b_k = 0.26;
+        let p = LlgsProblem {
+            b_k,
+            easy: [0.0, 1.0, 0.0],
+            alpha,
+            a_j: 20.0 * critical_aj(alpha, b_k),
+            p: [0.0, 1.0, 0.0],
+            theta0: 0.09,
+        };
+        let t = p.solve(5e-9);
+        assert!(t.switched);
+        assert!(t.t_switch < 1e-9, "SOT-class switch {} s", t.t_switch);
+    }
+}

@@ -1,0 +1,40 @@
+//! Circuit-level NVM characterization (paper §III-A, Table I).
+//!
+//! The paper uses a commercial 16nm FinFET PDK plus published STT
+//! (Kim'15 CICC) and SOT (Kazemi'16 TED) compact models, driving
+//! parameterized SPICE netlists in which the read/write pulse widths are
+//! modulated to the point of failure and access-device fin counts are
+//! swept. None of that proprietary stack is available here, so this
+//! module rebuilds the *same flow* from first principles:
+//!
+//! * [`finfet`] — analytic alpha-power-law FinFET I/V with per-fin
+//!   drive, capacitance, and leakage calibrated to public 16FF data.
+//! * [`mtj`] — magnetic tunnel junction device models (geometry, RA
+//!   product, TMR, thermal stability) for perpendicular STT and
+//!   heavy-metal SOT stacks.
+//! * [`llgs`] — a macrospin Landau-Lifshitz-Gilbert-Slonczewski ODE
+//!   solver (RK4) that produces switching trajectories and write
+//!   latency under a given drive current, replacing the SPICE transient
+//!   write analysis.
+//! * [`transient`] — an RC nodal transient simulator for the read path
+//!   (bitline differential development to the 25 mV sense threshold),
+//!   replacing the SPICE read analysis.
+//! * [`characterize`] — the fin-count sweep (paper's Table I flow):
+//!   pick the optimal access-device size, emit [`BitcellParams`].
+//!
+//! The flow's outputs are validated against the published Table I
+//! values in tests (tolerance documented per parameter); downstream
+//! cache modeling defaults to the paper-calibrated
+//! [`BitcellParams::paper_stt`]/[`BitcellParams::paper_sot`] constants
+//! so that Table II+ reproductions do not inherit device-layer drift.
+
+pub mod characterize;
+pub mod relaxed;
+pub mod finfet;
+pub mod llgs;
+pub mod mtj;
+pub mod transient;
+pub mod types;
+
+pub use characterize::{characterize, CharacterizeResult};
+pub use types::{BitcellParams, MemTech, WritePolarity};

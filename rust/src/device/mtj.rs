@@ -1,0 +1,208 @@
+//! Magnetic tunnel junction device models.
+//!
+//! Two stacks, mirroring the paper's sources:
+//!
+//! * **STT** (perpendicular MTJ, Kim'15-CICC-style): write current flows
+//!   *through* the junction; spin-transfer torque from the polarized
+//!   current switches the free layer. Set (P->AP) needs more current
+//!   than reset (AP->P) because polarization efficiency is asymmetric.
+//! * **SOT** (Kazemi'16-TED-style): a charge current through an adjacent
+//!   heavy-metal (beta-W) strip injects a spin current via the spin Hall
+//!   effect; read and write paths are electrically separate, so the read
+//!   transistor can be minimum-size and the junction never sees write
+//!   stress.
+//!
+//! Physical constants in SI; geometry at the 16nm-node scale the paper
+//! targets.
+
+/// Reduced Planck constant (J*s).
+pub const HBAR: f64 = 1.054_571_8e-34;
+/// Elementary charge (C).
+pub const QE: f64 = 1.602_176_6e-19;
+/// Vacuum permeability (T*m/A).
+pub const MU0: f64 = 1.256_637e-6;
+/// Gyromagnetic ratio (rad/(s*T)).
+pub const GAMMA: f64 = 1.760_859e11;
+/// Boltzmann constant (J/K).
+pub const KB: f64 = 1.380_649e-23;
+/// Operating temperature (K).
+pub const TEMP: f64 = 300.0;
+
+/// MTJ stack parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Mtj {
+    /// Free-layer diameter (m); junctions are circular.
+    pub diameter: f64,
+    /// Free-layer thickness (m).
+    pub t_free: f64,
+    /// Saturation magnetization (A/m).
+    pub ms: f64,
+    /// Gilbert damping.
+    pub alpha: f64,
+    /// Effective perpendicular anisotropy field (A/m).
+    pub hk: f64,
+    /// Resistance-area product in the parallel state (Ohm*m^2).
+    pub ra_p: f64,
+    /// Tunnel magnetoresistance ratio (R_AP = R_P * (1 + tmr)).
+    pub tmr: f64,
+    /// Spin polarization (STT) of the fixed layer.
+    pub polarization: f64,
+}
+
+impl Mtj {
+    /// Junction area (m^2).
+    pub fn area(&self) -> f64 {
+        std::f64::consts::PI * (self.diameter / 2.0).powi(2)
+    }
+
+    /// Free-layer volume (m^3).
+    pub fn volume(&self) -> f64 {
+        self.area() * self.t_free
+    }
+
+    /// Parallel-state resistance (Ohm).
+    pub fn r_p(&self) -> f64 {
+        self.ra_p / self.area()
+    }
+
+    /// Antiparallel-state resistance (Ohm).
+    pub fn r_ap(&self) -> f64 {
+        self.r_p() * (1.0 + self.tmr)
+    }
+
+    /// Thermal stability factor Delta = E_b / kT with E_b = mu0 Ms Hk V / 2.
+    pub fn thermal_stability(&self) -> f64 {
+        0.5 * MU0 * self.ms * self.hk * self.volume() / (KB * TEMP)
+    }
+
+    /// Initial cone angle used for deterministic switching analysis:
+    /// the RMS thermal tilt theta_0 = sqrt(1 / (2 Delta)).
+    pub fn theta0(&self) -> f64 {
+        (1.0 / (2.0 * self.thermal_stability())).sqrt()
+    }
+
+    /// STT critical switching current (A), Slonczewski macrospin:
+    /// Ic0 = (2 e / hbar) * (alpha / eta) * mu0 Ms Hk V  (perpendicular).
+    pub fn ic0_stt(&self, polarity_eta: f64) -> f64 {
+        (2.0 * QE / HBAR) * (self.alpha / polarity_eta)
+            * MU0
+            * self.ms
+            * self.hk
+            * self.volume()
+            / 2.0
+    }
+
+    /// 16nm-node perpendicular STT stack (Kim'15-class). The MTJ pillar
+    /// sits above the access device, so its diameter (~50 nm) is set by
+    /// MTJ patterning, not the logic pitch. Calibrated so the Table I
+    /// flow lands in the paper's band (~8-11 ns, ~1 pJ set writes,
+    /// Delta ~ 100).
+    pub fn stt_16nm() -> Self {
+        Mtj {
+            diameter: 50e-9,
+            t_free: 1.3e-9,
+            ms: 0.85e6,
+            alpha: 0.0064,
+            hk: 2.6e5,
+            ra_p: 9.0e-12, // 9 Ohm*um^2
+            tmr: 1.5,
+            polarization: 0.65,
+        }
+    }
+
+    /// 16nm SOT stack (Kazemi'16-class): the free layer is switched by
+    /// the heavy-metal spin current (type-y cell), so the junction can
+    /// trade RA for read margin independently of the write path.
+    pub fn sot_16nm() -> Self {
+        Mtj {
+            diameter: 40e-9,
+            t_free: 1.2e-9,
+            ms: 0.90e6,
+            alpha: 0.010,
+            hk: 2.1e5,
+            ra_p: 8.0e-12,
+            tmr: 1.8,
+            polarization: 0.60,
+        }
+    }
+}
+
+/// Heavy-metal write channel of a SOT cell.
+#[derive(Clone, Copy, Debug)]
+pub struct SotChannel {
+    /// Spin Hall angle of the heavy metal (beta-W ~ 0.33).
+    pub theta_sh: f64,
+    /// Channel resistance seen by the write current (Ohm).
+    pub r_channel: f64,
+    /// Channel thickness (m) — sets the spin-current injection ratio.
+    pub t_channel: f64,
+    /// Channel width (m), roughly the junction diameter.
+    pub width: f64,
+}
+
+impl SotChannel {
+    pub fn beta_w_16nm() -> Self {
+        SotChannel {
+            theta_sh: 0.30,
+            r_channel: 600.0,
+            t_channel: 4e-9,
+            width: 40e-9,
+        }
+    }
+
+    /// Effective spin current injected into the free layer for a charge
+    /// current `i_c` through the channel under junction area `a_mtj`:
+    /// I_s = theta_SH * (A_mtj / A_channel_cross) * I_c, where the
+    /// geometric gain A_mtj/(w*t) can exceed 1 — the root of SOT's
+    /// energy advantage.
+    pub fn spin_current(&self, i_c: f64, a_mtj: f64) -> f64 {
+        let a_cross = self.width * self.t_channel;
+        self.theta_sh * (a_mtj / a_cross) * i_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resistances_ordered() {
+        let m = Mtj::stt_16nm();
+        assert!(m.r_ap() > m.r_p());
+        // R_P = RA / A: ~6 Ohm*um^2 over ~804 nm^2 -> ~7.5 kOhm
+        let rp = m.r_p();
+        assert!((4e3..12e3).contains(&rp), "r_p {rp}");
+    }
+
+    #[test]
+    fn thermal_stability_retention_class() {
+        // Delta >= 40 gives ~10-year retention; both stacks must hold it.
+        for m in [Mtj::stt_16nm(), Mtj::sot_16nm()] {
+            let d = m.thermal_stability();
+            assert!((40.0..120.0).contains(&d), "Delta {d}");
+        }
+    }
+
+    #[test]
+    fn stt_critical_current_scale() {
+        let m = Mtj::stt_16nm();
+        let ic = m.ic0_stt(m.polarization);
+        // Published 1x-nm perpendicular MTJs: Ic0 tens of uA.
+        assert!((10e-6..120e-6).contains(&ic), "ic0 {ic:.3e}");
+    }
+
+    #[test]
+    fn sot_geometric_spin_gain() {
+        let ch = SotChannel::beta_w_16nm();
+        let m = Mtj::sot_16nm();
+        let gain = ch.spin_current(1.0, m.area());
+        // theta_sh * area ratio: should exceed the bare spin Hall angle
+        assert!(gain > ch.theta_sh, "gain {gain}");
+    }
+
+    #[test]
+    fn theta0_small_angle() {
+        let m = Mtj::stt_16nm();
+        assert!(m.theta0() < 0.2, "theta0 {}", m.theta0());
+    }
+}

@@ -1,0 +1,278 @@
+//! Set-associative cache with true-LRU replacement and configurable
+//! write policy — the building block for both L1 and L2.
+
+/// Write policy on hits/misses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WritePolicy {
+    /// Write-through, no-write-allocate (GPU L1).
+    ThroughNoAllocate,
+    /// Write-back, write-allocate (GPU L2).
+    BackAllocate,
+}
+
+/// Static geometry + policy.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    pub capacity_bytes: u64,
+    pub line_bytes: u64,
+    pub ways: usize,
+    pub policy: WritePolicy,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        (self.capacity_bytes / (self.line_bytes * self.ways as u64)) as usize
+    }
+}
+
+/// Result of one access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccessResult {
+    pub hit: bool,
+    /// A dirty victim line's base address that must be written back.
+    pub writeback: Option<u64>,
+    /// Whether the access allocated a line (miss fill).
+    pub filled: bool,
+}
+
+/// One cache instance. Flat arrays (tags / stamps / flags) indexed by
+/// set*ways + way — no per-set allocation, cache-friendly probes.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    cfg: CacheConfig,
+    sets: usize,
+    /// log2(line_bytes) — lines are always a power of two, so the
+    /// address-to-line division is a shift (perf: the L1 probe runs
+    /// once per trace event; see EXPERIMENTS.md §Perf).
+    line_shift: u32,
+    /// `sets - 1` when `sets` is a power of two (mask indexing).
+    set_mask: Option<usize>,
+    /// Lemire fastmod magic for the non-power-of-two case:
+    /// `line % sets == (((magic * line) as u128 * sets) >> 64)`.
+    set_magic: u64,
+    tags: Vec<u64>,
+    stamps: Vec<u64>,
+    valid: Vec<bool>,
+    dirty: Vec<bool>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let sets = cfg.sets();
+        assert!(sets > 0, "degenerate cache: {cfg:?}");
+        assert!(cfg.line_bytes.is_power_of_two(), "line size must be 2^n");
+        // sets need NOT be a power of two: a 3 MB / 16-way / 128 B L2
+        // has 1536 sets (modulo indexing, as GPGPU-Sim does).
+        let n = sets * cfg.ways;
+        Cache {
+            line_shift: cfg.line_bytes.trailing_zeros(),
+            set_mask: sets.is_power_of_two().then(|| sets - 1),
+            set_magic: (u64::MAX / sets as u64).wrapping_add(1),
+            cfg,
+            sets,
+            tags: vec![0; n],
+            stamps: vec![0; n],
+            valid: vec![false; n],
+            dirty: vec![false; n],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn index(&self, addr: u64) -> (usize, u64) {
+        let line = addr >> self.line_shift;
+        match self.set_mask {
+            Some(mask) => ((line as usize) & mask, line),
+            None => {
+                // Lemire fastmod (exact for line < 2^64)
+                let low = self.set_magic.wrapping_mul(line);
+                let set = ((low as u128 * self.sets as u128) >> 64) as usize;
+                (set, line)
+            }
+        }
+    }
+
+    /// Probe + update for one access. Returns hit/miss and any dirty
+    /// writeback triggered by the fill.
+    pub fn access(&mut self, addr: u64, write: bool) -> AccessResult {
+        self.tick += 1;
+        let (set, line) = self.index(addr);
+        let base = set * self.cfg.ways;
+
+        // probe
+        for w in 0..self.cfg.ways {
+            let i = base + w;
+            if self.valid[i] && self.tags[i] == line {
+                self.hits += 1;
+                self.stamps[i] = self.tick;
+                if write && self.cfg.policy == WritePolicy::BackAllocate {
+                    self.dirty[i] = true;
+                }
+                return AccessResult { hit: true, writeback: None, filled: false };
+            }
+        }
+        self.misses += 1;
+
+        // miss: allocate?
+        let allocate = match (write, self.cfg.policy) {
+            (true, WritePolicy::ThroughNoAllocate) => false,
+            _ => true,
+        };
+        if !allocate {
+            return AccessResult { hit: false, writeback: None, filled: false };
+        }
+
+        // victim: invalid way first, else LRU
+        let mut victim = base;
+        let mut oldest = u64::MAX;
+        for w in 0..self.cfg.ways {
+            let i = base + w;
+            if !self.valid[i] {
+                victim = i;
+                break;
+            }
+            if self.stamps[i] < oldest {
+                oldest = self.stamps[i];
+                victim = i;
+            }
+        }
+        let writeback = if self.valid[victim] && self.dirty[victim] {
+            Some(self.tags[victim] * self.cfg.line_bytes)
+        } else {
+            None
+        };
+        self.valid[victim] = true;
+        self.tags[victim] = line;
+        self.stamps[victim] = self.tick;
+        self.dirty[victim] = write && self.cfg.policy == WritePolicy::BackAllocate;
+        AccessResult { hit: false, writeback, filled: true }
+    }
+
+    /// Flush: count of dirty lines (end-of-simulation writeback burst).
+    pub fn dirty_lines(&self) -> u64 {
+        self.dirty
+            .iter()
+            .zip(&self.valid)
+            .filter(|(d, v)| **d && **v)
+            .count() as u64
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.hits as f64 / (self.hits + self.misses).max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn small(policy: WritePolicy) -> Cache {
+        Cache::new(CacheConfig {
+            capacity_bytes: 4 * 128 * 2, // 4 sets x 2 ways x 128B
+            line_bytes: 128,
+            ways: 2,
+            policy,
+        })
+    }
+
+    #[test]
+    fn repeat_access_hits() {
+        let mut c = small(WritePolicy::BackAllocate);
+        assert!(!c.access(0x1000, false).hit);
+        assert!(c.access(0x1000, false).hit);
+        assert!(c.access(0x1040, false).hit, "same 128B line");
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = small(WritePolicy::BackAllocate);
+        // set 0: lines 0, 4, 8 (stride = sets*line = 512)
+        c.access(0, false);
+        c.access(512, false);
+        c.access(0, false); // refresh line 0
+        let r = c.access(1024, false); // evicts 512 (older)
+        assert!(!r.hit);
+        assert!(c.access(0, false).hit, "line 0 must survive");
+        assert!(!c.access(512, false).hit, "line 512 was evicted");
+    }
+
+    #[test]
+    fn writeback_on_dirty_eviction() {
+        let mut c = small(WritePolicy::BackAllocate);
+        c.access(0, true); // dirty
+        c.access(512, false);
+        let r = c.access(1024, false); // evicts line 0 (dirty)
+        assert_eq!(r.writeback, Some(0));
+    }
+
+    #[test]
+    fn write_through_does_not_allocate() {
+        let mut c = small(WritePolicy::ThroughNoAllocate);
+        let r = c.access(0x2000, true);
+        assert!(!r.hit && !r.filled);
+        // a read of the same line still misses (nothing was cached)
+        assert!(!c.access(0x2000, false).hit);
+        // but a write to a line present from a read hits
+        c.access(0x3000, false);
+        assert!(c.access(0x3000, true).hit);
+    }
+
+    #[test]
+    fn dirty_lines_counted() {
+        let mut c = small(WritePolicy::BackAllocate);
+        c.access(0, true);
+        c.access(512, true);
+        c.access(128, false);
+        assert_eq!(c.dirty_lines(), 2);
+    }
+
+    #[test]
+    fn prop_working_set_within_capacity_always_hits_after_warmup() {
+        proptest::check(30, |g| {
+            let ways = *g.choose(&[2usize, 4, 8]);
+            let sets = *g.choose(&[4usize, 16, 64]);
+            let line = 128u64;
+            let mut c = Cache::new(CacheConfig {
+                capacity_bytes: line * ways as u64 * sets as u64,
+                line_bytes: line,
+                ways,
+                policy: WritePolicy::BackAllocate,
+            });
+            // working set = exactly capacity lines
+            let n_lines = (sets * ways) as u64;
+            for pass in 0..3 {
+                for i in 0..n_lines {
+                    let r = c.access(i * line, false);
+                    if pass > 0 {
+                        assert!(r.hit, "pass {pass}, line {i}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_hits_plus_misses_equals_accesses() {
+        proptest::check(20, |g| {
+            let mut c = small(WritePolicy::BackAllocate);
+            let n = g.usize_in(1, 2000);
+            for _ in 0..n {
+                let addr = g.u64_in(0, 1 << 14);
+                c.access(addr, g.bool());
+            }
+            assert_eq!(c.hits + c.misses, n as u64);
+        });
+    }
+}

@@ -1,0 +1,83 @@
+//! GPU configuration (paper Table IV: the GTX 1080 Ti model).
+
+use super::cache::{CacheConfig, WritePolicy};
+
+/// Hierarchy-level configuration of the simulated GPU.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuConfig {
+    /// Streaming multiprocessors (each owns an L1D).
+    pub n_sms: usize,
+    /// L1 data cache per SM.
+    pub l1_bytes: u64,
+    pub l1_ways: usize,
+    /// Shared L2.
+    pub l2_bytes: u64,
+    pub l2_ways: usize,
+    /// Line size shared by L1/L2 (Table IV: 128 B everywhere).
+    pub line_bytes: u64,
+    /// DRAM channels (1080 Ti: 11 x 32-bit GDDR5X; modeled as 11).
+    pub dram_channels: usize,
+    /// DRAM row-buffer (page) size per channel-bank (bytes).
+    pub dram_row_bytes: u64,
+    /// Banks per DRAM channel.
+    pub dram_banks: usize,
+    /// Core clock (Hz) — Table IV: 1481 MHz.
+    pub core_clock: f64,
+}
+
+impl GpuConfig {
+    /// GTX 1080 Ti per Table IV, with the L2 capacity as a parameter
+    /// (the paper's GPGPU-Sim extension: 3 MB baseline, doubled up to
+    /// 24 MB for the iso-area study).
+    pub fn gtx1080ti(l2_bytes: u64) -> Self {
+        GpuConfig {
+            n_sms: 28,
+            l1_bytes: 48 * 1024,
+            l1_ways: 6,
+            l2_bytes,
+            l2_ways: 16,
+            line_bytes: 128,
+            dram_channels: 11,
+            dram_row_bytes: 2048,
+            dram_banks: 16,
+            core_clock: 1481e6,
+        }
+    }
+
+    pub fn l1_config(&self) -> CacheConfig {
+        CacheConfig {
+            capacity_bytes: self.l1_bytes,
+            line_bytes: self.line_bytes,
+            ways: self.l1_ways,
+            policy: WritePolicy::ThroughNoAllocate,
+        }
+    }
+
+    pub fn l2_config(&self) -> CacheConfig {
+        CacheConfig {
+            capacity_bytes: self.l2_bytes,
+            line_bytes: self.line_bytes,
+            ways: self.l2_ways,
+            policy: WritePolicy::BackAllocate,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_shape() {
+        let g = GpuConfig::gtx1080ti(3 * 1024 * 1024);
+        assert_eq!(g.n_sms, 28);
+        assert_eq!(g.l1_bytes, 48 * 1024);
+        assert_eq!(g.l1_ways, 6);
+        assert_eq!(g.l2_ways, 16);
+        assert_eq!(g.line_bytes, 128);
+        // 48KB / (128B * 6) = 64 sets (power of two)
+        assert_eq!(g.l1_config().sets(), 64);
+        // 3MB / (128 * 16) = 1536 sets — NOT a power of two; the sim
+        // pads to the next power of two internally (gpu.rs).
+    }
+}

@@ -1,0 +1,139 @@
+//! GDDR5X-class DRAM channel model: transaction counting with per-bank
+//! open-row tracking for the latency/energy model.
+//!
+//! The iso-area analysis needs (a) total DRAM transaction counts
+//! (Fig. 6) and (b) a per-transaction latency/energy figure for the
+//! EDP-with-DRAM results (Fig. 8). Row-buffer locality determines the
+//! effective per-access latency, so the model tracks open rows per
+//! (channel, bank).
+
+/// One DRAM access is a 32 B atom (GDDR5X granularity — matches the L2
+/// sector size the paper's transaction counters use).
+pub const DRAM_TX_BYTES: u64 = 32;
+
+/// Timing/energy constants for the latency & energy model (GDDR5X-class,
+/// in seconds / joules per 32 B transaction).
+pub mod timing {
+    /// Row-buffer hit access time (CAS only).
+    pub const T_ROW_HIT: f64 = 15e-9;
+    /// Row miss: precharge + activate + CAS.
+    pub const T_ROW_MISS: f64 = 45e-9;
+    /// Energy per 32 B transaction on a row hit. ~15 pJ/bit I/O+array.
+    pub const E_ROW_HIT: f64 = 3.8e-9;
+    /// Extra energy for activate/precharge on a row miss.
+    pub const E_ROW_MISS_EXTRA: f64 = 2.2e-9;
+}
+
+/// The DRAM subsystem: `channels x banks` open-row registers.
+#[derive(Clone, Debug)]
+pub struct Dram {
+    channels: usize,
+    banks: usize,
+    row_bytes: u64,
+    open_rows: Vec<u64>, // u64::MAX = closed
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+}
+
+impl Dram {
+    pub fn new(channels: usize, banks: usize, row_bytes: u64) -> Self {
+        Dram {
+            channels,
+            banks,
+            row_bytes,
+            open_rows: vec![u64::MAX; channels * banks],
+            reads: 0,
+            writes: 0,
+            row_hits: 0,
+            row_misses: 0,
+        }
+    }
+
+    /// Issue one line-sized access as `line_bytes / 32` transactions.
+    pub fn access(&mut self, addr: u64, write: bool, line_bytes: u64) {
+        let tx = (line_bytes / DRAM_TX_BYTES).max(1);
+        // channel interleaving at line granularity, bank by row bits
+        let line = addr / line_bytes;
+        let ch = (line % self.channels as u64) as usize;
+        let row = addr / (self.row_bytes * self.channels as u64);
+        let bank = (row % self.banks as u64) as usize;
+        let slot = ch * self.banks + bank;
+        if self.open_rows[slot] == row {
+            self.row_hits += tx;
+        } else {
+            self.row_misses += 1;
+            self.row_hits += tx - 1; // burst continues in the open row
+            self.open_rows[slot] = row;
+        }
+        if write {
+            self.writes += tx;
+        } else {
+            self.reads += tx;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    /// Aggregate access latency (s) under the row model, assuming the
+    /// channel-level parallelism hides `channels`-way overlap.
+    pub fn total_latency(&self) -> f64 {
+        (self.row_hits as f64 * timing::T_ROW_HIT
+            + self.row_misses as f64 * timing::T_ROW_MISS)
+            / self.channels as f64
+    }
+
+    /// Aggregate DRAM energy (J).
+    pub fn total_energy(&self) -> f64 {
+        self.total() as f64 * timing::E_ROW_HIT
+            + self.row_misses as f64 * timing::E_ROW_MISS_EXTRA
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_fetch_counts_four_transactions() {
+        let mut d = Dram::new(11, 16, 2048);
+        d.access(0, false, 128);
+        assert_eq!(d.reads, 4);
+        assert_eq!(d.writes, 0);
+    }
+
+    #[test]
+    fn sequential_stream_mostly_row_hits() {
+        let mut d = Dram::new(1, 16, 2048);
+        for i in 0..64 {
+            d.access(i * 128, false, 128);
+        }
+        // 64 lines x 2048B rows -> 4 rows -> 4 misses
+        assert_eq!(d.row_misses, 4);
+        assert_eq!(d.row_hits + d.row_misses, d.total());
+    }
+
+    #[test]
+    fn random_stream_many_row_misses() {
+        let mut d = Dram::new(1, 2, 2048);
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..1000 {
+            d.access(rng.below(1 << 30) & !127, false, 128);
+        }
+        assert!(d.row_misses > 500, "misses {}", d.row_misses);
+    }
+
+    #[test]
+    fn energy_and_latency_positive_and_monotone() {
+        let mut d = Dram::new(11, 16, 2048);
+        d.access(0, false, 128);
+        let e1 = d.total_energy();
+        let l1 = d.total_latency();
+        d.access(1 << 20, true, 128);
+        assert!(d.total_energy() > e1);
+        assert!(d.total_latency() > l1);
+    }
+}

@@ -1,0 +1,29 @@
+//! Trace-driven GPU memory-hierarchy simulator (the GPGPU-Sim
+//! substitute, paper §III-D).
+//!
+//! The paper extends GPGPU-Sim to run DarkNet AlexNet and to support
+//! L2 capacities beyond the GTX 1080 Ti's 3 MB, measuring how the
+//! total number of DRAM transactions falls as the L2 grows (Fig. 6).
+//! Only the *memory system* outcome of that simulation feeds DeepNVM++
+//! (DRAM access counts), so this substitute models exactly that part,
+//! at full fidelity where it matters:
+//!
+//! * per-SM L1 data caches (Table IV: 48 KB, 128 B lines, 6-way LRU,
+//!   write-through / no-write-allocate — the Pascal L1 policy),
+//! * a shared, banked, sectored L2 (128 B lines, 16-way LRU,
+//!   write-back / write-allocate, capacity 3-24 MB),
+//! * a GDDR5X-class DRAM model (32 B transactions, per-bank row
+//!   buffers) that counts reads/writes and row hits/misses.
+//!
+//! Traces come from [`crate::workload::trace`] — the same tiled-GEMM
+//! schedule the analytic traffic model counts, so the two layers
+//! cross-validate (rust/tests/traffic_vs_gpusim.rs).
+
+pub mod cache;
+pub mod config;
+pub mod dram;
+pub mod gpu;
+
+pub use cache::{Cache, CacheConfig};
+pub use config::GpuConfig;
+pub use gpu::{GpuSim, SimStats};

@@ -1,0 +1,16 @@
+//! DeepNVM++ — cross-layer modeling and optimization framework of
+//! non-volatile memories (STT-MRAM / SOT-MRAM) vs SRAM for last-level
+//! caches in GPU architectures running deep-learning workloads.
+//!
+//! Reproduction of: Inci, Isgenc, Marculescu, "DeepNVM++: Cross-Layer
+//! Modeling and Optimization Framework of Non-Volatile Memories for Deep
+//! Learning", IEEE TCAD 2021 (DOI 10.1109/TCAD.2021.3127148).
+
+pub mod device;
+pub mod nvsim;
+pub mod workload;
+pub mod gpusim;
+pub mod analysis;
+pub mod runtime;
+pub mod coordinator;
+pub mod util;

@@ -1,0 +1,11 @@
+//! DeepNVM++ CLI entry point. See `deepnvm help`.
+
+fn main() {
+    // Die quietly on SIGPIPE (e.g. `deepnvm help | head`) instead of
+    // panicking on the failed stdout write.
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(deepnvm::coordinator::run_cli(&args));
+}

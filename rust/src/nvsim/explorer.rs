@@ -1,0 +1,227 @@
+//! Algorithm 1 — EDAP-optimal cache tuning.
+//!
+//! ```text
+//! for mem in {SRAM, STT, SOT}:
+//!   for cap in {1, 2, 4, 8, 16, 32} (+ 3/7/10/24 for the studies):
+//!     for opt in {RdLat, WrLat, RdEn, WrEn, RdEDP, WrEDP, Area, Leak}:
+//!       for acc in {Normal, Fast, Sequential}:
+//!         Q = calculate(EDAP); keep argmin
+//! ```
+//!
+//! The optimization target is NVSim's peripheral-sizing objective: it
+//! biases how decoders, sense amps, drivers and repeaters are sized
+//! before the organization is evaluated. We abstract that sizing to
+//! first-order PPA trade-off profiles (each target helps its metric and
+//! taxes the others — no free lunch), then enumerate *all* consistent
+//! organizations under each (target, mode) pair and keep the
+//! min-EDAP design, exactly as Algorithm 1 does.
+
+use crate::device::MemTech;
+
+use super::model::{evaluate, CacheDesign, CachePpa};
+use super::org::{AccessMode, CacheOrg};
+use super::tech::{Bitcell, TechParams};
+
+/// NVSim optimization targets (Algorithm 1's set O).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptTarget {
+    ReadLatency,
+    WriteLatency,
+    ReadEnergy,
+    WriteEnergy,
+    ReadEdp,
+    WriteEdp,
+    Area,
+    Leakage,
+}
+
+impl OptTarget {
+    pub const ALL: [OptTarget; 8] = [
+        OptTarget::ReadLatency,
+        OptTarget::WriteLatency,
+        OptTarget::ReadEnergy,
+        OptTarget::WriteEnergy,
+        OptTarget::ReadEdp,
+        OptTarget::WriteEdp,
+        OptTarget::Area,
+        OptTarget::Leakage,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptTarget::ReadLatency => "ReadLatency",
+            OptTarget::WriteLatency => "WriteLatency",
+            OptTarget::ReadEnergy => "ReadEnergy",
+            OptTarget::WriteEnergy => "WriteEnergy",
+            OptTarget::ReadEdp => "ReadEDP",
+            OptTarget::WriteEdp => "WriteEDP",
+            OptTarget::Area => "Area",
+            OptTarget::Leakage => "Leakage",
+        }
+    }
+
+    /// Apply the target's peripheral-sizing bias to a baseline PPA.
+    /// Profiles are (read_lat, write_lat, read_en, write_en, leak, area)
+    /// multipliers; each <1 entry is paid for by >1 entries elsewhere.
+    pub fn apply(&self, p: &CachePpa) -> CachePpa {
+        let m: [f64; 6] = match self {
+            // bigger decoders/repeaters: faster reads, leakier, larger
+            OptTarget::ReadLatency => [0.85, 0.97, 1.10, 1.05, 1.18, 1.08],
+            // bigger write drivers
+            OptTarget::WriteLatency => [0.98, 0.88, 1.04, 1.12, 1.10, 1.06],
+            // small sense amps: slower, cheaper reads
+            OptTarget::ReadEnergy => [1.12, 1.00, 0.82, 1.00, 0.95, 0.98],
+            // weak write drivers
+            OptTarget::WriteEnergy => [1.00, 1.12, 1.00, 0.82, 0.95, 0.98],
+            // balanced read path
+            OptTarget::ReadEdp => [0.92, 1.00, 0.92, 1.02, 1.05, 1.02],
+            OptTarget::WriteEdp => [1.00, 0.92, 1.02, 0.92, 1.05, 1.02],
+            // tight layout: slower wires
+            OptTarget::Area => [1.10, 1.06, 1.02, 1.02, 1.00, 0.88],
+            // high-Vt periphery: slower, less leaky (cells keep their
+            // retention-constrained flavor, so the lever is bounded)
+            OptTarget::Leakage => [1.15, 1.10, 1.02, 1.02, 0.88, 1.00],
+        };
+        CachePpa {
+            read_latency: p.read_latency * m[0],
+            write_latency: p.write_latency * m[1],
+            read_energy: p.read_energy * m[2],
+            write_energy: p.write_energy * m[3],
+            leakage_power: p.leakage_power * m[4],
+            area: p.area * m[5],
+        }
+    }
+}
+
+/// The tuned configuration Algorithm 1 appends per (mem, cap).
+#[derive(Clone, Copy, Debug)]
+pub struct TunedConfig {
+    pub tech: MemTech,
+    pub capacity_bytes: u64,
+    pub org: CacheOrg,
+    pub opt: OptTarget,
+    pub ppa: CachePpa,
+}
+
+impl TunedConfig {
+    pub fn design(&self) -> CacheDesign {
+        CacheDesign { tech: self.tech, org: self.org, ppa: self.ppa }
+    }
+}
+
+/// Evaluate every (org, opt, mode) for one memory + capacity and return
+/// the EDAP-optimal configuration.
+pub fn tuned_cache(mem: MemTech, capacity_bytes: u64) -> TunedConfig {
+    let tech = TechParams::n16();
+    let cell = Bitcell::paper(mem);
+    let mut best: Option<TunedConfig> = None;
+    for mode in AccessMode::ALL {
+        for org in CacheOrg::enumerate(capacity_bytes, mode) {
+            let base = evaluate(&tech, &cell, &org);
+            for opt in OptTarget::ALL {
+                let ppa = opt.apply(&base);
+                let cand = TunedConfig {
+                    tech: mem,
+                    capacity_bytes,
+                    org,
+                    opt,
+                    ppa,
+                };
+                let better = match &best {
+                    None => true,
+                    Some(b) => ppa.edap() < b.ppa.edap(),
+                };
+                if better {
+                    best = Some(cand);
+                }
+            }
+        }
+    }
+    best.expect("no consistent organization for capacity")
+}
+
+/// Algorithm 1 over a capacity list: the `TunedConfig` table.
+pub fn explore(capacities_mb: &[u64]) -> Vec<TunedConfig> {
+    let mut out = Vec::new();
+    for &mem in &MemTech::ALL {
+        for &mb in capacities_mb {
+            out.push(tuned_cache(mem, mb * 1024 * 1024));
+        }
+    }
+    out
+}
+
+/// The paper's Algorithm 1 capacity set (MB).
+pub const PAPER_CAPACITIES_MB: [u64; 6] = [1, 2, 4, 8, 16, 32];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn tuned_beats_or_equals_any_fixed_choice() {
+        let best = tuned_cache(MemTech::SttMram, 2 * MB);
+        // spot check against a handful of fixed configurations
+        let tech = TechParams::n16();
+        let cell = Bitcell::paper(MemTech::SttMram);
+        for mode in AccessMode::ALL {
+            for org in CacheOrg::enumerate(2 * MB, mode).into_iter().take(5) {
+                let p = evaluate(&tech, &cell, &org);
+                assert!(
+                    best.ppa.edap() <= OptTarget::ReadEdp.apply(&p).edap() * 1.0001
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn explore_covers_mem_x_capacity() {
+        let t = explore(&[1, 2]);
+        assert_eq!(t.len(), 6);
+        // every (mem, cap) distinct
+        for m in MemTech::ALL {
+            for mb in [1u64, 2] {
+                assert!(
+                    t.iter().any(|c| c.tech == m
+                        && c.capacity_bytes == mb * MB),
+                    "missing {m} {mb}MB"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn opt_targets_trade_off_not_dominate() {
+        // applying a target must improve its own metric and worsen at
+        // least one other.
+        let p = CachePpa {
+            read_latency: 1e-9,
+            write_latency: 1e-9,
+            read_energy: 1e-10,
+            write_energy: 1e-10,
+            leakage_power: 1.0,
+            area: 1e-6,
+        };
+        let r = OptTarget::ReadLatency.apply(&p);
+        assert!(r.read_latency < p.read_latency);
+        assert!(r.leakage_power > p.leakage_power);
+        let l = OptTarget::Leakage.apply(&p);
+        assert!(l.leakage_power < p.leakage_power);
+        assert!(l.read_latency > p.read_latency);
+    }
+
+    #[test]
+    fn larger_caches_have_larger_area_and_leakage() {
+        for mem in MemTech::ALL {
+            let small = tuned_cache(mem, 2 * MB);
+            let large = tuned_cache(mem, 16 * MB);
+            assert!(large.ppa.area > 2.0 * small.ppa.area, "{mem}");
+            assert!(
+                large.ppa.leakage_power > 2.0 * small.ppa.leakage_power,
+                "{mem}"
+            );
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Hybrid SRAM + NVM cache exploration (paper §II cites hybrid caches
+//! [28]-[31] as the main prior-art mitigation for NVM write cost; this
+//! module adds them to the design space so DeepNVM++ can evaluate the
+//! approach its related work describes).
+//!
+//! Model: a way-partitioned last-level cache — `sram_ways` of the 16
+//! ways in SRAM, the rest in an NVM technology. Write-heavy lines are
+//! steered to the SRAM ways by the (modeled) placement policy, so the
+//! effective write cost is a mix weighted by the steering hit rate;
+//! reads sample ways uniformly. Leakage and area compose linearly from
+//! the per-technology designs.
+
+use crate::device::MemTech;
+
+use super::explorer::tuned_cache;
+use super::model::CachePpa;
+use super::org::ASSOC;
+
+/// A hybrid way-partitioned design.
+#[derive(Clone, Copy, Debug)]
+pub struct HybridDesign {
+    pub nvm: MemTech,
+    /// Ways implemented in SRAM (0..=ASSOC); the rest are NVM.
+    pub sram_ways: u32,
+    /// Fraction of writes the placement policy lands in SRAM ways
+    /// (write-steering efficiency; [29]-class policies reach ~0.8-0.9).
+    pub steer: f64,
+    pub ppa: CachePpa,
+}
+
+/// Compose the PPA of a hybrid cache at `capacity_bytes`.
+///
+/// A way-partitioned hybrid is *one* array organization whose way
+/// groups are fabricated in different technologies, so the composition
+/// uses the full-capacity EDAP-tuned design of each technology (wire
+/// lengths, decoders and H-tree are shared) and scales the per-way
+/// quantities (leakage, area, per-access cell costs) by the way
+/// fraction. This keeps the sweep free of exact-capacity enumeration
+/// artifacts and is monotone by construction.
+pub fn hybrid(
+    nvm: MemTech,
+    capacity_bytes: u64,
+    sram_ways: u32,
+    steer: f64,
+) -> HybridDesign {
+    assert!(nvm.is_nvm(), "hybrid partner must be an NVM");
+    assert!(sram_ways as usize <= ASSOC);
+    let f_sram = sram_ways as f64 / ASSOC as f64;
+    let f_nvm = 1.0 - f_sram;
+
+    let s = tuned_cache(MemTech::Sram, capacity_bytes).ppa;
+    let n = tuned_cache(nvm, capacity_bytes).ppa;
+
+    // Reads sample ways by capacity share; writes follow the steering
+    // policy (steered writes pay SRAM cost, the rest pay NVM cost).
+    // Steering cannot place more writes in SRAM ways than exist; with
+    // no SRAM ways it places none.
+    let w_sram = if sram_ways == 0 { 0.0 } else { steer.max(f_sram) };
+    let ppa = CachePpa {
+        read_latency: f_sram * s.read_latency + f_nvm * n.read_latency,
+        write_latency: w_sram * s.write_latency + (1.0 - w_sram) * n.write_latency,
+        read_energy: f_sram * s.read_energy + f_nvm * n.read_energy,
+        write_energy: w_sram * s.write_energy + (1.0 - w_sram) * n.write_energy,
+        leakage_power: f_sram * s.leakage_power + f_nvm * n.leakage_power,
+        area: f_sram * s.area + f_nvm * n.area,
+    };
+    HybridDesign { nvm, sram_ways, steer, ppa }
+}
+
+/// Sweep SRAM-way counts for one NVM partner.
+pub fn sweep(nvm: MemTech, capacity_bytes: u64, steer: f64) -> Vec<HybridDesign> {
+    (0..=ASSOC as u32)
+        .step_by(2)
+        .map(|w| hybrid(nvm, capacity_bytes, w, steer))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn endpoints_are_pure_caches() {
+        let pure_stt = tuned_cache(MemTech::SttMram, 3 * MB).ppa;
+        let pure_sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+        let h0 = hybrid(MemTech::SttMram, 3 * MB, 0, 0.85);
+        let h16 = hybrid(MemTech::SttMram, 3 * MB, 16, 0.85);
+        assert!((h0.ppa.write_latency - pure_stt.write_latency).abs() < 1e-12);
+        assert!((h0.ppa.leakage_power - pure_stt.leakage_power).abs() < 1e-9);
+        assert!((h16.ppa.leakage_power - pure_sram.leakage_power).abs() < 1e-9);
+        assert!((h16.ppa.write_latency - pure_sram.write_latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hybrid_trades_write_latency_for_leakage() {
+        // vs pure STT: adding SRAM ways buys write latency and costs
+        // leakage. (Within the steered plateau the mix barely moves, so
+        // the tradeoff is asserted at the endpoints and the first step.)
+        let sweep = sweep(MemTech::SttMram, 3 * MB, 0.85);
+        let pure_nvm = sweep.first().unwrap().ppa;
+        let first_hybrid = sweep[1].ppa;
+        let pure_sram = sweep.last().unwrap().ppa;
+        assert!(first_hybrid.write_latency < 0.5 * pure_nvm.write_latency);
+        assert!(first_hybrid.leakage_power > pure_nvm.leakage_power);
+        assert!(pure_sram.leakage_power > first_hybrid.leakage_power);
+        // leakage is monotone across the sweep
+        for pair in sweep.windows(2) {
+            assert!(
+                pair[1].ppa.leakage_power >= pair[0].ppa.leakage_power * 0.999,
+                "leakage must rise with SRAM ways"
+            );
+        }
+    }
+
+    #[test]
+    fn small_sram_partition_fixes_stt_writes_cheaply() {
+        // The related-work claim: a few SRAM ways absorb most of the
+        // write-latency pain at a fraction of the SRAM leakage.
+        let pure_stt = hybrid(MemTech::SttMram, 3 * MB, 0, 0.85).ppa;
+        let pure_sram = hybrid(MemTech::SttMram, 3 * MB, 16, 0.85).ppa;
+        let h4 = hybrid(MemTech::SttMram, 3 * MB, 4, 0.85).ppa;
+        // write latency within 2.5x of SRAM (vs ~5x for pure STT)
+        assert!(h4.write_latency < 2.5 * pure_sram.write_latency);
+        assert!(pure_stt.write_latency > 4.0 * pure_sram.write_latency);
+        // while keeping leakage under half of pure SRAM
+        assert!(h4.leakage_power < 0.5 * pure_sram.leakage_power);
+    }
+
+    #[test]
+    fn better_steering_helps_stt_writes_only() {
+        // Steering matters for STT (SRAM writes are far cheaper/faster
+        // than STT writes); it must not touch reads or leakage.
+        let lo = hybrid(MemTech::SttMram, 3 * MB, 4, 0.3).ppa;
+        let hi = hybrid(MemTech::SttMram, 3 * MB, 4, 0.95).ppa;
+        assert!(hi.write_latency < lo.write_latency);
+        assert_eq!(hi.read_energy, lo.read_energy);
+        assert_eq!(hi.leakage_power, lo.leakage_power);
+    }
+
+    #[test]
+    fn sot_does_not_need_a_hybrid() {
+        // SOT's own writes are already cheaper than SRAM's, so hybrid
+        // partitions only add leakage — consistent with the hybrid
+        // literature being an STT story.
+        let pure_sot = hybrid(MemTech::SotMram, 3 * MB, 0, 0.85).ppa;
+        let h4 = hybrid(MemTech::SotMram, 3 * MB, 4, 0.85).ppa;
+        assert!(h4.leakage_power > pure_sot.leakage_power);
+        assert!(h4.write_energy >= pure_sot.write_energy * 0.95);
+    }
+
+    #[test]
+    #[should_panic(expected = "hybrid partner must be an NVM")]
+    fn rejects_sram_sram_hybrid() {
+        hybrid(MemTech::Sram, 3 * MB, 4, 0.8);
+    }
+}

@@ -1,0 +1,37 @@
+//! Microarchitecture-level cache PPA modeling (paper §III-B) — an
+//! NVSim-class analytical model (Dong et al., TCAD'12) reimplemented
+//! from scratch and driven by the device layer's bitcell parameters.
+//!
+//! Model structure (mirrors NVSim):
+//!
+//! ```text
+//! cache = banks x [ mats x [ 2x2 subarrays ] ]  + H-tree + tag arrays
+//! subarray = rows x cols bitcell grid
+//!          + row decoder + wordline drivers        (RC + Horowitz)
+//!          + bitline columns + column mux + sense  (RC + device sense)
+//!          + write drivers
+//! ```
+//!
+//! Latency = H-tree in + decode + wordline + bitline/sense (+ cell
+//! write time) + H-tree out; energy sums switched capacitance along the
+//! same path plus the per-bit cell energies; leakage = per-cell (SRAM
+//! only — MTJs do not leak) + periphery proportional to component
+//! count; area composes cell grids with per-subarray peripheral
+//! overheads and H-tree wiring.
+//!
+//! [`explorer`] implements the paper's Algorithm 1: for every memory
+//! technology and capacity, enumerate all organizations x optimization
+//! targets x access modes and keep the EDAP-optimal configuration.
+//! Calibration against the paper's published Table II (3 MB / iso-area
+//! points) is asserted in `rust/tests/nvsim_calibration.rs`.
+
+pub mod explorer;
+pub mod hybrid;
+pub mod model;
+pub mod org;
+pub mod tech;
+
+pub use explorer::{explore, tuned_cache, OptTarget, TunedConfig};
+pub use model::{CacheDesign, CachePpa};
+pub use org::{AccessMode, CacheOrg};
+pub use tech::TechParams;

@@ -1,0 +1,348 @@
+//! The analytical cache PPA model: latency, dynamic energy, leakage and
+//! area for one concrete [`CacheOrg`] in one memory technology.
+//!
+//! All structural scaling comes from geometry: bitcell dimensions set
+//! subarray width/height, which set wordline/bitline RC and — through
+//! the total die area — the H-tree distance. This is the mechanism that
+//! makes MRAM caches *faster and cheaper than SRAM at large
+//! capacities* (Fig. 9): the 3x-denser cells keep the wires short,
+//! while SRAM's leakage grows with every cell. A small set of per-
+//! technology periphery constants (see [`PeriphCal`]) is calibrated so
+//! the 3 MB points land on the paper's Table II; everything else
+//! (capacity scaling, mode/mux effects) emerges from structure.
+
+use crate::device::MemTech;
+
+use super::org::{AccessMode, CacheOrg, SECTOR_BYTES};
+use super::tech::{Bitcell, TechParams};
+
+/// Bits moved per L2 transaction (32 B sector).
+pub const SECTOR_BITS: f64 = (SECTOR_BYTES * 8) as f64;
+/// Address + control bits on the request path.
+const ADDR_BITS: f64 = 40.0;
+
+/// Per-technology periphery calibration ("the internal technology file"
+/// knobs). Physical meaning:
+/// * `read_path_epb` — array-level read energy per sensed bit: bitline
+///   precharge/restore for SRAM; read-bias current, reference path and
+///   current-mode sense amp for MRAM (dominates — MTJ sensing drives
+///   ~30-50 uA through the stack for the whole window).
+/// * `senseamp_leak` — static power of one sense amp (current-mode
+///   MRAM amps idle at a bias current; SRAM latches don't).
+/// * `write_driver_epb` — array-level write-path energy per written bit
+///   over and above the cell's intrinsic switching energy.
+#[derive(Clone, Copy, Debug)]
+pub struct PeriphCal {
+    pub read_path_epb: f64,
+    pub write_driver_epb: f64,
+    pub senseamp_leak: f64,
+    /// Leakage density of the peripheral area (W/m^2): decoders, mux,
+    /// drivers, control. MRAM periphery uses HP (leaky) devices to
+    /// drive write currents; SRAM periphery can be HD.
+    pub periph_leak_density: f64,
+    /// Extra sensing latency beyond the bitcell development time:
+    /// reference generation + a second sensing phase for low-TMR
+    /// windows (SOT's dedicated small read device reads slowly —
+    /// Table II: SOT read is the slowest at iso-capacity).
+    pub sense_extra_latency: f64,
+}
+
+impl PeriphCal {
+    pub fn for_tech(tech: MemTech) -> Self {
+        match tech {
+            MemTech::Sram => PeriphCal {
+                read_path_epb: 0.12e-12,
+                write_driver_epb: 0.30e-12,
+                senseamp_leak: 1.6e-6,
+                periph_leak_density: 0.45e6,
+                sense_extra_latency: 0.0,
+            },
+            MemTech::SttMram => PeriphCal {
+                read_path_epb: 2.35e-12,
+                write_driver_epb: 0.12e-12,
+                senseamp_leak: 15e-6,
+                periph_leak_density: 0.40e6,
+                sense_extra_latency: 0.0,
+            },
+            MemTech::SotMram => PeriphCal {
+                read_path_epb: 1.05e-12,
+                write_driver_epb: 0.20e-12,
+                senseamp_leak: 11e-6,
+                periph_leak_density: 0.22e6,
+                sense_extra_latency: 1.10e-9,
+            },
+        }
+    }
+}
+
+/// Layout constants for peripheral strips (meters) — absolute, so the
+/// *relative* periphery overhead grows as cells shrink, which is why
+/// MRAM caches have lower array efficiency than SRAM at equal
+/// organization (Table II: SRAM 5.53 mm^2 vs cells 1.86 mm^2).
+mod strip {
+    /// Column periphery height per subarray (sense amps, write drivers,
+    /// column mux, precharge, ECC).
+    pub const COL_PERIPH_H: f64 = 150e-6;
+    /// Row periphery width per subarray (decoder + WL drivers).
+    pub const ROW_PERIPH_W: f64 = 45e-6;
+    /// Mat-level control overhead factor.
+    pub const MAT_CTRL: f64 = 1.18;
+    /// Bank routing / H-tree area factor.
+    pub const BANK_ROUTE: f64 = 1.22;
+}
+
+/// Pipeline/control overhead added to every access (bank arbitration,
+/// request queue, ECC) — constant per the 1080 Ti-class L2 front end.
+const T_FIXED: f64 = 0.55e-9;
+
+/// The PPA result for one cache design (per 32-byte-sector access).
+#[derive(Clone, Copy, Debug)]
+pub struct CachePpa {
+    pub read_latency: f64,
+    pub write_latency: f64,
+    pub read_energy: f64,
+    pub write_energy: f64,
+    pub leakage_power: f64,
+    pub area: f64,
+}
+
+impl CachePpa {
+    /// EDAP figure of merit (Algorithm 1's `calculate(EDAP)`): mean
+    /// access energy x mean latency x area. Leakage enters through a
+    /// duty-cycle charge (leakage power x mean latency) so low-leakage
+    /// designs win ties, as in NVSim's combined objective.
+    pub fn edap(&self) -> f64 {
+        let lat = 0.5 * (self.read_latency + self.write_latency);
+        let en = 0.5 * (self.read_energy + self.write_energy)
+            + self.leakage_power * lat;
+        en * lat * self.area
+    }
+}
+
+/// A fully-specified design: organization + technology + derived PPA.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheDesign {
+    pub tech: MemTech,
+    pub org: CacheOrg,
+    pub ppa: CachePpa,
+}
+
+/// Geometry of one subarray in meters.
+struct SubGeom {
+    width: f64,
+    height: f64,
+}
+
+fn subarray_geom(cell: &Bitcell, org: &CacheOrg) -> SubGeom {
+    SubGeom {
+        width: org.cols as f64 * cell.width,
+        height: org.rows as f64 * cell.height,
+    }
+}
+
+/// Evaluate the PPA of `org` built from `cell` under `tech`.
+pub fn evaluate(tech: &TechParams, cell: &Bitcell, org: &CacheOrg) -> CachePpa {
+    let g = subarray_geom(cell, org);
+    let cal = PeriphCal::for_tech(cell.params.tech);
+
+    // ---------- area ------------------------------------------------
+    let sub_cells = g.width * g.height;
+    let sub_area = (g.width + strip::ROW_PERIPH_W)
+        * (g.height + strip::COL_PERIPH_H);
+    let mat_area = 4.0 * sub_area * strip::MAT_CTRL;
+    let bank_area = org.mats_per_bank as f64 * mat_area * strip::BANK_ROUTE;
+    // tag array: modeled as SRAM regardless of data technology (tags
+    // are latency-critical and tiny), 50% periphery overhead.
+    let tag_area = org.tag_bits() as f64 * super::tech::SRAM_CELL_AREA * 1.5;
+    let area = org.banks as f64 * bank_area + tag_area;
+    let _ = sub_cells;
+
+    // ---------- wire segments ---------------------------------------
+    // H-tree: to the target bank center, then to the mat. Distances
+    // scale with the physical footprint.
+    let d_htree = 0.5 * area.sqrt() + 0.5 * bank_area.sqrt();
+    let t_htree = tech.t_wire_global * d_htree;
+    let e_htree_per_bit = tech.e_wire_global * d_htree;
+
+    // ---------- decoder ---------------------------------------------
+    let dec_stages = (org.rows as f64).log2().ceil().max(1.0);
+    let t_dec = dec_stages * 2.0 * tech.t_fo4;
+    let e_dec = dec_stages * 16.0 * tech.e_dec_stage;
+
+    // ---------- wordline --------------------------------------------
+    // Fast mode segments the wordline and only fires the needed slice.
+    let active_frac = match org.mode {
+        AccessMode::Fast => {
+            ((SECTOR_BITS * org.mux as f64) / org.cols as f64).min(1.0)
+        }
+        _ => 1.0,
+    };
+    let wl_len = g.width * active_frac;
+    let r_wl = tech.r_wire_local * wl_len;
+    let c_wl = tech.c_wire_local * wl_len
+        + org.cols as f64 * active_frac * tech.c_cell_gate;
+    let t_wl = 0.38 * r_wl * c_wl;
+    let e_wl = c_wl * tech.vdd * tech.vdd;
+
+    // ---------- bitline + sensing -----------------------------------
+    let r_bl = tech.r_wire_local * g.height;
+    let c_bl = tech.c_wire_local * g.height
+        + org.rows as f64 * tech.c_cell_drain;
+    let t_bl =
+        0.38 * r_bl * c_bl + cell.sense_development() + cal.sense_extra_latency;
+    let sensed_bits = match org.mode {
+        AccessMode::Normal => (org.cols / org.mux) as f64,
+        AccessMode::Fast => SECTOR_BITS,
+        // Sequential reads only the matching way's sector.
+        AccessMode::Sequential => SECTOR_BITS,
+    };
+    let e_sense = sensed_bits * cal.read_path_epb;
+
+    // ---------- column mux + output ---------------------------------
+    let t_mux = ((org.mux as f64).log2() + 1.0) * 2.0 * tech.t_fo4;
+
+    // ---------- tag path --------------------------------------------
+    // Tag array is small: model its access as a fraction of the data
+    // array path plus a fixed comparator term.
+    let t_tag = 0.30 * (t_dec + t_wl + t_bl) + 0.20e-9;
+
+    // ---------- compose read ----------------------------------------
+    let t_array = t_dec + t_wl + t_bl + t_mux;
+    let (t_read, mode_read_energy_factor) = match org.mode {
+        // tag and data in parallel; data gated by tag compare
+        AccessMode::Normal => (t_array.max(t_tag), 1.0),
+        // everything overfetched in parallel, fastest
+        AccessMode::Fast => (t_array.max(t_tag) * 0.92, 1.25),
+        // tag first, then data: serial
+        AccessMode::Sequential => (t_tag + t_array, 0.85),
+    };
+    let read_latency = T_FIXED + t_htree + t_read + t_htree;
+    let read_energy = (e_htree_per_bit * (SECTOR_BITS + ADDR_BITS)
+        + e_dec
+        + e_wl
+        + e_sense)
+        * mode_read_energy_factor;
+
+    // ---------- compose write ---------------------------------------
+    // Writes are posted: they skip the front-end pipeline stall
+    // (T_FIXED) and the return H-tree trip. The cell switching time
+    // dominates for STT.
+    let cell_write = cell.params.write_latency();
+    let t_bl_write = 0.69 * r_bl * c_bl;
+    let write_latency = t_htree + t_dec + t_wl + t_bl_write + cell_write;
+    let written_bits = SECTOR_BITS;
+    let write_energy = e_htree_per_bit * (SECTOR_BITS + ADDR_BITS)
+        + e_dec
+        + e_wl
+        + written_bits
+            * (cell.params.write_energy() + cal.write_driver_epb)
+        + c_bl * tech.vdd * tech.vdd * written_bits * 0.5;
+
+    // ---------- leakage ---------------------------------------------
+    let n_cells = org.data_bits() as f64;
+    let cell_leak = n_cells * cell.params.cell_leakage;
+    let n_subarrays = org.subarrays() as f64;
+    let n_senseamps = n_subarrays * org.senseamps_per_subarray() as f64;
+    // peripheral silicon = everything that is not cells or tags
+    let cell_area_total = n_cells * cell.area;
+    let periph_area = (area - cell_area_total - tag_area).max(0.0);
+    let periph_leak = n_senseamps * cal.senseamp_leak
+        + periph_area * cal.periph_leak_density
+        + n_subarrays * org.rows as f64 * tech.leak_row_driver
+        + (org.banks * org.mats_per_bank) as f64 * tech.leak_mat_ctrl
+        + tech.leak_wire_global
+            * d_htree
+            * (SECTOR_BITS + ADDR_BITS)
+            * org.banks as f64;
+    // tag array leaks like SRAM always
+    let tag_leak = org.tag_bits() as f64
+        * crate::device::BitcellParams::paper_sram().cell_leakage;
+    let leakage_power = cell_leak + periph_leak + tag_leak;
+
+    CachePpa {
+        read_latency,
+        write_latency,
+        read_energy,
+        write_energy,
+        leakage_power,
+        area,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nvsim::org::AccessMode;
+    use crate::util::proptest;
+
+    const MB: u64 = 1024 * 1024;
+
+    fn eval_first(tech_mem: MemTech, mb: u64, mode: AccessMode) -> CachePpa {
+        let tech = TechParams::n16();
+        let cell = Bitcell::paper(tech_mem);
+        let orgs = CacheOrg::enumerate(mb * MB, mode);
+        evaluate(&tech, &cell, &orgs[orgs.len() / 2])
+    }
+
+    #[test]
+    fn all_quantities_positive_and_sane() {
+        proptest::check(60, |g| {
+            let mem = *g.choose(&MemTech::ALL);
+            let mb = *g.choose(&[1u64, 2, 3, 4, 8, 16, 32]);
+            let mode = *g.choose(&AccessMode::ALL);
+            let tech = TechParams::n16();
+            let cell = Bitcell::paper(mem);
+            let orgs = CacheOrg::enumerate(mb * MB, mode);
+            let org = g.choose(&orgs);
+            let p = evaluate(&tech, &cell, org);
+            assert!(p.read_latency > 0.0 && p.read_latency < 100e-9);
+            assert!(p.write_latency > 0.0 && p.write_latency < 100e-9);
+            assert!(p.read_energy > 0.0 && p.read_energy < 100e-9);
+            assert!(p.write_energy > 0.0 && p.write_energy < 100e-9);
+            assert!(p.leakage_power > 0.0 && p.leakage_power < 1000.0);
+            assert!(p.area > 0.0 && p.area < 1e-2, "area {}", p.area);
+            assert!(p.edap() > 0.0);
+        });
+    }
+
+    #[test]
+    fn sram_leaks_more_than_mram() {
+        let s = eval_first(MemTech::Sram, 3, AccessMode::Normal);
+        let t = eval_first(MemTech::SttMram, 3, AccessMode::Normal);
+        let o = eval_first(MemTech::SotMram, 3, AccessMode::Normal);
+        assert!(s.leakage_power > 3.0 * t.leakage_power);
+        assert!(s.leakage_power > 3.0 * o.leakage_power);
+    }
+
+    #[test]
+    fn stt_write_latency_dominated_by_cell() {
+        let t = eval_first(MemTech::SttMram, 3, AccessMode::Normal);
+        assert!(t.write_latency > 8e-9, "{}", t.write_latency);
+        // EDAP-tuned SRAM avoids the monster-wordline organizations.
+        let s = crate::nvsim::explorer::tuned_cache(MemTech::Sram, 3 * MB);
+        assert!(s.ppa.write_latency < 3e-9, "{}", s.ppa.write_latency);
+    }
+
+    #[test]
+    fn mram_denser_than_sram_iso_capacity() {
+        let s = eval_first(MemTech::Sram, 3, AccessMode::Normal);
+        let t = eval_first(MemTech::SttMram, 3, AccessMode::Normal);
+        assert!(t.area < 0.6 * s.area, "stt {} sram {}", t.area, s.area);
+    }
+
+    #[test]
+    fn sequential_mode_slower_but_cheaper_reads() {
+        let n = eval_first(MemTech::Sram, 3, AccessMode::Normal);
+        let q = eval_first(MemTech::Sram, 3, AccessMode::Sequential);
+        assert!(q.read_latency > n.read_latency);
+        assert!(q.read_energy < n.read_energy);
+    }
+
+    #[test]
+    fn leakage_scales_with_capacity() {
+        let a = eval_first(MemTech::Sram, 2, AccessMode::Normal);
+        let b = eval_first(MemTech::Sram, 16, AccessMode::Normal);
+        let ratio = b.leakage_power / a.leakage_power;
+        assert!((4.0..16.0).contains(&ratio), "ratio {ratio}");
+    }
+}

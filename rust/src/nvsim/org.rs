@@ -1,0 +1,200 @@
+//! Cache organization: the structural design space Algorithm 1
+//! enumerates (banks x mats x subarray geometry x column mux) plus the
+//! NVSim access modes.
+
+/// Cache line size in bytes (GPU L2: 128 B lines, 32 B sectors).
+pub const LINE_BYTES: usize = 128;
+/// Sector granularity of one L2 transaction (GPU L2 reads/writes 32 B).
+pub const SECTOR_BYTES: usize = 32;
+/// Associativity of the modeled L2 (GTX 1080 Ti: 16-way).
+pub const ASSOC: usize = 16;
+/// Tag + state bits per line (40-bit PA class).
+pub const TAG_BITS_PER_LINE: usize = 24;
+
+/// NVSim access modes (paper Algorithm 1's set A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AccessMode {
+    /// Activate the full row, read tag + all ways in parallel.
+    Normal,
+    /// Overfetch aggressively for latency (bigger periphery).
+    Fast,
+    /// Tag first, then only the matching way (serial, low energy).
+    Sequential,
+}
+
+impl AccessMode {
+    pub const ALL: [AccessMode; 3] =
+        [AccessMode::Normal, AccessMode::Fast, AccessMode::Sequential];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccessMode::Normal => "Normal",
+            AccessMode::Fast => "Fast",
+            AccessMode::Sequential => "Sequential",
+        }
+    }
+}
+
+/// A concrete array organization for a given capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheOrg {
+    /// Cache data capacity (bytes).
+    pub capacity_bytes: u64,
+    /// Number of banks (independently addressable).
+    pub banks: u32,
+    /// Mats per bank (each mat = 2x2 subarrays).
+    pub mats_per_bank: u32,
+    /// Rows per subarray (wordlines).
+    pub rows: u32,
+    /// Columns per subarray (bitline pairs).
+    pub cols: u32,
+    /// Column mux degree (bitlines sharing one sense amp).
+    pub mux: u32,
+    /// Access mode.
+    pub mode: AccessMode,
+}
+
+impl CacheOrg {
+    /// Subarrays in the whole cache.
+    pub fn subarrays(&self) -> u64 {
+        self.banks as u64 * self.mats_per_bank as u64 * 4
+    }
+
+    /// Data bits stored.
+    pub fn data_bits(&self) -> u64 {
+        self.capacity_bytes * 8
+    }
+
+    /// Bits per subarray.
+    pub fn subarray_bits(&self) -> u64 {
+        self.rows as u64 * self.cols as u64
+    }
+
+    /// Whether this organization exactly holds the capacity.
+    pub fn is_consistent(&self) -> bool {
+        self.subarrays() * self.subarray_bits() == self.data_bits()
+            && self.cols % self.mux == 0
+            && (self.cols / self.mux) as usize >= SECTOR_BYTES * 8
+    }
+
+    /// Sense amps per subarray.
+    pub fn senseamps_per_subarray(&self) -> u32 {
+        self.cols / self.mux
+    }
+
+    /// Enumerate all consistent organizations for a capacity (bytes)
+    /// under one access mode. The geometry grid matches NVSim's default
+    /// sweep ranges.
+    pub fn enumerate(capacity_bytes: u64, mode: AccessMode) -> Vec<CacheOrg> {
+        let mut out = Vec::new();
+        let bits = capacity_bytes * 8;
+        for bank_exp in 0..=5 {
+            let banks = 1u32 << bank_exp;
+            for rows in [128u32, 256, 512, 1024] {
+                for cols in [512u32, 1024, 2048, 4096] {
+                    let sub_bits = rows as u64 * cols as u64;
+                    let total_subs = bits / sub_bits;
+                    if total_subs == 0 || bits % sub_bits != 0 {
+                        continue;
+                    }
+                    if total_subs % (banks as u64 * 4) != 0 {
+                        continue;
+                    }
+                    let mats = (total_subs / (banks as u64 * 4)) as u32;
+                    if mats == 0 || mats > 512 {
+                        continue;
+                    }
+                    for mux in [1u32, 2, 4, 8] {
+                        let org = CacheOrg {
+                            capacity_bytes,
+                            banks,
+                            mats_per_bank: mats,
+                            rows,
+                            cols,
+                            mux,
+                            mode,
+                        };
+                        if org.is_consistent() {
+                            out.push(org);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Tag array bits for the whole cache.
+    pub fn tag_bits(&self) -> u64 {
+        (self.capacity_bytes / LINE_BYTES as u64) * TAG_BITS_PER_LINE as u64
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}MB {}b x {}m x (2x2) x {}r x {}c mux{} {}",
+            self.capacity_bytes / (1024 * 1024),
+            self.banks,
+            self.mats_per_bank,
+            self.rows,
+            self.cols,
+            self.mux,
+            self.mode.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn enumerate_3mb_nonempty_and_consistent() {
+        let orgs = CacheOrg::enumerate(3 * MB, AccessMode::Normal);
+        assert!(orgs.len() > 10, "only {} orgs", orgs.len());
+        for o in &orgs {
+            assert!(o.is_consistent(), "{o:?}");
+            assert_eq!(
+                o.subarrays() * o.subarray_bits(),
+                3 * MB * 8,
+                "capacity mismatch {o:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn enumerate_covers_paper_capacities() {
+        // Algorithm 1's capacity set plus the iso-area points (7/10 MB).
+        for mb in [1u64, 2, 3, 4, 7, 8, 10, 16, 24, 32] {
+            let orgs = CacheOrg::enumerate(mb * MB, AccessMode::Normal);
+            assert!(!orgs.is_empty(), "no org for {mb} MB");
+        }
+    }
+
+    #[test]
+    fn sector_width_constraint_enforced() {
+        for o in CacheOrg::enumerate(MB, AccessMode::Fast) {
+            assert!(o.senseamps_per_subarray() as usize >= SECTOR_BYTES * 8);
+        }
+    }
+
+    #[test]
+    fn prop_enumerated_orgs_always_hold_capacity() {
+        proptest::check(50, |g| {
+            let mb = *g.choose(&[1u64, 2, 3, 4, 6, 7, 8, 10, 12, 16, 24, 32]);
+            let mode = *g.choose(&AccessMode::ALL);
+            for o in CacheOrg::enumerate(mb * MB, mode) {
+                assert!(o.is_consistent());
+                assert_eq!(o.data_bits(), mb * MB * 8);
+            }
+        });
+    }
+
+    #[test]
+    fn tag_bits_proportional_to_lines() {
+        let o = &CacheOrg::enumerate(3 * MB, AccessMode::Normal)[0];
+        assert_eq!(o.tag_bits(), (3 * MB / 128) * 24);
+    }
+}

@@ -1,0 +1,144 @@
+//! 16nm interconnect + periphery technology parameters ("the internal
+//! technology file of NVSim, modified to the corresponding 16nm
+//! technology parameters" — paper §III-B), plus the per-technology
+//! bitcell wrapper the array model consumes.
+
+use crate::device::{BitcellParams, MemTech};
+
+/// Wire/device constants of the modeled 16nm node. Local (M2-class)
+/// wires inside subarrays, intermediate for mat routing, global
+/// repeatered wires for the H-tree.
+#[derive(Clone, Copy, Debug)]
+pub struct TechParams {
+    /// Local wire resistance (Ohm/m).
+    pub r_wire_local: f64,
+    /// Local wire capacitance (F/m).
+    pub c_wire_local: f64,
+    /// Repeatered global wire delay (s/m).
+    pub t_wire_global: f64,
+    /// Global wire energy per bit per meter at VDD (J/(bit*m)).
+    pub e_wire_global: f64,
+    /// Global wire leakage per repeater span (W/m per bit lane).
+    pub leak_wire_global: f64,
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// FO4 inverter delay (s) — decoder stage granularity.
+    pub t_fo4: f64,
+    /// Energy of one decoder stage driving its load (J).
+    pub e_dec_stage: f64,
+    /// Sense-amp leakage (W each).
+    pub leak_senseamp: f64,
+    /// Decoder + driver leakage per subarray row driver (W).
+    pub leak_row_driver: f64,
+    /// Per-mat control/repeater leakage (W).
+    pub leak_mat_ctrl: f64,
+    /// Drain capacitance a cell adds to its bitline (F).
+    pub c_cell_drain: f64,
+    /// Gate capacitance a cell adds to its wordline (F).
+    pub c_cell_gate: f64,
+}
+
+impl TechParams {
+    /// The 16nm node used throughout the paper reproduction.
+    pub fn n16() -> Self {
+        TechParams {
+            r_wire_local: 4.0e6,    // 4 Ohm/um
+            c_wire_local: 0.20e-9,  // 0.20 fF/um
+            // Semi-global (non-repeated M4-class) routing inside the
+            // cache macro — deeply-scaled wires are slow: the paper's
+            // strong latency growth with capacity (Table II / Fig 9b)
+            // requires ~0.6-0.7 ns/mm, consistent with 16nm RC data.
+            t_wire_global: 650e-12 / 1e-3,
+            e_wire_global: 0.30e-12 / 1e-3, // 0.30 pJ/bit/mm
+            leak_wire_global: 1.2e-6 / 1e-3, // repeater leakage per mm lane
+            vdd: 0.8,
+            t_fo4: 9e-12,
+            e_dec_stage: 0.6e-15,
+            leak_senseamp: 1.6e-6,
+            leak_row_driver: 0.4e-6,
+            leak_mat_ctrl: 60e-6,
+            c_cell_drain: 0.10e-15,
+            c_cell_gate: 0.10e-15,
+        }
+    }
+}
+
+/// Bitcell geometry + access behaviour as the array model needs it.
+#[derive(Clone, Copy, Debug)]
+pub struct Bitcell {
+    pub params: BitcellParams,
+    /// Physical cell area (m^2).
+    pub area: f64,
+    /// Cell width (along the wordline), m.
+    pub width: f64,
+    /// Cell height (along the bitline), m.
+    pub height: f64,
+}
+
+/// Foundry 6T SRAM cell area at the modeled node (m^2) — the Table I
+/// normalization base (shared with `device::characterize::layout`).
+pub const SRAM_CELL_AREA: f64 = 0.074e-12;
+
+impl Bitcell {
+    /// Wrap device-layer parameters with layout geometry. Aspect ratio
+    /// (width/height): 6T cells are wide (~2.2), 1T1R MTJ stacks are
+    /// roughly square (~1.1).
+    pub fn from_params(params: BitcellParams) -> Self {
+        let area = params.area_rel * SRAM_CELL_AREA;
+        let aspect = match params.tech {
+            MemTech::Sram => 2.2,
+            MemTech::SttMram => 1.15,
+            MemTech::SotMram => 1.15,
+        };
+        Bitcell {
+            params,
+            area,
+            width: (area * aspect).sqrt(),
+            height: (area / aspect).sqrt(),
+        }
+    }
+
+    /// Paper-calibrated bitcell of the given technology.
+    pub fn paper(tech: MemTech) -> Self {
+        Self::from_params(BitcellParams::paper(tech))
+    }
+
+    /// Local sense time excluding the characterization testbench's
+    /// wordline-rise share (the array model computes its own wordline
+    /// RC; see device::characterize::WL_RISE).
+    pub fn sense_development(&self) -> f64 {
+        (self.params.sense_latency - crate::device::characterize::WL_RISE)
+            .max(30e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_cell_geometry() {
+        let c = Bitcell::paper(MemTech::Sram);
+        assert!((c.area - SRAM_CELL_AREA).abs() / SRAM_CELL_AREA < 1e-12);
+        assert!(c.width > c.height, "6T cells are wide");
+        assert!((c.width * c.height - c.area).abs() / c.area < 1e-9);
+    }
+
+    #[test]
+    fn mram_cells_denser() {
+        let sram = Bitcell::paper(MemTech::Sram);
+        let stt = Bitcell::paper(MemTech::SttMram);
+        let sot = Bitcell::paper(MemTech::SotMram);
+        assert!(stt.area < 0.4 * sram.area);
+        assert!(sot.area < stt.area);
+    }
+
+    #[test]
+    fn sense_development_positive() {
+        for t in MemTech::ALL {
+            let c = Bitcell::paper(t);
+            assert!(c.sense_development() > 0.0, "{t}");
+            assert!(c.sense_development() < c.params.sense_latency);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a tensor argument/result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+/// Shape + dtype of one argument or result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One compiled workload.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// "gemm" | "infer" | "train_step".
+    pub kind: String,
+    /// Parameter-tensor count for model workloads (params come first in
+    /// the argument list, by the aot.py convention).
+    pub n_params: usize,
+    pub batch: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let obj = root
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest root must be an object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, j) in obj {
+            let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                j.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: j
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    inputs: tensors("inputs")?,
+                    outputs: tensors("outputs")?,
+                    kind: j
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    n_params: j
+                        .get("n_params")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0),
+                    batch: j.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Default artifacts directory (repo-root `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_wellformed_manifest() {
+        let dir = std::env::temp_dir().join("deepnvm_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{ "gemm_128": {
+                "file": "gemm_128.hlo.txt", "kind": "gemm",
+                "inputs": [{"shape": [128, 128], "dtype": "float32"}],
+                "outputs": [{"shape": [128, 128], "dtype": "float32"}],
+                "m": 128 } }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("gemm_128").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![128, 128]);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(a.inputs[0].elems(), 128 * 128);
+        assert_eq!(a.kind, "gemm");
+        assert!(m.hlo_path(a).ends_with("gemm_128.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let dir = std::env::temp_dir().join("deepnvm_manifest_bad");
+        write_manifest(
+            &dir,
+            r#"{ "x": { "file": "x.hlo.txt",
+                "inputs": [{"shape": [1], "dtype": "float64"}],
+                "outputs": [] } }"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent/path/xyz").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn scalar_spec_has_one_elem() {
+        let s = TensorSpec { shape: vec![], dtype: DType::F32 };
+        assert_eq!(s.elems(), 1);
+    }
+}

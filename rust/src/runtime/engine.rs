@@ -1,0 +1,193 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute them
+//! many times with shape-checked inputs.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// Host-side tensor (the runtime's exchange format).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elems", v.len());
+        }
+        Ok(v[0])
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.dtype() != spec.dtype {
+            bail!("dtype mismatch: host {:?} vs spec {:?}", self.dtype(), spec.dtype);
+        }
+        if self.len() != spec.elems() {
+            bail!(
+                "element-count mismatch: host {} vs spec {:?} ({})",
+                self.len(),
+                spec.shape,
+                spec.elems()
+            );
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        if spec.shape.is_empty() {
+            // rank-0: reshape a 1-element vec to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+            DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// A compiled workload: the PJRT executable plus its manifest contract.
+pub struct LoadedWorkload {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedWorkload {
+    /// Execute with shape-checked host tensors; returns outputs in
+    /// manifest order (aot.py lowers with return_tuple=True, so the
+    /// root is always a tuple).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .enumerate()
+            .map(|(i, (t, s))| {
+                t.to_literal(s).with_context(|| {
+                    format!("{} input #{i}", self.spec.name)
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: runtime returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| HostTensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+/// The engine owns the PJRT client and loads workloads from a manifest.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// CPU-PJRT engine over the given artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            manifest: Manifest::load(artifacts_dir)?,
+        })
+    }
+
+    /// Default artifacts location (repo `artifacts/`).
+    pub fn default() -> Result<Engine> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, name: &str) -> Result<LoadedWorkload> {
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(LoadedWorkload { spec, exe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let spec = TensorSpec { shape: vec![2, 2], dtype: DType::F32 };
+        let ok = HostTensor::F32(vec![1.0; 4]);
+        assert!(ok.to_literal(&spec).is_ok());
+        let wrong_len = HostTensor::F32(vec![1.0; 3]);
+        assert!(wrong_len.to_literal(&spec).is_err());
+        let wrong_ty = HostTensor::I32(vec![1; 4]);
+        assert!(wrong_ty.to_literal(&spec).is_err());
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let t = HostTensor::F32(vec![2.5]);
+        assert_eq!(t.scalar_f32().unwrap(), 2.5);
+        assert!(HostTensor::F32(vec![1.0, 2.0]).scalar_f32().is_err());
+        assert!(HostTensor::I32(vec![1]).scalar_f32().is_err());
+        assert!(!t.is_empty());
+    }
+}

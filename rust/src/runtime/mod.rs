@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas workloads
+//! (`artifacts/*.hlo.txt`) and executes them from Rust.
+//!
+//! Python never runs here — `make artifacts` lowers the L2 graphs once
+//! (HLO *text*, not serialized protos: the image's xla_extension 0.5.1
+//! rejects jax>=0.5's 64-bit instruction ids, while the text parser
+//! reassigns ids and round-trips cleanly).
+//!
+//! * [`artifact`] — `manifest.json` schema: argument/result shapes per
+//!   artifact so buffers can be allocated without re-parsing HLO.
+//! * [`engine`] — `PjRtClient::cpu()` -> `HloModuleProto::from_text_file`
+//!   -> `compile` -> `execute`, with shape-checked literal helpers.
+//! * [`trainer`] — the end-to-end training driver used by
+//!   `examples/e2e_train.rs`: synthetic data, He init, fused-SGD-step
+//!   execution loop with loss tracking.
+
+pub mod artifact;
+pub mod engine;
+pub mod trainer;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use engine::{Engine, LoadedWorkload};

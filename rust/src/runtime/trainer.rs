@@ -1,0 +1,229 @@
+//! End-to-end training driver: runs the fused `tinycnn_train_step`
+//! artifact in a loop from Rust — the proof that L1 (Pallas kernels)
+//! -> L2 (JAX graph) -> AOT -> L3 (this coordinator) compose, with
+//! Python nowhere on the path.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+use super::artifact::{DType, TensorSpec};
+use super::engine::{Engine, HostTensor, LoadedWorkload};
+
+/// Synthetic classification data with learnable structure (mirrors
+/// python/tests/test_model.py): class-k images carry a brightness
+/// stamp (k+1)/10 in their top-left 4x4 corner over N(0, 0.1) noise.
+pub struct SyntheticData {
+    pub img: usize,
+    pub classes: usize,
+    rng: Rng,
+}
+
+impl SyntheticData {
+    pub fn new(img: usize, classes: usize, seed: u64) -> Self {
+        SyntheticData { img, classes, rng: Rng::new(seed) }
+    }
+
+    /// One batch: (images NHWC f32, labels i32).
+    pub fn batch(&mut self, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let (h, w, c) = (self.img, self.img, 3usize);
+        let mut xs = vec![0f32; n * h * w * c];
+        let mut ys = vec![0i32; n];
+        for i in 0..n {
+            let label = self.rng.below(self.classes as u64) as i32;
+            ys[i] = label;
+            let stamp = (label as f32 + 1.0) / 10.0;
+            for yy in 0..h {
+                for xx in 0..w {
+                    for ch in 0..c {
+                        let idx = ((i * h + yy) * w + xx) * c + ch;
+                        let mut v = 0.1 * self.rng.normal() as f32;
+                        if yy < 4 && xx < 4 {
+                            v += stamp;
+                        }
+                        xs[idx] = v;
+                    }
+                }
+            }
+        }
+        (xs, ys)
+    }
+}
+
+/// He-normal initialization for the parameter tensors declared by the
+/// manifest (weights: fan_in from the shape; 1-D tensors = biases = 0).
+pub fn init_params(specs: &[TensorSpec], seed: u64) -> Result<Vec<HostTensor>> {
+    let mut rng = Rng::new(seed);
+    specs
+        .iter()
+        .map(|s| {
+            if s.dtype != DType::F32 {
+                bail!("non-f32 parameter tensor: {:?}", s);
+            }
+            if s.shape.len() <= 1 {
+                return Ok(HostTensor::F32(vec![0.0; s.elems()]));
+            }
+            let fan_in: usize =
+                s.shape[..s.shape.len() - 1].iter().product();
+            let std = (2.0 / fan_in as f64).sqrt();
+            Ok(HostTensor::F32(
+                (0..s.elems())
+                    .map(|_| (rng.normal() * std) as f32)
+                    .collect(),
+            ))
+        })
+        .collect()
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub batch: usize,
+    /// Wall-clock seconds for the stepping loop (compile excluded).
+    pub seconds: f64,
+}
+
+impl TrainReport {
+    pub fn first_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.seconds.max(1e-9)
+    }
+}
+
+/// Train the TinyCNN artifact for `steps` steps at learning rate `lr`,
+/// threading the updated parameters back each iteration (the artifact
+/// is one fused fwd+bwd+SGD HLO module).
+pub fn train(
+    engine: &Engine,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+    mut on_step: impl FnMut(usize, f32),
+) -> Result<(TrainReport, Vec<HostTensor>)> {
+    let wl: LoadedWorkload = engine.load("tinycnn_train_step")?;
+    let n_params = wl.spec.n_params;
+    let batch = wl.spec.batch;
+    let img = wl.spec.inputs[n_params].shape[1];
+
+    let mut params = init_params(&wl.spec.inputs[..n_params], seed)?;
+    let mut data = SyntheticData::new(img, 10, seed ^ 0xDA7A);
+
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (xs, ys) = data.batch(batch);
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::F32(xs));
+        inputs.push(HostTensor::I32(ys));
+        inputs.push(HostTensor::F32(vec![lr]));
+        let mut out = wl.run(&inputs)?;
+        let loss = out.remove(0).scalar_f32()?;
+        losses.push(loss);
+        params = out; // new params come back in manifest order
+        on_step(step, loss);
+    }
+    let report = TrainReport {
+        losses,
+        steps,
+        batch,
+        seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok((report, params))
+}
+
+/// Run the TinyCNN inference artifact on a fresh batch and return
+/// top-1 accuracy — used by the e2e example to sanity-check training.
+pub fn eval_accuracy(
+    engine: &Engine,
+    params: &[HostTensor],
+    seed: u64,
+) -> Result<f32> {
+    let wl = engine.load("tinycnn_infer")?;
+    let n_params = wl.spec.n_params;
+    let batch = wl.spec.batch;
+    let img = wl.spec.inputs[n_params].shape[1];
+    let mut data = SyntheticData::new(img, 10, seed);
+    let (xs, ys) = data.batch(batch);
+    let mut inputs = params.to_vec();
+    inputs.push(HostTensor::F32(xs));
+    let out = wl.run(&inputs)?;
+    let logits = out[0].as_f32()?;
+    let classes = wl.spec.outputs[0].shape[1];
+    let mut correct = 0;
+    for i in 0..batch {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred as i32 == ys[i] {
+            correct += 1;
+        }
+    }
+    Ok(correct as f32 / batch as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_data_is_class_stamped() {
+        let mut d = SyntheticData::new(16, 10, 7);
+        let (xs, ys) = d.batch(64);
+        assert_eq!(xs.len(), 64 * 16 * 16 * 3);
+        assert_eq!(ys.len(), 64);
+        // corner mean must track the label
+        for i in 0..64 {
+            let mut corner = 0.0f32;
+            for yy in 0..4 {
+                for xx in 0..4 {
+                    for c in 0..3 {
+                        corner += xs[((i * 16 + yy) * 16 + xx) * 3 + c];
+                    }
+                }
+            }
+            let mean = corner / 48.0;
+            let expect = (ys[i] as f32 + 1.0) / 10.0;
+            assert!(
+                (mean - expect).abs() < 0.15,
+                "label {} corner mean {mean}",
+                ys[i]
+            );
+        }
+    }
+
+    #[test]
+    fn he_init_statistics() {
+        let specs = vec![
+            TensorSpec { shape: vec![512, 64], dtype: DType::F32 },
+            TensorSpec { shape: vec![64], dtype: DType::F32 },
+        ];
+        let p = init_params(&specs, 3).unwrap();
+        let w = p[0].as_f32().unwrap();
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        let var: f32 =
+            w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.len() as f32;
+        let want = 2.0 / 512.0;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - want).abs() / want < 0.15, "var {var} want {want}");
+        assert!(p[1].as_f32().unwrap().iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn init_rejects_int_params() {
+        let specs = vec![TensorSpec { shape: vec![4], dtype: DType::I32 }];
+        assert!(init_params(&specs, 0).is_err());
+    }
+}

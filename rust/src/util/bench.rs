@@ -1,0 +1,203 @@
+//! Micro-benchmark harness (criterion substitute for the offline image).
+//!
+//! Every target in `benches/` uses [`Bench`]: warmup, calibrated
+//! iteration count, outlier-robust statistics, and a one-line report
+//! compatible with `cargo bench` output scraping. Not as rigorous as
+//! criterion, but deterministic, dependency-free, and honest about
+//! variance.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub std_ns: f64,
+    /// Optional user-supplied items/iteration for throughput reporting.
+    pub items_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> f64 {
+        if self.items_per_iter > 0.0 && self.mean_ns > 0.0 {
+            self.items_per_iter / (self.mean_ns * 1e-9)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let tp = if self.items_per_iter > 0.0 {
+            format!("  {:>12.0} items/s", self.throughput())
+        } else {
+            String::new()
+        };
+        format!(
+            "bench {:<44} {:>12}/iter (+/- {:>10}) n={}{}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            self.iters,
+            tp
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+    max_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Modest budgets: the suite has ~10 bench binaries and 1 CPU.
+        Bench {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(700),
+            min_iters: 5,
+            max_iters: 1_000_000,
+            results: vec![],
+        }
+    }
+
+    /// Quick mode for CI / tests.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(50),
+            min_iters: 3,
+            max_iters: 10_000,
+            results: vec![],
+        }
+    }
+
+    /// Benchmark `f`, which returns a value that is black-boxed.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        self.run_items(name, 0.0, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (items per call).
+    pub fn run_items<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        f: &mut impl FnMut() -> T,
+    ) -> &Measurement {
+        // Warmup + estimate cost of one call.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup || calls < 1 {
+            black_box(f());
+            calls += 1;
+        }
+        let per_call =
+            (warm_start.elapsed().as_nanos() as f64 / calls as f64).max(1.0);
+
+        // Choose a batch size so each sample takes ~1/30 of the budget.
+        let sample_target_ns = self.measure.as_nanos() as f64 / 30.0;
+        let batch =
+            ((sample_target_ns / per_call).ceil() as u64).clamp(1, self.max_iters);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_iters as usize
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let std = (samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / samples.len() as f64)
+            .sqrt();
+
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: median,
+            std_ns: std,
+            items_per_iter,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::quick();
+        let m = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_reporting() {
+        let mut b = Bench::quick();
+        let mut f = || 1u64 + 1;
+        let m = b.run_items("add", 1000.0, &mut f).clone();
+        assert!(m.throughput() > 0.0);
+        assert!(m.report().contains("items/s"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12.0), "12ns");
+        assert_eq!(fmt_ns(1200.0), "1.20us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

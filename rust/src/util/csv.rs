@@ -1,0 +1,99 @@
+//! CSV emission for experiment results (one file per table/figure so
+//! downstream plotting is trivial).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Builds a CSV document row by row; quotes only when required.
+#[derive(Debug, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    /// Append a row; panics if the arity differs from the header
+    /// (programming error in a bench harness).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: mixed &str/f64 rows via `format!` at the call site.
+    pub fn rowv(&mut self, cells: Vec<String>) -> &mut Self {
+        self.row(&cells)
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&join(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&join(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())?;
+        Ok(())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+fn join(cells: &[String]) -> String {
+    cells.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",")
+}
+
+fn quote(cell: &str) -> String {
+    if cell.contains([',', '"', '\n']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_and_quoted() {
+        let mut c = Csv::new(&["name", "value"]);
+        c.row(&["plain".into(), "1.5".into()]);
+        c.row(&["has,comma".into(), "say \"hi\"".into()]);
+        let s = c.to_string();
+        assert_eq!(
+            s,
+            "name,value\nplain,1.5\n\"has,comma\",\"say \"\"hi\"\"\"\n"
+        );
+        assert_eq!(c.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one".into()]);
+    }
+}

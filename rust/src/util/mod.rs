@@ -1,0 +1,19 @@
+//! Shared infrastructure substrates.
+//!
+//! The offline vendor set ships only `xla` and `anyhow`, so everything a
+//! production framework would normally pull from crates.io is implemented
+//! here: a counter-based PRNG ([`rng`]), summary statistics ([`stats`]),
+//! a JSON parser/writer ([`json`]) for the AOT manifest and result
+//! stores, CSV emission ([`csv`]), paper-style fixed-width tables
+//! ([`table`]), a micro-benchmark harness ([`bench`]) used by every
+//! `benches/` target, and a property-based testing kit ([`proptest`])
+//! used across the device/nvsim/gpusim test suites.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

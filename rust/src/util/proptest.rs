@@ -1,0 +1,158 @@
+//! Property-based testing kit (proptest substitute for the offline
+//! image).
+//!
+//! A property is a closure over a [`Gen`] that draws random inputs and
+//! asserts invariants. The runner executes `cases` iterations from a
+//! fixed seed (override with env `DEEPNVM_PT_SEED`), and on failure
+//! re-raises the panic annotated with the failing case's seed so it can
+//! be replayed exactly. Shrinking is per-draw: integer draws are biased
+//! toward boundary values (0, 1, max) so most failures are already
+//! near-minimal.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use super::rng::Rng;
+
+/// Input source handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// When true, prefer boundary values for ~25% of integer draws.
+    edge_bias: bool,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), edge_bias: true }
+    }
+
+    /// usize in [lo, hi] inclusive, boundary-biased.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        if self.edge_bias && self.rng.chance(0.25) {
+            *self.rng.choose(&[lo, hi, lo + (hi - lo) / 2])
+        } else {
+            self.rng.range_usize(lo, hi)
+        }
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        if self.edge_bias && self.rng.chance(0.25) {
+            *self.rng.choose(&[lo, hi, lo + (hi - lo) / 2])
+        } else {
+            self.rng.range_u64(lo, hi)
+        }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// A power of two in [lo, hi] (both must be powers of two).
+    pub fn pow2_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_exp = lo.trailing_zeros();
+        let hi_exp = hi.trailing_zeros();
+        1 << self.rng.range_u64(lo_exp as u64, hi_exp as u64)
+    }
+
+    /// A vector with length in [min_len, max_len].
+    pub fn vec<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Raw RNG access for exotic distributions.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics (test failure) with the
+/// case seed on the first violated assertion.
+pub fn check(cases: u64, prop: impl Fn(&mut Gen)) {
+    let base: u64 = std::env::var("DEEPNVM_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEE9_4E4D);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut gen = Gen::new(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut gen)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed on case {case} (replay: DEEPNVM_PT_SEED={base}, \
+                 case seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (debugging helper).
+pub fn replay(seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut gen = Gen::new(seed);
+    prop(&mut gen);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check(100, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert!(a + b >= a);
+        });
+    }
+
+    #[test]
+    fn reports_failure_with_seed() {
+        let r = catch_unwind(|| {
+            check(50, |g| {
+                let x = g.usize_in(0, 10);
+                assert!(x < 10, "hit the boundary x={x}");
+            })
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay"), "{msg}");
+        assert!(msg.contains("hit the boundary"), "{msg}");
+    }
+
+    #[test]
+    fn pow2_in_returns_powers() {
+        check(200, |g| {
+            let p = g.pow2_in(8, 1024);
+            assert!(p.is_power_of_two() && (8..=1024).contains(&p));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        for _ in 0..50 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Fixed-width table renderer — prints the paper-style tables the bench
+//! harnesses and the CLI report (`deepnvm table2` etc.) emit to stdout.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table with a header row and unicode-free box drawing
+/// (terminal- and log-friendly).
+#[derive(Debug)]
+pub struct Table {
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            align: header
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: &str) -> Self {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    pub fn align(mut self, align: &[Align]) -> Self {
+        assert_eq!(align.len(), self.header.len());
+        self.align = align.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Add a horizontal separator row.
+    pub fn sep(&mut self) -> &mut Self {
+        self.rows.push(vec![]);
+        self
+    }
+
+    pub fn to_string(&self) -> String {
+        let n = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let hline = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..n {
+                let c = cells.get(i).map(|x| x.as_str()).unwrap_or("");
+                let pad = widths[i] - c.chars().count();
+                match self.align[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(c);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(c);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&hline);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&hline);
+        out.push('\n');
+        for r in &self.rows {
+            if r.is_empty() {
+                out.push_str(&hline);
+            } else {
+                out.push_str(&fmt_row(r));
+            }
+            out.push('\n');
+        }
+        out.push_str(&hline);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format helper: `1.53`, trimming to the given precision.
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Format a ratio as `3.8x`.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_aligns() {
+        let mut t = Table::new(&["name", "val"]).title("demo");
+        t.row(&["a".into(), "1.0".into()]);
+        t.sep();
+        t.row(&["long-name".into(), "22.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("demo"));
+        assert!(s.contains("| a         |  1.0 |"));
+        assert!(s.contains("| long-name | 22.5 |"));
+        // all lines same width
+        let widths: Vec<usize> =
+            s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(f(1.5349, 2), "1.53");
+        assert_eq!(ratio(3.849), "3.85x");
+    }
+}

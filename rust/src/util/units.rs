@@ -1,0 +1,86 @@
+//! Unit conventions and formatting.
+//!
+//! The framework's internal convention (documented once, asserted in
+//! tests): **seconds, joules, watts, square millimeters, bytes**. Paper
+//! tables are printed via the `fmt_*` helpers in the unit each table
+//! uses (ns, nJ, pJ, mW, mm², MB).
+
+pub const NS: f64 = 1e-9;
+pub const PS: f64 = 1e-12;
+pub const US: f64 = 1e-6;
+pub const MS: f64 = 1e-3;
+
+pub const PJ: f64 = 1e-12;
+pub const NJ: f64 = 1e-9;
+pub const UJ: f64 = 1e-6;
+
+pub const MW: f64 = 1e-3;
+pub const UW: f64 = 1e-6;
+
+pub const KB: u64 = 1024;
+pub const MB: u64 = 1024 * 1024;
+
+/// mm² per m² (areas are already stored in mm²; this is for the device
+/// layer, which computes in m²).
+pub const M2_TO_MM2: f64 = 1e6;
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-9 {
+        format!("{:.1} ps", s / PS)
+    } else if s < 1e-6 {
+        format!("{:.2} ns", s / NS)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s / US)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+pub fn fmt_energy(j: f64) -> String {
+    if j < 1e-10 {
+        format!("{:.3} pJ", j / PJ)
+    } else if j < 1e-6 {
+        format!("{:.3} nJ", j / NJ)
+    } else if j < 1e-3 {
+        format!("{:.3} uJ", j / UJ)
+    } else {
+        format!("{:.4} J", j)
+    }
+}
+
+pub fn fmt_power(w: f64) -> String {
+    if w < 1e-3 {
+        format!("{:.2} uW", w / UW)
+    } else if w < 1.0 {
+        format!("{:.1} mW", w / MW)
+    } else {
+        format!("{:.2} W", w)
+    }
+}
+
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= MB {
+        format!("{:.1} MB", b as f64 / MB as f64)
+    } else if b >= KB {
+        format!("{:.1} KB", b as f64 / KB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_time(650.0 * PS), "650.0 ps");
+        assert_eq!(fmt_time(2.91 * NS), "2.91 ns");
+        assert_eq!(fmt_energy(0.076 * PJ), "0.076 pJ");
+        assert_eq!(fmt_energy(0.35 * NJ), "0.350 nJ");
+        assert_eq!(fmt_power(6.442), "6.44 W");
+        assert_eq!(fmt_power(748.0 * MW), "748.0 mW");
+        assert_eq!(fmt_bytes(3 * MB), "3.0 MB");
+        assert_eq!(fmt_bytes(48 * KB), "48.0 KB");
+    }
+}

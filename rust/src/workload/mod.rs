@@ -1,0 +1,19 @@
+//! Architecture-level DL workload modeling (paper §III-C): the five
+//! ImageNet DNNs of Table III and their L2/DRAM memory behaviour.
+//!
+//! The paper obtains memory statistics by profiling Caffe on a real
+//! 1080 Ti with nvprof. Neither exists here, so [`traffic`] rebuilds
+//! the same statistics analytically from the networks' layer tables:
+//! every conv/fc lowers to an im2col + tiled GEMM (exactly the schedule
+//! of the L1 Pallas kernel in `python/compile/kernels/matmul.py`), and
+//! each block load/store that misses the SM-local storage becomes an L2
+//! transaction. [`trace`] turns the same schedule into an address-level
+//! trace for the `gpusim` hierarchy simulator, which cross-validates
+//! the analytic counts and supplies the iso-area DRAM statistics.
+
+pub mod models;
+pub mod trace;
+pub mod traffic;
+
+pub use models::{Dnn, Layer, LayerKind, Phase};
+pub use traffic::{TrafficModel, WorkloadStats};

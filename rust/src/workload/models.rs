@@ -1,0 +1,472 @@
+//! The DNN zoo (paper Table III): AlexNet, GoogLeNet, VGG-16,
+//! ResNet-18, SqueezeNet — layer-by-layer, with ImageNet input shapes.
+//!
+//! Layer tables follow the original papers; unit tests pin the
+//! aggregate weight/MAC counts to Table III.
+
+/// Inference or training pass (paper: I / T).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Inference,
+    Training,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 2] = [Phase::Inference, Phase::Training];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Inference => "inference",
+            Phase::Training => "training",
+        }
+    }
+
+    /// Batch size the paper uses for this phase ("batch size 4 for
+    /// inference and 64 for training, as is typical in related work").
+    pub fn paper_batch(&self) -> usize {
+        match self {
+            Phase::Inference => 4,
+            Phase::Training => 64,
+        }
+    }
+}
+
+/// One layer's compute-relevant configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LayerKind {
+    Conv {
+        k: usize,
+        stride: usize,
+        pad: usize,
+        cin: usize,
+        cout: usize,
+        /// Grouped convolution (AlexNet's split layers).
+        groups: usize,
+    },
+    Fc {
+        din: usize,
+        dout: usize,
+    },
+    Pool {
+        k: usize,
+        stride: usize,
+    },
+    /// Residual / concat junctions move activations but hold no weights.
+    Eltwise,
+}
+
+/// A layer plus its resolved input spatial size.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature-map height=width (square activations).
+    pub in_hw: usize,
+    /// Output feature-map height=width.
+    pub out_hw: usize,
+}
+
+impl Layer {
+    /// Weight parameter count.
+    pub fn weights(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { k, cin, cout, groups, .. } => {
+                (k * k * (cin / groups) * cout + cout) as u64
+            }
+            LayerKind::Fc { din, dout } => (din * dout + dout) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate ops for batch 1 (forward).
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { k, cin, cout, groups, .. } => {
+                (self.out_hw * self.out_hw) as u64
+                    * (k * k * (cin / groups) * cout) as u64
+            }
+            LayerKind::Fc { din, dout } => (din * dout) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Output channels (activation depth after this layer).
+    pub fn cout(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { cout, .. } => cout,
+            LayerKind::Fc { dout, .. } => dout,
+            _ => 0,
+        }
+    }
+
+    /// GEMM dimensions (M, K, N) of the lowered layer for batch `b`
+    /// (conv via im2col, per the L1 Pallas schedule). Pool/eltwise
+    /// return None.
+    pub fn gemm_dims(&self, b: usize) -> Option<(u64, u64, u64)> {
+        match self.kind {
+            LayerKind::Conv { k, cin, cout, groups, .. } => Some((
+                (b * self.out_hw * self.out_hw) as u64,
+                (k * k * cin / groups) as u64,
+                cout as u64,
+            )),
+            LayerKind::Fc { din, dout } => {
+                Some((b as u64, din as u64, dout as u64))
+            }
+            _ => None,
+        }
+    }
+
+    /// Input activation elements for batch 1.
+    pub fn in_elems(&self, cin_actual: usize) -> u64 {
+        (self.in_hw * self.in_hw * cin_actual) as u64
+    }
+}
+
+/// A full network.
+#[derive(Clone, Debug)]
+pub struct Dnn {
+    pub name: &'static str,
+    pub top5_error: f64,
+    pub layers: Vec<Layer>,
+}
+
+impl Dnn {
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn conv_count(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .count()
+    }
+
+    pub fn fc_count(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Fc { .. }))
+            .count()
+    }
+
+    /// All five Table III networks.
+    pub fn zoo() -> Vec<Dnn> {
+        vec![alexnet(), googlenet(), vgg16(), resnet18(), squeezenet()]
+    }
+
+    pub fn by_name(name: &str) -> Option<Dnn> {
+        Self::zoo().into_iter().find(|d| d.name.eq_ignore_ascii_case(name))
+    }
+}
+
+/// Builder that tracks spatial size through the layer stack.
+struct Stack {
+    layers: Vec<Layer>,
+    hw: usize,
+}
+
+impl Stack {
+    fn new(input_hw: usize) -> Self {
+        Stack { layers: vec![], hw: input_hw }
+    }
+
+    fn conv(&mut self, name: &str, k: usize, s: usize, p: usize, cin: usize, cout: usize) {
+        self.conv_g(name, k, s, p, cin, cout, 1);
+    }
+
+    fn conv_g(
+        &mut self,
+        name: &str,
+        k: usize,
+        s: usize,
+        p: usize,
+        cin: usize,
+        cout: usize,
+        groups: usize,
+    ) {
+        let out = (self.hw + 2 * p - k) / s + 1;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv { k, stride: s, pad: p, cin, cout, groups },
+            in_hw: self.hw,
+            out_hw: out,
+        });
+        self.hw = out;
+    }
+
+    /// Conv that does not advance the running spatial size (parallel
+    /// branch inside an inception/fire module).
+    fn conv_branch(&mut self, name: &str, k: usize, p: usize, cin: usize, cout: usize) {
+        let out = (self.hw + 2 * p - k) + 1;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv { k, stride: 1, pad: p, cin, cout, groups: 1 },
+            in_hw: self.hw,
+            out_hw: out,
+        });
+    }
+
+    fn pool(&mut self, name: &str, k: usize, s: usize) {
+        let out = (self.hw - k) / s + 1;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Pool { k, stride: s },
+            in_hw: self.hw,
+            out_hw: out,
+        });
+        self.hw = out;
+    }
+
+    /// Ceil-mode pool (Caffe's default), used by GoogLeNet/SqueezeNet.
+    fn pool_ceil(&mut self, name: &str, k: usize, s: usize) {
+        let out = (self.hw - k + s - 1) / s + 1;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Pool { k, stride: s },
+            in_hw: self.hw,
+            out_hw: out,
+        });
+        self.hw = out;
+    }
+
+    fn fc(&mut self, name: &str, din: usize, dout: usize) {
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Fc { din, dout },
+            in_hw: 1,
+            out_hw: 1,
+        });
+        self.hw = 1;
+    }
+}
+
+/// AlexNet (Krizhevsky'12), grouped convs as published: 5 conv + 3 fc,
+/// 61M weights, 724M MACs.
+pub fn alexnet() -> Dnn {
+    let mut s = Stack::new(227);
+    s.conv("conv1", 11, 4, 0, 3, 96);
+    s.pool("pool1", 3, 2);
+    s.conv_g("conv2", 5, 1, 2, 96, 256, 2);
+    s.pool("pool2", 3, 2);
+    s.conv("conv3", 3, 1, 1, 256, 384);
+    s.conv_g("conv4", 3, 1, 1, 384, 384, 2);
+    s.conv_g("conv5", 3, 1, 1, 384, 256, 2);
+    s.pool("pool5", 3, 2);
+    s.fc("fc6", 256 * 6 * 6, 4096);
+    s.fc("fc7", 4096, 4096);
+    s.fc("fc8", 4096, 1000);
+    Dnn { name: "AlexNet", top5_error: 16.4, layers: s.layers }
+}
+
+/// GoogLeNet (Szegedy'15): 57 conv + 1 fc, ~7M weights, ~1.43G MACs.
+pub fn googlenet() -> Dnn {
+    let mut s = Stack::new(224);
+    s.conv("conv1", 7, 2, 3, 3, 64);
+    s.pool_ceil("pool1", 3, 2);
+    s.conv("conv2_reduce", 1, 1, 0, 64, 64);
+    s.conv("conv2", 3, 1, 1, 64, 192);
+    s.pool_ceil("pool2", 3, 2);
+
+    // (name, cin, n1x1, n3r, n3, n5r, n5, pool_proj)
+    let inceptions: [(&str, usize, usize, usize, usize, usize, usize, usize); 9] = [
+        ("3a", 192, 64, 96, 128, 16, 32, 32),
+        ("3b", 256, 128, 128, 192, 32, 96, 64),
+        ("4a", 480, 192, 96, 208, 16, 48, 64),
+        ("4b", 512, 160, 112, 224, 24, 64, 64),
+        ("4c", 512, 128, 128, 256, 24, 64, 64),
+        ("4d", 512, 112, 144, 288, 32, 64, 64),
+        ("4e", 528, 256, 160, 320, 32, 128, 128),
+        ("5a", 832, 256, 160, 320, 32, 128, 128),
+        ("5b", 832, 384, 192, 384, 48, 128, 128),
+    ];
+    for (i, &(nm, cin, n1, n3r, n3, n5r, n5, pp)) in inceptions.iter().enumerate() {
+        s.conv_branch(&format!("inc{nm}_1x1"), 1, 0, cin, n1);
+        s.conv_branch(&format!("inc{nm}_3x3r"), 1, 0, cin, n3r);
+        s.conv_branch(&format!("inc{nm}_3x3"), 3, 1, n3r, n3);
+        s.conv_branch(&format!("inc{nm}_5x5r"), 1, 0, cin, n5r);
+        s.conv_branch(&format!("inc{nm}_5x5"), 5, 2, n5r, n5);
+        s.conv_branch(&format!("inc{nm}_pool_proj"), 1, 0, cin, pp);
+        // spatial reductions after 3b and 4e
+        if nm == "3b" || nm == "4e" {
+            s.pool_ceil(&format!("pool_after_{nm}"), 3, 2);
+        }
+        let _ = i;
+    }
+    s.pool("pool5_avg", 7, 1);
+    s.fc("fc", 1024, 1000);
+    Dnn { name: "GoogLeNet", top5_error: 6.7, layers: s.layers }
+}
+
+/// VGG-16 (Simonyan'14): 13 conv + 3 fc, 138M weights, 15.5G MACs.
+pub fn vgg16() -> Dnn {
+    let mut s = Stack::new(224);
+    let blocks: [(usize, usize, usize); 5] = [
+        (2, 3, 64),
+        (2, 64, 128),
+        (3, 128, 256),
+        (3, 256, 512),
+        (3, 512, 512),
+    ];
+    for (bi, &(n, cin, cout)) in blocks.iter().enumerate() {
+        for li in 0..n {
+            let ci = if li == 0 { cin } else { cout };
+            s.conv(&format!("conv{}_{}", bi + 1, li + 1), 3, 1, 1, ci, cout);
+        }
+        s.pool(&format!("pool{}", bi + 1), 2, 2);
+    }
+    s.fc("fc6", 512 * 7 * 7, 4096);
+    s.fc("fc7", 4096, 4096);
+    s.fc("fc8", 4096, 1000);
+    Dnn { name: "VGG-16", top5_error: 7.3, layers: s.layers }
+}
+
+/// ResNet-18 (He'16), identity-shortcut variant the paper's Table III
+/// counts (17 conv + 1 fc, 11.8M weights, ~2G MACs; projection
+/// shortcuts folded into eltwise junctions).
+pub fn resnet18() -> Dnn {
+    let mut s = Stack::new(224);
+    s.conv("conv1", 7, 2, 3, 3, 64);
+    s.pool("pool1", 3, 2);
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 64, 1), (64, 128, 2), (128, 256, 2), (256, 512, 2)];
+    for (si, &(cin, cout, stride1)) in stages.iter().enumerate() {
+        for bi in 0..2 {
+            let (ci, st) =
+                if bi == 0 { (cin, stride1) } else { (cout, 1) };
+            s.conv(&format!("res{}_{}a", si + 2, bi + 1), 3, st, 1, ci, cout);
+            s.conv(&format!("res{}_{}b", si + 2, bi + 1), 3, 1, 1, cout, cout);
+            s.layers.push(Layer {
+                name: format!("res{}_{}_add", si + 2, bi + 1),
+                kind: LayerKind::Eltwise,
+                in_hw: s.hw,
+                out_hw: s.hw,
+            });
+        }
+    }
+    s.pool("pool5_avg", 7, 1);
+    s.fc("fc", 512, 1000);
+    Dnn { name: "ResNet-18", top5_error: 10.71, layers: s.layers }
+}
+
+/// SqueezeNet v1.0 (Iandola'16): 26 conv, 0 fc, 1.2M weights, 837M MACs.
+pub fn squeezenet() -> Dnn {
+    let mut s = Stack::new(227);
+    s.conv("conv1", 7, 2, 0, 3, 96);
+    s.pool_ceil("pool1", 3, 2);
+    // (squeeze, expand) channel plan; input channels tracked manually.
+    let fires: [(&str, usize, usize, usize); 8] = [
+        ("fire2", 96, 16, 64),
+        ("fire3", 128, 16, 64),
+        ("fire4", 128, 32, 128),
+        ("fire5", 256, 32, 128),
+        ("fire6", 256, 48, 192),
+        ("fire7", 384, 48, 192),
+        ("fire8", 384, 64, 256),
+        ("fire9", 512, 64, 256),
+    ];
+    for &(nm, cin, sq, ex) in &fires {
+        s.conv_branch(&format!("{nm}_squeeze"), 1, 0, cin, sq);
+        s.conv_branch(&format!("{nm}_e1x1"), 1, 0, sq, ex);
+        s.conv_branch(&format!("{nm}_e3x3"), 3, 1, sq, ex);
+        if nm == "fire4" || nm == "fire8" {
+            s.pool_ceil(&format!("pool_after_{nm}"), 3, 2);
+        }
+    }
+    s.conv("conv10", 1, 1, 0, 512, 1000);
+    s.pool("pool10_avg", 13, 1);
+    Dnn { name: "SqueezeNet", top5_error: 16.4, layers: s.layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(got: f64, want: f64, tol: f64, what: &str) {
+        let err = (got - want).abs() / want;
+        assert!(err < tol, "{what}: got {got:.3e}, want {want:.3e} ({:.0}%)", err * 100.0);
+    }
+
+    #[test]
+    fn table3_alexnet() {
+        let d = alexnet();
+        assert_eq!(d.conv_count(), 5);
+        assert_eq!(d.fc_count(), 3);
+        close(d.total_weights() as f64, 61e6, 0.05, "alexnet weights");
+        close(d.total_macs() as f64, 724e6, 0.05, "alexnet MACs");
+    }
+
+    #[test]
+    fn table3_googlenet() {
+        let d = googlenet();
+        assert_eq!(d.conv_count(), 57);
+        assert_eq!(d.fc_count(), 1);
+        close(d.total_weights() as f64, 7e6, 0.12, "googlenet weights");
+        close(d.total_macs() as f64, 1.43e9, 0.12, "googlenet MACs");
+    }
+
+    #[test]
+    fn table3_vgg16() {
+        let d = vgg16();
+        assert_eq!(d.conv_count(), 13);
+        assert_eq!(d.fc_count(), 3);
+        close(d.total_weights() as f64, 138e6, 0.05, "vgg weights");
+        close(d.total_macs() as f64, 15.5e9, 0.05, "vgg MACs");
+    }
+
+    #[test]
+    fn table3_resnet18() {
+        let d = resnet18();
+        assert_eq!(d.conv_count(), 17);
+        assert_eq!(d.fc_count(), 1);
+        close(d.total_weights() as f64, 11.8e6, 0.08, "resnet weights");
+        close(d.total_macs() as f64, 2e9, 0.12, "resnet MACs");
+    }
+
+    #[test]
+    fn table3_squeezenet() {
+        let d = squeezenet();
+        assert_eq!(d.conv_count(), 26);
+        assert_eq!(d.fc_count(), 0);
+        close(d.total_weights() as f64, 1.2e6, 0.08, "squeezenet weights");
+        close(d.total_macs() as f64, 837e6, 0.08, "squeezenet MACs");
+    }
+
+    #[test]
+    fn zoo_has_five_networks() {
+        let zoo = Dnn::zoo();
+        assert_eq!(zoo.len(), 5);
+        assert!(Dnn::by_name("vgg-16").is_some());
+        assert!(Dnn::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn gemm_dims_match_macs() {
+        // For every conv/fc layer: M*K*N (batch 1) == macs().
+        for d in Dnn::zoo() {
+            for l in &d.layers {
+                if let Some((m, k, n)) = l.gemm_dims(1) {
+                    assert_eq!(m * k * n, l.macs(), "{}: {}", d.name, l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spatial_sizes_resolve_to_classifier() {
+        // Every network must end at 1x1 spatial (after final pool/fc).
+        for d in Dnn::zoo() {
+            let last = d.layers.last().unwrap();
+            assert_eq!(last.out_hw, 1, "{}: {}", d.name, last.name);
+        }
+    }
+
+    #[test]
+    fn phase_batches_match_paper() {
+        assert_eq!(Phase::Inference.paper_batch(), 4);
+        assert_eq!(Phase::Training.paper_batch(), 64);
+    }
+}

@@ -1,0 +1,61 @@
+//! CLI + report + store integration: every fast command produces a
+//! printable table and a persistable CSV, and the store index is
+//! readable back.
+
+use deepnvm::coordinator::cli::{generate, parse_args, CliOptions};
+use deepnvm::coordinator::store::Store;
+use deepnvm::util::json;
+
+fn opts(cmd: &str) -> CliOptions {
+    parse_args(&[cmd.to_string(), "--quick".to_string()]).unwrap()
+}
+
+#[test]
+fn every_table_command_generates() {
+    for cmd in ["table1", "table2", "table3", "fig1"] {
+        let rs = generate(&opts(cmd)).unwrap();
+        assert!(!rs.is_empty(), "{cmd}");
+        for r in rs {
+            assert!(r.text.lines().count() > 3, "{cmd}: thin report");
+            assert!(r.csv.n_rows() > 0, "{cmd}: empty csv");
+        }
+    }
+}
+
+#[test]
+fn analysis_figures_generate_quick() {
+    for cmd in ["fig3", "fig5", "fig7", "fig9", "fig10"] {
+        let rs = generate(&opts(cmd)).unwrap();
+        assert!(!rs.is_empty(), "{cmd}");
+    }
+}
+
+#[test]
+fn store_roundtrip_via_cli_pipeline() {
+    let dir = std::env::temp_dir().join("deepnvm_cli_store");
+    let _ = std::fs::remove_dir_all(&dir);
+    let rs = generate(&opts("table3")).unwrap();
+    let mut store = Store::new(&dir);
+    for r in &rs {
+        store.save(r).unwrap();
+    }
+    let idx = store.finish(&[("command", "table3")]).unwrap();
+    let parsed = json::parse(&std::fs::read_to_string(&idx).unwrap()).unwrap();
+    assert!(parsed.get("experiments").unwrap().get("T3").is_some());
+    assert!(dir.join("t3.csv").exists());
+    // CSV has 5 networks + header
+    let csv = std::fs::read_to_string(dir.join("t3.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 6);
+}
+
+#[test]
+fn fig5_custom_batches_respected() {
+    let o = parse_args(&[
+        "fig5".to_string(),
+        "--batches".to_string(),
+        "2,32".to_string(),
+    ])
+    .unwrap();
+    let rs = generate(&o).unwrap();
+    assert_eq!(rs[0].csv.n_rows(), 2 * 2 * 2);
+}

@@ -1,0 +1,97 @@
+//! Table II calibration: the EDAP-tuned cache designs must reproduce
+//! the paper's published latency/energy/leakage/area at the 3 MB
+//! iso-capacity points and the 7/10 MB iso-area points.
+//!
+//! Tolerances are per-metric; deviations and their causes are recorded
+//! in EXPERIMENTS.md §T2 (the known outlier is STT write energy, where
+//! the paper's value is *below* 256 x its own Table I cell write
+//! energy, so an exact match is not reachable from its own bitcell
+//! numbers).
+
+use deepnvm::device::MemTech;
+use deepnvm::nvsim::explorer::tuned_cache;
+use deepnvm::nvsim::CachePpa;
+
+const MB: u64 = 1024 * 1024;
+
+struct Target {
+    tech: MemTech,
+    mb: u64,
+    read_lat_ns: f64,
+    write_lat_ns: f64,
+    read_nj: f64,
+    write_nj: f64,
+    leak_mw: f64,
+    area_mm2: f64,
+}
+
+/// Paper Table II.
+const TABLE2: [Target; 5] = [
+    Target { tech: MemTech::Sram, mb: 3, read_lat_ns: 2.91, write_lat_ns: 1.53, read_nj: 0.35, write_nj: 0.32, leak_mw: 6442.0, area_mm2: 5.53 },
+    Target { tech: MemTech::SttMram, mb: 3, read_lat_ns: 2.98, write_lat_ns: 9.31, read_nj: 0.81, write_nj: 0.31, leak_mw: 748.0, area_mm2: 2.34 },
+    Target { tech: MemTech::SttMram, mb: 7, read_lat_ns: 4.58, write_lat_ns: 10.06, read_nj: 0.93, write_nj: 0.43, leak_mw: 1706.0, area_mm2: 5.12 },
+    Target { tech: MemTech::SotMram, mb: 3, read_lat_ns: 3.71, write_lat_ns: 1.38, read_nj: 0.49, write_nj: 0.22, leak_mw: 527.0, area_mm2: 1.95 },
+    Target { tech: MemTech::SotMram, mb: 10, read_lat_ns: 6.69, write_lat_ns: 2.47, read_nj: 0.51, write_nj: 0.40, leak_mw: 1434.0, area_mm2: 5.64 },
+];
+
+fn within(got: f64, want: f64, tol: f64, what: &str) {
+    let err = (got - want).abs() / want;
+    assert!(
+        err <= tol,
+        "{what}: got {got:.3}, paper {want:.3} (err {:.0}% > {:.0}%)",
+        err * 100.0,
+        tol * 100.0
+    );
+}
+
+fn check(t: &Target, p: &CachePpa) {
+    let name = format!("{} {}MB", t.tech, t.mb);
+    within(p.read_latency * 1e9, t.read_lat_ns, 0.40, &format!("{name} read latency"));
+    within(p.write_latency * 1e9, t.write_lat_ns, 0.35, &format!("{name} write latency"));
+    within(p.read_energy * 1e9, t.read_nj, 0.35, &format!("{name} read energy"));
+    // STT write energy: known outlier (see header comment) — 80% band.
+    let we_tol = if t.tech == MemTech::SttMram { 0.80 } else { 0.35 };
+    within(p.write_energy * 1e9, t.write_nj, we_tol, &format!("{name} write energy"));
+    within(p.leakage_power * 1e3, t.leak_mw, 0.30, &format!("{name} leakage"));
+    within(p.area * 1e6, t.area_mm2, 0.25, &format!("{name} area"));
+}
+
+#[test]
+fn table2_calibration() {
+    for t in &TABLE2 {
+        let tc = tuned_cache(t.tech, t.mb * MB);
+        check(t, &tc.ppa);
+    }
+}
+
+#[test]
+fn iso_capacity_relative_shape() {
+    // The *relative* Table II relations the downstream studies rely on.
+    let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+    let stt = tuned_cache(MemTech::SttMram, 3 * MB).ppa;
+    let sot = tuned_cache(MemTech::SotMram, 3 * MB).ppa;
+
+    // Area reduction: paper 2.4x (STT), 2.8x (SOT).
+    within(sram.area / stt.area, 2.4, 0.25, "STT area reduction");
+    within(sram.area / sot.area, 2.8, 0.25, "SOT area reduction");
+    // Leakage reduction: paper 8.6x / 12.2x.
+    within(sram.leakage_power / stt.leakage_power, 8.6, 0.30, "STT leak red.");
+    within(sram.leakage_power / sot.leakage_power, 12.2, 0.35, "SOT leak red.");
+    // Write latency: STT ~6x SRAM; SOT comparable to SRAM.
+    assert!(stt.write_latency > 4.0 * sram.write_latency);
+    assert!(sot.write_latency < 1.5 * sram.write_latency);
+    // Read energy: MRAMs cost more per read than SRAM (iso-capacity).
+    assert!(stt.read_energy > sram.read_energy);
+    assert!(sot.read_energy > sram.read_energy);
+}
+
+#[test]
+fn iso_area_capacity_gains() {
+    // Paper: within SRAM's 3MB footprint, STT fits 7MB (2.3x) and SOT
+    // fits 10MB (3.3x).
+    let sram = tuned_cache(MemTech::Sram, 3 * MB).ppa;
+    let stt7 = tuned_cache(MemTech::SttMram, 7 * MB).ppa;
+    let sot10 = tuned_cache(MemTech::SotMram, 10 * MB).ppa;
+    within(stt7.area * 1e6, sram.area * 1e6, 0.25, "STT 7MB fits SRAM 3MB area");
+    within(sot10.area * 1e6, sram.area * 1e6, 0.30, "SOT 10MB fits SRAM 3MB area");
+}

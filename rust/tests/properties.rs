@@ -1,0 +1,135 @@
+//! Cross-module property tests and failure injection: system-level
+//! invariants that no unit suite owns.
+
+use deepnvm::device::MemTech;
+use deepnvm::nvsim::explorer::tuned_cache;
+use deepnvm::util::proptest::{check, Gen};
+use deepnvm::util::{json, rng::Rng};
+use deepnvm::workload::models::{Dnn, Phase};
+use deepnvm::workload::traffic::TrafficModel;
+
+const MB: u64 = 1024 * 1024;
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    // failure injection: arbitrary byte soup must error, not panic
+    check(300, |g: &mut Gen| {
+        let len = g.usize_in(0, 200);
+        let mut rng = Rng::new(g.u64_in(0, u64::MAX - 1));
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| (rng.below(96) as u8 + 32).min(126))
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = json::parse(&s); // Result either way; must not panic
+    });
+}
+
+#[test]
+fn json_roundtrip_on_random_documents() {
+    fn random_json(g: &mut Gen, depth: usize) -> json::Json {
+        use json::Json;
+        if depth == 0 || g.bool() {
+            match g.usize_in(0, 3) {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                _ => Json::Str(format!("s{}", g.u64_in(0, 999))),
+            }
+        } else if g.bool() {
+            let n = g.usize_in(0, 4);
+            Json::Arr((0..n).map(|_| random_json(g, depth - 1)).collect())
+        } else {
+            let mut o = Json::obj();
+            for i in 0..g.usize_in(0, 4) {
+                o.set(&format!("k{i}"), random_json(g, depth - 1));
+            }
+            o
+        }
+    }
+    check(150, |g| {
+        let doc = random_json(g, 3);
+        assert_eq!(json::parse(&doc.to_string()).unwrap(), doc);
+        assert_eq!(json::parse(&doc.to_pretty()).unwrap(), doc);
+    });
+}
+
+#[test]
+fn cache_ppa_monotone_in_capacity() {
+    // Area and leakage of EDAP-tuned designs must grow with capacity
+    // for every technology (the structural backbone of Figs 9-10).
+    for tech in MemTech::ALL {
+        let mut prev_area = 0.0;
+        let mut prev_leak = 0.0;
+        for mb in [1u64, 2, 4, 8, 16, 32] {
+            let p = tuned_cache(tech, mb * MB).ppa;
+            assert!(
+                p.area > prev_area,
+                "{tech} {mb}MB area non-monotone"
+            );
+            assert!(
+                p.leakage_power > prev_leak,
+                "{tech} {mb}MB leakage non-monotone"
+            );
+            prev_area = p.area;
+            prev_leak = p.leakage_power;
+        }
+    }
+}
+
+#[test]
+fn traffic_monotone_in_batch() {
+    check(30, |g| {
+        let zoo = Dnn::zoo();
+        let d = g.choose(&zoo);
+        let ph = *g.choose(&Phase::ALL);
+        let b1 = g.usize_in(1, 32);
+        let b2 = b1 + g.usize_in(1, 32);
+        let m = TrafficModel::default();
+        let s1 = m.run(d, ph, b1);
+        let s2 = m.run(d, ph, b2);
+        assert!(s2.l2_reads > s1.l2_reads, "{} reads", d.name);
+        assert!(s2.l2_writes > s1.l2_writes, "{} writes", d.name);
+        assert!(s2.macs > s1.macs, "{} macs", d.name);
+    });
+}
+
+#[test]
+fn training_always_heavier_than_inference_at_equal_batch() {
+    check(20, |g| {
+        let zoo = Dnn::zoo();
+        let d = g.choose(&zoo);
+        let b = g.usize_in(1, 64);
+        let m = TrafficModel::default();
+        let i = m.run(d, Phase::Inference, b);
+        let t = m.run(d, Phase::Training, b);
+        assert!(t.l2_reads > i.l2_reads);
+        assert!(t.l2_writes > i.l2_writes);
+        assert!(t.macs >= 3 * i.macs);
+    });
+}
+
+#[test]
+fn mram_leakage_advantage_holds_at_every_capacity() {
+    // The core paper claim must hold across the whole explored space.
+    for mb in [1u64, 3, 7, 10, 16, 32] {
+        let sram = tuned_cache(MemTech::Sram, mb * MB).ppa;
+        for tech in [MemTech::SttMram, MemTech::SotMram] {
+            let m = tuned_cache(tech, mb * MB).ppa;
+            assert!(
+                m.leakage_power < 0.5 * sram.leakage_power,
+                "{tech} at {mb}MB: {} vs SRAM {}",
+                m.leakage_power,
+                sram.leakage_power
+            );
+        }
+    }
+}
+
+#[test]
+fn edap_tuner_is_deterministic() {
+    let a = tuned_cache(MemTech::SotMram, 3 * MB);
+    let b = tuned_cache(MemTech::SotMram, 3 * MB);
+    assert_eq!(a.org, b.org);
+    assert_eq!(a.opt.name(), b.opt.name());
+    assert!((a.ppa.edap() - b.ppa.edap()).abs() < 1e-30);
+}

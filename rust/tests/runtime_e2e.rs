@@ -1,0 +1,95 @@
+//! End-to-end runtime integration: load real AOT artifacts, execute on
+//! CPU PJRT, verify numerics and training behaviour.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise, so bare
+//! `cargo test` still passes on a fresh checkout).
+
+use deepnvm::runtime::engine::HostTensor;
+use deepnvm::runtime::{trainer, Engine, Manifest};
+
+fn engine_or_skip() -> Option<Engine> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping runtime e2e: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::default().expect("engine"))
+}
+
+#[test]
+fn gemm_artifact_matches_cpu_reference() {
+    let Some(engine) = engine_or_skip() else { return };
+    let wl = engine.load("gemm_128").expect("load gemm");
+    let n = 128usize;
+    // deterministic inputs
+    let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) * 0.25).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32 - 2.0) * 0.5).collect();
+    let out = wl
+        .run(&[HostTensor::F32(a.clone()), HostTensor::F32(b.clone())])
+        .expect("run");
+    let got = out[0].as_f32().unwrap();
+
+    // naive reference
+    let mut want = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                want[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn tinycnn_infer_shapes_and_determinism() {
+    let Some(engine) = engine_or_skip() else { return };
+    let wl = engine.load("tinycnn_infer").expect("load");
+    let n_params = wl.spec.n_params;
+    let params =
+        trainer::init_params(&wl.spec.inputs[..n_params], 42).unwrap();
+    let batch = wl.spec.batch;
+    let img = wl.spec.inputs[n_params].shape[1];
+    let xs = vec![0.5f32; batch * img * img * 3];
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::F32(xs));
+    let o1 = wl.run(&inputs).expect("run1");
+    let o2 = wl.run(&inputs).expect("run2");
+    assert_eq!(o1[0].as_f32().unwrap().len(), batch * 10);
+    assert_eq!(o1, o2, "inference must be deterministic");
+}
+
+#[test]
+fn training_reduces_loss_and_learns() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (report, params) =
+        trainer::train(&engine, 40, 0.05, 7, |_, _| {}).expect("train");
+    assert_eq!(report.losses.len(), 40);
+    // initial loss near ln(10)
+    assert!(
+        (report.first_loss() - 2.303).abs() < 0.6,
+        "first loss {}",
+        report.first_loss()
+    );
+    assert!(
+        report.last_loss() < report.first_loss() * 0.8,
+        "loss did not fall: {} -> {}",
+        report.first_loss(),
+        report.last_loss()
+    );
+    // the learned net must beat the 10% chance rate on fresh data
+    let acc = trainer::eval_accuracy(&engine, &params, 999).expect("eval");
+    assert!(acc > 0.2, "accuracy {acc}");
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let Some(engine) = engine_or_skip() else { return };
+    let wl = engine.load("gemm_128").expect("load");
+    assert!(wl.run(&[HostTensor::F32(vec![0.0; 128 * 128])]).is_err());
+}

@@ -1,0 +1,86 @@
+//! Cross-validation: the analytic traffic model (nvprof substitute) vs
+//! the trace-driven hierarchy simulation (GPGPU-Sim substitute). The
+//! two substrates were built independently on top of the same GEMM
+//! schedule; this test keeps them honest against each other.
+
+use deepnvm::gpusim::{gpu::simulate_dnn, GpuConfig};
+use deepnvm::workload::models::{Dnn, Phase};
+use deepnvm::workload::traffic::{TrafficModel, WorkloadStats};
+
+const MB: u64 = 1024 * 1024;
+
+fn gemm_only_stats(dnn: &Dnn, phase: Phase, b: usize, l2: u64) -> WorkloadStats {
+    // pool/eltwise layers are modeled only analytically; compare the
+    // GEMM-backed portion, which is what the trace contains.
+    let m = TrafficModel { l2_bytes: l2, ..Default::default() };
+    let mut s = WorkloadStats::default();
+    for l in &dnn.layers {
+        if l.gemm_dims(b).is_some() {
+            s.add(&m.layer_stats(l, phase, b));
+        }
+    }
+    s
+}
+
+#[test]
+fn l2_transaction_counts_agree() {
+    let d = Dnn::by_name("SqueezeNet").unwrap();
+    let analytic = gemm_only_stats(&d, Phase::Inference, 1, 3 * MB);
+    let sim = simulate_dnn(GpuConfig::gtx1080ti(3 * MB), &d, Phase::Inference, 1);
+
+    // The simulator's L2 sees what misses the L1s; writes are
+    // write-through so they match exactly, reads are a subset.
+    assert_eq!(
+        sim.l2_writes,
+        analytic.l2_writes,
+        "write-through writes must match the schedule exactly"
+    );
+    assert!(
+        sim.l2_reads <= analytic.l2_reads,
+        "L1 can only filter reads: sim {} vs analytic {}",
+        sim.l2_reads,
+        analytic.l2_reads
+    );
+    // ... and since one 128 B L1 line covers four consecutive 32 B
+    // sectors of a streaming block, the L1 coalesces reads by ~4x.
+    // The analytic model counts sector-granular requests (nvprof's
+    // convention); the simulated post-L1 read count must sit right at
+    // that coalescing factor.
+    let ratio = sim.l2_reads as f64 / analytic.l2_reads as f64;
+    assert!(
+        (0.15..0.6).contains(&ratio),
+        "L1 read coalescing off: {ratio} (expect ~0.25)"
+    );
+}
+
+#[test]
+fn dram_traffic_same_ballpark() {
+    // The analytic spill model and the real cache simulation must agree
+    // on total DRAM traffic within ~2.5x for a batch-1 inference pass
+    // (the analytic model is deliberately simple).
+    let d = Dnn::by_name("SqueezeNet").unwrap();
+    let analytic = gemm_only_stats(&d, Phase::Inference, 1, 3 * MB);
+    let sim = simulate_dnn(GpuConfig::gtx1080ti(3 * MB), &d, Phase::Inference, 1);
+    let ratio = sim.dram_total() as f64 / analytic.dram_total() as f64;
+    assert!(
+        (0.4..2.5).contains(&ratio),
+        "sim {} vs analytic {} (ratio {ratio:.2})",
+        sim.dram_total(),
+        analytic.dram_total()
+    );
+}
+
+#[test]
+fn capacity_sensitivity_directionally_consistent() {
+    // Growing the L2 must reduce DRAM traffic in both models.
+    let d = Dnn::by_name("AlexNet").unwrap();
+    let a_small = gemm_only_stats(&d, Phase::Inference, 1, 2 * MB).dram_total();
+    let a_large = gemm_only_stats(&d, Phase::Inference, 1, 16 * MB).dram_total();
+    assert!(a_large <= a_small);
+
+    let s_small =
+        simulate_dnn(GpuConfig::gtx1080ti(2 * MB), &d, Phase::Inference, 1).dram_total();
+    let s_large =
+        simulate_dnn(GpuConfig::gtx1080ti(16 * MB), &d, Phase::Inference, 1).dram_total();
+    assert!(s_large < s_small);
+}
