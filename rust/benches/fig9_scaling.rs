@@ -5,6 +5,7 @@ mod bench_common;
 
 use deepnvm::analysis::scalability;
 use deepnvm::coordinator::reports;
+use deepnvm::nvsim::explorer;
 use deepnvm::util::bench::Bench;
 
 fn main() {
@@ -16,7 +17,10 @@ fn main() {
     bench_common::emit(&reports::fig9(&caps));
 
     let mut b = Bench::new();
-    b.run("nvsim/ppa_sweep_3techs_x_6caps", || {
-        scalability::ppa_sweep(&scalability::CAPACITIES_MB)
+    // Raw Algorithm-1 solver (unmemoized), so this number keeps
+    // tracking circuit-solve cost; the memoized production path is
+    // covered by `cargo bench --bench sweep_scaling`.
+    b.run("nvsim/explore_3techs_x_6caps", || {
+        explorer::explore(&scalability::CAPACITIES_MB)
     });
 }

@@ -1,0 +1,107 @@
+//! Bench SW: the sweep engine on a fig9/fig10-sized grid — serial vs
+//! parallel vs memoized — and the `BENCH_sweep.json` baseline emitter
+//! future PRs use to track the perf trajectory.
+//!
+//! Run: `cargo bench --bench sweep_scaling [-- --quick]`
+
+mod bench_common;
+
+use std::time::Instant;
+
+use deepnvm::sweep::{self, exec, Memo, SweepSpec};
+use deepnvm::util::bench::Bench;
+use deepnvm::util::json::Json;
+
+fn grid(quick: bool) -> SweepSpec {
+    let capacities_mb = if quick {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 2, 4, 8, 16, 32]
+    };
+    SweepSpec { capacities_mb, ..SweepSpec::default() }
+}
+
+/// Wall-clock of one full sweep under the given schedule and cache.
+fn timed(spec: &SweepSpec, jobs: usize, memo: &Memo) -> f64 {
+    let t0 = Instant::now();
+    let res = sweep::run(spec, jobs, memo).expect("bench spec expands");
+    assert!(!res.points.is_empty());
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let quick = bench_common::quick();
+    let spec = grid(quick);
+    let n_points = spec.expand().expect("bench spec").len();
+    let jobs = exec::default_jobs().clamp(1, 4);
+
+    let serial_memo = Memo::new();
+    let t_serial = timed(&spec, 1, &serial_memo);
+
+    let par_memo = Memo::new();
+    let t_parallel = timed(&spec, jobs, &par_memo);
+    let cold_solves = par_memo.solve_count();
+
+    let t_memoized = timed(&spec, jobs, &par_memo);
+    let warm_solves = par_memo.solve_count() - cold_solves;
+
+    println!(
+        "sweep_scaling: {n_points} grid points, {} circuit solves",
+        cold_solves
+    );
+    println!("  serial   (jobs=1)   {:>10.2} ms", t_serial * 1e3);
+    println!(
+        "  parallel (jobs={jobs})   {:>10.2} ms  ({:.2}x vs serial)",
+        t_parallel * 1e3,
+        t_serial / t_parallel
+    );
+    println!(
+        "  memoized rerun      {:>10.2} ms  ({:.2}x vs serial, {warm_solves} new solves)",
+        t_memoized * 1e3,
+        t_serial / t_memoized
+    );
+    assert_eq!(warm_solves, 0, "warm rerun must not re-solve circuits");
+
+    // Steady-state warm-grid query rate (the serving path the ROADMAP
+    // cares about: many scenarios against one resident grid).
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+    b.run_items("sweep/warm_grid_query", n_points as f64, &mut || {
+        sweep::run(&spec, jobs, &par_memo).expect("warm query").points.len()
+    });
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("sweep_scaling".into()));
+    j.set(
+        "note",
+        Json::Str(
+            "Baseline for the sweep-engine perf trajectory; regenerate with \
+             `cargo bench --bench sweep_scaling`."
+                .into(),
+        ),
+    );
+    let mut acc = Json::obj();
+    acc.set("parallel_speedup_min", Json::Num(1.5));
+    acc.set("warm_rerun_circuit_solves_max", Json::Num(0.0));
+    j.set("acceptance", acc);
+    j.set("quick", Json::Bool(quick));
+    j.set("grid_points", Json::Num(n_points as f64));
+    j.set("circuit_solves", Json::Num(cold_solves as f64));
+    j.set("jobs", Json::Num(jobs as f64));
+    j.set("serial_ms", Json::Num(t_serial * 1e3));
+    j.set("parallel_ms", Json::Num(t_parallel * 1e3));
+    j.set("memoized_rerun_ms", Json::Num(t_memoized * 1e3));
+    j.set("parallel_speedup", Json::Num(t_serial / t_parallel));
+    j.set("memoized_speedup", Json::Num(t_serial / t_memoized));
+    j.set("warm_rerun_circuit_solves", Json::Num(warm_solves as f64));
+
+    // Land next to CHANGES.md when run from rust/ or the repo root.
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_sweep.json"
+    } else {
+        "BENCH_sweep.json"
+    };
+    match std::fs::write(path, j.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

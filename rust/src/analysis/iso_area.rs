@@ -7,8 +7,8 @@
 use crate::device::MemTech;
 use crate::gpusim::gpu::simulate_dnn;
 use crate::gpusim::GpuConfig;
-use crate::nvsim::explorer::tuned_cache;
 use crate::nvsim::CachePpa;
+use crate::sweep::memo;
 use crate::workload::models::{Dnn, Phase};
 use crate::workload::traffic::TrafficModel;
 
@@ -69,12 +69,12 @@ pub struct IsoAreaRow {
     pub edp_norm_with_dram: f64,
 }
 
-/// Designs at the iso-area points.
+/// Designs at the iso-area points (served from the sweep memo).
 pub fn iso_caches() -> [(MemTech, u64, CachePpa); 3] {
     [
-        (MemTech::Sram, SRAM_MB, tuned_cache(MemTech::Sram, SRAM_MB * MB).ppa),
-        (MemTech::SttMram, STT_MB, tuned_cache(MemTech::SttMram, STT_MB * MB).ppa),
-        (MemTech::SotMram, SOT_MB, tuned_cache(MemTech::SotMram, SOT_MB * MB).ppa),
+        (MemTech::Sram, SRAM_MB, memo::tuned(MemTech::Sram, SRAM_MB * MB).ppa),
+        (MemTech::SttMram, STT_MB, memo::tuned(MemTech::SttMram, STT_MB * MB).ppa),
+        (MemTech::SotMram, SOT_MB, memo::tuned(MemTech::SotMram, SOT_MB * MB).ppa),
     ]
 }
 

@@ -2,8 +2,8 @@
 //! 3 MB SRAM L2 with 3 MB STT-/SOT-MRAM and evaluate every workload.
 
 use crate::device::MemTech;
-use crate::nvsim::explorer::tuned_cache;
 use crate::nvsim::CachePpa;
+use crate::sweep::memo;
 use crate::workload::models::{Dnn, Phase};
 use crate::workload::traffic::TrafficModel;
 
@@ -31,12 +31,14 @@ pub struct IsoCapRow {
     pub sram_read_share: f64,
 }
 
-/// Cache designs for the three technologies at the iso-capacity point.
+/// Cache designs for the three technologies at the iso-capacity point
+/// (served from the process-wide sweep memo, so every study shares one
+/// Algorithm-1 solve per technology).
 pub fn iso_caches() -> [(MemTech, CachePpa); 3] {
     [
-        (MemTech::Sram, tuned_cache(MemTech::Sram, ISO_CAPACITY).ppa),
-        (MemTech::SttMram, tuned_cache(MemTech::SttMram, ISO_CAPACITY).ppa),
-        (MemTech::SotMram, tuned_cache(MemTech::SotMram, ISO_CAPACITY).ppa),
+        (MemTech::Sram, memo::tuned(MemTech::Sram, ISO_CAPACITY).ppa),
+        (MemTech::SttMram, memo::tuned(MemTech::SttMram, ISO_CAPACITY).ppa),
+        (MemTech::SotMram, memo::tuned(MemTech::SotMram, ISO_CAPACITY).ppa),
     ]
 }
 

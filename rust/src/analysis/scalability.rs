@@ -1,28 +1,32 @@
 //! Scalability study (paper §IV-C, Figs 9-10): sweep cache capacity
 //! 1-32 MB, EDAP-tune each (memory, capacity) point independently, and
 //! project workload energy/latency/EDP vs SRAM.
+//!
+//! Both figures are thin queries over the shared [`crate::sweep`]
+//! grid: points are evaluated by the parallel executor and every
+//! circuit solve is memoized process-wide, so `fig9`, `fig10` and
+//! `deepnvm all` share one set of Algorithm-1 solves. Numerical
+//! equivalence with the original serial path is pinned by
+//! `rust/tests/sweep.rs`.
 
 use crate::device::MemTech;
-use crate::nvsim::explorer::{tuned_cache, TunedConfig};
+use crate::nvsim::explorer::TunedConfig;
+use crate::sweep::{self, SweepSpec};
 use crate::workload::models::{Dnn, Phase};
-use crate::workload::traffic::TrafficModel;
 
-use super::energy::{evaluate, DramCost};
-
-const MB: u64 = 1024 * 1024;
-
-/// The paper's sweep (Fig 9/10 x-axis).
-pub const CAPACITIES_MB: [u64; 6] = [1, 2, 4, 8, 16, 32];
+/// The paper's sweep (Fig 9/10 x-axis) — one source of truth in the
+/// explorer, shared with [`crate::sweep::spec::DEFAULT_CAPACITIES_MB`].
+pub const CAPACITIES_MB: [u64; 6] = crate::nvsim::explorer::PAPER_CAPACITIES_MB;
 
 /// Fig 9: PPA of the tuned design at each (tech, capacity).
 pub fn ppa_sweep(capacities_mb: &[u64]) -> Vec<TunedConfig> {
-    let mut out = Vec::new();
-    for &tech in &MemTech::ALL {
-        for &mb in capacities_mb {
-            out.push(tuned_cache(tech, mb * MB));
-        }
+    if capacities_mb.is_empty() {
+        return Vec::new(); // total on empty input, like the legacy loop
     }
-    out
+    let spec = SweepSpec::circuit_only(MemTech::ALL.to_vec(), capacities_mb.to_vec());
+    let res = sweep::run(&spec, 0, sweep::memo::global())
+        .expect("static fig9 spec expands");
+    res.points.into_iter().map(|p| p.tuned).collect()
 }
 
 /// One Fig 10 point: normalized mean +/- std across the five workloads.
@@ -41,25 +45,44 @@ pub struct ScalePoint {
 
 /// Fig 10: for each capacity and phase, normalized energy / latency /
 /// EDP of STT and SOT vs SRAM, mean and std across the workload zoo.
+///
+/// One shared swept grid supplies every per-(tech, capacity, workload,
+/// phase) point; this function only aggregates. Within each group the
+/// zoo order is preserved so the floating-point accumulation order —
+/// and therefore every reported mean/std — matches the historical
+/// serial loop bit-for-bit.
 pub fn workload_sweep(capacities_mb: &[u64]) -> Vec<ScalePoint> {
-    let dram = DramCost::default();
+    if capacities_mb.is_empty() {
+        return Vec::new(); // total on empty input, like the legacy loop
+    }
+    let spec = SweepSpec {
+        techs: vec![MemTech::SttMram, MemTech::SotMram],
+        capacities_mb: capacities_mb.to_vec(),
+        dnns: Dnn::zoo().iter().map(|d| d.name.to_string()).collect(),
+        phases: Phase::ALL.to_vec(),
+        batches: vec![],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let res = sweep::run(&spec, 0, sweep::memo::global())
+        .expect("static fig10 spec expands");
+
     let mut out = Vec::new();
     for &mb in capacities_mb {
-        let sram = tuned_cache(MemTech::Sram, mb * MB).ppa;
-        let traffic = TrafficModel { l2_bytes: mb * MB, ..Default::default() };
         for &tech in &[MemTech::SttMram, MemTech::SotMram] {
-            let ppa = tuned_cache(tech, mb * MB).ppa;
             for phase in Phase::ALL {
                 let mut e_norms = vec![];
                 let mut t_norms = vec![];
                 let mut edp_norms = vec![];
-                for dnn in Dnn::zoo() {
-                    let stats = traffic.run_paper(&dnn, phase);
-                    let base = evaluate(&stats, &sram, Some(dram));
-                    let e = evaluate(&stats, &ppa, Some(dram));
-                    e_norms.push(e.energy() / base.energy());
-                    t_norms.push(e.time_total / base.time_total);
-                    edp_norms.push(e.edp() / base.edp());
+                for p in res.points.iter().filter(|p| {
+                    p.point.tech == tech
+                        && p.point.capacity_mb == mb
+                        && p.point.workload.is_some_and(|w| w.phase == phase)
+                }) {
+                    let e = p.eval.expect("workload points carry an eval");
+                    e_norms.push(e.energy_norm);
+                    t_norms.push(e.latency_norm);
+                    edp_norms.push(e.edp_norm);
                 }
                 use crate::util::stats::{mean, std_dev};
                 out.push(ScalePoint {
@@ -82,6 +105,8 @@ pub fn workload_sweep(capacities_mb: &[u64]) -> Vec<ScalePoint> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const MB: u64 = 1024 * 1024;
 
     #[test]
     fn fig9_area_gap_grows_with_capacity() {

@@ -5,6 +5,10 @@ use anyhow::{bail, Result};
 
 use super::reports::{self, Report};
 use super::store::Store;
+use crate::device::MemTech;
+use crate::sweep::spec::{parse_phase, parse_tech};
+use crate::sweep::{Filter, SweepSpec};
+use crate::workload::models::{Dnn, Phase};
 
 const USAGE: &str = "\
 DeepNVM++ — cross-layer NVM modeling for deep learning (TCAD'21 repro)
@@ -27,6 +31,11 @@ COMMANDS (paper artifacts):
   ext-relaxed   Extension: relaxed-retention (volatile) STT (SSII)
   all           Every table and figure (writes CSVs to --out)
 
+DESIGN-SPACE ENGINE:
+  sweep         Evaluate any tech x capacity x workload x phase x batch
+                grid in parallel, with memoized circuit solves persisted
+                to <out>/sweep_memo.json (warm reruns solve nothing)
+
 OTHER:
   e2e-train     Train the TinyCNN artifact via PJRT (needs `make artifacts`)
   help          This message
@@ -34,8 +43,22 @@ OTHER:
 OPTIONS:
   --out DIR       results directory (default: results)
   --quick         cheaper settings (fig6 batch 1, coarser sweeps)
-  --batches LIST  comma-separated batch sizes for fig5
+  --batches LIST  comma-separated batch sizes (fig5 axis; sweep batch axis)
   --steps N       training steps for e2e-train (default 60)
+
+SWEEP OPTIONS:
+  --techs LIST    sram,stt,sot (default: all three)
+  --caps LIST     capacities in MB (default: 1,2,4,8,16,32)
+  --dnns LIST     zoo workloads, or 'none' for a circuit-only PPA sweep
+  --phases LIST   inference,training (default: both)
+  --jobs N        worker threads (default: one per core)
+  --pareto        print the EDP/area/capacity Pareto frontier
+  --nvm-only      drop SRAM rows (the baseline is still solved for norms)
+  --cold          ignore any on-disk memo cache in --out
+
+EXAMPLE:
+  deepnvm sweep --techs stt,sot --caps 2,8,32 --dnns AlexNet,ResNet-18 \\
+      --jobs 8 --pareto --out results
 ";
 
 /// Parsed options.
@@ -45,7 +68,20 @@ pub struct CliOptions {
     pub out: String,
     pub quick: bool,
     pub batches: Vec<usize>,
+    /// Whether --batches was given (sweep defaults to paper batches
+    /// when it was not).
+    pub batches_explicit: bool,
     pub steps: usize,
+    // sweep axes (empty = command defaults)
+    pub techs: Vec<MemTech>,
+    pub caps: Vec<u64>,
+    pub dnns: Vec<String>,
+    pub phases: Vec<Phase>,
+    /// Sweep worker threads (0 = one per core).
+    pub jobs: usize,
+    pub pareto: bool,
+    pub nvm_only: bool,
+    pub cold: bool,
 }
 
 impl Default for CliOptions {
@@ -55,9 +91,22 @@ impl Default for CliOptions {
             out: "results".into(),
             quick: false,
             batches: vec![1, 4, 16, 64, 128, 256],
+            batches_explicit: false,
             steps: 60,
+            techs: vec![],
+            caps: vec![],
+            dnns: vec![],
+            phases: vec![],
+            jobs: 0,
+            pareto: false,
+            nvm_only: false,
+            cold: false,
         }
     }
+}
+
+fn split_list(v: &str) -> Vec<&str> {
+    v.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
 }
 
 /// Parse argv (excluding the binary name).
@@ -68,33 +117,72 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
         o.command = cmd.clone();
     }
     while let Some(a) = it.next() {
+        let mut value = || {
+            it.next()
+                .ok_or_else(|| anyhow::anyhow!("{a} needs a value"))
+        };
         match a.as_str() {
             "--out" => {
-                o.out = it
-                    .next()
-                    .ok_or_else(|| anyhow::anyhow!("--out needs a value"))?
-                    .clone();
+                o.out = value()?.clone();
             }
             "--quick" => o.quick = true,
             "--batches" => {
-                let v = it
-                    .next()
-                    .ok_or_else(|| anyhow::anyhow!("--batches needs a value"))?;
-                o.batches = v
-                    .split(',')
-                    .map(|s| s.trim().parse::<usize>())
+                o.batches = split_list(value()?)
+                    .iter()
+                    .map(|s| s.parse::<usize>())
                     .collect::<std::result::Result<_, _>>()
                     .map_err(|e| anyhow::anyhow!("bad --batches: {e}"))?;
                 if o.batches.is_empty() {
                     bail!("--batches needs at least one value");
                 }
+                o.batches_explicit = true;
             }
             "--steps" => {
-                o.steps = it
-                    .next()
-                    .ok_or_else(|| anyhow::anyhow!("--steps needs a value"))?
-                    .parse()?;
+                o.steps = value()?.parse()?;
             }
+            "--techs" => {
+                o.techs = split_list(value()?)
+                    .iter()
+                    .map(|s| parse_tech(s))
+                    .collect::<Result<_>>()?;
+                if o.techs.is_empty() {
+                    bail!("--techs needs at least one value");
+                }
+            }
+            "--caps" => {
+                o.caps = split_list(value()?)
+                    .iter()
+                    .map(|s| s.parse::<u64>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad --caps: {e}"))?;
+                if o.caps.is_empty() {
+                    bail!("--caps needs at least one value");
+                }
+            }
+            "--dnns" => {
+                o.dnns = split_list(value()?)
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+                if o.dnns.is_empty() {
+                    bail!("--dnns needs at least one value");
+                }
+            }
+            "--phases" => {
+                o.phases = split_list(value()?)
+                    .iter()
+                    .map(|s| parse_phase(s))
+                    .collect::<Result<_>>()?;
+                if o.phases.is_empty() {
+                    bail!("--phases needs at least one value");
+                }
+            }
+            "--jobs" => {
+                o.jobs = value()?.parse()?;
+            }
+            "--pareto" => o.pareto = true,
+            "--nvm-only" => o.nvm_only = true,
+            "--cold" => o.cold = true,
             other => bail!("unknown option '{other}' (try: deepnvm help)"),
         }
     }
@@ -107,6 +195,37 @@ fn scal_caps(quick: bool) -> Vec<u64> {
     } else {
         vec![1, 2, 4, 8, 16, 32]
     }
+}
+
+/// Build the sweep spec for `deepnvm sweep` from CLI options.
+pub fn sweep_spec_from(o: &CliOptions) -> Result<SweepSpec> {
+    let techs = if o.techs.is_empty() { MemTech::ALL.to_vec() } else { o.techs.clone() };
+    let caps = if o.caps.is_empty() { scal_caps(o.quick) } else { o.caps.clone() };
+    let circuit_only =
+        o.dnns.len() == 1 && o.dnns[0].eq_ignore_ascii_case("none");
+    let dnns = if circuit_only {
+        vec![]
+    } else if o.dnns.is_empty() {
+        if o.quick {
+            vec!["AlexNet".to_string()]
+        } else {
+            Dnn::zoo().iter().map(|d| d.name.to_string()).collect()
+        }
+    } else {
+        o.dnns.clone()
+    };
+    let phases = if o.phases.is_empty() { Phase::ALL.to_vec() } else { o.phases.clone() };
+    let batches = if o.batches_explicit { o.batches.clone() } else { vec![] };
+    let filters = if o.nvm_only { vec![Filter::NvmOnly] } else { vec![] };
+    Ok(SweepSpec {
+        techs,
+        capacities_mb: caps,
+        dnns,
+        phases,
+        batches,
+        nodes_nm: vec![16],
+        filters,
+    })
 }
 
 /// Generate the reports for one command.
@@ -133,6 +252,33 @@ pub fn generate(o: &CliOptions) -> Result<Vec<Report>> {
         }
         "fig9" => vec![reports::fig9(&scal_caps(o.quick))],
         "fig10" => vec![reports::fig10(&scal_caps(o.quick))],
+        "sweep" => {
+            let spec = sweep_spec_from(o)?;
+            let store = Store::new(&o.out);
+            let memo = crate::sweep::memo::global();
+            if !o.cold {
+                match memo.load_from(&store) {
+                    Ok(n) if n > 0 => {
+                        eprintln!("sweep: warmed memo with {n} cached entries");
+                    }
+                    Ok(_) => {}
+                    Err(e) => eprintln!("warning: ignoring memo cache: {e}"),
+                }
+            }
+            let r = reports::sweep_report(&spec, o.jobs, o.pareto)?;
+            if o.cold {
+                // --cold skipped the load above; merge the previously
+                // persisted entries back in so saving below extends the
+                // accumulated cache instead of truncating it to this run.
+                if let Err(e) = memo.load_from(&store) {
+                    eprintln!("warning: ignoring memo cache: {e}");
+                }
+            }
+            if let Err(e) = memo.save_to(&store) {
+                eprintln!("warning: could not persist sweep memo: {e}");
+            }
+            vec![r]
+        }
         "ext-area" => vec![reports::ext_area_reuse()],
         "ext-mobile" => vec![reports::ext_mobile()],
         "ext-hybrid" => vec![reports::ext_hybrid()],
@@ -165,6 +311,7 @@ pub fn generate(o: &CliOptions) -> Result<Vec<Report>> {
 }
 
 /// Run the e2e training demo (delegates to the runtime).
+#[cfg(feature = "pjrt")]
 fn e2e_train(o: &CliOptions) -> Result<()> {
     let engine = crate::runtime::Engine::default()?;
     println!("platform: {}", engine.platform());
@@ -187,6 +334,15 @@ fn e2e_train(o: &CliOptions) -> Result<()> {
         acc * 100.0
     );
     Ok(())
+}
+
+/// Without the `pjrt` feature the PJRT runtime is not compiled in.
+#[cfg(not(feature = "pjrt"))]
+fn e2e_train(_o: &CliOptions) -> Result<()> {
+    bail!(
+        "e2e-train needs the PJRT runtime: rebuild with `--features pjrt` \
+         (requires the vendored xla crate)"
+    )
 }
 
 /// Full CLI entry point. Returns the process exit code.
@@ -247,8 +403,39 @@ mod tests {
             .unwrap();
         assert_eq!(o.command, "fig5");
         assert_eq!(o.batches, vec![2, 8]);
+        assert!(o.batches_explicit);
         assert!(o.quick);
         assert_eq!(o.out, "/tmp/x");
+    }
+
+    #[test]
+    fn parses_sweep_options() {
+        let o = parse_args(&sv(&[
+            "sweep", "--techs", "stt,sot", "--caps", "2,8", "--dnns", "AlexNet",
+            "--phases", "training", "--jobs", "4", "--pareto", "--nvm-only",
+            "--cold",
+        ]))
+        .unwrap();
+        assert_eq!(o.techs, vec![MemTech::SttMram, MemTech::SotMram]);
+        assert_eq!(o.caps, vec![2, 8]);
+        assert_eq!(o.dnns, vec!["AlexNet".to_string()]);
+        assert_eq!(o.phases, vec![Phase::Training]);
+        assert_eq!(o.jobs, 4);
+        assert!(o.pareto && o.nvm_only && o.cold);
+
+        let spec = sweep_spec_from(&o).unwrap();
+        assert_eq!(spec.techs, vec![MemTech::SttMram, MemTech::SotMram]);
+        assert_eq!(spec.capacities_mb, vec![2, 8]);
+        assert_eq!(spec.batches, Vec::<usize>::new(), "paper batches by default");
+        assert_eq!(spec.filters, vec![Filter::NvmOnly]);
+    }
+
+    #[test]
+    fn sweep_dnns_none_gives_circuit_only_spec() {
+        let o = parse_args(&sv(&["sweep", "--dnns", "none", "--caps", "1"])).unwrap();
+        let spec = sweep_spec_from(&o).unwrap();
+        assert!(spec.dnns.is_empty());
+        assert_eq!(spec.expand().unwrap().len(), 3);
     }
 
     #[test]
@@ -256,6 +443,9 @@ mod tests {
         assert!(parse_args(&sv(&["fig5", "--bogus"])).is_err());
         assert!(parse_args(&sv(&["fig5", "--batches", "a,b"])).is_err());
         assert!(parse_args(&sv(&["fig5", "--out"])).is_err());
+        assert!(parse_args(&sv(&["sweep", "--techs", "dram"])).is_err());
+        assert!(parse_args(&sv(&["sweep", "--phases", "both"])).is_err());
+        assert!(parse_args(&sv(&["sweep", "--caps", "x"])).is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use crate::analysis::{area_reuse, iso_area, iso_capacity, mobile, scalability, trend};
 use crate::device::{characterize, BitcellParams, MemTech};
-use crate::nvsim::explorer::tuned_cache;
+use crate::sweep::{self, memo, pareto, SweepSpec};
 use crate::util::csv::Csv;
 use crate::util::table::{f, Table};
 use crate::workload::models::{Dnn, Phase};
@@ -79,7 +79,7 @@ pub fn table2() -> Report {
         "leak_mw", "area_mm2", "org",
     ]);
     for (name, tech, mb) in points {
-        let c = tuned_cache(tech, mb * MB);
+        let c = memo::tuned(tech, mb * MB);
         let p = c.ppa;
         let cells = [
             name.to_string(),
@@ -406,6 +406,152 @@ pub fn ext_relaxed() -> Report {
     Report { id: "X4", title: "Ext: relaxed retention".into(), text: t.to_string(), csv }
 }
 
+/// `deepnvm sweep` — evaluate an arbitrary design-space grid through
+/// the parallel, memoized sweep engine and render it as one report.
+/// Rows follow spec order; the `pareto` column marks the
+/// EDP/area/capacity frontier (the co-optimization query).
+pub fn sweep_report(
+    spec: &SweepSpec,
+    jobs: usize,
+    show_pareto: bool,
+) -> anyhow::Result<Report> {
+    let res = sweep::run(spec, jobs, memo::global())?;
+    // Absolute EDP is only comparable within one workload, so the
+    // frontier is computed per (dnn, phase, batch) group: "which
+    // (tech, capacity) designs are undominated for THIS workload".
+    // Circuit-only points form their own area-vs-capacity group.
+    let objectives = pareto::edp_area_capacity();
+    let mut groups: std::collections::HashMap<
+        Option<(&'static str, Phase, usize)>,
+        Vec<usize>,
+    > = std::collections::HashMap::new();
+    for (i, p) in res.points.iter().enumerate() {
+        let key = p.point.workload.map(|w| (w.dnn, w.phase, w.batch));
+        groups.entry(key).or_default().push(i);
+    }
+    let mut front: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    for indices in groups.values() {
+        let members: Vec<crate::sweep::PointResult> =
+            indices.iter().map(|&i| res.points[i].clone()).collect();
+        for local in pareto::frontier_indices(&members, &objectives) {
+            front.insert(indices[local]);
+        }
+    }
+
+    let mut t = Table::new(&[
+        "tech", "MB", "workload", "RdLat(ns)", "WrLat(ns)", "Leak(mW)",
+        "Area(mm2)", "E(xSRAM)", "EDP(xSRAM)", "P",
+    ])
+    .title(
+        format!(
+            "Design-space sweep: {} grid points ({} distinct cache designs)",
+            res.points.len(),
+            res.tuned_configs().len()
+        )
+        .as_str(),
+    );
+    let mut csv = Csv::new(&[
+        "tech", "mb", "node_nm", "dnn", "phase", "batch", "read_lat_ns",
+        "write_lat_ns", "read_nj", "write_nj", "leak_mw", "area_mm2",
+        "energy_norm", "latency_norm", "edp_norm", "pareto",
+    ]);
+    for (i, p) in res.points.iter().enumerate() {
+        let ppa = p.tuned.ppa;
+        let on_front = front.contains(&i);
+        let (wl_cell, dnn, phase, batch, e_norm, l_norm, edp_norm) =
+            match (p.point.workload, p.eval) {
+                (Some(w), Some(e)) => (
+                    format!(
+                        "{} ({}) b{}",
+                        w.dnn,
+                        if w.phase == Phase::Inference { "I" } else { "T" },
+                        w.batch
+                    ),
+                    w.dnn.to_string(),
+                    w.phase.name().to_string(),
+                    w.batch.to_string(),
+                    f(e.energy_norm, 4),
+                    f(e.latency_norm, 4),
+                    f(e.edp_norm, 4),
+                ),
+                _ => (
+                    "-".to_string(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ),
+            };
+        t.row(&[
+            p.point.tech.name().to_string(),
+            p.point.capacity_mb.to_string(),
+            wl_cell,
+            f(ppa.read_latency * 1e9, 2),
+            f(ppa.write_latency * 1e9, 2),
+            f(ppa.leakage_power * 1e3, 0),
+            f(ppa.area * 1e6, 2),
+            if e_norm.is_empty() { "-".into() } else { f(p.eval.unwrap().energy_norm, 3) },
+            if edp_norm.is_empty() { "-".into() } else { f(p.eval.unwrap().edp_norm, 3) },
+            if on_front { "*".into() } else { String::new() },
+        ]);
+        csv.row(&[
+            p.point.tech.name().to_string(),
+            p.point.capacity_mb.to_string(),
+            p.point.node_nm.to_string(),
+            dnn,
+            phase,
+            batch,
+            f(ppa.read_latency * 1e9, 4),
+            f(ppa.write_latency * 1e9, 4),
+            f(ppa.read_energy * 1e9, 4),
+            f(ppa.write_energy * 1e9, 4),
+            f(ppa.leakage_power * 1e3, 2),
+            f(ppa.area * 1e6, 4),
+            e_norm,
+            l_norm,
+            edp_norm,
+            if on_front { "1".into() } else { "0".into() },
+        ]);
+    }
+
+    let mut text = t.to_string();
+    if show_pareto {
+        text.push_str(
+            "Pareto frontier, per workload (min EDP, min area, max capacity):\n",
+        );
+        let mut idx: Vec<usize> = front.iter().copied().collect();
+        idx.sort_unstable();
+        for i in idx {
+            let p = &res.points[i];
+            let wl = match p.point.workload {
+                Some(w) => format!("{} {} b{}", w.dnn, w.phase.name(), w.batch),
+                None => "circuit".to_string(),
+            };
+            match p.eval {
+                Some(e) => text.push_str(&format!(
+                    "  {} {}MB  {}  EDP {:.3e} J*s  area {:.2} mm2  ({:.2}x SRAM EDP)\n",
+                    p.point.tech.name(),
+                    p.point.capacity_mb,
+                    wl,
+                    e.edp,
+                    p.tuned.ppa.area * 1e6,
+                    e.edp_norm,
+                )),
+                None => text.push_str(&format!(
+                    "  {} {}MB  {}  area {:.2} mm2\n",
+                    p.point.tech.name(),
+                    p.point.capacity_mb,
+                    wl,
+                    p.tuned.ppa.area * 1e6,
+                )),
+            }
+        }
+    }
+    Ok(Report { id: "SW", title: "Design-space sweep".into(), text, csv })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -429,5 +575,31 @@ mod tests {
     fn fig9_rows_complete() {
         let r = fig9(&[2, 8]);
         assert_eq!(r.csv.n_rows(), 3 * 2);
+    }
+
+    #[test]
+    fn sweep_report_renders_grid_and_frontier() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::Sram, MemTech::SotMram],
+            capacities_mb: vec![1, 2],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let r = sweep_report(&spec, 2, true).unwrap();
+        assert_eq!(r.csv.n_rows(), 4);
+        assert!(r.text.contains("Pareto frontier"));
+        // at least one design must be Pareto-optimal
+        assert!(r.csv.to_string().lines().any(|l| l.ends_with(",1")));
+    }
+
+    #[test]
+    fn circuit_only_sweep_report() {
+        let spec = SweepSpec::circuit_only(vec![MemTech::SttMram], vec![1, 4]);
+        let r = sweep_report(&spec, 1, false).unwrap();
+        assert_eq!(r.csv.n_rows(), 2);
+        assert!(!r.text.contains("Pareto frontier"));
     }
 }

@@ -30,6 +30,29 @@ impl Store {
         Ok(path)
     }
 
+    /// Path a named auxiliary blob would occupy in this store.
+    pub fn blob_path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Persist a named auxiliary blob (e.g. the sweep memo cache)
+    /// alongside the report CSVs, without touching the run index.
+    pub fn save_blob(&self, name: &str, contents: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.blob_path(name);
+        std::fs::write(&path, contents)?;
+        Ok(path)
+    }
+
+    /// Read a named auxiliary blob if present.
+    pub fn read_blob(&self, name: &str) -> Result<Option<String>> {
+        let path = self.blob_path(name);
+        if !path.exists() {
+            return Ok(None);
+        }
+        Ok(Some(std::fs::read_to_string(path)?))
+    }
+
     /// Write the run index (`index.json`) listing everything saved.
     pub fn finish(&self, meta: &[(&str, &str)]) -> Result<PathBuf> {
         let mut root = Json::obj();
@@ -88,6 +111,20 @@ mod tests {
                 .as_str()
                 .unwrap(),
             "t9.csv"
+        );
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let dir = std::env::temp_dir().join("deepnvm_store_blob_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Store::new(&dir);
+        assert!(store.read_blob("memo.json").unwrap().is_none());
+        let p = store.save_blob("memo.json", "{\"v\": 1}").unwrap();
+        assert!(p.exists());
+        assert_eq!(
+            store.read_blob("memo.json").unwrap().as_deref(),
+            Some("{\"v\": 1}")
         );
     }
 }

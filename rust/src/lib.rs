@@ -11,6 +11,7 @@ pub mod nvsim;
 pub mod workload;
 pub mod gpusim;
 pub mod analysis;
+pub mod sweep;
 pub mod runtime;
 pub mod coordinator;
 pub mod util;

@@ -60,6 +60,11 @@ impl OptTarget {
         }
     }
 
+    /// Inverse of [`OptTarget::name`] (used by the sweep memo cache).
+    pub fn from_name(name: &str) -> Option<OptTarget> {
+        OptTarget::ALL.into_iter().find(|o| o.name() == name)
+    }
+
     /// Apply the target's peripheral-sizing bias to a baseline PPA.
     /// Profiles are (read_lat, write_lat, read_en, write_en, leak, area)
     /// multipliers; each <1 entry is paid for by >1 entries elsewhere.

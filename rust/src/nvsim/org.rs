@@ -33,6 +33,11 @@ impl AccessMode {
             AccessMode::Sequential => "Sequential",
         }
     }
+
+    /// Inverse of [`AccessMode::name`] (used by the sweep memo cache).
+    pub fn from_name(name: &str) -> Option<AccessMode> {
+        AccessMode::ALL.into_iter().find(|m| m.name() == name)
+    }
 }
 
 /// A concrete array organization for a given capacity.

@@ -15,8 +15,11 @@
 //!   execution loop with loss tracking.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, LoadedWorkload};

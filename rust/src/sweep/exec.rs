@@ -1,0 +1,107 @@
+//! Parallel grid executor — a hand-rolled `std::thread` + `mpsc` pool
+//! (the offline vendor set has no rayon).
+//!
+//! Scheduling is self-stealing: workers race on one atomic cursor and
+//! each idle worker claims the next unclaimed grid point, so load
+//! balances automatically across points of very different cost (a 32 MB
+//! circuit solve vs a cached 1 MB lookup). Completion order is
+//! arbitrary, but results are reassembled into *input order* before
+//! returning, so a sweep's output is byte-identical for any `--jobs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Worker count when the caller passes `jobs = 0` ("auto").
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Evaluate every item with `f` on up to `jobs` workers and return the
+/// results in input order. `jobs <= 1` runs inline (no threads), which
+/// is also the reference serial schedule the parallel path must match.
+pub fn run_ordered<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs <= 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    // Unwrap the slots only after the scope has joined every worker:
+    // if a worker panicked mid-item, `thread::scope` re-raises *that*
+    // panic at the join point, so the original diagnostic is preserved
+    // instead of being masked by a missing-slot panic here.
+    let slots: Vec<Option<R>> = std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("every grid point produced a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        for jobs in [1, 2, 4, 9] {
+            let out = run_ordered(&items, jobs, |&x| x * x);
+            let expect: Vec<u64> = items.iter().map(|&x| x * x).collect();
+            assert_eq!(out, expect, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn every_item_evaluated_exactly_once() {
+        let calls = AtomicU64::new(0);
+        let items: Vec<usize> = (0..100).collect();
+        let out = run_ordered(&items, 8, |&x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let none: Vec<u32> = vec![];
+        assert!(run_ordered(&none, 4, |&x| x).is_empty());
+        assert_eq!(run_ordered(&[7u32], 16, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn default_jobs_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

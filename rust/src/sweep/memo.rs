@@ -1,0 +1,544 @@
+//! Content-addressed memoization for the sweep engine.
+//!
+//! Two cache layers, both safe to share across worker threads:
+//!
+//! * **circuit** — `(tech, capacity, node) -> TunedConfig`, so each
+//!   NVSim-style Algorithm-1 solve (the expensive enumeration of
+//!   organizations x targets x modes) runs at most once per process,
+//!   no matter how many figures, workloads or batches query it.
+//! * **points** — `GridPoint -> PointResult`, so repeated sweeps skip
+//!   the traffic-model evaluation as well.
+//!
+//! Both layers serialize to one JSON document keyed by hashed spec
+//! points and persist through [`crate::coordinator::store::Store`]
+//! (`sweep_memo.json` in the results directory), so a *second process*
+//! re-running the same grid performs zero circuit solves. Entries carry
+//! [`MODEL_VERSION`]; bumping it invalidates every cached result when
+//! the underlying models change.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::coordinator::store::Store;
+use crate::device::MemTech;
+use crate::nvsim::explorer::{tuned_cache, OptTarget, TunedConfig};
+use crate::nvsim::org::{AccessMode, CacheOrg};
+use crate::nvsim::CachePpa;
+use crate::util::json::{self, Json};
+
+use super::spec::{parse_phase, parse_tech, resolve_dnn, GridPoint, WorkloadPoint};
+use super::{PointResult, WorkloadEval};
+
+/// Bump when any model feeding the sweep changes numerically; stale
+/// on-disk caches are then ignored wholesale.
+pub const MODEL_VERSION: u32 = 1;
+
+/// File name of the persisted cache inside a results directory.
+pub const MEMO_FILE: &str = "sweep_memo.json";
+
+/// 64-bit FNV-1a — the content-address hash for spec-point keys
+/// (dependency-free and stable across platforms/processes).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct CircuitKey {
+    tech: MemTech,
+    capacity_bytes: u64,
+    node_nm: u32,
+}
+
+/// The memoization cache. One [`global`] instance backs the analysis
+/// and report paths; tests and benches create private instances to get
+/// isolated solve/eval counters.
+#[derive(Default)]
+pub struct Memo {
+    circuit: Mutex<HashMap<CircuitKey, TunedConfig>>,
+    points: Mutex<HashMap<GridPoint, PointResult>>,
+    solves: AtomicU64,
+    evals: AtomicU64,
+}
+
+impl Memo {
+    pub fn new() -> Self {
+        Memo::default()
+    }
+
+    /// EDAP-optimal cache at (tech, capacity) on the default 16 nm
+    /// node, solving on a cache miss.
+    pub fn tuned(&self, tech: MemTech, capacity_bytes: u64) -> TunedConfig {
+        self.tuned_at(tech, capacity_bytes, 16)
+    }
+
+    /// As [`Memo::tuned`] with an explicit process node.
+    pub fn tuned_at(&self, tech: MemTech, capacity_bytes: u64, node_nm: u32) -> TunedConfig {
+        assert_eq!(node_nm, 16, "only the 16nm node is calibrated");
+        let key = CircuitKey { tech, capacity_bytes, node_nm };
+        let cached = self.circuit.lock().unwrap().get(&key).copied();
+        if let Some(c) = cached {
+            return c;
+        }
+        // Solve outside the lock so distinct keys solve concurrently.
+        // A racing duplicate solve is possible but harmless: the solver
+        // is deterministic and the first insert wins.
+        let solved = tuned_cache(tech, capacity_bytes);
+        self.solves.fetch_add(1, Ordering::Relaxed);
+        *self.circuit.lock().unwrap().entry(key).or_insert(solved)
+    }
+
+    /// Whether a circuit solve is already cached for this key.
+    pub fn has_circuit(&self, tech: MemTech, capacity_bytes: u64, node_nm: u32) -> bool {
+        let key = CircuitKey { tech, capacity_bytes, node_nm };
+        self.circuit.lock().unwrap().contains_key(&key)
+    }
+
+    /// Cached full grid-point result, if any.
+    pub fn cached_point(&self, p: &GridPoint) -> Option<PointResult> {
+        self.points.lock().unwrap().get(p).cloned()
+    }
+
+    /// Whether a grid-point result is already cached (cheaper than
+    /// [`Memo::cached_point`]: no clone).
+    pub fn has_point(&self, p: &GridPoint) -> bool {
+        self.points.lock().unwrap().contains_key(p)
+    }
+
+    /// Record a freshly evaluated grid point (counts as one traffic-
+    /// model evaluation).
+    pub fn record_point(&self, r: PointResult) {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        self.points.lock().unwrap().insert(r.point, r);
+    }
+
+    /// Circuit-model solves performed (not served from cache).
+    pub fn solve_count(&self) -> u64 {
+        self.solves.load(Ordering::Relaxed)
+    }
+
+    /// Grid-point evaluations performed (not served from cache).
+    pub fn eval_count(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    pub fn circuit_len(&self) -> usize {
+        self.circuit.lock().unwrap().len()
+    }
+
+    pub fn point_len(&self) -> usize {
+        self.points.lock().unwrap().len()
+    }
+
+    /// Drop all cached entries and zero the counters.
+    pub fn clear(&self) {
+        self.circuit.lock().unwrap().clear();
+        self.points.lock().unwrap().clear();
+        self.solves.store(0, Ordering::Relaxed);
+        self.evals.store(0, Ordering::Relaxed);
+    }
+
+    /// Serialize both layers (entries sorted for diffable output).
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("version", Json::Num(MODEL_VERSION as f64));
+
+        let mut circuit: Vec<(CircuitKey, TunedConfig)> = self
+            .circuit
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, *v))
+            .collect();
+        circuit.sort_by_key(|(k, _)| (k.tech.name(), k.capacity_bytes, k.node_nm));
+        let centries: Vec<Json> = circuit
+            .iter()
+            .map(|(k, t)| {
+                let tuned = tuned_to_json(t);
+                let mut e = Json::obj();
+                e.set("node_nm", Json::Num(k.node_nm as f64));
+                e.set("payload_hash", Json::Str(payload_hash(&tuned)));
+                e.set("tuned", tuned);
+                e
+            })
+            .collect();
+        root.set("circuit", Json::Arr(centries));
+
+        let mut points: Vec<PointResult> =
+            self.points.lock().unwrap().values().cloned().collect();
+        points.sort_by_key(|r| r.point.key());
+        let pentries: Vec<Json> = points.iter().map(point_to_json).collect();
+        root.set("points", Json::Arr(pentries));
+        root
+    }
+
+    /// Merge entries from a serialized cache. Returns how many entries
+    /// were accepted; a version mismatch ignores the whole document.
+    ///
+    /// In-memory entries take precedence: freshly computed results are
+    /// never clobbered by what is on disk (this is what makes
+    /// `--cold`-then-persist extend the cache rather than let stale
+    /// disk entries overwrite the recomputation). Entries whose stored
+    /// payload hash does not match their re-serialized content — or
+    /// whose values fail basic sanity (non-finite/non-positive PPA,
+    /// inconsistent organization) — are rejected.
+    pub fn load_json(&self, doc: &Json) -> usize {
+        let version = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        if version as u32 != MODEL_VERSION {
+            return 0;
+        }
+        let mut loaded = 0;
+        if let Some(entries) = doc.get("circuit").and_then(Json::as_arr) {
+            for e in entries {
+                let Some(node) = e.get("node_nm").and_then(Json::as_f64) else {
+                    continue;
+                };
+                let Some(tj) = e.get("tuned") else { continue };
+                let Some(t) = tuned_from_json(tj) else { continue };
+                // Integrity: the stored hash must match the payload as
+                // the reconstructed config re-serializes it.
+                let expect = payload_hash(&tuned_to_json(&t));
+                if e.get("payload_hash").and_then(Json::as_str) != Some(expect.as_str()) {
+                    continue;
+                }
+                let key = CircuitKey {
+                    tech: t.tech,
+                    capacity_bytes: t.capacity_bytes,
+                    node_nm: node as u32,
+                };
+                let mut map = self.circuit.lock().unwrap();
+                if !map.contains_key(&key) {
+                    map.insert(key, t);
+                    loaded += 1;
+                }
+            }
+        }
+        if let Some(entries) = doc.get("points").and_then(Json::as_arr) {
+            for e in entries {
+                let Some(r) = point_from_json(e) else { continue };
+                // Content checks: identity key + hash, and the payload
+                // hash over the re-serialized result values.
+                let expect_key = r.point.key();
+                let expect_hash = format!("{:016x}", r.point.key_hash());
+                let expect_payload = point_payload_hash(&r);
+                if e.get("key").and_then(Json::as_str) != Some(expect_key.as_str())
+                    || e.get("hash").and_then(Json::as_str) != Some(expect_hash.as_str())
+                    || e.get("payload_hash").and_then(Json::as_str)
+                        != Some(expect_payload.as_str())
+                {
+                    continue;
+                }
+                let mut map = self.points.lock().unwrap();
+                if !map.contains_key(&r.point) {
+                    map.insert(r.point, r);
+                    loaded += 1;
+                }
+            }
+        }
+        loaded
+    }
+
+    /// Persist to `sweep_memo.json` in the store's directory.
+    pub fn save_to(&self, store: &Store) -> Result<PathBuf> {
+        store.save_blob(MEMO_FILE, &self.to_json().to_pretty())
+    }
+
+    /// Warm from a previously persisted cache, if present. Returns the
+    /// number of entries loaded (0 when absent or version-stale).
+    pub fn load_from(&self, store: &Store) -> Result<usize> {
+        match store.read_blob(MEMO_FILE)? {
+            Some(text) => Ok(self.load_json(&json::parse(&text)?)),
+            None => Ok(0),
+        }
+    }
+}
+
+/// The process-wide cache behind the analysis and report paths, so
+/// `deepnvm all` solves each (tech, capacity) exactly once across every
+/// figure it generates.
+pub fn global() -> &'static Memo {
+    static GLOBAL: OnceLock<Memo> = OnceLock::new();
+    GLOBAL.get_or_init(Memo::new)
+}
+
+/// Shorthand for `global().tuned(...)` — the drop-in replacement for
+/// `nvsim::explorer::tuned_cache` on analysis paths.
+pub fn tuned(tech: MemTech, capacity_bytes: u64) -> TunedConfig {
+    global().tuned(tech, capacity_bytes)
+}
+
+/// Content hash of a serialized payload (the tamper check for on-disk
+/// entries; stable because `Json` serialization is deterministic).
+fn payload_hash(j: &Json) -> String {
+    format!("{:016x}", fnv1a64(&j.to_string()))
+}
+
+/// All PPA terms must be finite and positive for a cached design to be
+/// credible.
+fn ppa_sane(p: &CachePpa) -> bool {
+    [
+        p.read_latency,
+        p.write_latency,
+        p.read_energy,
+        p.write_energy,
+        p.leakage_power,
+        p.area,
+    ]
+    .into_iter()
+    .all(|v| v.is_finite() && v > 0.0)
+}
+
+fn ppa_to_json(p: &CachePpa) -> Json {
+    let mut o = Json::obj();
+    o.set("read_latency", Json::Num(p.read_latency));
+    o.set("write_latency", Json::Num(p.write_latency));
+    o.set("read_energy", Json::Num(p.read_energy));
+    o.set("write_energy", Json::Num(p.write_energy));
+    o.set("leakage_power", Json::Num(p.leakage_power));
+    o.set("area", Json::Num(p.area));
+    o
+}
+
+fn ppa_from_json(j: &Json) -> Option<CachePpa> {
+    Some(CachePpa {
+        read_latency: j.get("read_latency")?.as_f64()?,
+        write_latency: j.get("write_latency")?.as_f64()?,
+        read_energy: j.get("read_energy")?.as_f64()?,
+        write_energy: j.get("write_energy")?.as_f64()?,
+        leakage_power: j.get("leakage_power")?.as_f64()?,
+        area: j.get("area")?.as_f64()?,
+    })
+}
+
+fn tuned_to_json(t: &TunedConfig) -> Json {
+    let mut o = Json::obj();
+    o.set("tech", Json::Str(t.tech.name().to_string()));
+    o.set("capacity_bytes", Json::Num(t.capacity_bytes as f64));
+    o.set("opt", Json::Str(t.opt.name().to_string()));
+    let mut org = Json::obj();
+    org.set("banks", Json::Num(t.org.banks as f64));
+    org.set("mats_per_bank", Json::Num(t.org.mats_per_bank as f64));
+    org.set("rows", Json::Num(t.org.rows as f64));
+    org.set("cols", Json::Num(t.org.cols as f64));
+    org.set("mux", Json::Num(t.org.mux as f64));
+    org.set("mode", Json::Str(t.org.mode.name().to_string()));
+    o.set("org", org);
+    o.set("ppa", ppa_to_json(&t.ppa));
+    o
+}
+
+fn tuned_from_json(j: &Json) -> Option<TunedConfig> {
+    let tech = parse_tech(j.get("tech")?.as_str()?).ok()?;
+    let capacity_bytes = j.get("capacity_bytes")?.as_f64()? as u64;
+    let opt = OptTarget::from_name(j.get("opt")?.as_str()?)?;
+    let jorg = j.get("org")?;
+    let org = CacheOrg {
+        capacity_bytes,
+        banks: jorg.get("banks")?.as_f64()? as u32,
+        mats_per_bank: jorg.get("mats_per_bank")?.as_f64()? as u32,
+        rows: jorg.get("rows")?.as_f64()? as u32,
+        cols: jorg.get("cols")?.as_f64()? as u32,
+        mux: jorg.get("mux")?.as_f64()? as u32,
+        mode: AccessMode::from_name(jorg.get("mode")?.as_str()?)?,
+    };
+    let ppa = ppa_from_json(j.get("ppa")?)?;
+    let t = TunedConfig { tech, capacity_bytes, org, opt, ppa };
+    if !ppa_sane(&t.ppa) || !t.org.is_consistent() {
+        return None;
+    }
+    Some(t)
+}
+
+fn eval_to_json(e: &WorkloadEval) -> Json {
+    let mut ev = Json::obj();
+    ev.set("energy_j", Json::Num(e.energy_j));
+    ev.set("time_s", Json::Num(e.time_s));
+    ev.set("edp", Json::Num(e.edp));
+    ev.set("energy_norm", Json::Num(e.energy_norm));
+    ev.set("latency_norm", Json::Num(e.latency_norm));
+    ev.set("edp_norm", Json::Num(e.edp_norm));
+    ev
+}
+
+/// Payload hash of a point result: tuned config + eval values.
+fn point_payload_hash(r: &PointResult) -> String {
+    let mut payload = Json::obj();
+    payload.set("tuned", tuned_to_json(&r.tuned));
+    payload.set(
+        "eval",
+        match &r.eval {
+            Some(e) => eval_to_json(e),
+            None => Json::Null,
+        },
+    );
+    payload_hash(&payload)
+}
+
+fn point_to_json(r: &PointResult) -> Json {
+    let p = &r.point;
+    let mut o = Json::obj();
+    o.set("key", Json::Str(p.key()));
+    o.set("hash", Json::Str(format!("{:016x}", p.key_hash())));
+    o.set("payload_hash", Json::Str(point_payload_hash(r)));
+    o.set("tech", Json::Str(p.tech.name().to_string()));
+    o.set("capacity_mb", Json::Num(p.capacity_mb as f64));
+    o.set("node_nm", Json::Num(p.node_nm as f64));
+    match p.workload {
+        Some(w) => {
+            o.set("dnn", Json::Str(w.dnn.to_string()));
+            o.set("phase", Json::Str(w.phase.name().to_string()));
+            o.set("batch", Json::Num(w.batch as f64));
+        }
+        None => {
+            o.set("dnn", Json::Null);
+            o.set("phase", Json::Null);
+            o.set("batch", Json::Null);
+        }
+    }
+    o.set("tuned", tuned_to_json(&r.tuned));
+    o.set(
+        "eval",
+        match &r.eval {
+            Some(e) => eval_to_json(e),
+            None => Json::Null,
+        },
+    );
+    o
+}
+
+fn point_from_json(j: &Json) -> Option<PointResult> {
+    let tech = parse_tech(j.get("tech")?.as_str()?).ok()?;
+    let capacity_mb = j.get("capacity_mb")?.as_f64()? as u64;
+    let node_nm = j.get("node_nm")?.as_f64()? as u32;
+    let workload = match j.get("dnn") {
+        Some(Json::Str(name)) => Some(WorkloadPoint {
+            dnn: resolve_dnn(name).ok()?,
+            phase: parse_phase(j.get("phase")?.as_str()?).ok()?,
+            batch: j.get("batch")?.as_f64()? as usize,
+        }),
+        _ => None,
+    };
+    let point = GridPoint { tech, capacity_mb, node_nm, workload };
+    let tuned = tuned_from_json(j.get("tuned")?)?;
+    let eval = match j.get("eval") {
+        Some(ev @ Json::Obj(_)) => Some(WorkloadEval {
+            energy_j: ev.get("energy_j")?.as_f64()?,
+            time_s: ev.get("time_s")?.as_f64()?,
+            edp: ev.get("edp")?.as_f64()?,
+            energy_norm: ev.get("energy_norm")?.as_f64()?,
+            latency_norm: ev.get("latency_norm")?.as_f64()?,
+            edp_norm: ev.get("edp_norm")?.as_f64()?,
+        }),
+        _ => None,
+    };
+    Some(PointResult { point, tuned, eval })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a64(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn circuit_layer_memoizes() {
+        let m = Memo::new();
+        let a = m.tuned(MemTech::SttMram, 2 * MB);
+        assert_eq!(m.solve_count(), 1);
+        let b = m.tuned(MemTech::SttMram, 2 * MB);
+        assert_eq!(m.solve_count(), 1, "second query must hit the cache");
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        m.tuned(MemTech::Sram, 2 * MB);
+        assert_eq!(m.solve_count(), 2);
+        assert_eq!(m.circuit_len(), 2);
+        m.clear();
+        assert_eq!(m.circuit_len(), 0);
+        assert_eq!(m.solve_count(), 0);
+    }
+
+    #[test]
+    fn memoized_result_matches_direct_solver() {
+        let m = Memo::new();
+        let memoized = m.tuned(MemTech::SotMram, MB);
+        let direct = tuned_cache(MemTech::SotMram, MB);
+        assert_eq!(format!("{memoized:?}"), format!("{direct:?}"));
+    }
+
+    #[test]
+    fn tuned_config_json_roundtrip() {
+        let t = tuned_cache(MemTech::SttMram, 3 * MB);
+        let j = tuned_to_json(&t);
+        let back = tuned_from_json(&j).expect("roundtrip");
+        assert_eq!(format!("{t:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn version_mismatch_ignored() {
+        let m = Memo::new();
+        m.tuned(MemTech::Sram, MB);
+        let mut doc = m.to_json();
+        doc.set("version", Json::Num(9999.0));
+        let fresh = Memo::new();
+        assert_eq!(fresh.load_json(&doc), 0);
+        assert_eq!(fresh.circuit_len(), 0);
+    }
+
+    #[test]
+    fn json_roundtrip_through_parser() {
+        let m = Memo::new();
+        m.tuned(MemTech::SttMram, MB);
+        m.tuned(MemTech::Sram, 2 * MB);
+        let text = m.to_json().to_pretty();
+        let fresh = Memo::new();
+        assert_eq!(fresh.load_json(&json::parse(&text).unwrap()), 2);
+        assert_eq!(fresh.circuit_len(), 2);
+        // warmed cache serves without solving
+        fresh.tuned(MemTech::SttMram, MB);
+        assert_eq!(fresh.solve_count(), 0);
+    }
+
+    #[test]
+    fn tampered_circuit_entry_rejected() {
+        let m = Memo::new();
+        let t = m.tuned(MemTech::Sram, MB);
+        let text = m.to_json().to_pretty();
+        let hash = payload_hash(&tuned_to_json(&t));
+        assert!(text.contains(&hash), "serialized doc must carry the payload hash");
+        let tampered = text.replace(&hash, "0000000000000000");
+        let fresh = Memo::new();
+        assert_eq!(fresh.load_json(&json::parse(&tampered).unwrap()), 0);
+        assert_eq!(fresh.circuit_len(), 0);
+    }
+
+    #[test]
+    fn load_never_clobbers_fresh_in_memory_entries() {
+        // Serialize one solved config, then load it into a memo that
+        // already holds a fresh result for the same key: the fresh
+        // entry must win and the loaded count must be zero.
+        let m = Memo::new();
+        m.tuned(MemTech::Sram, MB);
+        let doc = m.to_json();
+
+        let fresh = Memo::new();
+        let own = fresh.tuned(MemTech::Sram, MB);
+        assert_eq!(fresh.load_json(&doc), 0, "already-present key must be skipped");
+        let after = fresh.tuned(MemTech::Sram, MB);
+        assert_eq!(format!("{own:?}"), format!("{after:?}"));
+    }
+}

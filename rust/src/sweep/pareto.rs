@@ -1,0 +1,131 @@
+//! Pareto-frontier extraction over sweep results — the co-optimization
+//! query: which designs are not dominated on EDP, area and capacity
+//! simultaneously (the SOT-MRAM-for-AI-memory-systems co-design
+//! question, arXiv:2303.12310, asked inside DeepNVM++'s grid).
+
+use super::PointResult;
+
+/// One optimization objective: extract a scalar from an item; lower is
+/// better unless `maximize` is set.
+pub struct Objective<T> {
+    pub name: &'static str,
+    pub maximize: bool,
+    pub get: fn(&T) -> f64,
+}
+
+/// Signed value such that smaller is always better.
+fn score<T>(o: &Objective<T>, x: &T) -> f64 {
+    let v = (o.get)(x);
+    if o.maximize {
+        -v
+    } else {
+        v
+    }
+}
+
+/// True when `a` dominates `b`: no worse on every objective and
+/// strictly better on at least one.
+pub fn dominates<T>(a: &T, b: &T, objectives: &[Objective<T>]) -> bool {
+    let mut strictly_better = false;
+    for o in objectives {
+        let (va, vb) = (score(o, a), score(o, b));
+        if va > vb {
+            return false;
+        }
+        if va < vb {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the Pareto-optimal items, in stable input order
+/// (duplicates that tie on every objective are all kept). O(n^2) —
+/// the grids here are hundreds of points, not millions.
+pub fn frontier_indices<T>(items: &[T], objectives: &[Objective<T>]) -> Vec<usize> {
+    (0..items.len())
+        .filter(|&i| {
+            !items
+                .iter()
+                .enumerate()
+                .any(|(j, other)| j != i && dominates(other, &items[i], objectives))
+        })
+        .collect()
+}
+
+/// The Pareto-optimal items themselves, in stable input order.
+pub fn frontier<'a, T>(items: &'a [T], objectives: &[Objective<T>]) -> Vec<&'a T> {
+    frontier_indices(items, objectives)
+        .into_iter()
+        .map(|i| &items[i])
+        .collect()
+}
+
+/// The sweep's standard co-optimization objectives: minimize absolute
+/// EDP and silicon area, maximize cache capacity. Absolute EDP is only
+/// comparable between points sharing a workload/phase/batch, so apply
+/// these within one such group (as `reports::sweep_report` does) —
+/// across groups the frontier would just pick the lightest workload.
+/// Circuit-only points (no workload evaluation) carry infinite EDP so
+/// they never shadow evaluated designs.
+pub fn edp_area_capacity() -> [Objective<PointResult>; 3] {
+    [
+        Objective {
+            name: "edp",
+            maximize: false,
+            get: |p: &PointResult| p.eval.map(|e| e.edp).unwrap_or(f64::INFINITY),
+        },
+        Objective {
+            name: "area_mm2",
+            maximize: false,
+            get: |p: &PointResult| p.tuned.ppa.area * 1e6,
+        },
+        Objective {
+            name: "capacity_mb",
+            maximize: true,
+            get: |p: &PointResult| p.point.capacity_mb as f64,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn objs3() -> [Objective<(f64, f64, f64)>; 3] {
+        [
+            Objective { name: "edp", maximize: false, get: |p: &(f64, f64, f64)| p.0 },
+            Objective { name: "area", maximize: false, get: |p: &(f64, f64, f64)| p.1 },
+            Objective { name: "cap", maximize: true, get: |p: &(f64, f64, f64)| p.2 },
+        ]
+    }
+
+    #[test]
+    fn dominated_point_dropped() {
+        // p1 beats p2 on every axis; p3 wins on EDP alone.
+        let pts = [(1.0, 1.0, 4.0), (2.0, 2.0, 2.0), (0.5, 3.0, 4.0)];
+        let objs = objs3();
+        assert!(dominates(&pts[0], &pts[1], &objs));
+        assert!(!dominates(&pts[0], &pts[2], &objs));
+        assert_eq!(frontier_indices(&pts, &objs), vec![0, 2]);
+    }
+
+    #[test]
+    fn ties_keep_both() {
+        let pts = [(1.0, 1.0, 1.0), (1.0, 1.0, 1.0)];
+        let objs = objs3();
+        assert!(!dominates(&pts[0], &pts[1], &objs));
+        assert_eq!(frontier_indices(&pts, &objs).len(), 2);
+    }
+
+    #[test]
+    fn single_objective_degenerates_to_min() {
+        let objs = [Objective::<(f64, f64, f64)> {
+            name: "edp",
+            maximize: false,
+            get: |p| p.0,
+        }];
+        let pts = [(3.0, 0.0, 0.0), (1.0, 0.0, 0.0), (2.0, 0.0, 0.0)];
+        assert_eq!(frontier_indices(&pts, &objs), vec![1]);
+    }
+}

@@ -1,0 +1,356 @@
+//! Sweep specification: the queryable design-space grid.
+//!
+//! A [`SweepSpec`] names one value-list per axis — memory technology,
+//! cache capacity, workload, phase, batch size and process node — and
+//! [`SweepSpec::expand`] takes their cartesian product into a flat,
+//! deterministically ordered list of [`GridPoint`]s. Declarative
+//! [`Filter`]s prune the expansion (e.g. NVM-only co-optimization
+//! queries) without disturbing the ordering of the surviving points,
+//! so results are reproducible regardless of how the grid is later
+//! scheduled across workers.
+
+use anyhow::{bail, Result};
+
+use crate::device::MemTech;
+use crate::workload::models::{Dnn, Phase};
+
+/// Default capacity axis (MB) — the paper's Algorithm-1/Fig 9/10 set,
+/// aliased from the explorer so the grid and the figures can never
+/// drift apart.
+pub const DEFAULT_CAPACITIES_MB: [u64; 6] =
+    crate::nvsim::explorer::PAPER_CAPACITIES_MB;
+
+/// The workload coordinates of a grid point (absent for circuit-only
+/// sweeps such as Fig 9, where only the cache PPA is of interest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkloadPoint {
+    /// Zoo workload name (resolved during expansion, so always valid).
+    pub dnn: &'static str,
+    pub phase: Phase,
+    /// Resolved batch size (paper default already applied).
+    pub batch: usize,
+}
+
+/// One fully resolved point of the design-space grid. The point is its
+/// own identity: equal points address the same memoized result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GridPoint {
+    pub tech: MemTech,
+    pub capacity_mb: u64,
+    /// Process node (nm); only 16 nm is calibrated today.
+    pub node_nm: u32,
+    pub workload: Option<WorkloadPoint>,
+}
+
+impl GridPoint {
+    /// Canonical content-address of this point (includes the model
+    /// version, so cached results are invalidated when the models
+    /// change).
+    pub fn key(&self) -> String {
+        let wl = match self.workload {
+            Some(w) => format!("{}:{}:b{}", w.dnn, w.phase.name(), w.batch),
+            None => "circuit".to_string(),
+        };
+        format!(
+            "v{}:{}nm:{}:{}MB:{}",
+            super::memo::MODEL_VERSION,
+            self.node_nm,
+            self.tech.name(),
+            self.capacity_mb,
+            wl
+        )
+    }
+
+    /// 64-bit FNV-1a hash of [`GridPoint::key`] — the short id used by
+    /// the on-disk memo cache.
+    pub fn key_hash(&self) -> u64 {
+        super::memo::fnv1a64(&self.key())
+    }
+}
+
+/// Declarative grid filters (applied after cartesian expansion,
+/// preserving expansion order).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Filter {
+    /// Keep only the NVM rows. The SRAM baseline at each capacity is
+    /// still solved internally for normalization.
+    NvmOnly,
+    TechIs(MemTech),
+    CapacityAtLeast(u64),
+    CapacityAtMost(u64),
+    /// Keep workload points in this phase (circuit-only points pass).
+    PhaseIs(Phase),
+}
+
+impl Filter {
+    pub fn keep(&self, p: &GridPoint) -> bool {
+        match self {
+            Filter::NvmOnly => p.tech.is_nvm(),
+            Filter::TechIs(t) => p.tech == *t,
+            Filter::CapacityAtLeast(mb) => p.capacity_mb >= *mb,
+            Filter::CapacityAtMost(mb) => p.capacity_mb <= *mb,
+            Filter::PhaseIs(ph) => p.workload.map_or(true, |w| w.phase == *ph),
+        }
+    }
+}
+
+/// Axis lists describing one sweep over the cross-layer model.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub techs: Vec<MemTech>,
+    pub capacities_mb: Vec<u64>,
+    /// Workload names resolved against the zoo (case-insensitive);
+    /// empty = circuit-only sweep (one point per tech x capacity).
+    pub dnns: Vec<String>,
+    pub phases: Vec<Phase>,
+    /// Batch sizes; empty = the paper batch per phase (4 / 64).
+    pub batches: Vec<usize>,
+    /// Process-node axis (nm).
+    pub nodes_nm: Vec<u32>,
+    pub filters: Vec<Filter>,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            techs: MemTech::ALL.to_vec(),
+            capacities_mb: DEFAULT_CAPACITIES_MB.to_vec(),
+            dnns: Dnn::zoo().iter().map(|d| d.name.to_string()).collect(),
+            phases: Phase::ALL.to_vec(),
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        }
+    }
+}
+
+impl SweepSpec {
+    /// A PPA-only sweep (no workload axis) — the Fig 9 shape.
+    pub fn circuit_only(techs: Vec<MemTech>, capacities_mb: Vec<u64>) -> Self {
+        SweepSpec {
+            techs,
+            capacities_mb,
+            dnns: vec![],
+            phases: Phase::ALL.to_vec(),
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        }
+    }
+
+    /// Cartesian expansion into spec order: node, then tech, then
+    /// capacity, then workload, then phase, then batch (inner axes vary
+    /// fastest). Validation errors — unknown workload, uncalibrated
+    /// node, empty axis — surface here, before any work is scheduled.
+    pub fn expand(&self) -> Result<Vec<GridPoint>> {
+        if self.techs.is_empty() {
+            bail!("sweep spec has no memory technologies");
+        }
+        if self.capacities_mb.is_empty() {
+            bail!("sweep spec has no capacities");
+        }
+        if self.nodes_nm.is_empty() {
+            bail!("sweep spec has no process nodes");
+        }
+        for &node in &self.nodes_nm {
+            if node != 16 {
+                bail!("process node {node}nm is not calibrated (only 16nm)");
+            }
+        }
+        for &mb in &self.capacities_mb {
+            if mb == 0 {
+                bail!("capacity must be at least 1 MB");
+            }
+        }
+        let mut dnns: Vec<&'static str> = Vec::new();
+        for name in &self.dnns {
+            dnns.push(resolve_dnn(name)?);
+        }
+        if !dnns.is_empty() && self.phases.is_empty() {
+            bail!("sweep spec has workloads but no phases");
+        }
+        for &b in &self.batches {
+            if b == 0 {
+                bail!("batch size must be at least 1");
+            }
+        }
+
+        let mut out = Vec::new();
+        for &node in &self.nodes_nm {
+            for &tech in &self.techs {
+                for &mb in &self.capacities_mb {
+                    if dnns.is_empty() {
+                        out.push(GridPoint {
+                            tech,
+                            capacity_mb: mb,
+                            node_nm: node,
+                            workload: None,
+                        });
+                        continue;
+                    }
+                    for &dnn in &dnns {
+                        for &phase in &self.phases {
+                            if self.batches.is_empty() {
+                                out.push(GridPoint {
+                                    tech,
+                                    capacity_mb: mb,
+                                    node_nm: node,
+                                    workload: Some(WorkloadPoint {
+                                        dnn,
+                                        phase,
+                                        batch: phase.paper_batch(),
+                                    }),
+                                });
+                            } else {
+                                for &batch in &self.batches {
+                                    out.push(GridPoint {
+                                        tech,
+                                        capacity_mb: mb,
+                                        node_nm: node,
+                                        workload: Some(WorkloadPoint {
+                                            dnn,
+                                            phase,
+                                            batch,
+                                        }),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out.retain(|p| self.filters.iter().all(|f| f.keep(p)));
+        Ok(out)
+    }
+}
+
+/// Resolve a user-supplied workload name against the zoo
+/// (case-insensitive, whitespace-tolerant).
+pub fn resolve_dnn(name: &str) -> Result<&'static str> {
+    let want = name.trim();
+    for d in Dnn::zoo() {
+        if d.name.eq_ignore_ascii_case(want) {
+            return Ok(d.name);
+        }
+    }
+    bail!("unknown workload '{want}' (see `deepnvm table3` for the zoo)")
+}
+
+/// Parse a technology name from CLI input.
+pub fn parse_tech(s: &str) -> Result<MemTech> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "sram" => Ok(MemTech::Sram),
+        "stt" | "stt-mram" | "sttmram" => Ok(MemTech::SttMram),
+        "sot" | "sot-mram" | "sotmram" => Ok(MemTech::SotMram),
+        other => bail!("unknown memory technology '{other}' (sram|stt|sot)"),
+    }
+}
+
+/// Parse a phase name from CLI input.
+pub fn parse_phase(s: &str) -> Result<Phase> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "inference" | "infer" | "i" => Ok(Phase::Inference),
+        "training" | "train" | "t" => Ok(Phase::Training),
+        other => bail!("unknown phase '{other}' (inference|training)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_counts_and_order() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::Sram, MemTech::SttMram],
+            capacities_mb: vec![1, 2],
+            dnns: vec!["AlexNet".into(), "VGG-16".into()],
+            phases: Phase::ALL.to_vec(),
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let pts = spec.expand().unwrap();
+        // 2 techs x 2 caps x 2 dnns x 2 phases
+        assert_eq!(pts.len(), 16);
+        // tech is the outer axis, phase the inner
+        assert_eq!(pts[0].tech, MemTech::Sram);
+        assert_eq!(pts[0].capacity_mb, 1);
+        assert_eq!(pts[0].workload.unwrap().dnn, "AlexNet");
+        assert_eq!(pts[0].workload.unwrap().phase, Phase::Inference);
+        assert_eq!(pts[1].workload.unwrap().phase, Phase::Training);
+        assert_eq!(pts[15].tech, MemTech::SttMram);
+        assert_eq!(pts[15].capacity_mb, 2);
+        // paper batches applied
+        assert_eq!(pts[0].workload.unwrap().batch, 4);
+        assert_eq!(pts[1].workload.unwrap().batch, 64);
+        // expansion is deterministic
+        assert_eq!(pts, spec.expand().unwrap());
+    }
+
+    #[test]
+    fn circuit_only_expansion() {
+        let spec = SweepSpec::circuit_only(MemTech::ALL.to_vec(), vec![1, 2, 4]);
+        let pts = spec.expand().unwrap();
+        assert_eq!(pts.len(), 9);
+        assert!(pts.iter().all(|p| p.workload.is_none()));
+    }
+
+    #[test]
+    fn filters_prune_but_keep_order() {
+        let spec = SweepSpec {
+            filters: vec![Filter::NvmOnly, Filter::CapacityAtLeast(8)],
+            ..SweepSpec::circuit_only(MemTech::ALL.to_vec(), vec![1, 8, 32])
+        };
+        let pts = spec.expand().unwrap();
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().all(|p| p.tech.is_nvm() && p.capacity_mb >= 8));
+        assert_eq!(pts[0].tech, MemTech::SttMram);
+        assert_eq!(pts[0].capacity_mb, 8);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let s = SweepSpec { dnns: vec!["NotANet".into()], ..SweepSpec::default() };
+        assert!(s.expand().is_err());
+
+        let s = SweepSpec { nodes_nm: vec![7], ..SweepSpec::default() };
+        assert!(s.expand().is_err());
+
+        let s = SweepSpec { techs: vec![], ..SweepSpec::default() };
+        assert!(s.expand().is_err());
+
+        let s = SweepSpec { batches: vec![0], ..SweepSpec::default() };
+        assert!(s.expand().is_err());
+    }
+
+    #[test]
+    fn workload_names_resolve_case_insensitively() {
+        assert_eq!(resolve_dnn("alexnet").unwrap(), "AlexNet");
+        assert_eq!(resolve_dnn(" VGG-16 ").unwrap(), "VGG-16");
+        assert!(resolve_dnn("lenet").is_err());
+    }
+
+    #[test]
+    fn keys_are_stable_and_distinct() {
+        let spec = SweepSpec::default();
+        let pts = spec.expand().unwrap();
+        let mut keys: Vec<String> = pts.iter().map(|p| p.key()).collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "grid keys must be unique");
+        // hash is a pure function of the key
+        assert_eq!(pts[0].key_hash(), pts[0].key_hash());
+    }
+
+    #[test]
+    fn parsers_accept_cli_shorthand() {
+        assert_eq!(parse_tech("STT").unwrap(), MemTech::SttMram);
+        assert_eq!(parse_tech("sot-mram").unwrap(), MemTech::SotMram);
+        assert!(parse_tech("dram").is_err());
+        assert_eq!(parse_phase("T").unwrap(), Phase::Training);
+        assert!(parse_phase("both").is_err());
+    }
+}

@@ -33,9 +33,8 @@ use super::models::{Dnn, Layer, Phase};
 pub const TX_BYTES: u64 = 32;
 /// Bytes per fp32 element.
 const ELEM: u64 = 4;
-/// Supertile edge: the effective SM-level reuse tile (thread-block
-/// 
-/// thread-block C-tile of Pascal-class SGEMM).
+/// Supertile edge: the effective SM-level reuse tile (the thread-block
+/// C-tile of Pascal-class SGEMM).
 const SUPERTILE: u64 = 128;
 
 /// Memory statistics for one workload execution (whole network, one

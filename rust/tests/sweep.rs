@@ -1,0 +1,251 @@
+//! Sweep-engine guarantees:
+//!
+//! (a) parallel execution is byte-identical to the serial schedule and
+//!     returns results in spec order for any `--jobs`;
+//! (b) a warm memo (in-process or reloaded from disk) serves reruns
+//!     with zero circuit-model solves and zero traffic evaluations;
+//! (c) Pareto-frontier extraction is correct on a hand-built grid;
+//! (d) the rewired `fig9`/`fig10` reports are numerically identical to
+//!     the original serial, unmemoized computation path.
+
+use deepnvm::analysis::{evaluate, DramCost};
+use deepnvm::coordinator::reports;
+use deepnvm::coordinator::store::Store;
+use deepnvm::device::MemTech;
+use deepnvm::nvsim::explorer::tuned_cache;
+use deepnvm::sweep::{self, Memo, SweepSpec};
+use deepnvm::util::stats::{mean, std_dev};
+use deepnvm::util::table::f;
+use deepnvm::workload::models::{Dnn, Phase};
+use deepnvm::workload::traffic::TrafficModel;
+
+const MB: u64 = 1024 * 1024;
+
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        techs: MemTech::ALL.to_vec(),
+        capacities_mb: vec![1, 2],
+        dnns: vec!["AlexNet".into(), "SqueezeNet".into()],
+        phases: Phase::ALL.to_vec(),
+        batches: vec![],
+        nodes_nm: vec![16],
+        filters: vec![],
+    }
+}
+
+// ---------------------------------------------------------------- (a)
+
+#[test]
+fn parallel_results_identical_to_serial_and_spec_ordered() {
+    let spec = small_spec();
+    let serial = sweep::run(&spec, 1, &Memo::new()).unwrap();
+
+    // spec-ordered: result i belongs to expansion point i
+    let expanded = spec.expand().unwrap();
+    assert_eq!(serial.points.len(), expanded.len());
+    for (r, p) in serial.points.iter().zip(&expanded) {
+        assert_eq!(r.point, *p);
+    }
+
+    // byte-identical across worker counts (Debug shows every f64 bit)
+    let reference = format!("{:?}", serial.points);
+    for jobs in [2, 3, 4, 8] {
+        let par = sweep::run(&spec, jobs, &Memo::new()).unwrap();
+        assert_eq!(format!("{:?}", par.points), reference, "jobs={jobs}");
+    }
+}
+
+// ---------------------------------------------------------------- (b)
+
+#[test]
+fn warm_memo_rerun_solves_and_evaluates_nothing() {
+    let spec = small_spec();
+    let memo = Memo::new();
+    let first = sweep::run(&spec, 4, &memo).unwrap();
+    let solves = memo.solve_count();
+    let evals = memo.eval_count();
+    assert!(solves > 0, "cold run must solve circuits");
+    assert!(evals > 0, "cold run must evaluate points");
+
+    let second = sweep::run(&spec, 4, &memo).unwrap();
+    assert_eq!(memo.solve_count(), solves, "warm rerun performed circuit solves");
+    assert_eq!(memo.eval_count(), evals, "warm rerun re-evaluated points");
+    assert_eq!(
+        format!("{:?}", first.points),
+        format!("{:?}", second.points),
+        "memoized results must be identical"
+    );
+}
+
+#[test]
+fn on_disk_memo_restores_across_processes() {
+    let dir = std::env::temp_dir().join("deepnvm_sweep_disk_memo_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Store::new(&dir);
+    let spec = small_spec();
+
+    let hot = Memo::new();
+    let first = sweep::run(&spec, 2, &hot).unwrap();
+    hot.save_to(&store).unwrap();
+
+    // a fresh Memo stands in for a fresh process
+    let cold = Memo::new();
+    assert!(cold.load_from(&store).unwrap() > 0);
+    let second = sweep::run(&spec, 2, &cold).unwrap();
+    assert_eq!(cold.solve_count(), 0, "disk-warmed run must not solve");
+    assert_eq!(cold.eval_count(), 0, "disk-warmed run must not evaluate");
+    assert_eq!(format!("{:?}", first.points), format!("{:?}", second.points));
+}
+
+// ---------------------------------------------------------------- (c)
+
+#[test]
+fn pareto_frontier_correct_on_hand_built_grid() {
+    use deepnvm::sweep::pareto::{dominates, frontier_indices, Objective};
+
+    struct P {
+        edp: f64,
+        area: f64,
+        capacity: f64,
+    }
+    let objectives = [
+        Objective::<P> { name: "edp", maximize: false, get: |p| p.edp },
+        Objective::<P> { name: "area", maximize: false, get: |p| p.area },
+        Objective::<P> { name: "capacity", maximize: true, get: |p| p.capacity },
+    ];
+    let grid = [
+        P { edp: 1.0, area: 1.0, capacity: 4.0 }, // optimal all-round
+        P { edp: 2.0, area: 2.0, capacity: 2.0 }, // dominated by [0]
+        P { edp: 0.5, area: 3.0, capacity: 4.0 }, // wins on EDP alone
+    ];
+    assert!(dominates(&grid[0], &grid[1], &objectives));
+    assert!(!dominates(&grid[0], &grid[2], &objectives));
+    assert!(!dominates(&grid[2], &grid[0], &objectives));
+    assert_eq!(frontier_indices(&grid, &objectives), vec![0, 2]);
+}
+
+#[test]
+fn pareto_on_real_grid_prefers_nvm_at_scale() {
+    // On a {STT, SOT} x {2, 32} MB AlexNet grid, the frontier must not
+    // be empty and every frontier member must be undominated.
+    let spec = SweepSpec {
+        techs: vec![MemTech::SttMram, MemTech::SotMram],
+        capacities_mb: vec![2, 32],
+        dnns: vec!["AlexNet".into()],
+        phases: vec![Phase::Training],
+        batches: vec![],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let res = sweep::run(&spec, 2, &Memo::new()).unwrap();
+    let objectives = sweep::pareto::edp_area_capacity();
+    let front = sweep::pareto::frontier_indices(&res.points, &objectives);
+    assert!(!front.is_empty());
+    for &i in &front {
+        for (j, other) in res.points.iter().enumerate() {
+            assert!(
+                j == i || !sweep::pareto::dominates(other, &res.points[i], &objectives),
+                "frontier point {i} is dominated by {j}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (d)
+
+#[test]
+fn fig9_csv_identical_to_unmemoized_serial_path() {
+    let caps = [1u64, 2];
+    let report = reports::fig9(&caps);
+
+    // The pre-sweep implementation: direct Algorithm-1 solves, tech
+    // outer / capacity inner.
+    let mut legacy = Vec::new();
+    for &tech in &MemTech::ALL {
+        for &mb in &caps {
+            legacy.push(tuned_cache(tech, mb * MB));
+        }
+    }
+
+    let csv = report.csv.to_string();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 1 + legacy.len());
+    for (line, c) in lines[1..].iter().zip(&legacy) {
+        let p = c.ppa;
+        let want = format!(
+            "{},{},{},{},{},{},{},{}",
+            c.tech.name(),
+            c.capacity_bytes / MB,
+            f(p.read_latency * 1e9, 2),
+            f(p.write_latency * 1e9, 2),
+            f(p.read_energy * 1e9, 3),
+            f(p.write_energy * 1e9, 3),
+            f(p.leakage_power * 1e3, 0),
+            f(p.area * 1e6, 2),
+        );
+        assert_eq!(*line, want);
+    }
+}
+
+#[test]
+fn fig10_csv_identical_to_legacy_serial_loop() {
+    let caps = [2u64];
+    let report = reports::fig10(&caps);
+
+    // The pre-sweep serial loop, inlined verbatim: mb -> tech -> phase
+    // -> dnn, with the same normalization and accumulation order.
+    let dram = DramCost::default();
+    let mut legacy: Vec<(MemTech, u64, Phase, [f64; 6])> = Vec::new();
+    for &mb in &caps {
+        let sram = tuned_cache(MemTech::Sram, mb * MB).ppa;
+        let traffic = TrafficModel { l2_bytes: mb * MB, ..Default::default() };
+        for &tech in &[MemTech::SttMram, MemTech::SotMram] {
+            let ppa = tuned_cache(tech, mb * MB).ppa;
+            for phase in Phase::ALL {
+                let mut e_norms = vec![];
+                let mut t_norms = vec![];
+                let mut edp_norms = vec![];
+                for dnn in Dnn::zoo() {
+                    let stats = traffic.run_paper(&dnn, phase);
+                    let base = evaluate(&stats, &sram, Some(dram));
+                    let e = evaluate(&stats, &ppa, Some(dram));
+                    e_norms.push(e.energy() / base.energy());
+                    t_norms.push(e.time_total / base.time_total);
+                    edp_norms.push(e.edp() / base.edp());
+                }
+                legacy.push((
+                    tech,
+                    mb,
+                    phase,
+                    [
+                        mean(&e_norms),
+                        std_dev(&e_norms),
+                        mean(&t_norms),
+                        std_dev(&t_norms),
+                        mean(&edp_norms),
+                        std_dev(&edp_norms),
+                    ],
+                ));
+            }
+        }
+    }
+
+    let csv = report.csv.to_string();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 1 + legacy.len());
+    for (line, (tech, mb, phase, m)) in lines[1..].iter().zip(&legacy) {
+        let want = format!(
+            "{},{},{},{},{},{},{},{},{}",
+            tech.name(),
+            mb,
+            phase.name(),
+            f(m[0], 3),
+            f(m[1], 3),
+            f(m[2], 3),
+            f(m[3], 3),
+            f(m[4], 3),
+            f(m[5], 3),
+        );
+        assert_eq!(*line, want);
+    }
+}
