@@ -1,0 +1,115 @@
+//! Bench SL: warm vs cold `/solve` latency through the resident
+//! server — the serving-path numbers behind the `serve` subsystem
+//! (cold = first-ever circuit solve for a capacity; warm = pure memo
+//! hit, the steady state after `--prewarm`). Emits `BENCH_serve.json`.
+//!
+//! Run: `cargo bench --bench serve_latency [-- --quick]`
+
+mod bench_common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use deepnvm::serve::http::Server;
+use deepnvm::serve::routes::{self, ServerCtx};
+use deepnvm::sweep::Memo;
+use deepnvm::util::bench::Bench;
+use deepnvm::util::json::Json;
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, usize) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("recv");
+    let status: u16 = buf.split_whitespace().nth(1).expect("status").parse().expect("code");
+    (status, buf.len())
+}
+
+fn main() {
+    let quick = bench_common::quick();
+    let memo: &'static Memo = Box::leak(Box::new(Memo::new()));
+    let ctx = Arc::new(ServerCtx::new(memo, 2));
+    let server =
+        Server::bind("127.0.0.1:0", 2, move |req| routes::handle(&ctx, req)).expect("bind");
+    let addr = server.local_addr();
+
+    // Cold: the very first solve for this capacity walks the full
+    // Algorithm-1 enumeration behind the HTTP hop.
+    let cap_mb = if quick { 2 } else { 8 };
+    let solve_body = format!("{{\"tech\": \"stt\", \"capacity_mb\": {cap_mb}}}");
+    let t0 = Instant::now();
+    let (status, _) = post(addr, "/solve", &solve_body);
+    assert_eq!(status, 200);
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Warm: identical query, answered from the resident cache.
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+    let warm = b
+        .run("serve/solve_warm", || {
+            let (status, n) = post(addr, "/solve", &solve_body);
+            assert_eq!(status, 200);
+            n
+        })
+        .clone();
+
+    // Warm fig9 slice: the full paper query at cache-hit latency.
+    let sweep_body = "{\"report\": \"fig9\", \"caps_mb\": [1, 2]}";
+    let (status, _) = post(addr, "/sweep", sweep_body); // warm the slice
+    assert_eq!(status, 200);
+    let sweep_warm = b
+        .run("serve/sweep_fig9_warm", || {
+            let (status, n) = post(addr, "/sweep", sweep_body);
+            assert_eq!(status, 200);
+            n
+        })
+        .clone();
+
+    let warm_ms = warm.mean_ns / 1e6;
+    let speedup = cold_ms / warm_ms.max(1e-9);
+    println!("serve_latency: cold /solve ({cap_mb}MB STT) {cold_ms:>10.2} ms");
+    println!("               warm /solve              {warm_ms:>10.3} ms  ({speedup:.0}x)");
+    println!(
+        "               warm /sweep fig9         {:>10.3} ms",
+        sweep_warm.mean_ns / 1e6
+    );
+    assert!(
+        warm_ms < cold_ms,
+        "warm memo hits must beat the cold solve ({warm_ms:.3} ms vs {cold_ms:.3} ms)"
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("serve_latency".into()));
+    j.set(
+        "note",
+        Json::Str(
+            "Warm vs cold /solve through the resident server; regenerate with \
+             `cargo bench --bench serve_latency`."
+                .into(),
+        ),
+    );
+    let mut acc = Json::obj();
+    acc.set("warm_faster_than_cold", Json::Bool(true));
+    j.set("acceptance", acc);
+    j.set("quick", Json::Bool(quick));
+    j.set("cold_cap_mb", Json::Num(cap_mb as f64));
+    j.set("cold_solve_ms", Json::Num(cold_ms));
+    j.set("warm_solve_ms", Json::Num(warm_ms));
+    j.set("warm_solve_speedup", Json::Num(speedup));
+    j.set("warm_sweep_fig9_ms", Json::Num(sweep_warm.mean_ns / 1e6));
+
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_serve.json"
+    } else {
+        "BENCH_serve.json"
+    };
+    match std::fs::write(path, j.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

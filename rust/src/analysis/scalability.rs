@@ -20,13 +20,26 @@ pub const CAPACITIES_MB: [u64; 6] = crate::nvsim::explorer::PAPER_CAPACITIES_MB;
 
 /// Fig 9: PPA of the tuned design at each (tech, capacity).
 pub fn ppa_sweep(capacities_mb: &[u64]) -> Vec<TunedConfig> {
+    ppa_sweep_with(capacities_mb, 0, sweep::memo::global())
+        .expect("static fig9 axes expand")
+}
+
+/// As [`ppa_sweep`] against an explicit worker budget and memo cache
+/// (the serve subsystem queries its own resident cache through this;
+/// `jobs = 0` means one worker per core). Fallible because serve
+/// feeds it untrusted capacity axes; spec validation errors surface
+/// here instead of panicking.
+pub fn ppa_sweep_with(
+    capacities_mb: &[u64],
+    jobs: usize,
+    memo: &sweep::Memo,
+) -> anyhow::Result<Vec<TunedConfig>> {
     if capacities_mb.is_empty() {
-        return Vec::new(); // total on empty input, like the legacy loop
+        return Ok(Vec::new()); // total on empty input, like the legacy loop
     }
     let spec = SweepSpec::circuit_only(MemTech::ALL.to_vec(), capacities_mb.to_vec());
-    let res = sweep::run(&spec, 0, sweep::memo::global())
-        .expect("static fig9 spec expands");
-    res.points.into_iter().map(|p| p.tuned).collect()
+    let res = sweep::run(&spec, jobs, memo)?;
+    Ok(res.points.into_iter().map(|p| p.tuned).collect())
 }
 
 /// One Fig 10 point: normalized mean +/- std across the five workloads.
@@ -52,8 +65,20 @@ pub struct ScalePoint {
 /// and therefore every reported mean/std — matches the historical
 /// serial loop bit-for-bit.
 pub fn workload_sweep(capacities_mb: &[u64]) -> Vec<ScalePoint> {
+    workload_sweep_with(capacities_mb, 0, sweep::memo::global())
+        .expect("static fig10 axes expand")
+}
+
+/// As [`workload_sweep`] against an explicit worker budget and memo
+/// cache (fallible for serve's untrusted axes, like
+/// [`ppa_sweep_with`]).
+pub fn workload_sweep_with(
+    capacities_mb: &[u64],
+    jobs: usize,
+    memo: &sweep::Memo,
+) -> anyhow::Result<Vec<ScalePoint>> {
     if capacities_mb.is_empty() {
-        return Vec::new(); // total on empty input, like the legacy loop
+        return Ok(Vec::new()); // total on empty input, like the legacy loop
     }
     let spec = SweepSpec {
         techs: vec![MemTech::SttMram, MemTech::SotMram],
@@ -64,8 +89,7 @@ pub fn workload_sweep(capacities_mb: &[u64]) -> Vec<ScalePoint> {
         nodes_nm: vec![16],
         filters: vec![],
     };
-    let res = sweep::run(&spec, 0, sweep::memo::global())
-        .expect("static fig10 spec expands");
+    let res = sweep::run(&spec, jobs, memo)?;
 
     let mut out = Vec::new();
     for &mb in capacities_mb {
@@ -99,7 +123,7 @@ pub fn workload_sweep(capacities_mb: &[u64]) -> Vec<ScalePoint> {
             }
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]

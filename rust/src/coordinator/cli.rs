@@ -35,6 +35,10 @@ DESIGN-SPACE ENGINE:
   sweep         Evaluate any tech x capacity x workload x phase x batch
                 grid in parallel, with memoized circuit solves persisted
                 to <out>/sweep_memo.json (warm reruns solve nothing)
+  serve         Long-lived HTTP server over the same engine: scenario
+                queries at cache-hit latency (POST /solve, /sweep) and
+                shardable memo exchange (GET /memo/export, POST
+                /memo/merge)
 
 OTHER:
   e2e-train     Train the TinyCNN artifact via PJRT (needs `make artifacts`)
@@ -55,10 +59,19 @@ SWEEP OPTIONS:
   --pareto        print the EDP/area/capacity Pareto frontier
   --nvm-only      drop SRAM rows (the baseline is still solved for norms)
   --cold          ignore any on-disk memo cache in --out
+  --memo-cap N    LRU-bound the memo's point layer to N entries (keeps
+                  sweep_memo.json from growing without limit)
+
+SERVE OPTIONS:
+  --addr A:P      bind address (default 127.0.0.1:8090; :0 = ephemeral)
+  --prewarm       solve the full paper grid before accepting traffic,
+                  so steady-state queries perform zero circuit solves
+  --jobs, --out, --memo-cap as above
 
 EXAMPLE:
   deepnvm sweep --techs stt,sot --caps 2,8,32 --dnns AlexNet,ResNet-18 \\
       --jobs 8 --pareto --out results
+  deepnvm serve --addr 0.0.0.0:8090 --prewarm --memo-cap 100000
 ";
 
 /// Parsed options.
@@ -82,6 +95,12 @@ pub struct CliOptions {
     pub pareto: bool,
     pub nvm_only: bool,
     pub cold: bool,
+    /// LRU bound on the memo point layer (`--memo-cap`; sweep + serve).
+    pub memo_cap: Option<usize>,
+    /// Bind address for `serve`.
+    pub addr: String,
+    /// Prewarm the full paper grid before `serve` accepts traffic.
+    pub prewarm: bool,
 }
 
 impl Default for CliOptions {
@@ -101,6 +120,9 @@ impl Default for CliOptions {
             pareto: false,
             nvm_only: false,
             cold: false,
+            memo_cap: None,
+            addr: "127.0.0.1:8090".into(),
+            prewarm: false,
         }
     }
 }
@@ -183,6 +205,19 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
             "--pareto" => o.pareto = true,
             "--nvm-only" => o.nvm_only = true,
             "--cold" => o.cold = true,
+            "--memo-cap" => {
+                let cap: usize = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --memo-cap: {e}"))?;
+                if cap == 0 {
+                    bail!("--memo-cap must be at least 1");
+                }
+                o.memo_cap = Some(cap);
+            }
+            "--addr" => {
+                o.addr = value()?.clone();
+            }
+            "--prewarm" => o.prewarm = true,
             other => bail!("unknown option '{other}' (try: deepnvm help)"),
         }
     }
@@ -256,6 +291,9 @@ pub fn generate(o: &CliOptions) -> Result<Vec<Report>> {
             let spec = sweep_spec_from(o)?;
             let store = Store::new(&o.out);
             let memo = crate::sweep::memo::global();
+            // Bound the point layer before any load/run so the cache —
+            // and the sweep_memo.json persisted below — stays trimmed.
+            memo.set_point_capacity(o.memo_cap);
             if !o.cold {
                 match memo.load_from(&store) {
                     Ok(n) if n > 0 => {
@@ -366,6 +404,22 @@ pub fn run_cli(args: &[String]) -> i32 {
                 1
             }
         },
+        "serve" => {
+            let cfg = crate::serve::ServeConfig {
+                addr: o.addr.clone(),
+                jobs: o.jobs,
+                prewarm: o.prewarm,
+                memo_cap: o.memo_cap,
+                out: o.out.clone(),
+            };
+            match crate::serve::run(&cfg) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    1
+                }
+            }
+        }
         _ => match generate(&o) {
             Ok(rs) => {
                 let mut store = Store::new(&o.out);
@@ -428,6 +482,25 @@ mod tests {
         assert_eq!(spec.capacities_mb, vec![2, 8]);
         assert_eq!(spec.batches, Vec::<usize>::new(), "paper batches by default");
         assert_eq!(spec.filters, vec![Filter::NvmOnly]);
+    }
+
+    #[test]
+    fn parses_serve_options() {
+        let o = parse_args(&sv(&[
+            "serve", "--addr", "127.0.0.1:0", "--prewarm", "--memo-cap", "500",
+            "--jobs", "3", "--out", "/tmp/r",
+        ]))
+        .unwrap();
+        assert_eq!(o.command, "serve");
+        assert_eq!(o.addr, "127.0.0.1:0");
+        assert!(o.prewarm);
+        assert_eq!(o.memo_cap, Some(500));
+        assert_eq!(o.jobs, 3);
+        assert_eq!(o.out, "/tmp/r");
+
+        assert!(parse_args(&sv(&["serve", "--memo-cap", "0"])).is_err());
+        assert!(parse_args(&sv(&["serve", "--memo-cap", "x"])).is_err());
+        assert!(parse_args(&sv(&["serve", "--addr"])).is_err());
     }
 
     #[test]

@@ -240,7 +240,20 @@ pub fn fig7_fig8(reductions: Option<(f64, f64)>) -> (Report, Report) {
 
 /// Fig 9 — cache capacity scaling (area / latency / energy).
 pub fn fig9(capacities_mb: &[u64]) -> Report {
-    let sweep = scalability::ppa_sweep(capacities_mb);
+    fig9_with(capacities_mb, 0, memo::global()).expect("static fig9 axes expand")
+}
+
+/// As [`fig9`] against an explicit worker budget and memo cache — the
+/// serve subsystem's report-to-JSON path renders through this, so an
+/// HTTP `/sweep` with `"report": "fig9"` emits rows byte-identical to
+/// the CLI CSV. Fallible: serve feeds it untrusted capacity axes, and
+/// validation errors must become 422s, not panics.
+pub fn fig9_with(
+    capacities_mb: &[u64],
+    jobs: usize,
+    memo: &memo::Memo,
+) -> anyhow::Result<Report> {
+    let sweep = scalability::ppa_sweep_with(capacities_mb, jobs, memo)?;
     let mut t = Table::new(&[
         "tech", "MB", "RdLat(ns)", "WrLat(ns)", "RdE(nJ)", "WrE(nJ)",
         "Leak(mW)", "Area(mm2)",
@@ -265,12 +278,22 @@ pub fn fig9(capacities_mb: &[u64]) -> Report {
         t.row(&cells);
         csv.row(&cells);
     }
-    Report { id: "F9", title: "Fig 9".into(), text: t.to_string(), csv }
+    Ok(Report { id: "F9", title: "Fig 9".into(), text: t.to_string(), csv })
 }
 
 /// Fig 10 — normalized energy/latency/EDP across workloads vs capacity.
 pub fn fig10(capacities_mb: &[u64]) -> Report {
-    let pts = scalability::workload_sweep(capacities_mb);
+    fig10_with(capacities_mb, 0, memo::global()).expect("static fig10 axes expand")
+}
+
+/// As [`fig10`] against an explicit worker budget and memo cache
+/// (fallible, like [`fig9_with`]).
+pub fn fig10_with(
+    capacities_mb: &[u64],
+    jobs: usize,
+    memo: &memo::Memo,
+) -> anyhow::Result<Report> {
+    let pts = scalability::workload_sweep_with(capacities_mb, jobs, memo)?;
     let mut t = Table::new(&[
         "tech", "MB", "phase", "E (xSRAM)", "±", "T (xSRAM)", "±", "EDP (xSRAM)", "±",
     ])
@@ -294,7 +317,7 @@ pub fn fig10(capacities_mb: &[u64]) -> Report {
         t.row(&cells);
         csv.row(&cells);
     }
-    Report { id: "F10", title: "Fig 10".into(), text: t.to_string(), csv }
+    Ok(Report { id: "F10", title: "Fig 10".into(), text: t.to_string(), csv })
 }
 
 /// Extension A (paper §V, implemented): what the freed iso-capacity
@@ -415,7 +438,19 @@ pub fn sweep_report(
     jobs: usize,
     show_pareto: bool,
 ) -> anyhow::Result<Report> {
-    let res = sweep::run(spec, jobs, memo::global())?;
+    sweep_report_with(spec, jobs, show_pareto, memo::global())
+}
+
+/// As [`sweep_report`] against an explicit memo cache (serve's
+/// `POST /sweep` handler reuses the whole report pipeline through
+/// this, so HTTP rows are byte-identical to CLI CSV rows).
+pub fn sweep_report_with(
+    spec: &SweepSpec,
+    jobs: usize,
+    show_pareto: bool,
+    memo: &memo::Memo,
+) -> anyhow::Result<Report> {
+    let res = sweep::run(spec, jobs, memo)?;
     // Absolute EDP is only comparable within one workload, so the
     // frontier is computed per (dnn, phase, batch) group: "which
     // (tech, capacity) designs are undominated for THIS workload".

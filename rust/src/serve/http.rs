@@ -1,0 +1,564 @@
+//! Minimal HTTP/1.1 plumbing over `std::net` (the offline vendor set
+//! has no hyper/tokio): a request parser, a response writer, and a
+//! [`Server`] that pairs one accepting thread with a fixed pool of
+//! connection workers.
+//!
+//! The pool mirrors the `sweep::exec` idiom — workers race on one
+//! shared source of work and each idle worker claims the next
+//! connection — except that connections arrive over time rather than
+//! from a fixed slice, so the atomic cursor becomes a `Condvar`-backed
+//! queue. Semantics are deliberately small: one request per
+//! connection, `Connection: close` on every response, bounded header
+//! and body sizes, and read/write timeouts so a stalled peer can never
+//! wedge a worker.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Reject requests whose request line + headers exceed this.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Reject bodies larger than this (a full-grid memo export is ~1 MB;
+/// leave generous headroom for sharded fleets).
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+/// Per-connection socket timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Typed parse error for an over-limit body, so the connection
+/// handler can answer 413 instead of a generic 400.
+#[derive(Debug)]
+pub struct PayloadTooLarge(pub usize);
+
+impl std::fmt::Display for PayloadTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "body of {} bytes exceeds the {MAX_BODY_BYTES}-byte limit", self.0)
+    }
+}
+
+impl std::error::Error for PayloadTooLarge {}
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query parameters in arrival order (no percent-decoding —
+    /// the API's parameter values are plain tokens).
+    pub query: Vec<(String, String)>,
+    /// Headers with lower-cased names.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+
+    /// Parse the body as a JSON document; an empty body parses as an
+    /// empty object so POST endpoints can treat "no options" uniformly.
+    pub fn body_json(&self) -> Result<Json> {
+        if self.body.is_empty() {
+            return Ok(Json::obj());
+        }
+        json::parse(self.body_str()?)
+    }
+}
+
+/// One HTTP response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, j: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: j.to_pretty().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// A JSON error body: `{"error": "..."}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let mut j = Json::obj();
+        j.set("error", Json::Str(msg.to_string()));
+        Response::json(status, &j)
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Read one `\n`-terminated line, never buffering more than `budget`
+/// bytes — the header bound must hold *while* reading, or a peer
+/// streaming an endless line would grow memory without limit.
+fn read_limited_line<R: BufRead>(
+    reader: &mut R,
+    out: &mut String,
+    budget: usize,
+) -> Result<usize> {
+    let n = reader.by_ref().take(budget as u64 + 1).read_line(out)?;
+    if n > budget {
+        bail!("header block exceeds {MAX_HEADER_BYTES} bytes");
+    }
+    Ok(n)
+}
+
+/// Parse one request from a buffered stream. Generic over [`BufRead`]
+/// so the parser is unit-testable without sockets.
+pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<Request> {
+    let (mut req, content_length) = parse_head(reader)?;
+    read_body(reader, &mut req, content_length)?;
+    Ok(req)
+}
+
+/// Parse the request line and headers; the returned request has an
+/// empty body and the announced content length is handed back so the
+/// caller can interpose (`Expect: 100-continue`) before draining it.
+fn parse_head<R: BufRead>(reader: &mut R) -> Result<(Request, usize)> {
+    let mut budget = MAX_HEADER_BYTES;
+    let mut line = String::new();
+    let n = read_limited_line(reader, &mut line, budget)?;
+    if n == 0 {
+        bail!("connection closed before a request line");
+    }
+    budget -= n;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow!("request line has no target"))?
+        .to_string();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol '{version}'");
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        let n = read_limited_line(reader, &mut h, budget)?;
+        if n == 0 {
+            bail!("connection closed inside the header block");
+        }
+        budget -= n;
+        let h = h.trim_end_matches(&['\r', '\n'][..]);
+        if h.is_empty() {
+            break;
+        }
+        let (name, value) = h
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed header line '{h}'"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let content_length = headers
+        .iter()
+        .find(|(n, _)| n == "content-length")
+        .map(|(_, v)| v.parse::<usize>())
+        .transpose()
+        .context("bad content-length")?
+        .unwrap_or(0);
+    if content_length > MAX_BODY_BYTES {
+        return Err(PayloadTooLarge(content_length).into());
+    }
+
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q),
+        None => (target.clone(), ""),
+    };
+    let query = query_str
+        .split('&')
+        .filter(|s| !s.is_empty())
+        .map(|pair| match pair.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (pair.to_string(), String::new()),
+        })
+        .collect();
+
+    Ok((Request { method, path, query, headers, body: Vec::new() }, content_length))
+}
+
+fn read_body<R: BufRead>(
+    reader: &mut R,
+    req: &mut Request,
+    content_length: usize,
+) -> Result<()> {
+    let mut body = vec![0u8; content_length];
+    reader
+        .read_exact(&mut body)
+        .context("connection closed inside the body")?;
+    req.body = body;
+    Ok(())
+}
+
+/// Read one request off a live connection, honoring
+/// `Expect: 100-continue` — clients like curl wait up to a second for
+/// the interim response before transmitting bodies over ~1 KB, which
+/// would otherwise tax every shard merge in a fleet.
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
+    let (mut req, content_length) = parse_head(reader)?;
+    if content_length > 0
+        && req
+            .header("expect")
+            .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+    {
+        let _ = reader.get_mut().write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+        let _ = reader.get_mut().flush();
+    }
+    read_body(reader, &mut req, content_length)?;
+    Ok(req)
+}
+
+type Handler = dyn Fn(&Request) -> Response + Send + Sync;
+
+#[derive(Default)]
+struct Shared {
+    queue: Mutex<VecDeque<TcpStream>>,
+    ready: Condvar,
+    stop: AtomicBool,
+}
+
+/// A running HTTP server: one accept thread feeding `jobs` connection
+/// workers. Dropping the server shuts it down and joins every thread.
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start serving `handler` on `jobs` worker threads.
+    pub fn bind(
+        addr: &str,
+        jobs: usize,
+        handler: impl Fn(&Request) -> Response + Send + Sync + 'static,
+    ) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("cannot bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let handler: Arc<Handler> = Arc::new(handler);
+        let shared = Arc::new(Shared::default());
+
+        let jobs = jobs.max(1);
+        let mut workers = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            let shared = Arc::clone(&shared);
+            let handler = Arc::clone(&handler);
+            workers.push(std::thread::spawn(move || worker_loop(&shared, &handler)));
+        }
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(&listener, &shared))
+        };
+        Ok(Server { addr: local, shared, accept: Some(accept), workers })
+    }
+
+    /// The address actually bound (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain the workers, and join every thread.
+    /// Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection; an
+        // unspecified bind address is reachable via loopback.
+        let mut connect = self.addr;
+        if connect.ip().is_unspecified() {
+            connect.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        let _ = TcpStream::connect_timeout(&connect, Duration::from_millis(500));
+        self.shared.ready.notify_all();
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Block on the accept thread — the foreground `deepnvm serve`
+    /// mode, which runs until the process is killed.
+    pub fn join(mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Shared) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(s) = stream {
+            let mut q = shared.queue.lock().unwrap();
+            q.push_back(s);
+            drop(q);
+            shared.ready.notify_one();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, handler: &Arc<Handler>) {
+    loop {
+        let stream = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        match stream {
+            Some(s) => handle_connection(s, handler),
+            None => return,
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: &Arc<Handler>) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut reader = BufReader::new(stream);
+    let response = match read_request(&mut reader) {
+        // A panic in a route must not kill the worker: surface it as a
+        // 500 and keep serving.
+        Ok(req) => catch_unwind(AssertUnwindSafe(|| (**handler)(&req)))
+            .unwrap_or_else(|_| Response::error(500, "internal error: handler panicked")),
+        Err(e) => {
+            let status =
+                if e.downcast_ref::<PayloadTooLarge>().is_some() { 413 } else { 400 };
+            Response::error(status, &format!("bad request: {e}"))
+        }
+    };
+    let mut stream = reader.into_inner();
+    let _ = response.write_to(&mut stream);
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(text: &str) -> Result<Request> {
+        parse_request(&mut Cursor::new(text.as_bytes()))
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse("GET /memo/export?tech=stt&full HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/memo/export");
+        assert_eq!(r.query_param("tech"), Some("stt"));
+        assert_eq!(r.query_param("full"), Some(""));
+        assert_eq!(r.query_param("absent"), None);
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.body.is_empty());
+        assert_eq!(r.body_json().unwrap(), Json::obj());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let body = r#"{"tech": "stt"}"#;
+        let text = format!(
+            "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}extra",
+            body.len()
+        );
+        let r = parse(&text).unwrap();
+        assert_eq!(r.body_str().unwrap(), body);
+        assert_eq!(
+            r.body_json().unwrap().get("tech").unwrap().as_str().unwrap(),
+            "stt"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse("").is_err());
+        assert!(parse("GET\r\n\r\n").is_err());
+        assert!(parse("GET / SPDY/3\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").is_err());
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: xyz\r\n\r\n").is_err());
+        // truncated body
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 5\r\n\r\nab").is_err());
+        // unbounded header block
+        let huge = format!(
+            "GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n",
+            "a".repeat(MAX_HEADER_BYTES)
+        );
+        assert!(parse(&huge).is_err());
+        // an endless line (no newline at all) must bail at the bound,
+        // not buffer the whole stream
+        let endless = "G".repeat(MAX_HEADER_BYTES * 4);
+        assert!(parse(&endless).is_err());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        Response::text(200, "hi").write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("\r\n\r\nhi"));
+
+        let mut out = Vec::new();
+        Response::error(404, "nope").write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(s.contains("\"error\": \"nope\""));
+    }
+
+    #[test]
+    fn server_round_trip_and_shutdown() {
+        let mut server = Server::bind("127.0.0.1:0", 2, |req| {
+            Response::text(200, &format!("echo {}", req.path))
+        })
+        .unwrap();
+        let addr = server.local_addr();
+        for _ in 0..3 {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /ping HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+            assert!(buf.ends_with("echo /ping"), "{buf}");
+        }
+        // malformed request gets a 400, not a hang
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"BOGUS\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 400"), "{buf}");
+
+        // an over-limit Content-Length is a 413, not a generic 400
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"POST / HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 413"), "{buf}");
+
+        server.shutdown();
+        server.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_response() {
+        let server = Server::bind("127.0.0.1:0", 1, |req| {
+            Response::text(200, &format!("got {} bytes", req.body.len()))
+        })
+        .unwrap();
+        let mut s = TcpStream::connect(server.local_addr()).unwrap();
+        s.write_all(
+            b"POST /solve HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 4\r\n\r\nbody",
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 100 Continue\r\n\r\n"), "{buf}");
+        assert!(buf.contains("HTTP/1.1 200 OK"), "{buf}");
+        assert!(buf.ends_with("got 4 bytes"), "{buf}");
+    }
+
+    #[test]
+    fn handler_panic_yields_500() {
+        let server = Server::bind("127.0.0.1:0", 1, |_req| panic!("boom")).unwrap();
+        let addr = server.local_addr();
+        for _ in 0..2 {
+            // the worker must survive the first panic to serve the second
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            assert!(buf.starts_with("HTTP/1.1 500"), "{buf}");
+        }
+    }
+}

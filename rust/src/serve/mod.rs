@@ -1,0 +1,160 @@
+//! `deepnvm serve` — a resident sweep-query server.
+//!
+//! Every CLI invocation pays process startup, renders, and exits; this
+//! subsystem keeps the cross-layer grid *warm* instead. A long-lived
+//! HTTP/1.1 process ([`http`]) holds the process-wide [`Memo`] and
+//! answers scenario queries ([`routes`]) at cache-hit latency:
+//! `--prewarm` runs the full paper grid at startup, after which a
+//! `/sweep` for any paper slice performs zero circuit solves. The
+//! shard exchange ([`shard`]) lets N workers split one grid and a
+//! coordinator union their caches — the ROADMAP's sharding front end.
+//!
+//! Dependency-free by construction: `std::net` + the in-tree
+//! `util::json`, matching the offline vendor set.
+
+pub mod http;
+pub mod routes;
+pub mod shard;
+
+pub use http::{Request, Response, Server};
+pub use routes::ServerCtx;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::store::Store;
+use crate::device::MemTech;
+use crate::sweep::spec::DEFAULT_CAPACITIES_MB;
+use crate::sweep::{self, exec, memo, Memo, SweepSpec};
+
+/// Configuration for one server instance (the CLI's
+/// `serve --addr --jobs --prewarm --memo-cap --out`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; `:0` picks an ephemeral port.
+    pub addr: String,
+    /// Worker threads for both connections and in-request sweeps
+    /// (0 = one per core).
+    pub jobs: usize,
+    /// Solve the full paper grid before accepting traffic.
+    pub prewarm: bool,
+    /// LRU bound on the memo's point layer (None = unbounded).
+    pub memo_cap: Option<usize>,
+    /// Results directory: the memo warms from and persists to
+    /// `<out>/sweep_memo.json` there.
+    pub out: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8090".into(),
+            jobs: 0,
+            prewarm: false,
+            memo_cap: None,
+            out: "results".into(),
+        }
+    }
+}
+
+/// Evaluate the full paper grid into `memo`: every circuit-only point
+/// (the Fig 9 shape) plus the complete workload cross-product (the
+/// Fig 10 shape), so any slice of either is a pure cache hit
+/// afterwards. Returns (circuit solves performed, resident points).
+pub fn prewarm(memo: &Memo, jobs: usize) -> Result<(u64, usize)> {
+    let before = memo.solve_count();
+    let circuits =
+        SweepSpec::circuit_only(MemTech::ALL.to_vec(), DEFAULT_CAPACITIES_MB.to_vec());
+    sweep::run(&circuits, jobs, memo)?;
+    sweep::run(&SweepSpec::default(), jobs, memo)?;
+    Ok((memo.solve_count() - before, memo.point_len()))
+}
+
+/// Bind and start a server over `memo`. Warms from the on-disk cache
+/// in `cfg.out` when present; with `cfg.prewarm` also solves the full
+/// paper grid (and persists it back) before accepting traffic.
+pub fn start(cfg: &ServeConfig, memo: &'static Memo) -> Result<Server> {
+    memo.set_point_capacity(cfg.memo_cap);
+    let jobs = if cfg.jobs == 0 { exec::default_jobs() } else { cfg.jobs };
+
+    let store = Store::new(&cfg.out);
+    match memo.load_from(&store) {
+        Ok(n) if n > 0 => eprintln!(
+            "serve: warmed memo with {n} entries from {}",
+            store.blob_path(memo::MEMO_FILE).display()
+        ),
+        Ok(_) => {}
+        Err(e) => eprintln!("warning: ignoring memo cache: {e}"),
+    }
+    if cfg.prewarm {
+        let t0 = Instant::now();
+        let (solves, points) = prewarm(memo, jobs)?;
+        eprintln!(
+            "serve: prewarmed the paper grid in {:.1}s ({solves} circuit solves, \
+             {points} resident points)",
+            t0.elapsed().as_secs_f64()
+        );
+        if let Err(e) = memo.save_to(&store) {
+            eprintln!("warning: could not persist sweep memo: {e}");
+        }
+    }
+
+    let ctx = Arc::new(ServerCtx::new(memo, jobs));
+    Server::bind(&cfg.addr, jobs, move |req| routes::handle(&ctx, req))
+}
+
+/// Foreground CLI mode: serve the process-wide memo until killed.
+pub fn run(cfg: &ServeConfig) -> Result<()> {
+    let server = start(cfg, memo::global())?;
+    println!(
+        "deepnvm serve: listening on http://{} (GET / for usage; /healthz, \
+         /memo/stats, /memo/export; POST /solve, /sweep, /memo/merge)",
+        server.local_addr()
+    );
+    server.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prewarm_makes_fig9_slice_free() {
+        let memo = Memo::new();
+        // a tiny "paper grid": just assert the mechanism, not the full
+        // 180-point grid (the e2e test and --prewarm cover that).
+        let spec = SweepSpec::circuit_only(MemTech::ALL.to_vec(), vec![1, 2]);
+        sweep::run(&spec, 2, &memo).unwrap();
+        let solves = memo.solve_count();
+        let evals = memo.eval_count();
+        sweep::run(&spec, 2, &memo).unwrap();
+        assert_eq!(memo.solve_count(), solves);
+        assert_eq!(memo.eval_count(), evals);
+    }
+
+    #[test]
+    fn start_binds_ephemeral_port_and_answers() {
+        use std::io::{Read, Write};
+
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            jobs: 2,
+            out: std::env::temp_dir()
+                .join("deepnvm_serve_mod_test")
+                .to_string_lossy()
+                .into_owned(),
+            ..ServeConfig::default()
+        };
+        let memo: &'static Memo = Box::leak(Box::new(Memo::new()));
+        let server = start(&cfg, memo).unwrap();
+        let mut s = std::net::TcpStream::connect(server.local_addr()).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+        assert!(buf.contains("\"status\": \"ok\""), "{buf}");
+    }
+}

@@ -1,0 +1,432 @@
+//! Route handlers: the query API over the resident sweep grid.
+//!
+//! | route              | method | body / query                                   |
+//! |--------------------|--------|------------------------------------------------|
+//! | `/`                | GET    | plain-text usage                               |
+//! | `/healthz`         | GET    | liveness + uptime + request counter            |
+//! | `/memo/stats`      | GET    | cache population and solve/eval counters       |
+//! | `/solve`           | POST   | one grid point -> tuned config (+ eval)        |
+//! | `/sweep`           | POST   | `SweepSpec` JSON -> spec-ordered report rows   |
+//! | `/memo/export`     | GET    | full memo document (shard exchange format)     |
+//! | `/memo/merge`      | POST   | memo document -> per-entry merge accounting    |
+//!
+//! `/sweep` renders through the exact same report pipeline as the CLI
+//! (`reports::sweep_report_with`, `fig9_with`, `fig10_with`), so the
+//! `rows` array is byte-identical, cell for cell, to the CSV the CLI
+//! writes for the same query.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::reports::{self, Report};
+use crate::sweep::spec::{
+    parse_phase, parse_tech, resolve_dnn, spec_from_json, DEFAULT_CAPACITIES_MB,
+    MAX_CAPACITY_MB,
+};
+use crate::sweep::{self, memo, GridPoint, Memo, WorkloadPoint};
+use crate::util::json::Json;
+
+use super::http::{Request, Response};
+use super::shard;
+
+const USAGE: &str = "\
+deepnvm serve — resident sweep-query server
+
+  GET  /healthz           liveness
+  GET  /memo/stats        cache population + solve/eval counters
+  POST /solve             {\"tech\": \"stt\", \"capacity_mb\": 3, \"dnn\"?, \"phase\"?, \"batch\"?}
+  POST /sweep             SweepSpec JSON (+ \"jobs\", \"pareto\", \"report\": sweep|fig9|fig10)
+  GET  /memo/export       full memo document (the sweep_memo.json format)
+  POST /memo/merge        memo document from a shard worker
+";
+
+/// Shared state behind every route: the resident memo cache plus
+/// serving counters. One instance lives for the whole server.
+pub struct ServerCtx {
+    memo: &'static Memo,
+    /// Worker threads used *inside* a single `/sweep` evaluation.
+    jobs: usize,
+    started: Instant,
+    requests: AtomicU64,
+}
+
+impl ServerCtx {
+    pub fn new(memo: &'static Memo, jobs: usize) -> Self {
+        ServerCtx { memo, jobs, started: Instant::now(), requests: AtomicU64::new(0) }
+    }
+
+    /// The resident cache this server answers from.
+    pub fn memo(&self) -> &'static Memo {
+        self.memo
+    }
+}
+
+/// Top-level dispatch.
+pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
+    ctx.requests.fetch_add(1, Ordering::Relaxed);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/") => Response::text(200, USAGE),
+        ("GET", "/healthz") => healthz(ctx),
+        ("GET", "/memo/stats") => memo_stats(ctx),
+        ("POST", "/solve") => solve(ctx, req),
+        ("POST", "/sweep") => sweep_query(ctx, req),
+        ("GET", "/memo/export") => shard::export(ctx, req),
+        ("POST", "/memo/merge") => shard::merge(ctx, req),
+        (_, path) if KNOWN_PATHS.contains(&path) => {
+            Response::error(405, "method not allowed for this route")
+        }
+        _ => Response::error(404, "no such route (GET / for usage)"),
+    }
+}
+
+const KNOWN_PATHS: [&str; 7] = [
+    "/",
+    "/healthz",
+    "/memo/stats",
+    "/solve",
+    "/sweep",
+    "/memo/export",
+    "/memo/merge",
+];
+
+fn healthz(ctx: &ServerCtx) -> Response {
+    let mut j = Json::obj();
+    j.set("status", Json::Str("ok".into()));
+    j.set("uptime_s", Json::Num(ctx.started.elapsed().as_secs_f64()));
+    j.set("requests", Json::Num(ctx.requests.load(Ordering::Relaxed) as f64));
+    Response::json(200, &j)
+}
+
+fn memo_stats(ctx: &ServerCtx) -> Response {
+    let m = ctx.memo;
+    let mut j = Json::obj();
+    j.set("circuit_entries", Json::Num(m.circuit_len() as f64));
+    j.set("point_entries", Json::Num(m.point_len() as f64));
+    j.set("solve_count", Json::Num(m.solve_count() as f64));
+    j.set("eval_count", Json::Num(m.eval_count() as f64));
+    j.set(
+        "point_capacity",
+        match m.point_capacity() {
+            Some(c) => Json::Num(c as f64),
+            None => Json::Null,
+        },
+    );
+    j.set("model_version", Json::Num(memo::MODEL_VERSION as f64));
+    Response::json(200, &j)
+}
+
+/// Parse the `/solve` body into one grid point. Validation happens
+/// here, before the point can reach the solver's asserts.
+fn solve_point_from_json(j: &Json) -> Result<GridPoint> {
+    let tech = parse_tech(
+        j.get("tech")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("'tech' (sram|stt|sot) is required"))?,
+    )?;
+    let capacity_mb = j
+        .get("capacity_mb")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("'capacity_mb' (a positive integer) is required"))?;
+    if capacity_mb == 0 || capacity_mb > MAX_CAPACITY_MB {
+        bail!("capacity must be between 1 and {MAX_CAPACITY_MB} MB");
+    }
+    // Validate on the wide type: a truncating cast first would let
+    // 2^32+16 alias to the calibrated 16 nm node.
+    let node_nm = match j.get("node_nm") {
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| anyhow!("'node_nm' must be an integer"))?,
+        None => 16,
+    };
+    if node_nm != 16 {
+        bail!("process node {node_nm}nm is not calibrated (only 16nm)");
+    }
+    let node_nm = node_nm as u32;
+    let workload = match j.get("dnn") {
+        Some(Json::Str(name)) => {
+            let dnn = resolve_dnn(name)?;
+            let phase = match j.get("phase") {
+                Some(v) => parse_phase(
+                    v.as_str().ok_or_else(|| anyhow!("'phase' must be a string"))?,
+                )?,
+                None => crate::workload::models::Phase::Inference,
+            };
+            let batch = match j.get("batch") {
+                Some(v) => {
+                    let b = v
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("'batch' must be a positive integer"))?;
+                    if b == 0 || b > usize::MAX as u64 {
+                        bail!("batch size {b} is out of range");
+                    }
+                    b as usize
+                }
+                None => phase.paper_batch(),
+            };
+            Some(WorkloadPoint { dnn, phase, batch })
+        }
+        Some(Json::Null) | None => None,
+        Some(_) => bail!("'dnn' must be a workload name"),
+    };
+    Ok(GridPoint { tech, capacity_mb, node_nm, workload })
+}
+
+fn solve(ctx: &ServerCtx, req: &Request) -> Response {
+    let body = match req.body_json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    };
+    let point = match solve_point_from_json(&body) {
+        Ok(p) => p,
+        Err(e) => return Response::error(422, &e.to_string()),
+    };
+    let cached = ctx.memo.has_point(&point);
+    let result = sweep::evaluate_point(&point, ctx.memo);
+    let mut j = Json::obj();
+    j.set("cached", Json::Bool(cached));
+    j.set("result", memo::point_to_json(&result));
+    Response::json(200, &j)
+}
+
+/// Capacity list for the fig9/fig10 report bodies: `caps_mb` (parsed
+/// by the same axis helper the spec codec uses), falling back to the
+/// paper axis. Range validation stays with `SweepSpec::expand`, which
+/// the fallible fig9/fig10 pipeline surfaces as a 422.
+fn caps_from_json(body: &Json) -> Result<Vec<u64>> {
+    Ok(crate::sweep::spec::u64_axis(body, "caps_mb")?
+        .unwrap_or_else(|| DEFAULT_CAPACITIES_MB.to_vec()))
+}
+
+fn sweep_query(ctx: &ServerCtx, req: &Request) -> Response {
+    let body = match req.body_json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    };
+    // A request may ask for FEWER workers than the operator budget
+    // (e.g. jobs=1 to force the serial schedule), never more — one
+    // query must not be able to spawn unbounded OS threads.
+    let jobs = body
+        .get("jobs")
+        .and_then(Json::as_u64)
+        .map(|v| (v as usize).clamp(1, ctx.jobs.max(1)))
+        .unwrap_or(ctx.jobs);
+    let pareto = body.get("pareto").and_then(Json::as_bool).unwrap_or(false);
+    let render = body.get("render").and_then(Json::as_bool).unwrap_or(false);
+    let kind = body.get("report").and_then(Json::as_str).unwrap_or("sweep");
+
+    // Solve/eval deltas over this request — with concurrent writers
+    // they are approximate, but on a prewarmed server they read 0 and
+    // prove the query was pure cache hits.
+    let solves_before = ctx.memo.solve_count();
+    let evals_before = ctx.memo.eval_count();
+
+    let report: Report = match kind {
+        "sweep" => {
+            let spec = match spec_from_json(&body) {
+                Ok(s) => s,
+                Err(e) => return Response::error(422, &e.to_string()),
+            };
+            match reports::sweep_report_with(&spec, jobs, pareto, ctx.memo) {
+                Ok(r) => r,
+                Err(e) => return Response::error(422, &format!("{e:#}")),
+            }
+        }
+        "fig9" | "fig10" => {
+            let caps = match caps_from_json(&body) {
+                Ok(c) => c,
+                Err(e) => return Response::error(422, &e.to_string()),
+            };
+            let r = if kind == "fig9" {
+                reports::fig9_with(&caps, jobs, ctx.memo)
+            } else {
+                reports::fig10_with(&caps, jobs, ctx.memo)
+            };
+            match r {
+                Ok(r) => r,
+                Err(e) => return Response::error(422, &format!("{e:#}")),
+            }
+        }
+        other => {
+            return Response::error(422, &format!("unknown report '{other}' (sweep|fig9|fig10)"))
+        }
+    };
+
+    let mut j = report.csv.to_json();
+    j.set("id", Json::Str(report.id.to_string()));
+    j.set("title", Json::Str(report.title.clone()));
+    j.set(
+        "solves",
+        Json::Num(ctx.memo.solve_count().saturating_sub(solves_before) as f64),
+    );
+    j.set(
+        "evals",
+        Json::Num(ctx.memo.eval_count().saturating_sub(evals_before) as f64),
+    );
+    if render {
+        j.set("text", Json::Str(report.text));
+    }
+    Response::json(200, &j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::MemTech;
+    use crate::nvsim::explorer::tuned_cache;
+    use crate::workload::models::Phase;
+
+    const MB: u64 = 1024 * 1024;
+
+    fn leaked() -> &'static Memo {
+        Box::leak(Box::new(Memo::new()))
+    }
+
+    fn ctx() -> ServerCtx {
+        ServerCtx::new(leaked(), 2)
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            query: vec![],
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            query: vec![],
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    fn body_json(r: &Response) -> Json {
+        crate::util::json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn dispatch_matrix() {
+        let c = ctx();
+        assert_eq!(handle(&c, &get("/")).status, 200);
+        assert_eq!(handle(&c, &get("/healthz")).status, 200);
+        assert_eq!(handle(&c, &get("/memo/stats")).status, 200);
+        assert_eq!(handle(&c, &get("/nope")).status, 404);
+        // wrong method on a known route
+        assert_eq!(handle(&c, &get("/solve")).status, 405);
+        assert_eq!(handle(&c, &post("/healthz", "")).status, 405);
+        assert_eq!(c.requests.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn solve_point_parsing_and_validation() {
+        let p = solve_point_from_json(
+            &crate::util::json::parse(r#"{"tech": "sot", "capacity_mb": 2}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(p.tech, MemTech::SotMram);
+        assert_eq!(p.capacity_mb, 2);
+        assert_eq!(p.node_nm, 16);
+        assert!(p.workload.is_none());
+
+        let p = solve_point_from_json(
+            &crate::util::json::parse(
+                r#"{"tech": "stt", "capacity_mb": 3, "dnn": "alexnet", "phase": "training"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let w = p.workload.unwrap();
+        assert_eq!(w.dnn, "AlexNet");
+        assert_eq!(w.phase, Phase::Training);
+        assert_eq!(w.batch, 64, "paper batch applies by default");
+
+        for bad in [
+            r#"{}"#,
+            r#"{"tech": "dram", "capacity_mb": 1}"#,
+            r#"{"tech": "stt"}"#,
+            r#"{"tech": "stt", "capacity_mb": 0}"#,
+            r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 7}"#,
+            // 2^32 + 16 must not alias to the calibrated 16 nm node
+            r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 4294967312}"#,
+            // 2^44 MB would overflow the capacity byte math
+            r#"{"tech": "stt", "capacity_mb": 17592186044416}"#,
+            r#"{"tech": "stt", "capacity_mb": 1, "dnn": "NotANet"}"#,
+            r#"{"tech": "stt", "capacity_mb": 1, "dnn": "AlexNet", "batch": 0}"#,
+        ] {
+            let j = crate::util::json::parse(bad).unwrap();
+            assert!(solve_point_from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn solve_route_caches_and_matches_direct_solver() {
+        let c = ctx();
+        let req = post("/solve", r#"{"tech": "stt", "capacity_mb": 2}"#);
+        let r1 = handle(&c, &req);
+        assert_eq!(r1.status, 200);
+        let j1 = body_json(&r1);
+        assert_eq!(j1.get("cached").unwrap().as_bool(), Some(false));
+        let got = j1
+            .get("result")
+            .unwrap()
+            .get("tuned")
+            .unwrap()
+            .get("ppa")
+            .unwrap()
+            .get("read_latency")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let want = tuned_cache(MemTech::SttMram, 2 * MB).ppa.read_latency;
+        assert_eq!(got, want, "JSON roundtrip must preserve the solver's f64s");
+
+        let r2 = handle(&c, &req);
+        assert_eq!(body_json(&r2).get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(c.memo().solve_count(), 1, "second solve must be a memo hit");
+
+        // malformed and invalid bodies
+        assert_eq!(handle(&c, &post("/solve", "{not json")).status, 400);
+        assert_eq!(handle(&c, &post("/solve", r#"{"tech": "x"}"#)).status, 422);
+    }
+
+    #[test]
+    fn sweep_route_rows_match_cli_csv() {
+        let c = ctx();
+        let body = r#"{"techs": ["stt"], "caps_mb": [1, 2], "dnns": ["AlexNet"],
+                       "phases": ["inference"], "pareto": true}"#;
+        let r = handle(&c, &post("/sweep", body));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+
+        // the same query through the CLI report path, on a fresh memo
+        let spec = spec_from_json(&crate::util::json::parse(body).unwrap()).unwrap();
+        let expect = reports::sweep_report_with(&spec, 1, true, &Memo::new()).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), expect.csv.rows().len());
+        for (row, want) in rows.iter().zip(expect.csv.rows()) {
+            let got: Vec<&str> =
+                row.as_arr().unwrap().iter().map(|c| c.as_str().unwrap()).collect();
+            let want: Vec<&str> = want.iter().map(|s| s.as_str()).collect();
+            assert_eq!(got, want, "HTTP rows must be byte-identical to the CSV");
+        }
+        assert!(j.get("solves").unwrap().as_u64().unwrap() > 0, "cold first query");
+
+        // warm rerun: zero solves, zero evals
+        let r = handle(&c, &post("/sweep", body));
+        let j = body_json(&r);
+        assert_eq!(j.get("solves").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("evals").unwrap().as_u64(), Some(0));
+
+        // bad report kind
+        assert_eq!(handle(&c, &post("/sweep", r#"{"report": "fig99"}"#)).status, 422);
+        // invalid spec
+        assert_eq!(handle(&c, &post("/sweep", r#"{"techs": ["dram"]}"#)).status, 422);
+    }
+}

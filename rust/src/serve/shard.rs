@@ -1,0 +1,134 @@
+//! Shardable memo exchange — the ROADMAP's cross-process sharding
+//! front end.
+//!
+//! The wire format *is* the on-disk `sweep_memo.json` format
+//! ([`Memo::to_json`]): content-addressed entries, each carrying a
+//! payload hash that [`Memo::merge_json`] re-verifies on arrival. That
+//! gives the fleet workflow for free:
+//!
+//! 1. split one grid into N disjoint specs ([`split_caps`]),
+//! 2. each worker runs its shard (`deepnvm sweep` or its own `serve`)
+//!    and ships its cache — `GET /memo/export`, or simply the
+//!    `sweep_memo.json` it persisted,
+//! 3. a coordinator `POST /memo/merge`s every shard; the union answers
+//!    the full grid with zero circuit solves, and tampered or stale
+//!    entries are rejected entry-by-entry, never merged blind.
+
+use crate::sweep::{Memo, SweepSpec};
+use crate::util::json::Json;
+
+use super::http::{Request, Response};
+use super::routes::ServerCtx;
+
+/// `GET /memo/export` — the resident cache as one mergeable document.
+pub fn export(ctx: &ServerCtx, _req: &Request) -> Response {
+    Response::json(200, &ctx.memo().to_json())
+}
+
+/// `POST /memo/merge` — union a shard's exported cache into the
+/// resident one. Responds with per-entry accounting; a model-version
+/// mismatch is a 409 and merges nothing.
+pub fn merge(ctx: &ServerCtx, req: &Request) -> Response {
+    let doc = match req.body_json() {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    };
+    let st = ctx.memo().merge_json(&doc);
+    let mut j = Json::obj();
+    j.set("version_ok", Json::Bool(st.version_ok));
+    j.set("accepted", Json::Num(st.accepted as f64));
+    j.set("skipped", Json::Num(st.skipped as f64));
+    j.set("rejected", Json::Num(st.rejected as f64));
+    j.set("circuit_entries", Json::Num(ctx.memo().circuit_len() as f64));
+    j.set("point_entries", Json::Num(ctx.memo().point_len() as f64));
+    let status = if st.version_ok { 200 } else { 409 };
+    Response::json(status, &j)
+}
+
+/// Split a spec into at most `n` disjoint shards along the capacity
+/// axis (the axis that dominates circuit-solve cost, so shards
+/// load-balance naturally). Capacities are dealt round-robin; the
+/// shard expansions partition the full expansion exactly, so merging
+/// the shard memos reproduces the full-grid cache.
+pub fn split_caps(spec: &SweepSpec, n: usize) -> Vec<SweepSpec> {
+    let n = n.max(1);
+    let mut shards: Vec<SweepSpec> = (0..n.min(spec.capacities_mb.len().max(1)))
+        .map(|_| SweepSpec { capacities_mb: vec![], ..spec.clone() })
+        .collect();
+    for (i, &mb) in spec.capacities_mb.iter().enumerate() {
+        let k = i % shards.len();
+        shards[k].capacities_mb.push(mb);
+    }
+    shards.retain(|s| !s.capacities_mb.is_empty());
+    shards
+}
+
+/// Convenience for shard workers driven from Rust: run a shard spec
+/// into `memo` and return the exported document to ship to the
+/// coordinator.
+pub fn run_shard(spec: &SweepSpec, jobs: usize, memo: &Memo) -> anyhow::Result<Json> {
+    crate::sweep::run(spec, jobs, memo)?;
+    Ok(memo.to_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::MemTech;
+    use crate::workload::models::Phase;
+    use std::collections::HashSet;
+
+    fn spec() -> SweepSpec {
+        SweepSpec {
+            techs: MemTech::ALL.to_vec(),
+            capacities_mb: vec![1, 2, 4, 8, 16],
+            dnns: vec!["AlexNet".into()],
+            phases: Phase::ALL.to_vec(),
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_expansion() {
+        let full = spec();
+        let all: HashSet<_> = full.expand().unwrap().into_iter().collect();
+        for n in [1, 2, 3, 5, 9] {
+            let shards = split_caps(&full, n);
+            assert!(shards.len() <= n);
+            assert!(!shards.is_empty());
+            let mut seen = HashSet::new();
+            for s in &shards {
+                for p in s.expand().unwrap() {
+                    assert!(seen.insert(p), "shards must be disjoint (n={n})");
+                }
+            }
+            assert_eq!(seen, all, "shards must cover the full grid (n={n})");
+        }
+    }
+
+    #[test]
+    fn merged_shard_memos_answer_full_grid_without_solving() {
+        let full = spec();
+        let shards = split_caps(&full, 2);
+        assert_eq!(shards.len(), 2);
+
+        // two workers, two private caches
+        let coordinator = Memo::new();
+        for s in &shards {
+            let worker = Memo::new();
+            let doc = run_shard(s, 2, &worker).unwrap();
+            let st = coordinator.merge_json(&doc);
+            assert!(st.version_ok);
+            assert_eq!(st.rejected, 0);
+            assert!(st.accepted > 0);
+        }
+
+        // the union replays the FULL grid from cache alone
+        let res = crate::sweep::run(&full, 2, &coordinator).unwrap();
+        assert_eq!(res.points.len(), full.expand().unwrap().len());
+        assert_eq!(coordinator.solve_count(), 0, "no circuit solves after merge");
+        assert_eq!(coordinator.eval_count(), 0, "no traffic evals after merge");
+    }
+}

@@ -16,7 +16,7 @@
 //! [`MODEL_VERSION`]; bumping it invalidates every cached result when
 //! the underlying models change.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -58,13 +58,150 @@ struct CircuitKey {
     node_nm: u32,
 }
 
+/// The point-layer cache with an optional LRU capacity bound. The
+/// circuit layer stays unbounded: it holds one entry per
+/// (tech, capacity, node) — a few dozen at most — while the point
+/// layer grows with the full workload cross-product and is what makes
+/// `sweep_memo.json` balloon on very large grids.
+///
+/// Recency is a monotonic clock: every hit or insert stamps the entry,
+/// and `order` (stamp -> point) yields the least-recently-used victim
+/// in O(log n) when over capacity.
+#[derive(Default)]
+struct PointCache {
+    map: HashMap<GridPoint, (PointResult, u64)>,
+    order: BTreeMap<u64, GridPoint>,
+    clock: u64,
+    cap: Option<usize>,
+}
+
+impl PointCache {
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Cached result, bumping the entry's recency. While unbounded
+    /// (the common configuration) recency is not tracked at all, so
+    /// the hot memoization path pays no BTreeMap churn; [`set_cap`]
+    /// rebuilds the bookkeeping if a bound arrives later.
+    ///
+    /// [`set_cap`]: PointCache::set_cap
+    fn get_touch(&mut self, p: &GridPoint) -> Option<PointResult> {
+        if self.cap.is_none() {
+            return self.map.get(p).map(|(r, _)| r.clone());
+        }
+        let stamp = self.tick();
+        let (r, s) = self.map.get_mut(p)?;
+        let old = std::mem::replace(s, stamp);
+        let out = r.clone();
+        self.order.remove(&old);
+        self.order.insert(stamp, *p);
+        Some(out)
+    }
+
+    /// Presence check without touching recency (cheap: no clone, no
+    /// reordering — the executor probes every grid point up front).
+    fn peek(&self, p: &GridPoint) -> bool {
+        self.map.contains_key(p)
+    }
+
+    fn insert(&mut self, r: PointResult) {
+        if self.cap.is_none() {
+            self.map.insert(r.point, (r, 0));
+            return;
+        }
+        let stamp = self.tick();
+        let point = r.point;
+        if let Some((_, old)) = self.map.insert(point, (r, stamp)) {
+            self.order.remove(&old);
+        }
+        self.order.insert(stamp, point);
+        self.trim();
+    }
+
+    /// Insert only when absent (merge semantics: in-memory entries
+    /// win). Returns whether the entry was inserted.
+    fn insert_if_absent(&mut self, r: PointResult) -> bool {
+        if self.map.contains_key(&r.point) {
+            return false;
+        }
+        self.insert(r);
+        true
+    }
+
+    fn trim(&mut self) {
+        if let Some(cap) = self.cap {
+            while self.map.len() > cap {
+                let (&oldest, &victim) =
+                    self.order.iter().next().expect("order tracks map");
+                self.order.remove(&oldest);
+                self.map.remove(&victim);
+            }
+        }
+    }
+
+    fn set_cap(&mut self, cap: Option<usize>) {
+        let rebuild = cap.is_some() && self.cap.is_none();
+        self.cap = cap;
+        if rebuild {
+            // Recency was not tracked while unbounded; seed every
+            // resident entry with a fresh (arbitrary-order) stamp.
+            self.order.clear();
+            let points: Vec<GridPoint> = self.map.keys().copied().collect();
+            for p in points {
+                self.clock += 1;
+                let stamp = self.clock;
+                if let Some((_, s)) = self.map.get_mut(&p) {
+                    *s = stamp;
+                }
+                self.order.insert(stamp, p);
+            }
+        } else if cap.is_none() {
+            self.order.clear();
+        }
+        self.trim();
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+        self.clock = 0;
+    }
+
+    fn snapshot(&self) -> Vec<PointResult> {
+        self.map.values().map(|(r, _)| r.clone()).collect()
+    }
+}
+
+/// Outcome of merging a serialized cache document into a [`Memo`] —
+/// the shard-exchange accounting the serve subsystem reports back to
+/// workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Entries newly inserted.
+    pub accepted: usize,
+    /// Entries skipped because the key is already resident (in-memory
+    /// results are never clobbered).
+    pub skipped: usize,
+    /// Entries rejected by payload-hash / sanity checks.
+    pub rejected: usize,
+    /// False when the document's model version mismatches
+    /// [`MODEL_VERSION`]; nothing is merged in that case.
+    pub version_ok: bool,
+}
+
 /// The memoization cache. One [`global`] instance backs the analysis
 /// and report paths; tests and benches create private instances to get
 /// isolated solve/eval counters.
 #[derive(Default)]
 pub struct Memo {
     circuit: Mutex<HashMap<CircuitKey, TunedConfig>>,
-    points: Mutex<HashMap<GridPoint, PointResult>>,
+    points: Mutex<PointCache>,
     solves: AtomicU64,
     evals: AtomicU64,
 }
@@ -72,6 +209,26 @@ pub struct Memo {
 impl Memo {
     pub fn new() -> Self {
         Memo::default()
+    }
+
+    /// A memo whose point layer is LRU-bounded to `cap` entries (the
+    /// `--memo-cap` bound; the small circuit layer is never evicted).
+    pub fn with_capacity(cap: usize) -> Self {
+        let m = Memo::default();
+        m.points.lock().unwrap().cap = Some(cap);
+        m
+    }
+
+    /// (Re)bound the point layer; `None` removes the bound. Shrinking
+    /// below the current population evicts least-recently-used entries
+    /// immediately.
+    pub fn set_point_capacity(&self, cap: Option<usize>) {
+        self.points.lock().unwrap().set_cap(cap);
+    }
+
+    /// The point layer's LRU bound, if any.
+    pub fn point_capacity(&self) -> Option<usize> {
+        self.points.lock().unwrap().cap
     }
 
     /// EDAP-optimal cache at (tech, capacity) on the default 16 nm
@@ -102,22 +259,22 @@ impl Memo {
         self.circuit.lock().unwrap().contains_key(&key)
     }
 
-    /// Cached full grid-point result, if any.
+    /// Cached full grid-point result, if any (bumps LRU recency).
     pub fn cached_point(&self, p: &GridPoint) -> Option<PointResult> {
-        self.points.lock().unwrap().get(p).cloned()
+        self.points.lock().unwrap().get_touch(p)
     }
 
     /// Whether a grid-point result is already cached (cheaper than
-    /// [`Memo::cached_point`]: no clone).
+    /// [`Memo::cached_point`]: no clone, recency untouched).
     pub fn has_point(&self, p: &GridPoint) -> bool {
-        self.points.lock().unwrap().contains_key(p)
+        self.points.lock().unwrap().peek(p)
     }
 
     /// Record a freshly evaluated grid point (counts as one traffic-
     /// model evaluation).
     pub fn record_point(&self, r: PointResult) {
         self.evals.fetch_add(1, Ordering::Relaxed);
-        self.points.lock().unwrap().insert(r.point, r);
+        self.points.lock().unwrap().insert(r);
     }
 
     /// Circuit-model solves performed (not served from cache).
@@ -138,7 +295,8 @@ impl Memo {
         self.points.lock().unwrap().len()
     }
 
-    /// Drop all cached entries and zero the counters.
+    /// Drop all cached entries and zero the counters (the LRU bound is
+    /// kept).
     pub fn clear(&self) {
         self.circuit.lock().unwrap().clear();
         self.points.lock().unwrap().clear();
@@ -172,8 +330,7 @@ impl Memo {
             .collect();
         root.set("circuit", Json::Arr(centries));
 
-        let mut points: Vec<PointResult> =
-            self.points.lock().unwrap().values().cloned().collect();
+        let mut points: Vec<PointResult> = self.points.lock().unwrap().snapshot();
         points.sort_by_key(|r| r.point.key());
         let pentries: Vec<Json> = points.iter().map(point_to_json).collect();
         root.set("points", Json::Arr(pentries));
@@ -182,31 +339,46 @@ impl Memo {
 
     /// Merge entries from a serialized cache. Returns how many entries
     /// were accepted; a version mismatch ignores the whole document.
+    /// Shorthand for [`Memo::merge_json`]`.accepted`.
+    pub fn load_json(&self, doc: &Json) -> usize {
+        self.merge_json(doc).accepted
+    }
+
+    /// Merge entries from a serialized cache document (the on-disk
+    /// `sweep_memo.json` format, which is also the shard-exchange wire
+    /// format of `GET /memo/export` / `POST /memo/merge`), with full
+    /// per-entry accounting.
     ///
     /// In-memory entries take precedence: freshly computed results are
-    /// never clobbered by what is on disk (this is what makes
+    /// never clobbered by what arrives (this is what makes
     /// `--cold`-then-persist extend the cache rather than let stale
-    /// disk entries overwrite the recomputation). Entries whose stored
-    /// payload hash does not match their re-serialized content — or
-    /// whose values fail basic sanity (non-finite/non-positive PPA,
-    /// inconsistent organization) — are rejected.
-    pub fn load_json(&self, doc: &Json) -> usize {
+    /// disk entries overwrite the recomputation, and what lets a
+    /// coordinator union shard caches in any order). Entries whose
+    /// stored payload hash does not match their re-serialized content
+    /// — or whose values fail basic sanity (non-finite/non-positive
+    /// PPA, inconsistent organization) — are rejected.
+    pub fn merge_json(&self, doc: &Json) -> MergeStats {
+        let mut st = MergeStats { version_ok: true, ..MergeStats::default() };
         let version = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0);
         if version as u32 != MODEL_VERSION {
-            return 0;
+            st.version_ok = false;
+            return st;
         }
-        let mut loaded = 0;
         if let Some(entries) = doc.get("circuit").and_then(Json::as_arr) {
             for e in entries {
-                let Some(node) = e.get("node_nm").and_then(Json::as_f64) else {
+                let parsed = e
+                    .get("node_nm")
+                    .and_then(Json::as_f64)
+                    .zip(e.get("tuned").and_then(tuned_from_json));
+                let Some((node, t)) = parsed else {
+                    st.rejected += 1;
                     continue;
                 };
-                let Some(tj) = e.get("tuned") else { continue };
-                let Some(t) = tuned_from_json(tj) else { continue };
                 // Integrity: the stored hash must match the payload as
                 // the reconstructed config re-serializes it.
                 let expect = payload_hash(&tuned_to_json(&t));
                 if e.get("payload_hash").and_then(Json::as_str) != Some(expect.as_str()) {
+                    st.rejected += 1;
                     continue;
                 }
                 let key = CircuitKey {
@@ -215,15 +387,20 @@ impl Memo {
                     node_nm: node as u32,
                 };
                 let mut map = self.circuit.lock().unwrap();
-                if !map.contains_key(&key) {
+                if map.contains_key(&key) {
+                    st.skipped += 1;
+                } else {
                     map.insert(key, t);
-                    loaded += 1;
+                    st.accepted += 1;
                 }
             }
         }
         if let Some(entries) = doc.get("points").and_then(Json::as_arr) {
             for e in entries {
-                let Some(r) = point_from_json(e) else { continue };
+                let Some(r) = point_from_json(e) else {
+                    st.rejected += 1;
+                    continue;
+                };
                 // Content checks: identity key + hash, and the payload
                 // hash over the re-serialized result values.
                 let expect_key = r.point.key();
@@ -234,16 +411,17 @@ impl Memo {
                     || e.get("payload_hash").and_then(Json::as_str)
                         != Some(expect_payload.as_str())
                 {
+                    st.rejected += 1;
                     continue;
                 }
-                let mut map = self.points.lock().unwrap();
-                if !map.contains_key(&r.point) {
-                    map.insert(r.point, r);
-                    loaded += 1;
+                if self.points.lock().unwrap().insert_if_absent(r) {
+                    st.accepted += 1;
+                } else {
+                    st.skipped += 1;
                 }
             }
         }
-        loaded
+        st
     }
 
     /// Persist to `sweep_memo.json` in the store's directory.
@@ -318,7 +496,9 @@ fn ppa_from_json(j: &Json) -> Option<CachePpa> {
     })
 }
 
-fn tuned_to_json(t: &TunedConfig) -> Json {
+/// Serialize a tuned cache configuration (also the `tuned` payload of
+/// serve's `/solve` responses).
+pub fn tuned_to_json(t: &TunedConfig) -> Json {
     let mut o = Json::obj();
     o.set("tech", Json::Str(t.tech.name().to_string()));
     o.set("capacity_bytes", Json::Num(t.capacity_bytes as f64));
@@ -335,7 +515,9 @@ fn tuned_to_json(t: &TunedConfig) -> Json {
     o
 }
 
-fn tuned_from_json(j: &Json) -> Option<TunedConfig> {
+/// Parse a tuned cache configuration back from its JSON form,
+/// rejecting insane values.
+pub fn tuned_from_json(j: &Json) -> Option<TunedConfig> {
     let tech = parse_tech(j.get("tech")?.as_str()?).ok()?;
     let capacity_bytes = j.get("capacity_bytes")?.as_f64()? as u64;
     let opt = OptTarget::from_name(j.get("opt")?.as_str()?)?;
@@ -382,7 +564,10 @@ fn point_payload_hash(r: &PointResult) -> String {
     payload_hash(&payload)
 }
 
-fn point_to_json(r: &PointResult) -> Json {
+/// Serialize one evaluated grid point — key, content hashes, tuned
+/// config and (for workload points) the projected metrics. The memo
+/// file format and serve's `/solve` result body.
+pub fn point_to_json(r: &PointResult) -> Json {
     let p = &r.point;
     let mut o = Json::obj();
     o.set("key", Json::Str(p.key()));
@@ -414,7 +599,10 @@ fn point_to_json(r: &PointResult) -> Json {
     o
 }
 
-fn point_from_json(j: &Json) -> Option<PointResult> {
+/// Parse one evaluated grid point back from its JSON form (identity
+/// and payload hashes are NOT verified here — [`Memo::merge_json`]
+/// does that).
+pub fn point_from_json(j: &Json) -> Option<PointResult> {
     let tech = parse_tech(j.get("tech")?.as_str()?).ok()?;
     let capacity_mb = j.get("capacity_mb")?.as_f64()? as u64;
     let node_nm = j.get("node_nm")?.as_f64()? as u32;
@@ -524,6 +712,112 @@ mod tests {
         let fresh = Memo::new();
         assert_eq!(fresh.load_json(&json::parse(&tampered).unwrap()), 0);
         assert_eq!(fresh.circuit_len(), 0);
+    }
+
+    #[test]
+    fn lru_capacity_evicts_oldest_point() {
+        use crate::sweep::evaluate_point;
+        use crate::sweep::spec::GridPoint;
+
+        let m = Memo::with_capacity(2);
+        assert_eq!(m.point_capacity(), Some(2));
+        let pt = |mb| GridPoint {
+            tech: MemTech::Sram,
+            capacity_mb: mb,
+            node_nm: 16,
+            workload: None,
+        };
+        let (a, b, c) = (pt(1), pt(2), pt(3));
+        evaluate_point(&a, &m);
+        evaluate_point(&b, &m);
+        // touch `a` so `b` becomes least recently used
+        assert!(m.cached_point(&a).is_some());
+        evaluate_point(&c, &m);
+        assert_eq!(m.point_len(), 2, "cap must hold");
+        assert!(m.has_point(&a), "recently touched entry must survive");
+        assert!(!m.has_point(&b), "LRU entry must be evicted");
+        assert!(m.has_point(&c));
+        // the circuit layer is never evicted
+        assert_eq!(m.circuit_len(), 3);
+
+        // shrinking the bound trims immediately
+        m.set_point_capacity(Some(1));
+        assert_eq!(m.point_len(), 1);
+        // lifting it allows regrowth
+        m.set_point_capacity(None);
+        evaluate_point(&b, &m);
+        evaluate_point(&a, &m);
+        assert_eq!(m.point_len(), 3);
+        // bounding a previously unbounded cache (where recency was not
+        // tracked) still trims to the cap
+        m.set_point_capacity(Some(2));
+        assert_eq!(m.point_len(), 2);
+        m.cached_point(&m_resident(&m, &[a, b, c])).unwrap();
+    }
+
+    /// First of `candidates` still resident in `m`.
+    fn m_resident(
+        m: &Memo,
+        candidates: &[crate::sweep::spec::GridPoint],
+    ) -> crate::sweep::spec::GridPoint {
+        *candidates.iter().find(|p| m.has_point(p)).expect("one resident")
+    }
+
+    #[test]
+    fn capped_serialization_stays_bounded() {
+        use crate::sweep::evaluate_point;
+        use crate::sweep::spec::GridPoint;
+
+        let m = Memo::with_capacity(1);
+        for mb in 1..=3u64 {
+            evaluate_point(
+                &GridPoint {
+                    tech: MemTech::SttMram,
+                    capacity_mb: mb,
+                    node_nm: 16,
+                    workload: None,
+                },
+                &m,
+            );
+        }
+        let doc = m.to_json();
+        assert_eq!(doc.get("points").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn merge_json_accounts_for_every_entry() {
+        let a = Memo::new();
+        a.tuned(MemTech::Sram, MB);
+        a.tuned(MemTech::SttMram, MB);
+        let doc = a.to_json();
+
+        // fresh memo: everything accepted
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&doc);
+        assert!(st.version_ok);
+        assert_eq!(st.accepted, 2);
+        assert_eq!(st.skipped, 0);
+        assert_eq!(st.rejected, 0);
+
+        // idempotent re-merge: everything skipped
+        let st = fresh.merge_json(&doc);
+        assert_eq!((st.accepted, st.skipped, st.rejected), (0, 2, 0));
+
+        // tampered hash: rejected, not silently dropped
+        let t = a.tuned(MemTech::Sram, MB);
+        let text = doc.to_pretty();
+        let hash = payload_hash(&tuned_to_json(&t));
+        let tampered = text.replace(&hash, "ffffffffffffffff");
+        let st = Memo::new().merge_json(&json::parse(&tampered).unwrap());
+        assert_eq!(st.accepted, 1);
+        assert_eq!(st.rejected, 1);
+
+        // stale version: nothing merged, flagged
+        let mut stale = a.to_json();
+        stale.set("version", Json::Num(0.0));
+        let st = Memo::new().merge_json(&stale);
+        assert!(!st.version_ok);
+        assert_eq!(st.accepted + st.skipped + st.rejected, 0);
     }
 
     #[test]

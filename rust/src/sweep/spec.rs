@@ -9,9 +9,10 @@
 //! so results are reproducible regardless of how the grid is later
 //! scheduled across workers.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::device::MemTech;
+use crate::util::json::Json;
 use crate::workload::models::{Dnn, Phase};
 
 /// Default capacity axis (MB) — the paper's Algorithm-1/Fig 9/10 set,
@@ -19,6 +20,12 @@ use crate::workload::models::{Dnn, Phase};
 /// drift apart.
 pub const DEFAULT_CAPACITIES_MB: [u64; 6] =
     crate::nvsim::explorer::PAPER_CAPACITIES_MB;
+
+/// Largest accepted cache capacity (MB). Far beyond any plausible LLC
+/// (the paper tops out at 32), but small enough that `mb * MB` can
+/// never overflow the byte math downstream — untrusted HTTP inputs
+/// reach [`SweepSpec::expand`] unfiltered.
+pub const MAX_CAPACITY_MB: u64 = 4096;
 
 /// The workload coordinates of a grid point (absent for circuit-only
 /// sweeps such as Fig 9, where only the cache PPA is of interest).
@@ -161,6 +168,9 @@ impl SweepSpec {
             if mb == 0 {
                 bail!("capacity must be at least 1 MB");
             }
+            if mb > MAX_CAPACITY_MB {
+                bail!("capacity {mb} MB exceeds the {MAX_CAPACITY_MB} MB model limit");
+            }
         }
         let mut dnns: Vec<&'static str> = Vec::new();
         for name in &self.dnns {
@@ -223,6 +233,211 @@ impl SweepSpec {
         out.retain(|p| self.filters.iter().all(|f| f.keep(p)));
         Ok(out)
     }
+}
+
+/// Serialize a [`Filter`] as a tagged JSON object (`{"kind": ...}`).
+pub fn filter_to_json(f: &Filter) -> Json {
+    let mut o = Json::obj();
+    match f {
+        Filter::NvmOnly => {
+            o.set("kind", Json::Str("nvm_only".into()));
+        }
+        Filter::TechIs(t) => {
+            o.set("kind", Json::Str("tech_is".into()));
+            o.set("tech", Json::Str(t.name().to_string()));
+        }
+        Filter::CapacityAtLeast(mb) => {
+            o.set("kind", Json::Str("capacity_at_least".into()));
+            o.set("mb", Json::Num(*mb as f64));
+        }
+        Filter::CapacityAtMost(mb) => {
+            o.set("kind", Json::Str("capacity_at_most".into()));
+            o.set("mb", Json::Num(*mb as f64));
+        }
+        Filter::PhaseIs(ph) => {
+            o.set("kind", Json::Str("phase_is".into()));
+            o.set("phase", Json::Str(ph.name().to_string()));
+        }
+    }
+    o
+}
+
+/// Parse a [`Filter`] from its tagged JSON form.
+pub fn filter_from_json(j: &Json) -> Result<Filter> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("filter needs a string 'kind'"))?;
+    Ok(match kind {
+        "nvm_only" => Filter::NvmOnly,
+        "tech_is" => Filter::TechIs(parse_tech(
+            j.get("tech")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tech_is filter needs 'tech'"))?,
+        )?),
+        "capacity_at_least" => Filter::CapacityAtLeast(
+            j.get("mb")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("capacity_at_least filter needs integer 'mb'"))?,
+        ),
+        "capacity_at_most" => Filter::CapacityAtMost(
+            j.get("mb")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("capacity_at_most filter needs integer 'mb'"))?,
+        ),
+        "phase_is" => Filter::PhaseIs(parse_phase(
+            j.get("phase")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("phase_is filter needs 'phase'"))?,
+        )?),
+        other => bail!("unknown filter kind '{other}'"),
+    })
+}
+
+/// Serialize a [`SweepSpec`] to JSON — the wire format of the `serve`
+/// subsystem's `POST /sweep` body. Every axis is always written, so
+/// the document is self-describing.
+pub fn spec_to_json(s: &SweepSpec) -> Json {
+    let mut o = Json::obj();
+    o.set(
+        "techs",
+        Json::Arr(s.techs.iter().map(|t| Json::Str(t.name().to_string())).collect()),
+    );
+    o.set(
+        "caps_mb",
+        Json::Arr(s.capacities_mb.iter().map(|&m| Json::Num(m as f64)).collect()),
+    );
+    o.set(
+        "dnns",
+        Json::Arr(s.dnns.iter().map(|d| Json::Str(d.clone())).collect()),
+    );
+    o.set(
+        "phases",
+        Json::Arr(s.phases.iter().map(|p| Json::Str(p.name().to_string())).collect()),
+    );
+    o.set(
+        "batches",
+        Json::Arr(s.batches.iter().map(|&b| Json::Num(b as f64)).collect()),
+    );
+    o.set(
+        "nodes_nm",
+        Json::Arr(s.nodes_nm.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    o.set("filters", Json::Arr(s.filters.iter().map(filter_to_json).collect()));
+    o
+}
+
+fn str_axis(j: &Json, key: &str) -> Result<Option<Vec<String>>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("'{key}' must be an array of strings"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for e in arr {
+                out.push(
+                    e.as_str()
+                        .ok_or_else(|| anyhow!("'{key}' entries must be strings"))?
+                        .to_string(),
+                );
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
+/// Extract an optional array-of-non-negative-integers axis (shared
+/// with the serve routes so every grid axis parses identically).
+pub(crate) fn u64_axis(j: &Json, key: &str) -> Result<Option<Vec<u64>>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("'{key}' must be an array of integers"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for e in arr {
+                out.push(
+                    e.as_u64()
+                        .ok_or_else(|| anyhow!("'{key}' entries must be non-negative integers"))?,
+                );
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
+/// Parse a [`SweepSpec`] from JSON. Absent axes take the paper
+/// defaults ([`SweepSpec::default`]); a *present but empty* `dnns`
+/// array means a circuit-only sweep, exactly like the CLI's
+/// `--dnns none`. A top-level `"nvm_only": true` is accepted as
+/// shorthand for the [`Filter::NvmOnly`] filter. Unknown keys are
+/// ignored so the spec can ride inside a larger request body.
+/// Validation of the axis *values* (unknown workloads, uncalibrated
+/// nodes) still happens in [`SweepSpec::expand`].
+pub fn spec_from_json(j: &Json) -> Result<SweepSpec> {
+    let mut s = SweepSpec::default();
+    if let Some(names) = str_axis(j, "techs")? {
+        let mut techs = Vec::with_capacity(names.len());
+        for n in &names {
+            techs.push(parse_tech(n)?);
+        }
+        s.techs = techs;
+    }
+    if let Some(caps) = u64_axis(j, "caps_mb")? {
+        s.capacities_mb = caps;
+    }
+    if let Some(dnns) = str_axis(j, "dnns")? {
+        s.dnns = dnns;
+    }
+    if let Some(names) = str_axis(j, "phases")? {
+        let mut phases = Vec::with_capacity(names.len());
+        for n in &names {
+            phases.push(parse_phase(n)?);
+        }
+        s.phases = phases;
+    }
+    if let Some(batches) = u64_axis(j, "batches")? {
+        let mut out = Vec::with_capacity(batches.len());
+        for b in batches {
+            if b > usize::MAX as u64 {
+                bail!("'batches' entry {b} is out of range");
+            }
+            out.push(b as usize);
+        }
+        s.batches = out;
+    }
+    if let Some(nodes) = u64_axis(j, "nodes_nm")? {
+        // Range-check before narrowing: a truncating cast would let
+        // 2^32+16 alias to the calibrated 16 nm node.
+        let mut out = Vec::with_capacity(nodes.len());
+        for n in nodes {
+            if n > u32::MAX as u64 {
+                bail!("'nodes_nm' entry {n} is out of range");
+            }
+            out.push(n as u32);
+        }
+        s.nodes_nm = out;
+    }
+    if let Some(v) = j.get("filters") {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| anyhow!("'filters' must be an array"))?;
+        let mut filters = Vec::with_capacity(arr.len());
+        for f in arr {
+            filters.push(filter_from_json(f)?);
+        }
+        s.filters = filters;
+    } else {
+        s.filters = vec![];
+    }
+    if j.get("nvm_only").and_then(Json::as_bool) == Some(true)
+        && !s.filters.contains(&Filter::NvmOnly)
+    {
+        s.filters.push(Filter::NvmOnly);
+    }
+    Ok(s)
 }
 
 /// Resolve a user-supplied workload name against the zoo
@@ -323,6 +538,13 @@ mod tests {
 
         let s = SweepSpec { batches: vec![0], ..SweepSpec::default() };
         assert!(s.expand().is_err());
+
+        // 2^44 MB would overflow the byte math (mb * 2^20) downstream
+        let s = SweepSpec {
+            capacities_mb: vec![1 << 44],
+            ..SweepSpec::default()
+        };
+        assert!(s.expand().is_err());
     }
 
     #[test]
@@ -343,6 +565,75 @@ mod tests {
         assert_eq!(keys.len(), n, "grid keys must be unique");
         // hash is a pure function of the key
         assert_eq!(pts[0].key_hash(), pts[0].key_hash());
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::SttMram, MemTech::SotMram],
+            capacities_mb: vec![2, 8],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Training],
+            batches: vec![16, 64],
+            nodes_nm: vec![16],
+            filters: vec![
+                Filter::NvmOnly,
+                Filter::TechIs(MemTech::SttMram),
+                Filter::CapacityAtLeast(2),
+                Filter::CapacityAtMost(8),
+                Filter::PhaseIs(Phase::Training),
+            ],
+        };
+        let j = spec_to_json(&spec);
+        let back = spec_from_json(&j).unwrap();
+        assert_eq!(back.techs, spec.techs);
+        assert_eq!(back.capacities_mb, spec.capacities_mb);
+        assert_eq!(back.dnns, spec.dnns);
+        assert_eq!(back.phases, spec.phases);
+        assert_eq!(back.batches, spec.batches);
+        assert_eq!(back.nodes_nm, spec.nodes_nm);
+        assert_eq!(back.filters, spec.filters);
+        // and through the text parser
+        let reparsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(spec_from_json(&reparsed).unwrap().filters, spec.filters);
+    }
+
+    #[test]
+    fn spec_from_json_defaults_and_shorthand() {
+        // empty object = the full default grid
+        let d = spec_from_json(&Json::obj()).unwrap();
+        assert_eq!(d.techs, MemTech::ALL.to_vec());
+        assert_eq!(d.capacities_mb, DEFAULT_CAPACITIES_MB.to_vec());
+        assert_eq!(d.dnns.len(), Dnn::zoo().len());
+        assert!(d.filters.is_empty());
+
+        // present-but-empty dnns = circuit-only; nvm_only shorthand
+        let j = crate::util::json::parse(
+            r#"{"dnns": [], "caps_mb": [1, 2], "nvm_only": true, "jobs": 4}"#,
+        )
+        .unwrap();
+        let s = spec_from_json(&j).unwrap();
+        assert!(s.dnns.is_empty());
+        assert_eq!(s.capacities_mb, vec![1, 2]);
+        assert_eq!(s.filters, vec![Filter::NvmOnly]);
+        // 2 caps x 2 NVM techs after the filter
+        assert_eq!(s.expand().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn spec_from_json_rejects_malformed() {
+        for bad in [
+            r#"{"techs": "stt"}"#,
+            r#"{"techs": ["dram"]}"#,
+            r#"{"caps_mb": [1.5]}"#,
+            r#"{"caps_mb": [-1]}"#,
+            r#"{"phases": ["both"]}"#,
+            r#"{"filters": [{"kind": "bogus"}]}"#,
+            r#"{"filters": [{"kind": "tech_is"}]}"#,
+        ] {
+            let j = crate::util::json::parse(bad).unwrap();
+            assert!(spec_from_json(&j).is_err(), "{bad}");
+        }
     }
 
     #[test]

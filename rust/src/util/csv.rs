@@ -59,6 +59,36 @@ impl Csv {
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// JSON view `{"header": [...], "rows": [[...], ...]}`. Cells are
+    /// the exact strings the CSV emits (before CSV quoting), so a JSON
+    /// consumer sees rows byte-identical to the CSV artifact.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set(
+            "header",
+            Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        o.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        o
+    }
 }
 
 fn join(cells: &[String]) -> String {
@@ -95,5 +125,25 @@ mod tests {
     fn arity_mismatch_panics() {
         let mut c = Csv::new(&["a", "b"]);
         c.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn json_view_carries_raw_cells() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["has,comma".into(), "2".into()]);
+        let j = c.to_json();
+        assert_eq!(
+            j.get("header").unwrap().as_arr().unwrap()[0].as_str().unwrap(),
+            "a"
+        );
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        // raw cell, not the CSV-quoted form
+        assert_eq!(
+            rows[0].as_arr().unwrap()[0].as_str().unwrap(),
+            "has,comma"
+        );
+        assert_eq!(c.header(), ["a".to_string(), "b".to_string()]);
+        assert_eq!(c.rows().len(), 1);
     }
 }

@@ -51,6 +51,28 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as an exact non-negative integer (rejects
+    /// fractional or negative numbers, unlike the truncating
+    /// [`Json::as_usize`]) — the right accessor for counts and sizes
+    /// arriving over the wire.
+    pub fn as_u64(&self) -> Option<u64> {
+        // `u64::MAX as f64` rounds UP to 2^64, so the bound must be
+        // strict or 2^64 would silently saturate to u64::MAX.
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
@@ -426,5 +448,18 @@ mod tests {
         assert_eq!(parse("0").unwrap().as_f64().unwrap(), 0.0);
         // non-finite serializes as null
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn typed_accessors() {
+        assert_eq!(parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(parse("1").unwrap().as_bool(), None);
+        assert_eq!(parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(parse("\"7\"").unwrap().as_u64(), None);
+        // 2^64 is exactly representable in f64 but not in u64
+        assert_eq!(parse("18446744073709551616").unwrap().as_u64(), None);
     }
 }

@@ -1,0 +1,258 @@
+//! End-to-end guarantees of the serve subsystem, over real sockets:
+//!
+//! (a) a `/sweep` for the fig9 slice returns rows value-identical to
+//!     `analysis::scalability` (and therefore to the `fig9` CLI CSV,
+//!     whose formatting is pinned in `tests/sweep.rs`), and a warm
+//!     repeat performs zero circuit solves and zero evaluations;
+//! (b) `/memo/merge` of two disjoint shard exports reproduces the
+//!     full-grid memo — the merged server replays the whole grid
+//!     without solving — while tampered entries are rejected with
+//!     their payload-hash checks failing;
+//! (c) `/solve` answers from cache on repeat, and protocol errors map
+//!     to 4xx, never a hang or a worker death.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use deepnvm::analysis::scalability;
+use deepnvm::serve::http::Server;
+use deepnvm::serve::routes::{self, ServerCtx};
+use deepnvm::serve::shard;
+use deepnvm::sweep::{Memo, SweepSpec};
+use deepnvm::util::json::{self, Json};
+use deepnvm::util::table::f;
+use deepnvm::workload::models::Phase;
+use deepnvm::device::MemTech;
+
+const MB: u64 = 1024 * 1024;
+
+fn leaked_memo() -> &'static Memo {
+    Box::leak(Box::new(Memo::new()))
+}
+
+fn boot(memo: &'static Memo) -> Server {
+    let ctx = Arc::new(ServerCtx::new(memo, 2));
+    Server::bind("127.0.0.1:0", 2, move |req| routes::handle(&ctx, req)).unwrap()
+}
+
+/// Raw one-shot HTTP client: returns (status, body).
+fn request(server: &Server, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {buf:?}"))
+        .parse()
+        .unwrap();
+    let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn get(server: &Server, path: &str) -> (u16, String) {
+    request(server, "GET", path, "")
+}
+
+fn post(server: &Server, path: &str, body: &str) -> (u16, String) {
+    request(server, "POST", path, body)
+}
+
+// ---------------------------------------------------------------- (a)
+
+#[test]
+fn sweep_fig9_rows_match_scalability_and_warm_repeat_is_free() {
+    let memo = leaked_memo();
+    let server = boot(memo);
+    let body = r#"{"report": "fig9", "caps_mb": [1, 2]}"#;
+
+    let (status, text) = post(&server, "/sweep", body);
+    assert_eq!(status, 200, "{text}");
+    let j = json::parse(&text).unwrap();
+
+    // expected rows from the analysis layer, formatted exactly as the
+    // fig9 CLI CSV formats them
+    let expect: Vec<Vec<String>> = scalability::ppa_sweep(&[1, 2])
+        .iter()
+        .map(|c| {
+            let p = c.ppa;
+            vec![
+                c.tech.name().to_string(),
+                (c.capacity_bytes / MB).to_string(),
+                f(p.read_latency * 1e9, 2),
+                f(p.write_latency * 1e9, 2),
+                f(p.read_energy * 1e9, 3),
+                f(p.write_energy * 1e9, 3),
+                f(p.leakage_power * 1e3, 0),
+                f(p.area * 1e6, 2),
+            ]
+        })
+        .collect();
+    let rows = j.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), expect.len());
+    for (row, want) in rows.iter().zip(&expect) {
+        let got: Vec<String> = row
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(&got, want, "HTTP rows must match the fig9 CSV cells");
+    }
+
+    // warm repeat: pure memo hits
+    let solves = memo.solve_count();
+    let evals = memo.eval_count();
+    let (status, text) = post(&server, "/sweep", body);
+    assert_eq!(status, 200);
+    let j = json::parse(&text).unwrap();
+    assert_eq!(j.get("solves").unwrap().as_u64(), Some(0));
+    assert_eq!(j.get("evals").unwrap().as_u64(), Some(0));
+    assert_eq!(memo.solve_count(), solves, "warm /sweep must not solve");
+    assert_eq!(memo.eval_count(), evals, "warm /sweep must not re-evaluate");
+}
+
+#[test]
+fn sweep_default_report_round_trips_spec_options() {
+    let server = boot(leaked_memo());
+    let body = r#"{"techs": ["sot"], "caps_mb": [1], "dnns": ["SqueezeNet"],
+                   "phases": ["training"], "pareto": true, "render": true}"#;
+    let (status, text) = post(&server, "/sweep", body);
+    assert_eq!(status, 200, "{text}");
+    let j = json::parse(&text).unwrap();
+    assert_eq!(j.get("id").unwrap().as_str(), Some("SW"));
+    let rows = j.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    let header = j.get("header").unwrap().as_arr().unwrap();
+    assert_eq!(header[0].as_str(), Some("tech"));
+    assert!(j.get("text").unwrap().as_str().unwrap().contains("Pareto frontier"));
+}
+
+// ---------------------------------------------------------------- (b)
+
+#[test]
+fn disjoint_shard_merges_reproduce_the_full_grid_memo() {
+    let full = SweepSpec {
+        techs: MemTech::ALL.to_vec(),
+        capacities_mb: vec![1, 2],
+        dnns: vec!["AlexNet".into()],
+        phases: Phase::ALL.to_vec(),
+        batches: vec![],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let shards = shard::split_caps(&full, 2);
+    assert_eq!(shards.len(), 2);
+
+    let memo = leaked_memo();
+    let server = boot(memo);
+    let mut exports = Vec::new();
+    for s in &shards {
+        let worker = Memo::new();
+        let doc = shard::run_shard(s, 2, &worker).unwrap();
+        exports.push(doc.to_pretty());
+    }
+    for e in &exports {
+        let (status, text) = post(&server, "/memo/merge", e);
+        assert_eq!(status, 200, "{text}");
+        let j = json::parse(&text).unwrap();
+        assert_eq!(j.get("version_ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("rejected").unwrap().as_u64(), Some(0));
+        assert!(j.get("accepted").unwrap().as_u64().unwrap() > 0);
+    }
+
+    // the merged cache answers the FULL grid over HTTP with zero work
+    let spec_body = r#"{"techs": ["sram", "stt", "sot"], "caps_mb": [1, 2],
+                        "dnns": ["AlexNet"]}"#;
+    let (status, text) = post(&server, "/sweep", spec_body);
+    assert_eq!(status, 200, "{text}");
+    let j = json::parse(&text).unwrap();
+    assert_eq!(j.get("solves").unwrap().as_u64(), Some(0), "zero solves on replay");
+    assert_eq!(j.get("evals").unwrap().as_u64(), Some(0), "zero evals on replay");
+    assert_eq!(memo.solve_count(), 0);
+    assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 12);
+
+    // export from the coordinator equals a re-mergeable document
+    let (status, text) = get(&server, "/memo/export");
+    assert_eq!(status, 200);
+    let reimport = Memo::new();
+    let st = reimport.merge_json(&json::parse(&text).unwrap());
+    assert!(st.version_ok);
+    assert_eq!(st.rejected, 0);
+    assert_eq!(reimport.point_len(), memo.point_len());
+}
+
+#[test]
+fn tampered_shard_entries_are_rejected() {
+    let worker = Memo::new();
+    let doc = shard::run_shard(
+        &SweepSpec::circuit_only(vec![MemTech::SttMram], vec![1]),
+        1,
+        &worker,
+    )
+    .unwrap();
+    let text = doc.to_pretty();
+    // corrupt the first payload hash in the document
+    let needle = "\"payload_hash\": \"";
+    let at = text.find(needle).unwrap() + needle.len();
+    let mut tampered = text.clone();
+    tampered.replace_range(at..at + 16, "0123456789abcdef");
+    assert_ne!(tampered, text);
+
+    let server = boot(leaked_memo());
+    let (status, body) = post(&server, "/memo/merge", &tampered);
+    assert_eq!(status, 200);
+    let j = json::parse(&body).unwrap();
+    assert!(j.get("rejected").unwrap().as_u64().unwrap() >= 1, "{body}");
+
+    // stale model version: 409, nothing merged
+    let mut stale = doc;
+    stale.set("version", Json::Num(0.0));
+    let (status, body) = post(&server, "/memo/merge", &stale.to_pretty());
+    assert_eq!(status, 409);
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("version_ok").unwrap().as_bool(), Some(false));
+    assert_eq!(j.get("accepted").unwrap().as_u64(), Some(0));
+}
+
+// ---------------------------------------------------------------- (c)
+
+#[test]
+fn solve_healthz_and_protocol_errors() {
+    let memo = leaked_memo();
+    let server = boot(memo);
+
+    let (status, text) = get(&server, "/healthz");
+    assert_eq!(status, 200);
+    assert!(text.contains("\"status\": \"ok\""), "{text}");
+
+    let body = r#"{"tech": "sot", "capacity_mb": 1, "dnn": "AlexNet", "phase": "training"}"#;
+    let (status, text) = post(&server, "/solve", body);
+    assert_eq!(status, 200, "{text}");
+    let j = json::parse(&text).unwrap();
+    assert_eq!(j.get("cached").unwrap().as_bool(), Some(false));
+    let eval = j.get("result").unwrap().get("eval").unwrap();
+    assert!(eval.get("edp_norm").unwrap().as_f64().unwrap() > 0.0);
+
+    let (_, text) = post(&server, "/solve", body);
+    let j = json::parse(&text).unwrap();
+    assert_eq!(j.get("cached").unwrap().as_bool(), Some(true));
+
+    let (status, text) = get(&server, "/memo/stats");
+    assert_eq!(status, 200);
+    let j = json::parse(&text).unwrap();
+    assert!(j.get("point_entries").unwrap().as_u64().unwrap() >= 1);
+    assert_eq!(j.get("point_capacity").unwrap(), &Json::Null);
+
+    // error mapping
+    assert_eq!(post(&server, "/solve", "{oops").0, 400);
+    assert_eq!(post(&server, "/solve", r#"{"tech": "stt"}"#).0, 422);
+    assert_eq!(get(&server, "/bogus").0, 404);
+    assert_eq!(get(&server, "/sweep").0, 405);
+}
