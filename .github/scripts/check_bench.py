@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Gate CI on the recorded bench baselines.
+
+Parses BENCH_sweep.json / BENCH_serve.json / BENCH_distributed.json —
+freshly rewritten by the bench-smoke step — and fails when a recorded
+value crosses the acceptance thresholds the files themselves carry.
+Null timings mean the bench did not actually run; that is a failure
+here, not a skip, because this gate is what keeps the perf trajectory
+honest (the committed baselines start null only in environments with
+no Rust toolchain — CI is not one of them).
+
+Usage: check_bench.py [dir-containing-the-BENCH-files]
+"""
+
+import json
+import pathlib
+import sys
+
+root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+failures = []
+
+
+def load(name):
+    path = root / name
+    if not path.exists():
+        failures.append(f"{name}: missing (did the bench smoke step run?)")
+        return None
+    try:
+        return json.loads(path.read_text())
+    except ValueError as e:
+        failures.append(f"{name}: unparseable ({e})")
+        return None
+
+
+def recorded(doc, name, key):
+    value = doc.get(key)
+    if value is None:
+        failures.append(f"{name}: '{key}' was not recorded (bench did not run?)")
+    return value
+
+
+sweep = load("BENCH_sweep.json")
+if sweep is not None:
+    acc = sweep.get("acceptance", {})
+    speedup = recorded(sweep, "BENCH_sweep.json", "parallel_speedup")
+    floor = acc.get("parallel_speedup_min")
+    if speedup is not None and floor is not None and speedup < floor:
+        failures.append(
+            f"BENCH_sweep.json: parallel_speedup {speedup:.2f} < required {floor}"
+        )
+    solves = recorded(sweep, "BENCH_sweep.json", "warm_rerun_circuit_solves")
+    ceiling = acc.get("warm_rerun_circuit_solves_max", 0)
+    if solves is not None and solves > ceiling:
+        failures.append(
+            "BENCH_sweep.json: warm_rerun_circuit_solves "
+            f"{solves} > allowed {ceiling}"
+        )
+
+serve = load("BENCH_serve.json")
+if serve is not None:
+    cold = recorded(serve, "BENCH_serve.json", "cold_solve_ms")
+    warm = recorded(serve, "BENCH_serve.json", "warm_solve_ms")
+    if cold is not None and warm is not None and warm >= cold:
+        failures.append(
+            f"BENCH_serve.json: warm_solve_ms {warm:.3f} >= cold_solve_ms "
+            f"{cold:.3f} (the memo hit must beat the cold solve)"
+        )
+
+dist = load("BENCH_distributed.json")
+if dist is not None:
+    acc = dist.get("acceptance", {})
+    for key, cap_key in (
+        ("replay_solves", "replay_solves_max"),
+        ("replay_evals", "replay_evals_max"),
+    ):
+        value = recorded(dist, "BENCH_distributed.json", key)
+        ceiling = acc.get(cap_key, 0)
+        if value is not None and value > ceiling:
+            failures.append(
+                f"BENCH_distributed.json: {key} {value} > allowed {ceiling} "
+                "(the merged shard union must cover the full grid)"
+            )
+
+if failures:
+    print("bench acceptance FAILED:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+print("bench acceptance OK")

@@ -1,0 +1,111 @@
+//! Bench DC: the multi-host scheduler end to end — one coordinator
+//! driving two in-process `serve` workers over loopback, versus the
+//! same grid swept in a single process — and the
+//! `BENCH_distributed.json` baseline emitter. The acceptance contract
+//! is correctness-shaped: after the merges, the coordinator's replay
+//! of the full grid must perform zero circuit solves and zero traffic
+//! evals (the distributed path may of course be slower than in-process
+//! on one machine: it pays HTTP, JSON and merge overhead to buy
+//! multi-host scale-out).
+//!
+//! Run: `cargo bench --bench distributed_sweep [-- --quick]`
+
+mod bench_common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use deepnvm::serve::http::Server;
+use deepnvm::serve::routes::{self, ServerCtx};
+use deepnvm::serve::scheduler::{coordinate, ScheduleConfig};
+use deepnvm::sweep::{self, Memo, SweepSpec};
+use deepnvm::util::json::Json;
+
+fn worker() -> Server {
+    let memo: &'static Memo = Box::leak(Box::new(Memo::new()));
+    let ctx = Arc::new(ServerCtx::new(memo, 2));
+    Server::bind("127.0.0.1:0", 2, move |req| routes::handle(&ctx, req)).expect("bind")
+}
+
+fn main() {
+    let quick = bench_common::quick();
+    let spec = SweepSpec {
+        capacities_mb: if quick { vec![1, 2] } else { vec![1, 2, 4, 8] },
+        dnns: vec!["AlexNet".into()],
+        ..SweepSpec::default()
+    };
+    let n_points = spec.expand().expect("bench spec").len();
+
+    // reference: the same grid in-process, cold
+    let t0 = Instant::now();
+    let single = sweep::run(&spec, 2, &Memo::new()).expect("single-process sweep");
+    let single_s = t0.elapsed().as_secs_f64();
+    assert_eq!(single.points.len(), n_points);
+
+    // fleet: two workers, one coordinator, everything over loopback
+    let (w1, w2) = (worker(), worker());
+    let cfg = ScheduleConfig {
+        workers: vec![w1.local_addr().to_string(), w2.local_addr().to_string()],
+        jobs: 2,
+        ..ScheduleConfig::default()
+    };
+    let memo = Memo::new();
+    let t0 = Instant::now();
+    let report = coordinate(&spec, &cfg, &memo).expect("coordinate");
+    let dist_s = t0.elapsed().as_secs_f64();
+
+    assert_eq!(report.grid_points, n_points);
+    assert_eq!(report.replay_solves, 0, "merged union must replay without solving");
+    assert_eq!(report.replay_evals, 0, "merged union must replay without evaluating");
+
+    println!(
+        "distributed_sweep: {n_points} grid points, {} shards over 2 workers",
+        report.shards.len()
+    );
+    println!("  single process      {:>10.2} ms", single_s * 1e3);
+    println!(
+        "  coordinated fleet   {:>10.2} ms  ({:.2}x the single-process time)",
+        dist_s * 1e3,
+        dist_s / single_s
+    );
+    println!(
+        "  merged {} entries, replay: {} solves / {} evals",
+        report.accepted, report.replay_solves, report.replay_evals
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("distributed_sweep".into()));
+    j.set(
+        "note",
+        Json::Str(
+            "Coordinator + two loopback workers vs one process; regenerate with \
+             `cargo bench --bench distributed_sweep`."
+                .into(),
+        ),
+    );
+    let mut acc = Json::obj();
+    acc.set("replay_solves_max", Json::Num(0.0));
+    acc.set("replay_evals_max", Json::Num(0.0));
+    j.set("acceptance", acc);
+    j.set("quick", Json::Bool(quick));
+    j.set("grid_points", Json::Num(n_points as f64));
+    j.set("shards", Json::Num(report.shards.len() as f64));
+    j.set("workers", Json::Num(2.0));
+    j.set("single_ms", Json::Num(single_s * 1e3));
+    j.set("distributed_ms", Json::Num(dist_s * 1e3));
+    j.set("distributed_overhead", Json::Num(dist_s / single_s));
+    j.set("merge_accepted", Json::Num(report.accepted as f64));
+    j.set("replay_solves", Json::Num(report.replay_solves as f64));
+    j.set("replay_evals", Json::Num(report.replay_evals as f64));
+
+    // Land next to CHANGES.md when run from rust/ or the repo root.
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_distributed.json"
+    } else {
+        "BENCH_distributed.json"
+    };
+    match std::fs::write(path, j.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

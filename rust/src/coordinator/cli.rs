@@ -1,7 +1,7 @@
 //! Command-line interface (hand-rolled: the offline vendor set has no
 //! clap). `deepnvm <command> [--out DIR] [--quick] [--batches a,b,c]`.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::reports::{self, Report};
 use super::store::Store;
@@ -38,7 +38,11 @@ DESIGN-SPACE ENGINE:
   serve         Long-lived HTTP server over the same engine: scenario
                 queries at cache-hit latency (POST /solve, /sweep) and
                 shardable memo exchange (GET /memo/export, POST
-                /memo/merge)
+                /memo/merge, POST /shard/run)
+  coordinate    Multi-host scheduler: split a grid into cost-balanced
+                shards, assign them to a fleet of `deepnvm serve`
+                workers, retry stragglers/dead workers, merge exports,
+                and verify a zero-solve full-grid replay
 
 OTHER:
   e2e-train     Train the TinyCNN artifact via PJRT (needs `make artifacts`)
@@ -68,10 +72,21 @@ SERVE OPTIONS:
                   so steady-state queries perform zero circuit solves
   --jobs, --out, --memo-cap as above
 
+COORDINATE OPTIONS:
+  --workers LIST     comma-separated worker addresses (required)
+  --spec FILE        SweepSpec JSON file (default: built from the sweep
+                     axis flags above)
+  --retries N        reassignments allowed per shard (default 3)
+  --deadline-secs S  per-shard dispatch deadline (default 120)
+  --status-addr A:P  serve GET /scheduler/status here during the run
+  --jobs, --out, --cold as above (the merged memo persists to --out)
+
 EXAMPLE:
   deepnvm sweep --techs stt,sot --caps 2,8,32 --dnns AlexNet,ResNet-18 \\
       --jobs 8 --pareto --out results
   deepnvm serve --addr 0.0.0.0:8090 --prewarm --memo-cap 100000
+  deepnvm coordinate --workers host1:8090,host2:8090 --caps 1,2,4,8,16,32 \\
+      --status-addr 127.0.0.1:8095 --out results
 ";
 
 /// Parsed options.
@@ -101,6 +116,17 @@ pub struct CliOptions {
     pub addr: String,
     /// Prewarm the full paper grid before `serve` accepts traffic.
     pub prewarm: bool,
+    /// Worker fleet for `coordinate` (`--workers`).
+    pub workers: Vec<String>,
+    /// SweepSpec JSON file for `coordinate` (`--spec`); None = build
+    /// the spec from the sweep axis flags.
+    pub spec_file: Option<String>,
+    /// Per-shard reassignment budget for `coordinate`.
+    pub retries: usize,
+    /// Per-shard dispatch deadline for `coordinate`, in seconds.
+    pub deadline_secs: u64,
+    /// Status-server bind address for `coordinate` (`--status-addr`).
+    pub status_addr: Option<String>,
 }
 
 impl Default for CliOptions {
@@ -123,6 +149,11 @@ impl Default for CliOptions {
             memo_cap: None,
             addr: "127.0.0.1:8090".into(),
             prewarm: false,
+            workers: vec![],
+            spec_file: None,
+            retries: 3,
+            deadline_secs: 120,
+            status_addr: None,
         }
     }
 }
@@ -218,6 +249,34 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
                 o.addr = value()?.clone();
             }
             "--prewarm" => o.prewarm = true,
+            "--workers" => {
+                o.workers = split_list(value()?)
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+                if o.workers.is_empty() {
+                    bail!("--workers needs at least one address");
+                }
+            }
+            "--spec" => {
+                o.spec_file = Some(value()?.clone());
+            }
+            "--retries" => {
+                o.retries = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --retries: {e}"))?;
+            }
+            "--deadline-secs" => {
+                o.deadline_secs = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --deadline-secs: {e}"))?;
+                if o.deadline_secs == 0 {
+                    bail!("--deadline-secs must be at least 1");
+                }
+            }
+            "--status-addr" => {
+                o.status_addr = Some(value()?.clone());
+            }
             other => bail!("unknown option '{other}' (try: deepnvm help)"),
         }
     }
@@ -348,6 +407,90 @@ pub fn generate(o: &CliOptions) -> Result<Vec<Report>> {
     })
 }
 
+/// The spec `deepnvm coordinate` distributes: an explicit `--spec`
+/// JSON file when given, else the sweep axis flags.
+fn coordinate_spec(o: &CliOptions) -> Result<SweepSpec> {
+    match &o.spec_file {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("cannot read --spec {path}"))?;
+            let doc = crate::util::json::parse(&text)
+                .with_context(|| format!("--spec {path} is not valid JSON"))?;
+            crate::sweep::spec::spec_from_json(&doc)
+        }
+        None => sweep_spec_from(o),
+    }
+}
+
+/// `deepnvm coordinate`: drive a worker fleet through one grid and
+/// persist the merged memo. Fails unless the merged union replays the
+/// full grid with zero circuit solves and zero traffic evals.
+fn coordinate_cmd(o: &CliOptions) -> Result<()> {
+    if o.workers.is_empty() {
+        bail!("coordinate needs --workers host:port[,host:port...]");
+    }
+    let spec = coordinate_spec(o)?;
+    let cfg = crate::serve::ScheduleConfig {
+        workers: o.workers.clone(),
+        retries: o.retries,
+        deadline: std::time::Duration::from_secs(o.deadline_secs),
+        jobs: o.jobs,
+        status_addr: o.status_addr.clone(),
+    };
+    let memo = crate::sweep::memo::global();
+    let store = Store::new(&o.out);
+    if !o.cold {
+        match memo.load_from(&store) {
+            Ok(n) if n > 0 => {
+                eprintln!("coordinate: warmed memo with {n} cached entries");
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("warning: ignoring memo cache: {e}"),
+        }
+    }
+
+    let coordinator = crate::serve::Coordinator::new(&spec, &cfg)?;
+    if let Some(addr) = coordinator.status_addr() {
+        println!("coordinate: status at http://{addr}/scheduler/status");
+    }
+    println!(
+        "coordinate: {} -> {} shard(s) over {} worker(s)",
+        spec.summary(),
+        coordinator.shard_count(),
+        o.workers.len()
+    );
+    let report = coordinator.run(memo)?;
+    for (i, s) in report.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: caps {:?} ({} points, {} attempt(s)) -> {}",
+            s.caps_mb, s.points, s.attempts, s.state
+        );
+    }
+    println!(
+        "coordinate: merged {} new entries ({} shard(s) reassigned) in {:.1}s",
+        report.accepted,
+        report.reassigned,
+        report.wall.as_secs_f64()
+    );
+    println!(
+        "coordinate: replay: {} circuit solves, {} traffic evals over {} points",
+        report.replay_solves, report.replay_evals, report.grid_points
+    );
+    if report.replay_solves != 0 || report.replay_evals != 0 {
+        bail!(
+            "the merged shard union did not cover the grid ({} solves, {} evals \
+             on replay) — were the workers LRU-capped below their shard size?",
+            report.replay_solves,
+            report.replay_evals
+        );
+    }
+    match memo.save_to(&store) {
+        Ok(path) => println!("coordinate: merged memo persisted to {}", path.display()),
+        Err(e) => eprintln!("warning: could not persist sweep memo: {e}"),
+    }
+    Ok(())
+}
+
 /// Run the e2e training demo (delegates to the runtime).
 #[cfg(feature = "pjrt")]
 fn e2e_train(o: &CliOptions) -> Result<()> {
@@ -420,6 +563,13 @@ pub fn run_cli(args: &[String]) -> i32 {
                 }
             }
         }
+        "coordinate" => match coordinate_cmd(&o) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
         _ => match generate(&o) {
             Ok(rs) => {
                 let mut store = Store::new(&o.out);
@@ -501,6 +651,54 @@ mod tests {
         assert!(parse_args(&sv(&["serve", "--memo-cap", "0"])).is_err());
         assert!(parse_args(&sv(&["serve", "--memo-cap", "x"])).is_err());
         assert!(parse_args(&sv(&["serve", "--addr"])).is_err());
+    }
+
+    #[test]
+    fn parses_coordinate_options() {
+        let o = parse_args(&sv(&[
+            "coordinate", "--workers", "h1:8090, h2:8090", "--retries", "5",
+            "--deadline-secs", "30", "--status-addr", "127.0.0.1:0", "--caps", "1,2",
+        ]))
+        .unwrap();
+        assert_eq!(o.command, "coordinate");
+        assert_eq!(o.workers, vec!["h1:8090".to_string(), "h2:8090".to_string()]);
+        assert_eq!(o.retries, 5);
+        assert_eq!(o.deadline_secs, 30);
+        assert_eq!(o.status_addr.as_deref(), Some("127.0.0.1:0"));
+        assert!(o.spec_file.is_none());
+
+        assert!(parse_args(&sv(&["coordinate", "--workers", ","])).is_err());
+        assert!(parse_args(&sv(&["coordinate", "--deadline-secs", "0"])).is_err());
+        assert!(parse_args(&sv(&["coordinate", "--retries", "x"])).is_err());
+    }
+
+    #[test]
+    fn coordinate_requires_workers_and_a_readable_spec() {
+        let o = parse_args(&sv(&["coordinate"])).unwrap();
+        let e = coordinate_cmd(&o).unwrap_err();
+        assert!(e.to_string().contains("--workers"), "{e}");
+
+        let o = parse_args(&sv(&[
+            "coordinate", "--workers", "h:1", "--spec", "/nonexistent/spec.json",
+        ]))
+        .unwrap();
+        let e = coordinate_cmd(&o).unwrap_err();
+        assert!(format!("{e:#}").contains("--spec"), "{e:#}");
+
+        // a spec file round-trips through the JSON codec
+        let dir = std::env::temp_dir().join("deepnvm_coordinate_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        std::fs::write(&path, r#"{"techs": ["stt"], "caps_mb": [1, 2], "dnns": []}"#)
+            .unwrap();
+        let o = parse_args(&sv(&[
+            "coordinate", "--workers", "h:1", "--spec",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let spec = coordinate_spec(&o).unwrap();
+        assert_eq!(spec.capacities_mb, vec![1, 2]);
+        assert!(spec.dnns.is_empty());
     }
 
     #[test]

@@ -273,6 +273,61 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
     Ok(req)
 }
 
+/// Ceiling on how long [`call`] waits to *connect*, independent of the
+/// request deadline: a dead host should be detected in seconds even
+/// when the caller is willing to wait minutes for a long shard run.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One-shot HTTP client over `std::net` — the coordinator side of the
+/// protocol this module serves (`serve::scheduler` dispatches shards
+/// and probes worker health through it). Connects to `addr`
+/// (`host:port`), sends one `Connection: close` request, and returns
+/// `(status, body)`. `timeout` bounds each socket read/write (so a
+/// stalled worker surfaces as an error, not a hang); connecting is
+/// additionally capped at [`CONNECT_TIMEOUT`].
+pub fn call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> Result<(u16, String)> {
+    use std::net::ToSocketAddrs;
+
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("cannot resolve '{addr}'"))?
+        .next()
+        .ok_or_else(|| anyhow!("'{addr}' resolves to no address"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout.min(CONNECT_TIMEOUT))
+        .with_context(|| format!("cannot connect to {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body.as_bytes()))
+        .with_context(|| format!("cannot send request to {addr}"))?;
+    let mut text = String::new();
+    BufReader::new(&mut stream)
+        .read_to_string(&mut text)
+        .with_context(|| format!("connection to {addr} failed mid-response"))?;
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed response from {addr}"))?;
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
 type Handler = dyn Fn(&Request) -> Response + Send + Sync;
 
 #[derive(Default)]
@@ -546,6 +601,26 @@ mod tests {
         assert!(buf.starts_with("HTTP/1.1 100 Continue\r\n\r\n"), "{buf}");
         assert!(buf.contains("HTTP/1.1 200 OK"), "{buf}");
         assert!(buf.ends_with("got 4 bytes"), "{buf}");
+    }
+
+    #[test]
+    fn client_call_round_trips() {
+        let server = Server::bind("127.0.0.1:0", 1, |req| {
+            Response::text(200, &format!("{} {} {}", req.method, req.path, req.body.len()))
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let (status, body) = call(&addr, "POST", "/x", "12345", Duration::from_secs(5)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "POST /x 5");
+
+        // nothing listening: an error, not a hang
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead = l.local_addr().unwrap().to_string();
+        drop(l);
+        assert!(call(&dead, "GET", "/", "", Duration::from_secs(1)).is_err());
+        // unresolvable host
+        assert!(call("no-such-host.invalid:1", "GET", "/", "", Duration::from_secs(1)).is_err());
     }
 
     #[test]

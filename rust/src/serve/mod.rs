@@ -7,17 +7,22 @@
 //! `--prewarm` runs the full paper grid at startup, after which a
 //! `/sweep` for any paper slice performs zero circuit solves. The
 //! shard exchange ([`shard`]) lets N workers split one grid and a
-//! coordinator union their caches — the ROADMAP's sharding front end.
+//! coordinator union their caches, and the multi-host scheduler
+//! ([`scheduler`]) drives that fleet end to end: `deepnvm coordinate`
+//! assigns shards, retries stragglers and dead workers, and merges
+//! exports until the union replays the full grid with zero solves.
 //!
 //! Dependency-free by construction: `std::net` + the in-tree
 //! `util::json`, matching the offline vendor set.
 
 pub mod http;
 pub mod routes;
+pub mod scheduler;
 pub mod shard;
 
 pub use http::{Request, Response, Server};
 pub use routes::ServerCtx;
+pub use scheduler::{coordinate, Coordinator, ScheduleConfig, ScheduleReport};
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -110,7 +115,7 @@ pub fn run(cfg: &ServeConfig) -> Result<()> {
     let server = start(cfg, memo::global())?;
     println!(
         "deepnvm serve: listening on http://{} (GET / for usage; /healthz, \
-         /memo/stats, /memo/export; POST /solve, /sweep, /memo/merge)",
+         /memo/stats, /memo/export; POST /solve, /sweep, /memo/merge, /shard/run)",
         server.local_addr()
     );
     server.join();

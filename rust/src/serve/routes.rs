@@ -9,6 +9,7 @@
 //! | `/sweep`           | POST   | `SweepSpec` JSON -> spec-ordered report rows   |
 //! | `/memo/export`     | GET    | full memo document (shard exchange format)     |
 //! | `/memo/merge`      | POST   | memo document -> per-entry merge accounting    |
+//! | `/shard/run`       | POST   | shard `SweepSpec` -> run into memo + export    |
 //!
 //! `/sweep` renders through the exact same report pipeline as the CLI
 //! (`reports::sweep_report_with`, `fig9_with`, `fig10_with`), so the
@@ -40,6 +41,8 @@ deepnvm serve — resident sweep-query server
   POST /sweep             SweepSpec JSON (+ \"jobs\", \"pareto\", \"report\": sweep|fig9|fig10)
   GET  /memo/export       full memo document (the sweep_memo.json format)
   POST /memo/merge        memo document from a shard worker
+  POST /shard/run         SweepSpec JSON: run the shard into the resident memo,
+                          return the export (the `deepnvm coordinate` protocol)
 ";
 
 /// Shared state behind every route: the resident memo cache plus
@@ -74,6 +77,7 @@ pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
         ("POST", "/sweep") => sweep_query(ctx, req),
         ("GET", "/memo/export") => shard::export(ctx, req),
         ("POST", "/memo/merge") => shard::merge(ctx, req),
+        ("POST", "/shard/run") => shard_run(ctx, req),
         (_, path) if KNOWN_PATHS.contains(&path) => {
             Response::error(405, "method not allowed for this route")
         }
@@ -81,7 +85,7 @@ pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
     }
 }
 
-const KNOWN_PATHS: [&str; 7] = [
+const KNOWN_PATHS: [&str; 8] = [
     "/",
     "/healthz",
     "/memo/stats",
@@ -89,6 +93,7 @@ const KNOWN_PATHS: [&str; 7] = [
     "/sweep",
     "/memo/export",
     "/memo/merge",
+    "/shard/run",
 ];
 
 fn healthz(ctx: &ServerCtx) -> Response {
@@ -270,6 +275,50 @@ fn sweep_query(ctx: &ServerCtx, req: &Request) -> Response {
     Response::json(200, &j)
 }
 
+/// `POST /shard/run` — the worker side of `deepnvm coordinate`: run a
+/// shard spec into the resident memo and hand the export back in one
+/// round trip, so the coordinator never has to pair a `/sweep` with a
+/// follow-up `/memo/export` (racing writers could interleave between
+/// the two). The export is scoped to the shard's own grid points and
+/// their circuit dependencies — O(shard) on the wire even when the
+/// resident memo holds the whole prewarmed grid. The body is a
+/// `SweepSpec` document; `jobs` is clamped to the operator budget
+/// exactly like `/sweep`.
+fn shard_run(ctx: &ServerCtx, req: &Request) -> Response {
+    let body = match req.body_json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    };
+    let jobs = body
+        .get("jobs")
+        .and_then(Json::as_u64)
+        .map(|v| (v as usize).clamp(1, ctx.jobs.max(1)))
+        .unwrap_or(ctx.jobs);
+    let spec = match spec_from_json(&body) {
+        Ok(s) => s,
+        Err(e) => return Response::error(422, &e.to_string()),
+    };
+    let solves_before = ctx.memo.solve_count();
+    let evals_before = ctx.memo.eval_count();
+    let res = match sweep::run(&spec, jobs, ctx.memo()) {
+        Ok(r) => r,
+        Err(e) => return Response::error(422, &format!("{e:#}")),
+    };
+    let mut j = Json::obj();
+    j.set("points", Json::Num(res.points.len() as f64));
+    j.set(
+        "solves",
+        Json::Num(ctx.memo.solve_count().saturating_sub(solves_before) as f64),
+    );
+    j.set(
+        "evals",
+        Json::Num(ctx.memo.eval_count().saturating_sub(evals_before) as f64),
+    );
+    let shard_points: Vec<GridPoint> = res.points.iter().map(|r| r.point).collect();
+    j.set("export", ctx.memo().to_json_for(&shard_points));
+    Response::json(200, &j)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -321,7 +370,50 @@ mod tests {
         // wrong method on a known route
         assert_eq!(handle(&c, &get("/solve")).status, 405);
         assert_eq!(handle(&c, &post("/healthz", "")).status, 405);
-        assert_eq!(c.requests.load(Ordering::Relaxed), 6);
+        assert_eq!(handle(&c, &get("/shard/run")).status, 405);
+        assert_eq!(c.requests.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn shard_run_returns_a_mergeable_export() {
+        let c = ctx();
+        // a circuit-only shard: 1 tech x 1 cap
+        let body = r#"{"techs": ["stt"], "caps_mb": [1], "dnns": [], "jobs": 1}"#;
+        let r = handle(&c, &post("/shard/run", body));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        assert_eq!(j.get("points").unwrap().as_u64(), Some(1));
+        assert!(j.get("solves").unwrap().as_u64().unwrap() >= 1);
+
+        // the export merges cleanly into a fresh coordinator memo
+        let fresh = Memo::new();
+        let st = fresh.merge_json(j.get("export").unwrap());
+        assert!(st.version_ok);
+        assert_eq!(st.rejected, 0);
+        assert_eq!(fresh.point_len(), 1);
+
+        // a warm repeat runs the shard without solving
+        let r = handle(&c, &post("/shard/run", body));
+        let j = body_json(&r);
+        assert_eq!(j.get("solves").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("evals").unwrap().as_u64(), Some(0));
+
+        // the export is scoped to the shard: unrelated resident
+        // entries (here a 4 MB solve) never ride along
+        let r = handle(&c, &post("/solve", r#"{"tech": "sot", "capacity_mb": 4}"#));
+        assert_eq!(r.status, 200);
+        let r = handle(&c, &post("/shard/run", body));
+        let export = body_json(&r);
+        let export = export.get("export").unwrap();
+        assert_eq!(export.get("points").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(export.get("circuit").unwrap().as_arr().unwrap().len(), 1);
+
+        // malformed and invalid bodies map to 400/422
+        assert_eq!(handle(&c, &post("/shard/run", "{nope")).status, 400);
+        assert_eq!(
+            handle(&c, &post("/shard/run", r#"{"techs": ["dram"]}"#)).status,
+            422
+        );
     }
 
     #[test]

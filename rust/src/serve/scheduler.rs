@@ -1,0 +1,719 @@
+//! `serve::scheduler` — the multi-host sweep coordinator.
+//!
+//! The shard exchange ([`super::shard`]) made fleet sweeps *possible*
+//! but left them caller-driven: someone had to `split_caps` the grid,
+//! run each shard on a worker, collect `/memo/export`s and
+//! `POST /memo/merge` them, and babysit any worker that died along the
+//! way. This module turns that shell script into one call. A
+//! [`Coordinator`] owns a [`SweepSpec`], partitions it into
+//! cost-balanced shards ([`split_caps`]), *assigns* them to a
+//! registered worker fleet over the existing HTTP layer
+//! (`POST /shard/run`), merges each worker's memo export as it
+//! arrives, and reassigns the shards of stragglers and dead workers —
+//! a per-shard deadline bounds every dispatch, and a `/healthz` probe
+//! after any failure decides whether the worker is retired or merely
+//! flaky — until the union answers the full grid with zero circuit
+//! solves.
+//!
+//! Scheduling is work-stealing over shards: one thread per live
+//! worker, all racing on one shared queue, so a fast worker naturally
+//! absorbs the load a slow or dead one sheds. The grid is cut into
+//! more shards than workers ([`SHARDS_PER_WORKER`], capped by the
+//! capacity axis) so a retired worker forfeits only a slice of its
+//! assignment, not half the grid. Per-shard state (pending / running /
+//! merged / failed, with attempt counts) is observable over
+//! `GET /scheduler/status` when a status address is configured — the
+//! same view `deepnvm coordinate` prints when it finishes.
+
+use std::collections::HashSet;
+use std::net::SocketAddr;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sweep::spec::spec_to_json;
+use crate::sweep::{self, Memo, SweepSpec};
+use crate::util::json::{self, Json};
+
+use super::http::{self, Response, Server};
+use super::shard::split_caps;
+
+/// Shard multiplier: with W workers the grid is cut into up to
+/// `W * SHARDS_PER_WORKER` shards (never more than the capacity axis
+/// allows), so reassignment after a death moves a slice, not a half.
+pub const SHARDS_PER_WORKER: usize = 2;
+
+/// How long a `/healthz` probe may take before a worker is declared
+/// dead.
+const PROBE_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Idle re-check interval for worker threads waiting on the queue (a
+/// backstop for missed wakeups; completion is condvar-notified).
+const POLL: Duration = Duration::from_millis(50);
+
+/// How many idle polls a worker waits before re-taking a shard it
+/// already failed itself. The wait gives a healthy peer a window to
+/// steal the shard; the cap guarantees progress when *every* live
+/// worker has failed it (otherwise two stuck workers would wait on
+/// each other forever instead of exhausting the retry budget).
+const GRACE_POLLS: usize = 20;
+
+/// Coordinator configuration (the CLI's `coordinate --workers
+/// --retries --deadline-secs --status-addr`).
+#[derive(Clone, Debug)]
+pub struct ScheduleConfig {
+    /// Worker addresses (`host:port` of running `deepnvm serve`
+    /// instances). Deduplicated; order is the probe order.
+    pub workers: Vec<String>,
+    /// How many times a shard may be *re*assigned after its first
+    /// attempt before the whole run fails.
+    pub retries: usize,
+    /// Per-dispatch deadline: a `/shard/run` whose socket stays silent
+    /// this long is treated as a dead or stuck worker and reassigned.
+    pub deadline: Duration,
+    /// Worker-side thread hint forwarded in each `/shard/run` body and
+    /// used for the local zero-solve replay (0 = default).
+    pub jobs: usize,
+    /// Bind a status server here (`GET /scheduler/status`); `None`
+    /// disables it.
+    pub status_addr: Option<String>,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        ScheduleConfig {
+            workers: vec![],
+            retries: 3,
+            deadline: Duration::from_secs(120),
+            jobs: 0,
+            status_addr: None,
+        }
+    }
+}
+
+/// Lifecycle of one shard.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardState {
+    /// Queued, waiting for a worker.
+    Pending,
+    /// Dispatched to `worker`, response outstanding.
+    Running { worker: String },
+    /// Export merged into the coordinator memo.
+    Merged { worker: String, accepted: usize, skipped: usize },
+    /// Retry budget exhausted; the run fails.
+    Failed { error: String },
+}
+
+impl ShardState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardState::Pending => "pending",
+            ShardState::Running { .. } => "running",
+            ShardState::Merged { .. } => "merged",
+            ShardState::Failed { .. } => "failed",
+        }
+    }
+
+    /// The worker this shard is (or was last) associated with.
+    pub fn worker(&self) -> Option<&str> {
+        match self {
+            ShardState::Running { worker } | ShardState::Merged { worker, .. } => {
+                Some(worker)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ShardState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardState::Pending => write!(f, "pending"),
+            ShardState::Running { worker } => write!(f, "running on {worker}"),
+            ShardState::Merged { worker, accepted, skipped } => {
+                write!(f, "merged from {worker} (+{accepted} entries, {skipped} dup)")
+            }
+            ShardState::Failed { error } => write!(f, "FAILED: {error}"),
+        }
+    }
+}
+
+/// Final per-shard record in a [`ScheduleReport`].
+#[derive(Clone, Debug)]
+pub struct ShardSummary {
+    pub caps_mb: Vec<u64>,
+    /// Grid points this shard expands to.
+    pub points: usize,
+    pub state: ShardState,
+    /// Dispatch attempts (> 1 means the shard was reassigned).
+    pub attempts: usize,
+}
+
+/// Outcome of a completed coordination run.
+#[derive(Clone, Debug)]
+pub struct ScheduleReport {
+    pub shards: Vec<ShardSummary>,
+    /// Points in the full grid, verified by the local replay.
+    pub grid_points: usize,
+    /// Memo entries newly accepted across all shard merges.
+    pub accepted: usize,
+    /// Shards that needed more than one dispatch.
+    pub reassigned: usize,
+    /// Circuit solves the *local* full-grid replay performed — 0 when
+    /// the merged union covers the grid, which [`Coordinator::run`]
+    /// requires.
+    pub replay_solves: u64,
+    /// Traffic evaluations the local replay performed (also 0).
+    pub replay_evals: u64,
+    pub wall: Duration,
+}
+
+/// Mutable scheduler state shared by worker threads and the status
+/// route.
+struct Core {
+    /// Pending shard indices (front = next to dispatch).
+    queue: Vec<usize>,
+    states: Vec<ShardState>,
+    /// Dispatch attempts per shard.
+    attempts: Vec<usize>,
+    merged: usize,
+    live_workers: usize,
+    worker_alive: Vec<bool>,
+    worker_merged: Vec<usize>,
+    /// First unrecoverable error; ends the run.
+    fatal: Option<String>,
+}
+
+struct Shared {
+    core: Mutex<Core>,
+    changed: Condvar,
+    shards: Vec<SweepSpec>,
+    shard_points: Vec<usize>,
+    workers: Vec<String>,
+    total_points: usize,
+    started: Instant,
+}
+
+/// A prepared coordination run: shards cut, status server (optionally)
+/// bound. [`Coordinator::run`] executes it.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    cfg: ScheduleConfig,
+    spec: SweepSpec,
+    status: Option<Server>,
+}
+
+/// One-call form: prepare and run. The fleet workflow as a function.
+pub fn coordinate(
+    spec: &SweepSpec,
+    cfg: &ScheduleConfig,
+    memo: &Memo,
+) -> Result<ScheduleReport> {
+    Coordinator::new(spec, cfg)?.run(memo)
+}
+
+impl Coordinator {
+    /// Validate the spec and fleet, cut the shards, and bind the
+    /// status server when configured. No worker is contacted yet.
+    pub fn new(spec: &SweepSpec, cfg: &ScheduleConfig) -> Result<Coordinator> {
+        let mut workers: Vec<String> = Vec::new();
+        for w in &cfg.workers {
+            let w = w.trim().to_string();
+            if !w.is_empty() && !workers.contains(&w) {
+                workers.push(w);
+            }
+        }
+        if workers.is_empty() {
+            bail!("the scheduler needs at least one worker address");
+        }
+        if cfg.deadline.is_zero() {
+            bail!("the shard deadline must be positive");
+        }
+        let total_points = spec.expand()?.len();
+        let shards = split_caps(spec, workers.len() * SHARDS_PER_WORKER);
+        let mut shard_points = Vec::with_capacity(shards.len());
+        for s in &shards {
+            shard_points.push(s.expand()?.len());
+        }
+        let n = shards.len();
+        let core = Core {
+            queue: (0..n).collect(),
+            states: vec![ShardState::Pending; n],
+            attempts: vec![0; n],
+            merged: 0,
+            live_workers: 0,
+            worker_alive: vec![false; workers.len()],
+            worker_merged: vec![0; workers.len()],
+            fatal: None,
+        };
+        let shared = Arc::new(Shared {
+            core: Mutex::new(core),
+            changed: Condvar::new(),
+            shards,
+            shard_points,
+            workers,
+            total_points,
+            started: Instant::now(),
+        });
+        let status = match &cfg.status_addr {
+            Some(addr) => {
+                let view = Arc::clone(&shared);
+                let server = Server::bind(addr, 2, move |req| {
+                    match (req.method.as_str(), req.path.as_str()) {
+                        ("GET", "/scheduler/status") => {
+                            Response::json(200, &status_json(&view))
+                        }
+                        ("GET", "/healthz") => {
+                            let mut j = Json::obj();
+                            j.set("status", Json::Str("ok".into()));
+                            j.set("role", Json::Str("coordinator".into()));
+                            Response::json(200, &j)
+                        }
+                        _ => Response::error(404, "no such route (GET /scheduler/status)"),
+                    }
+                })
+                .context("cannot bind the scheduler status address")?;
+                Some(server)
+            }
+            None => None,
+        };
+        Ok(Coordinator { shared, cfg: cfg.clone(), spec: spec.clone(), status })
+    }
+
+    /// Where the status server listens, if one was configured.
+    pub fn status_addr(&self) -> Option<SocketAddr> {
+        self.status.as_ref().map(Server::local_addr)
+    }
+
+    /// Shard count for this run.
+    pub fn shard_count(&self) -> usize {
+        self.shared.shards.len()
+    }
+
+    /// Snapshot of the per-shard scheduler state (what
+    /// `GET /scheduler/status` serves).
+    pub fn status(&self) -> Json {
+        status_json(&self.shared)
+    }
+
+    /// Execute the run: probe the fleet, dispatch every shard until
+    /// merged (reassigning on failure), then replay the full grid
+    /// locally and require zero circuit solves and zero traffic evals.
+    pub fn run(&self, memo: &Memo) -> Result<ScheduleReport> {
+        let sh = &self.shared;
+
+        // Probe the fleet; a worker failing the liveness probe starts
+        // (and stays) retired — it never receives a shard.
+        let mut live: Vec<(usize, String)> = Vec::new();
+        {
+            let mut core = sh.core.lock().unwrap();
+            for (w, addr) in sh.workers.iter().enumerate() {
+                if healthy(addr) {
+                    core.worker_alive[w] = true;
+                    live.push((w, addr.clone()));
+                } else {
+                    eprintln!(
+                        "scheduler: worker {addr} failed the /healthz probe; \
+                         starting without it"
+                    );
+                }
+            }
+            core.live_workers = live.len();
+        }
+        if live.is_empty() {
+            bail!(
+                "no worker among {:?} answered /healthz — is `deepnvm serve` running?",
+                sh.workers
+            );
+        }
+
+        std::thread::scope(|scope| {
+            for (w, addr) in &live {
+                let (w, addr) = (*w, addr.as_str());
+                scope.spawn(move || self.worker_loop(w, addr, memo));
+            }
+        });
+
+        let (accepted, reassigned, summaries) = {
+            let core = sh.core.lock().unwrap();
+            if let Some(f) = &core.fatal {
+                bail!("{f}");
+            }
+            if core.merged < sh.shards.len() {
+                bail!(
+                    "scheduler stalled with {}/{} shards merged",
+                    core.merged,
+                    sh.shards.len()
+                );
+            }
+            let accepted: usize = core
+                .states
+                .iter()
+                .map(|s| match s {
+                    ShardState::Merged { accepted, .. } => *accepted,
+                    _ => 0,
+                })
+                .sum();
+            let reassigned = core.attempts.iter().filter(|&&a| a > 1).count();
+            let summaries: Vec<ShardSummary> = core
+                .states
+                .iter()
+                .enumerate()
+                .map(|(i, st)| ShardSummary {
+                    caps_mb: sh.shards[i].capacities_mb.clone(),
+                    points: sh.shard_points[i],
+                    state: st.clone(),
+                    attempts: core.attempts[i],
+                })
+                .collect();
+            (accepted, reassigned, summaries)
+        };
+
+        // The merged union must answer the full grid from cache alone.
+        let s0 = memo.solve_count();
+        let e0 = memo.eval_count();
+        let res = sweep::run(&self.spec, self.cfg.jobs, memo)?;
+        debug_assert_eq!(res.points.len(), sh.total_points);
+        Ok(ScheduleReport {
+            shards: summaries,
+            grid_points: res.points.len(),
+            accepted,
+            reassigned,
+            replay_solves: memo.solve_count() - s0,
+            replay_evals: memo.eval_count() - e0,
+            wall: sh.started.elapsed(),
+        })
+    }
+
+    /// One worker's scheduling loop: claim a shard, dispatch it, merge
+    /// the export; on failure requeue the shard and decide (via
+    /// `/healthz`) whether this worker stays in the fleet.
+    fn worker_loop(&self, widx: usize, addr: &str, memo: &Memo) {
+        let sh = &self.shared;
+        let total = sh.shards.len();
+        // Shards that already failed *on this worker*: another worker
+        // should pick them up, so this one skips them while a peer is
+        // alive (a worker whose handler is broken for one shard must
+        // not burn that shard's whole retry budget by itself).
+        let mut failed_here: HashSet<usize> = HashSet::new();
+        loop {
+            let mut idle = 0usize;
+            let idx = {
+                let mut core = sh.core.lock().unwrap();
+                loop {
+                    if core.fatal.is_some() || core.merged == total {
+                        return;
+                    }
+                    let pick = core
+                        .queue
+                        .iter()
+                        .position(|i| !failed_here.contains(i))
+                        .or_else(|| {
+                            // Only shards this worker already failed
+                            // remain queued: take one anyway once no
+                            // peer exists — or once peers have had a
+                            // grace window and not stolen it.
+                            let must = core.live_workers == 1 || idle >= GRACE_POLLS;
+                            (must && !core.queue.is_empty()).then_some(0)
+                        });
+                    if let Some(pos) = pick {
+                        let idx = core.queue.remove(pos);
+                        core.attempts[idx] += 1;
+                        core.states[idx] =
+                            ShardState::Running { worker: addr.to_string() };
+                        break idx;
+                    }
+                    idle += 1;
+                    core = sh.changed.wait_timeout(core, POLL).unwrap().0;
+                }
+            };
+            match run_shard_on(addr, &sh.shards[idx], &self.cfg) {
+                Ok(export) => {
+                    let st = memo.merge_json(&export);
+                    if !st.version_ok {
+                        // A worker built against another MODEL_VERSION
+                        // can never contribute; retire it.
+                        let why = format!(
+                            "worker {addr} exported a different model version"
+                        );
+                        self.shed(widx, addr, idx, &mut failed_here, &why, false);
+                        return;
+                    }
+                    if st.rejected > 0 {
+                        // Hash-rejected entries mean the export was
+                        // corrupt or forged: the shard is NOT covered,
+                        // so this dispatch failed — reassign it (the
+                        // already-accepted entries are harmless; a
+                        // clean re-run just skips them as duplicates).
+                        let why = format!(
+                            "worker {addr} export had {} hash-rejected of {} entries",
+                            st.rejected,
+                            st.total()
+                        );
+                        if !self.shed(widx, addr, idx, &mut failed_here, &why, true) {
+                            return;
+                        }
+                        continue;
+                    }
+                    let mut core = sh.core.lock().unwrap();
+                    core.states[idx] = ShardState::Merged {
+                        worker: addr.to_string(),
+                        accepted: st.accepted,
+                        skipped: st.skipped,
+                    };
+                    core.merged += 1;
+                    core.worker_merged[widx] += 1;
+                    sh.changed.notify_all();
+                }
+                Err(e) => {
+                    // Straggler past the deadline, severed connection,
+                    // or a worker-side error — probe before deciding
+                    // whether this worker keeps scheduling.
+                    let alive = healthy(addr);
+                    if !self.shed(widx, addr, idx, &mut failed_here, &format!("{e:#}"), alive)
+                    {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// A dispatch of shard `idx` to this worker failed: requeue the
+    /// shard (or fail the run when its retry budget is exhausted) and,
+    /// when `alive` is false, retire the worker. Returns whether this
+    /// worker thread should keep scheduling.
+    fn shed(
+        &self,
+        widx: usize,
+        addr: &str,
+        idx: usize,
+        failed_here: &mut HashSet<usize>,
+        why: &str,
+        alive: bool,
+    ) -> bool {
+        failed_here.insert(idx);
+        let sh = &self.shared;
+        let mut core = sh.core.lock().unwrap();
+        if core.attempts[idx] > self.cfg.retries {
+            core.states[idx] = ShardState::Failed { error: why.to_string() };
+            core.fatal = Some(format!(
+                "shard {idx} failed on attempt {} of {} (last error: {why})",
+                core.attempts[idx],
+                self.cfg.retries + 1
+            ));
+        } else {
+            eprintln!(
+                "scheduler: reassigning shard {idx} after attempt {} ({why})",
+                core.attempts[idx]
+            );
+            core.states[idx] = ShardState::Pending;
+            core.queue.push(idx);
+        }
+        if !alive {
+            eprintln!("scheduler: worker {addr} is unreachable; retiring it");
+            core.worker_alive[widx] = false;
+            core.live_workers -= 1;
+            if core.live_workers == 0
+                && core.merged < sh.shards.len()
+                && core.fatal.is_none()
+            {
+                core.fatal = Some(format!(
+                    "every worker died with {}/{} shards merged",
+                    core.merged,
+                    sh.shards.len()
+                ));
+            }
+        }
+        sh.changed.notify_all();
+        alive && core.fatal.is_none()
+    }
+}
+
+/// `GET /healthz` answered 200 within the probe timeout?
+fn healthy(addr: &str) -> bool {
+    matches!(http::call(addr, "GET", "/healthz", "", PROBE_TIMEOUT), Ok((200, _)))
+}
+
+/// Dispatch one shard: `POST /shard/run` with the shard spec (plus the
+/// jobs hint) and return the worker's memo export. Any transport
+/// error, timeout, or non-200 is the caller's cue to reassign.
+fn run_shard_on(addr: &str, shard: &SweepSpec, cfg: &ScheduleConfig) -> Result<Json> {
+    let mut body = spec_to_json(shard);
+    if cfg.jobs > 0 {
+        body.set("jobs", Json::Num(cfg.jobs as f64));
+    }
+    let (status, text) =
+        http::call(addr, "POST", "/shard/run", &body.to_string(), cfg.deadline)?;
+    if status != 200 {
+        let detail = json::parse(&text)
+            .ok()
+            .and_then(|j| j.get("error").and_then(Json::as_str).map(str::to_string))
+            .unwrap_or_else(|| format!("{} bytes", text.len()));
+        bail!("worker {addr} answered {status} to /shard/run: {detail}");
+    }
+    let j = json::parse(&text)
+        .with_context(|| format!("worker {addr} returned malformed JSON"))?;
+    j.get("export")
+        .cloned()
+        .with_context(|| format!("worker {addr} returned no export"))
+}
+
+/// The status document: per-shard state, fleet liveness, and totals.
+fn status_json(sh: &Shared) -> Json {
+    let core = sh.core.lock().unwrap();
+    let mut shards = Vec::with_capacity(core.states.len());
+    let mut counts = [0usize; 4]; // pending, running, merged, failed
+    for (i, st) in core.states.iter().enumerate() {
+        let mut o = Json::obj();
+        o.set("shard", Json::Num(i as f64));
+        o.set(
+            "caps_mb",
+            Json::Arr(
+                sh.shards[i]
+                    .capacities_mb
+                    .iter()
+                    .map(|&m| Json::Num(m as f64))
+                    .collect(),
+            ),
+        );
+        o.set("points", Json::Num(sh.shard_points[i] as f64));
+        o.set("state", Json::Str(st.name().to_string()));
+        o.set(
+            "worker",
+            match st.worker() {
+                Some(w) => Json::Str(w.to_string()),
+                None => Json::Null,
+            },
+        );
+        o.set("attempts", Json::Num(core.attempts[i] as f64));
+        shards.push(o);
+        let k = match st {
+            ShardState::Pending => 0,
+            ShardState::Running { .. } => 1,
+            ShardState::Merged { .. } => 2,
+            ShardState::Failed { .. } => 3,
+        };
+        counts[k] += 1;
+    }
+    let workers: Vec<Json> = sh
+        .workers
+        .iter()
+        .enumerate()
+        .map(|(w, addr)| {
+            let mut o = Json::obj();
+            o.set("addr", Json::Str(addr.clone()));
+            o.set("alive", Json::Bool(core.worker_alive[w]));
+            o.set("shards_merged", Json::Num(core.worker_merged[w] as f64));
+            o
+        })
+        .collect();
+    let retried = core.attempts.iter().filter(|&&a| a > 1).count();
+    let mut j = Json::obj();
+    j.set("grid_points", Json::Num(sh.total_points as f64));
+    j.set("shards", Json::Arr(shards));
+    j.set("workers", Json::Arr(workers));
+    j.set("pending", Json::Num(counts[0] as f64));
+    j.set("running", Json::Num(counts[1] as f64));
+    j.set("merged", Json::Num(counts[2] as f64));
+    j.set("failed", Json::Num(counts[3] as f64));
+    j.set("retried", Json::Num(retried as f64));
+    j.set("uptime_s", Json::Num(sh.started.elapsed().as_secs_f64()));
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::MemTech;
+    use crate::workload::models::Phase;
+
+    fn spec() -> SweepSpec {
+        SweepSpec {
+            techs: vec![MemTech::SttMram],
+            capacities_mb: vec![1, 2, 4],
+            dnns: vec![],
+            phases: Phase::ALL.to_vec(),
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        }
+    }
+
+    #[test]
+    fn new_validates_fleet_and_spec() {
+        let cfg = ScheduleConfig::default();
+        assert!(Coordinator::new(&spec(), &cfg).is_err(), "no workers");
+
+        let cfg = ScheduleConfig {
+            workers: vec!["127.0.0.1:1".into()],
+            deadline: Duration::ZERO,
+            ..ScheduleConfig::default()
+        };
+        assert!(Coordinator::new(&spec(), &cfg).is_err(), "zero deadline");
+
+        let cfg = ScheduleConfig {
+            workers: vec!["127.0.0.1:1".into()],
+            ..ScheduleConfig::default()
+        };
+        let bad = SweepSpec { capacities_mb: vec![], ..spec() };
+        assert!(Coordinator::new(&bad, &cfg).is_err(), "empty capacity axis");
+    }
+
+    #[test]
+    fn shards_scale_with_fleet_but_cap_at_the_axis() {
+        // one worker, three caps: 2 shards (SHARDS_PER_WORKER)
+        let cfg = ScheduleConfig {
+            workers: vec!["127.0.0.1:1".into(), " 127.0.0.1:1 ".into()],
+            ..ScheduleConfig::default()
+        };
+        // duplicate (whitespace-trimmed) worker collapses to one
+        let c = Coordinator::new(&spec(), &cfg).unwrap();
+        assert_eq!(c.shard_count(), SHARDS_PER_WORKER.min(3));
+        assert!(c.status_addr().is_none());
+
+        let cfg = ScheduleConfig {
+            workers: (0..8).map(|i| format!("127.0.0.1:{i}")).collect(),
+            ..ScheduleConfig::default()
+        };
+        let c = Coordinator::new(&spec(), &cfg).unwrap();
+        assert_eq!(c.shard_count(), 3, "never more shards than capacities");
+    }
+
+    #[test]
+    fn status_snapshot_starts_all_pending() {
+        let cfg = ScheduleConfig {
+            workers: vec!["127.0.0.1:1".into()],
+            ..ScheduleConfig::default()
+        };
+        let c = Coordinator::new(&spec(), &cfg).unwrap();
+        let j = c.status();
+        assert_eq!(j.get("merged").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("failed").unwrap().as_u64(), Some(0));
+        assert_eq!(
+            j.get("pending").unwrap().as_u64(),
+            Some(c.shard_count() as u64)
+        );
+        // circuit-only: one point per tech x capacity
+        assert_eq!(j.get("grid_points").unwrap().as_u64(), Some(3));
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), c.shard_count());
+        assert!(shards
+            .iter()
+            .all(|s| s.get("state").unwrap().as_str() == Some("pending")));
+        let workers = j.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 1);
+        assert_eq!(workers[0].get("alive").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn shard_state_display_and_names() {
+        let s = ShardState::Merged { worker: "w:1".into(), accepted: 5, skipped: 2 };
+        assert_eq!(s.name(), "merged");
+        assert_eq!(s.worker(), Some("w:1"));
+        assert!(s.to_string().contains("+5 entries"));
+        assert_eq!(ShardState::Pending.worker(), None);
+        assert!(ShardState::Failed { error: "x".into() }.to_string().contains("x"));
+    }
+}

@@ -46,18 +46,35 @@ pub fn merge(ctx: &ServerCtx, req: &Request) -> Response {
 }
 
 /// Split a spec into at most `n` disjoint shards along the capacity
-/// axis (the axis that dominates circuit-solve cost, so shards
-/// load-balance naturally). Capacities are dealt round-robin; the
+/// axis (the axis that dominates circuit-solve cost). Capacities are
+/// dealt largest-first onto the currently lightest shard (LPT
+/// scheduling, with the capacity itself as the cost proxy: the
+/// Algorithm-1 enumeration grows with capacity), so ascending and
+/// descending input lists yield the same balanced partition — dealing
+/// round-robin in input order used to concentrate the expensive
+/// large-capacity solves in one shard. Each shard's capacity list is
+/// sorted, so shard specs are independent of input order too. The
 /// shard expansions partition the full expansion exactly, so merging
 /// the shard memos reproduces the full-grid cache.
 pub fn split_caps(spec: &SweepSpec, n: usize) -> Vec<SweepSpec> {
-    let n = n.max(1);
-    let mut shards: Vec<SweepSpec> = (0..n.min(spec.capacities_mb.len().max(1)))
+    let n = n.max(1).min(spec.capacities_mb.len());
+    if n == 0 {
+        return vec![];
+    }
+    let mut shards: Vec<SweepSpec> = (0..n)
         .map(|_| SweepSpec { capacities_mb: vec![], ..spec.clone() })
         .collect();
-    for (i, &mb) in spec.capacities_mb.iter().enumerate() {
-        let k = i % shards.len();
+    let mut order: Vec<usize> = (0..spec.capacities_mb.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(spec.capacities_mb[i]), i));
+    let mut load = vec![0u64; n];
+    for i in order {
+        let mb = spec.capacities_mb[i];
+        let k = (0..n).min_by_key(|&k| (load[k], k)).expect("n >= 1");
+        load[k] += mb;
         shards[k].capacities_mb.push(mb);
+    }
+    for s in &mut shards {
+        s.capacities_mb.sort_unstable();
     }
     shards.retain(|s| !s.capacities_mb.is_empty());
     shards
@@ -105,6 +122,35 @@ mod tests {
                 }
             }
             assert_eq!(seen, all, "shards must cover the full grid (n={n})");
+        }
+    }
+
+    #[test]
+    fn split_caps_balances_cost_regardless_of_input_order() {
+        let caps = vec![1u64, 2, 4, 8, 16, 32];
+        let asc = SweepSpec { capacities_mb: caps.clone(), ..spec() };
+        let desc = SweepSpec {
+            capacities_mb: caps.iter().rev().copied().collect(),
+            ..spec()
+        };
+        for s in [&asc, &desc] {
+            let shards = split_caps(s, 2);
+            let mut loads: Vec<u64> = shards
+                .iter()
+                .map(|sh| sh.capacities_mb.iter().sum())
+                .collect();
+            loads.sort_unstable();
+            // LPT: {32} vs {16, 8, 4, 2, 1} — round-robin dealing of the
+            // descending list used to pile 32+8+2=42 onto one shard.
+            assert_eq!(loads, vec![31, 32], "shard costs must balance");
+        }
+        // the partition itself is input-order independent
+        for n in [2, 3, 4] {
+            let a: Vec<Vec<u64>> =
+                split_caps(&asc, n).iter().map(|s| s.capacities_mb.clone()).collect();
+            let d: Vec<Vec<u64>> =
+                split_caps(&desc, n).iter().map(|s| s.capacities_mb.clone()).collect();
+            assert_eq!(a, d, "ascending/descending inputs must shard identically (n={n})");
         }
     }
 

@@ -16,7 +16,7 @@
 //! [`MODEL_VERSION`]; bumping it invalidates every cached result when
 //! the underlying models change.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -39,6 +39,8 @@ pub const MODEL_VERSION: u32 = 1;
 
 /// File name of the persisted cache inside a results directory.
 pub const MEMO_FILE: &str = "sweep_memo.json";
+
+const MB: u64 = 1024 * 1024;
 
 /// 64-bit FNV-1a — the content-address hash for spec-point keys
 /// (dependency-free and stable across platforms/processes).
@@ -176,6 +178,18 @@ impl PointCache {
     fn snapshot(&self) -> Vec<PointResult> {
         self.map.values().map(|(r, _)| r.clone()).collect()
     }
+
+    /// Clone only the results for `wanted` points (cheaper than
+    /// [`snapshot`] + filter: nothing outside the set is cloned).
+    ///
+    /// [`snapshot`]: PointCache::snapshot
+    fn snapshot_for(&self, wanted: &HashSet<GridPoint>) -> Vec<PointResult> {
+        self.map
+            .iter()
+            .filter(|(p, _)| wanted.contains(p))
+            .map(|(_, (r, _))| r.clone())
+            .collect()
+    }
 }
 
 /// Outcome of merging a serialized cache document into a [`Memo`] —
@@ -193,6 +207,15 @@ pub struct MergeStats {
     /// False when the document's model version mismatches
     /// [`MODEL_VERSION`]; nothing is merged in that case.
     pub version_ok: bool,
+}
+
+impl MergeStats {
+    /// Entries the document carried (every one is accounted for in
+    /// exactly one bucket — the invariant the scheduler and the
+    /// partial-merge tests lean on).
+    pub fn total(&self) -> usize {
+        self.accepted + self.skipped + self.rejected
+    }
 }
 
 /// The memoization cache. One [`global`] instance backs the analysis
@@ -306,35 +329,52 @@ impl Memo {
 
     /// Serialize both layers (entries sorted for diffable output).
     pub fn to_json(&self) -> Json {
-        let mut root = Json::obj();
-        root.set("version", Json::Num(MODEL_VERSION as f64));
-
-        let mut circuit: Vec<(CircuitKey, TunedConfig)> = self
+        let circuit: Vec<(CircuitKey, TunedConfig)> = self
             .circuit
             .lock()
             .unwrap()
             .iter()
             .map(|(k, v)| (*k, *v))
             .collect();
-        circuit.sort_by_key(|(k, _)| (k.tech.name(), k.capacity_bytes, k.node_nm));
-        let centries: Vec<Json> = circuit
-            .iter()
-            .map(|(k, t)| {
-                let tuned = tuned_to_json(t);
-                let mut e = Json::obj();
-                e.set("node_nm", Json::Num(k.node_nm as f64));
-                e.set("payload_hash", Json::Str(payload_hash(&tuned)));
-                e.set("tuned", tuned);
-                e
-            })
-            .collect();
-        root.set("circuit", Json::Arr(centries));
+        let points = self.points.lock().unwrap().snapshot();
+        assemble_doc(circuit, points)
+    }
 
-        let mut points: Vec<PointResult> = self.points.lock().unwrap().snapshot();
-        points.sort_by_key(|r| r.point.key());
-        let pentries: Vec<Json> = points.iter().map(point_to_json).collect();
-        root.set("points", Json::Arr(pentries));
-        root
+    /// Serialize only the entries answering `wanted` grid points: each
+    /// point's own result plus the circuit solves it depends on (its
+    /// (tech, capacity, node), and the SRAM baseline for workload
+    /// points). This is the shard-sized export `POST /shard/run` ships
+    /// back — O(shard), even when the resident memo holds the whole
+    /// paper grid from `--prewarm` or earlier shards.
+    pub fn to_json_for(&self, wanted: &[GridPoint]) -> Json {
+        let mut pset: HashSet<GridPoint> = HashSet::new();
+        let mut cset: HashSet<CircuitKey> = HashSet::new();
+        for p in wanted {
+            pset.insert(*p);
+            let bytes = p.capacity_mb * MB;
+            cset.insert(CircuitKey {
+                tech: p.tech,
+                capacity_bytes: bytes,
+                node_nm: p.node_nm,
+            });
+            if p.workload.is_some() {
+                cset.insert(CircuitKey {
+                    tech: MemTech::Sram,
+                    capacity_bytes: bytes,
+                    node_nm: p.node_nm,
+                });
+            }
+        }
+        let circuit: Vec<(CircuitKey, TunedConfig)> = self
+            .circuit
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| cset.contains(k))
+            .map(|(k, v)| (*k, *v))
+            .collect();
+        let points = self.points.lock().unwrap().snapshot_for(&pset);
+        assemble_doc(circuit, points)
     }
 
     /// Merge entries from a serialized cache. Returns how many entries
@@ -451,6 +491,34 @@ pub fn global() -> &'static Memo {
 /// `nvsim::explorer::tuned_cache` on analysis paths.
 pub fn tuned(tech: MemTech, capacity_bytes: u64) -> TunedConfig {
     global().tuned(tech, capacity_bytes)
+}
+
+/// Assemble the cache document from entry snapshots (shared by the
+/// full [`Memo::to_json`] and the filtered [`Memo::to_json_for`];
+/// entries are sorted so output is diffable).
+fn assemble_doc(
+    mut circuit: Vec<(CircuitKey, TunedConfig)>,
+    mut points: Vec<PointResult>,
+) -> Json {
+    let mut root = Json::obj();
+    root.set("version", Json::Num(MODEL_VERSION as f64));
+    circuit.sort_by_key(|(k, _)| (k.tech.name(), k.capacity_bytes, k.node_nm));
+    let centries: Vec<Json> = circuit
+        .iter()
+        .map(|(k, t)| {
+            let tuned = tuned_to_json(t);
+            let mut e = Json::obj();
+            e.set("node_nm", Json::Num(k.node_nm as f64));
+            e.set("payload_hash", Json::Str(payload_hash(&tuned)));
+            e.set("tuned", tuned);
+            e
+        })
+        .collect();
+    root.set("circuit", Json::Arr(centries));
+    points.sort_by_key(|r| r.point.key());
+    let pentries: Vec<Json> = points.iter().map(point_to_json).collect();
+    root.set("points", Json::Arr(pentries));
+    root
 }
 
 /// Content hash of a serialized payload (the tamper check for on-disk
@@ -785,6 +853,56 @@ mod tests {
     }
 
     #[test]
+    fn filtered_export_is_shard_scoped_and_self_sufficient() {
+        use crate::sweep::spec::{GridPoint, WorkloadPoint};
+        use crate::workload::models::Phase;
+
+        // resident memo: a workload point at 1 MB plus unrelated
+        // circuit-only points at 2 and 3 MB
+        let m = Memo::new();
+        let wl = GridPoint {
+            tech: MemTech::SttMram,
+            capacity_mb: 1,
+            node_nm: 16,
+            workload: Some(WorkloadPoint {
+                dnn: "AlexNet",
+                phase: Phase::Inference,
+                batch: 4,
+            }),
+        };
+        crate::sweep::evaluate_point(&wl, &m);
+        for mb in [2u64, 3] {
+            crate::sweep::evaluate_point(
+                &GridPoint {
+                    tech: MemTech::SotMram,
+                    capacity_mb: mb,
+                    node_nm: 16,
+                    workload: None,
+                },
+                &m,
+            );
+        }
+        assert_eq!(m.point_len(), 3);
+        assert_eq!(m.circuit_len(), 4, "stt@1 + sram@1 baseline + sot@2 + sot@3");
+
+        // the filtered export carries only the wanted point and its
+        // circuit dependencies — including the SRAM baseline
+        let doc = m.to_json_for(&[wl]);
+        assert_eq!(doc.get("points").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(doc.get("circuit").unwrap().as_arr().unwrap().len(), 2);
+
+        // and it is self-sufficient: a fresh memo merged from it
+        // replays the point with zero solves and zero evals
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&doc);
+        assert!(st.version_ok);
+        assert_eq!((st.accepted, st.rejected), (3, 0));
+        crate::sweep::evaluate_point(&wl, &fresh);
+        assert_eq!(fresh.solve_count(), 0);
+        assert_eq!(fresh.eval_count(), 0);
+    }
+
+    #[test]
     fn merge_json_accounts_for_every_entry() {
         let a = Memo::new();
         a.tuned(MemTech::Sram, MB);
@@ -802,6 +920,7 @@ mod tests {
         // idempotent re-merge: everything skipped
         let st = fresh.merge_json(&doc);
         assert_eq!((st.accepted, st.skipped, st.rejected), (0, 2, 0));
+        assert_eq!(st.total(), 2, "every entry lands in exactly one bucket");
 
         // tampered hash: rejected, not silently dropped
         let t = a.tuned(MemTech::Sram, MB);

@@ -145,6 +145,29 @@ impl SweepSpec {
         }
     }
 
+    /// One-line human description of the grid shape, for scheduler and
+    /// CLI logs ("3 tech(s) x 6 cap(s) x 5 dnn(s) x 2 phase(s) on 1
+    /// node(s): 180 points"). Invalid specs read "? points" — callers
+    /// surface the expansion error itself separately.
+    pub fn summary(&self) -> String {
+        let workloads = if self.dnns.is_empty() {
+            "circuit-only".to_string()
+        } else {
+            format!("{} dnn(s) x {} phase(s)", self.dnns.len(), self.phases.len())
+        };
+        let points = match self.expand() {
+            Ok(p) => p.len().to_string(),
+            Err(_) => "?".to_string(),
+        };
+        format!(
+            "{} tech(s) x {} cap(s) x {} on {} node(s): {points} points",
+            self.techs.len(),
+            self.capacities_mb.len(),
+            workloads,
+            self.nodes_nm.len()
+        )
+    }
+
     /// Cartesian expansion into spec order: node, then tech, then
     /// capacity, then workload, then phase, then batch (inner axes vary
     /// fastest). Validation errors — unknown workload, uncalibrated
@@ -545,6 +568,16 @@ mod tests {
             ..SweepSpec::default()
         };
         assert!(s.expand().is_err());
+    }
+
+    #[test]
+    fn summary_names_the_grid_shape() {
+        let s = SweepSpec::circuit_only(MemTech::ALL.to_vec(), vec![1, 2]);
+        assert_eq!(s.summary(), "3 tech(s) x 2 cap(s) x circuit-only on 1 node(s): 6 points");
+        let d = SweepSpec::default();
+        assert!(d.summary().contains("5 dnn(s) x 2 phase(s)"));
+        let bad = SweepSpec { nodes_nm: vec![7], ..SweepSpec::default() };
+        assert!(bad.summary().ends_with("? points"));
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! End-to-end guarantees of `serve::scheduler` over real sockets:
+//!
+//! (a) a coordinator driving two live workers completes the full grid
+//!     — after the merges, a local `sweep::run` performs **zero**
+//!     circuit solves and **zero** traffic evals, and the coordinator
+//!     itself never solved anything;
+//! (b) a worker killed mid-shard (connection severed, then refusing
+//!     even `/healthz`) has its shard reassigned to the surviving
+//!     worker and the run still converges;
+//! (c) a fleet with nobody listening fails cleanly, as does a run
+//!     whose every worker dies;
+//! (d) `GET /scheduler/status` reports per-shard scheduler state.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use deepnvm::device::MemTech;
+use deepnvm::serve::http::{self, Server};
+use deepnvm::serve::routes::{self, ServerCtx};
+use deepnvm::serve::scheduler::{coordinate, Coordinator, ScheduleConfig, ShardState};
+use deepnvm::sweep::{self, Memo, SweepSpec};
+use deepnvm::util::json;
+use deepnvm::workload::models::Phase;
+
+/// A real worker: the full serve stack over a private leaked memo.
+fn worker() -> Server {
+    let memo: &'static Memo = Box::leak(Box::new(Memo::new()));
+    let ctx = Arc::new(ServerCtx::new(memo, 2));
+    Server::bind("127.0.0.1:0", 2, move |req| routes::handle(&ctx, req)).unwrap()
+}
+
+/// A real worker whose `/shard/run` handling blocks until `gate` opens
+/// — lets a test force another worker to receive a shard first.
+fn gated_worker(gate: Arc<AtomicBool>) -> Server {
+    let memo: &'static Memo = Box::leak(Box::new(Memo::new()));
+    let ctx = Arc::new(ServerCtx::new(memo, 2));
+    Server::bind("127.0.0.1:0", 2, move |req| {
+        if req.path == "/shard/run" {
+            while !gate.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        routes::handle(&ctx, req)
+    })
+    .unwrap()
+}
+
+/// A worker that answers the liveness probe, then drops dead the
+/// moment it is handed a shard: the connection is severed without a
+/// response, `gate` opens, and the listener stops accepting — exactly
+/// what a killed `deepnvm serve` process looks like to a coordinator.
+fn dying_worker(gate: Arc<AtomicBool>) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { return };
+            let mut buf = [0u8; 1024];
+            let n = s.read(&mut buf).unwrap_or(0);
+            let head = String::from_utf8_lossy(&buf[..n]);
+            if head.starts_with("GET /healthz") {
+                let body = r#"{"status": "ok"}"#;
+                let _ = s.write_all(
+                    format!(
+                        "HTTP/1.1 200 OK\r\nContent-Length: {}\r\n\
+                         Connection: close\r\n\r\n{body}",
+                        body.len()
+                    )
+                    .as_bytes(),
+                );
+            } else {
+                drop(s);
+                gate.store(true, Ordering::SeqCst);
+                return;
+            }
+        }
+    });
+    (addr, handle)
+}
+
+fn grid() -> SweepSpec {
+    SweepSpec {
+        techs: MemTech::ALL.to_vec(),
+        capacities_mb: vec![1, 2],
+        dnns: vec!["AlexNet".into()],
+        phases: Phase::ALL.to_vec(),
+        batches: vec![],
+        nodes_nm: vec![16],
+        filters: vec![],
+    }
+}
+
+// ---------------------------------------------------------------- (a)
+
+#[test]
+fn two_worker_fleet_completes_the_grid_with_zero_solve_replay() {
+    let (w1, w2) = (worker(), worker());
+    let cfg = ScheduleConfig {
+        workers: vec![w1.local_addr().to_string(), w2.local_addr().to_string()],
+        ..ScheduleConfig::default()
+    };
+    let spec = grid();
+    let memo = Memo::new();
+    let report = coordinate(&spec, &cfg, &memo).unwrap();
+
+    assert_eq!(report.grid_points, spec.expand().unwrap().len());
+    assert_eq!(report.replay_solves, 0, "merged union must answer the grid");
+    assert_eq!(report.replay_evals, 0);
+    assert!(report.accepted > 0);
+    assert!(report
+        .shards
+        .iter()
+        .all(|s| matches!(s.state, ShardState::Merged { .. })));
+    assert_eq!(memo.solve_count(), 0, "the coordinator itself never solves");
+    assert_eq!(memo.eval_count(), 0, "the coordinator itself never evaluates");
+
+    // the merged memo is the full-grid cache: a fresh sweep over it is
+    // pure replay, point for point
+    let again = sweep::run(&spec, 2, &memo).unwrap();
+    assert_eq!(again.points.len(), report.grid_points);
+    assert_eq!(memo.solve_count(), 0);
+}
+
+// ---------------------------------------------------------------- (b)
+
+#[test]
+fn killed_workers_shard_is_reassigned_and_completed() {
+    let gate = Arc::new(AtomicBool::new(false));
+    let (dead_addr, dying) = dying_worker(Arc::clone(&gate));
+    // the live worker cannot take its first shard until the dying
+    // worker has been handed (and dropped) one, so the reassignment
+    // path is exercised deterministically
+    let live = gated_worker(Arc::clone(&gate));
+    let live_addr = live.local_addr().to_string();
+
+    let cfg = ScheduleConfig {
+        workers: vec![dead_addr.clone(), live_addr.clone()],
+        retries: 3,
+        deadline: Duration::from_secs(60),
+        ..ScheduleConfig::default()
+    };
+    let spec = grid();
+    let memo = Memo::new();
+    let report = coordinate(&spec, &cfg, &memo).unwrap();
+    dying.join().unwrap();
+
+    assert_eq!(report.replay_solves, 0);
+    assert_eq!(report.replay_evals, 0);
+    assert!(
+        report.reassigned >= 1,
+        "the killed worker's shard must be retried: {:?}",
+        report.shards
+    );
+    for s in &report.shards {
+        match &s.state {
+            ShardState::Merged { worker, .. } => {
+                assert_eq!(worker, &live_addr, "only the survivor can merge");
+            }
+            other => panic!("shard not merged: {other}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (c)
+
+#[test]
+fn unreachable_fleet_fails_cleanly() {
+    // an address with (almost certainly) nothing listening
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    let cfg = ScheduleConfig { workers: vec![addr], ..ScheduleConfig::default() };
+    let err = coordinate(&grid(), &cfg, &Memo::new()).unwrap_err();
+    assert!(err.to_string().contains("/healthz"), "{err}");
+}
+
+#[test]
+fn fleet_that_dies_entirely_fails_with_retry_accounting() {
+    let gate = Arc::new(AtomicBool::new(true)); // nobody to wait for
+    let (dead_addr, dying) = dying_worker(gate);
+    let cfg = ScheduleConfig {
+        workers: vec![dead_addr],
+        retries: 3,
+        deadline: Duration::from_secs(10),
+        ..ScheduleConfig::default()
+    };
+    let err = coordinate(&grid(), &cfg, &Memo::new()).unwrap_err();
+    dying.join().unwrap();
+    assert!(err.to_string().contains("died"), "{err}");
+}
+
+/// A worker that is alive and chatty but corrupt: `/healthz` is fine,
+/// yet every `/shard/run` answers 200 with an export whose first
+/// payload hash does not verify.
+fn corrupt_worker() -> String {
+    let m = Memo::new();
+    let spec = SweepSpec::circuit_only(vec![MemTech::SttMram], vec![1]);
+    sweep::run(&spec, 1, &m).unwrap();
+    let doc = m.to_json().to_pretty();
+    let needle = "\"payload_hash\": \"";
+    let at = doc.find(needle).unwrap() + needle.len();
+    let mut corrupt = doc;
+    corrupt.replace_range(at..at + 16, "0123456789abcdef");
+    let body = format!("{{\"points\": 1, \"solves\": 1, \"evals\": 0, \"export\": {corrupt}}}");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { return };
+            let mut buf = [0u8; 4096];
+            let n = s.read(&mut buf).unwrap_or(0);
+            let head = String::from_utf8_lossy(&buf[..n]);
+            let payload = if head.starts_with("GET /healthz") {
+                r#"{"status": "ok"}"#.to_string()
+            } else {
+                body.clone()
+            };
+            let _ = s.write_all(
+                format!(
+                    "HTTP/1.1 200 OK\r\nContent-Length: {}\r\n\
+                     Connection: close\r\n\r\n{payload}",
+                    payload.len()
+                )
+                .as_bytes(),
+            );
+        }
+    });
+    addr
+}
+
+#[test]
+fn corrupt_exports_are_redispatched_until_the_retry_budget_fails_the_run() {
+    let addr = corrupt_worker();
+    let cfg = ScheduleConfig {
+        workers: vec![addr],
+        retries: 1,
+        deadline: Duration::from_secs(10),
+        ..ScheduleConfig::default()
+    };
+    // a single-cap grid -> one shard, so the failure is attributable
+    let spec = SweepSpec { capacities_mb: vec![1], ..grid() };
+    let err = coordinate(&spec, &cfg, &Memo::new()).unwrap_err();
+    assert!(
+        err.to_string().contains("hash-rejected"),
+        "a corrupt export must fail the dispatch, not count as merged: {err}"
+    );
+}
+
+// ---------------------------------------------------------------- (d)
+
+#[test]
+fn status_route_reports_scheduler_state() {
+    let w = worker();
+    let cfg = ScheduleConfig {
+        workers: vec![w.local_addr().to_string()],
+        status_addr: Some("127.0.0.1:0".into()),
+        ..ScheduleConfig::default()
+    };
+    let c = Coordinator::new(&grid(), &cfg).unwrap();
+    let addr = c.status_addr().expect("status server bound").to_string();
+
+    // before the run: every shard pending, the fleet unprobed
+    let (status, body) =
+        http::call(&addr, "GET", "/scheduler/status", "", Duration::from_secs(5)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("pending").unwrap().as_u64(), Some(c.shard_count() as u64));
+    assert_eq!(j.get("merged").unwrap().as_u64(), Some(0));
+
+    let memo = Memo::new();
+    let report = c.run(&memo).unwrap();
+    assert_eq!(report.replay_solves, 0);
+
+    // after the run: everything merged, the worker alive and credited
+    let (status, body) =
+        http::call(&addr, "GET", "/scheduler/status", "", Duration::from_secs(5)).unwrap();
+    assert_eq!(status, 200);
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("merged").unwrap().as_u64(), Some(c.shard_count() as u64));
+    assert_eq!(j.get("pending").unwrap().as_u64(), Some(0));
+    assert_eq!(j.get("failed").unwrap().as_u64(), Some(0));
+    let workers = j.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers[0].get("alive").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        workers[0].get("shards_merged").unwrap().as_u64(),
+        Some(c.shard_count() as u64)
+    );
+
+    // the coordinator's own health endpoint names its role
+    let (status, body) =
+        http::call(&addr, "GET", "/healthz", "", Duration::from_secs(5)).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("coordinator"), "{body}");
+}

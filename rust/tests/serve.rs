@@ -189,6 +189,75 @@ fn disjoint_shard_merges_reproduce_the_full_grid_memo() {
 }
 
 #[test]
+fn partial_merge_accounts_exactly_and_leaves_the_memo_consistent() {
+    // Worker A's shard: caps [1]; the full export additionally carries
+    // caps [2]. Per capacity the export holds 2 circuit entries
+    // (stt + the sram baseline) and 2 point entries (two phases):
+    // 4 entries per capacity, 8 in the full document.
+    let spec = SweepSpec {
+        techs: vec![MemTech::SttMram],
+        capacities_mb: vec![1, 2],
+        dnns: vec!["AlexNet".into()],
+        phases: Phase::ALL.to_vec(),
+        batches: vec![],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let shard_a = SweepSpec { capacities_mb: vec![1], ..spec.clone() };
+
+    let worker = Memo::new();
+    let export_a = shard::run_shard(&shard_a, 1, &worker).unwrap();
+    let export_full = shard::run_shard(&spec, 1, &worker).unwrap();
+
+    // tamper with exactly one cap-2 point entry in the full document
+    let victim = export_full
+        .get("points")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|p| p.get("capacity_mb").unwrap().as_u64() == Some(2))
+        .expect("a cap-2 point entry");
+    let victim_hash = victim.get("payload_hash").unwrap().as_str().unwrap();
+    let text = export_full.to_pretty();
+    let tampered = text.replace(victim_hash, "00000000deadbeef");
+    assert_ne!(tampered, text);
+
+    // resident memo already holds shard A
+    let memo = leaked_memo();
+    let server = boot(memo);
+    let (status, body) = post(&server, "/memo/merge", &export_a.to_pretty());
+    assert_eq!(status, 200, "{body}");
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("accepted").unwrap().as_u64(), Some(4), "{body}");
+    assert_eq!(j.get("skipped").unwrap().as_u64(), Some(0));
+    assert_eq!(j.get("rejected").unwrap().as_u64(), Some(0));
+
+    // the mixed document: 3 fresh valid entries, 4 duplicates of shard
+    // A, 1 tampered — every entry lands in exactly one bucket
+    let (status, body) = post(&server, "/memo/merge", &tampered);
+    assert_eq!(status, 200, "{body}");
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("accepted").unwrap().as_u64(), Some(3), "{body}");
+    assert_eq!(j.get("skipped").unwrap().as_u64(), Some(4), "{body}");
+    assert_eq!(j.get("rejected").unwrap().as_u64(), Some(1), "{body}");
+
+    // the rejected entry was NOT merged: the memo still answers the
+    // untampered slice without it...
+    assert_eq!(memo.circuit_len(), 4);
+    assert_eq!(memo.point_len(), 3);
+    // ...and re-merging the clean document back-fills exactly that one
+    // entry, after which the full grid replays with zero work
+    let st = memo.merge_json(&export_full);
+    assert_eq!((st.accepted, st.skipped, st.rejected), (1, 7, 0));
+    assert_eq!(st.total(), 8);
+    let res = deepnvm::sweep::run(&spec, 1, memo).unwrap();
+    assert_eq!(res.points.len(), 4);
+    assert_eq!(memo.solve_count(), 0, "consistent memo: replay solves nothing");
+    assert_eq!(memo.eval_count(), 0);
+}
+
+#[test]
 fn tampered_shard_entries_are_rejected() {
     let worker = Memo::new();
     let doc = shard::run_shard(
