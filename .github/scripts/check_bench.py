@@ -55,6 +55,23 @@ if sweep is not None:
             "BENCH_sweep.json: warm_rerun_circuit_solves "
             f"{solves} > allowed {ceiling}"
         )
+    # the cross-node sweep (16/7/5 nm) must also replay warm with zero
+    # circuit solves: per-node CircuitKeys, no 16 nm aliasing
+    node_solves = recorded(
+        sweep, "BENCH_sweep.json", "node_sweep_warm_rerun_circuit_solves"
+    )
+    node_ceiling = acc.get("node_sweep_warm_rerun_circuit_solves_max", 0)
+    if node_solves is not None and node_solves > node_ceiling:
+        failures.append(
+            "BENCH_sweep.json: node_sweep_warm_rerun_circuit_solves "
+            f"{node_solves} > allowed {node_ceiling}"
+        )
+    nodes = recorded(sweep, "BENCH_sweep.json", "node_sweep_nodes")
+    if nodes is not None and nodes < 3:
+        failures.append(
+            f"BENCH_sweep.json: node_sweep_nodes {nodes} < 3 "
+            "(the bench must cover 16/7/5 nm)"
+        )
 
 serve = load("BENCH_serve.json")
 if serve is not None:

@@ -62,6 +62,34 @@ fn main() {
     );
     assert_eq!(warm_solves, 0, "warm rerun must not re-solve circuits");
 
+    // Cross-node sweep: the same engine over the full calibrated node
+    // axis (circuit-only — the node axis multiplies circuit solves,
+    // the expensive layer). The warm rerun must answer every node from
+    // cache: per-node CircuitKeys, no 16 nm aliasing.
+    let node_spec = SweepSpec {
+        capacities_mb: if quick { vec![1, 4] } else { vec![1, 2, 4, 8] },
+        dnns: vec![],
+        nodes_nm: deepnvm::device::CALIBRATED_NODES_NM.to_vec(),
+        ..SweepSpec::default()
+    };
+    let node_points = node_spec.expand().expect("node bench spec").len();
+    let node_memo = Memo::new();
+    let t_node_cold = timed(&node_spec, jobs, &node_memo);
+    let node_solves = node_memo.solve_count();
+    let t_node_warm = timed(&node_spec, jobs, &node_memo);
+    let node_warm_solves = node_memo.solve_count() - node_solves;
+    println!(
+        "  node sweep ({} nodes) {:>8.2} ms cold ({node_solves} solves), \
+         {:.2} ms warm ({node_warm_solves} new solves)",
+        node_spec.nodes_nm.len(),
+        t_node_cold * 1e3,
+        t_node_warm * 1e3,
+    );
+    assert_eq!(
+        node_warm_solves, 0,
+        "warm rerun must re-solve nothing across all nodes"
+    );
+
     // Steady-state warm-grid query rate (the serving path the ROADMAP
     // cares about: many scenarios against one resident grid).
     let mut b = if quick { Bench::quick() } else { Bench::new() };
@@ -82,6 +110,7 @@ fn main() {
     let mut acc = Json::obj();
     acc.set("parallel_speedup_min", Json::Num(1.5));
     acc.set("warm_rerun_circuit_solves_max", Json::Num(0.0));
+    acc.set("node_sweep_warm_rerun_circuit_solves_max", Json::Num(0.0));
     j.set("acceptance", acc);
     j.set("quick", Json::Bool(quick));
     j.set("grid_points", Json::Num(n_points as f64));
@@ -93,6 +122,15 @@ fn main() {
     j.set("parallel_speedup", Json::Num(t_serial / t_parallel));
     j.set("memoized_speedup", Json::Num(t_serial / t_memoized));
     j.set("warm_rerun_circuit_solves", Json::Num(warm_solves as f64));
+    j.set("node_sweep_nodes", Json::Num(node_spec.nodes_nm.len() as f64));
+    j.set("node_sweep_grid_points", Json::Num(node_points as f64));
+    j.set("node_sweep_circuit_solves", Json::Num(node_solves as f64));
+    j.set("node_sweep_cold_ms", Json::Num(t_node_cold * 1e3));
+    j.set("node_sweep_warm_ms", Json::Num(t_node_warm * 1e3));
+    j.set(
+        "node_sweep_warm_rerun_circuit_solves",
+        Json::Num(node_warm_solves as f64),
+    );
 
     // Land next to CHANGES.md when run from rust/ or the repo root.
     let path = if std::path::Path::new("../CHANGES.md").exists() {

@@ -126,6 +126,111 @@ pub fn workload_sweep_with(
     Ok(out)
 }
 
+/// One point of the cross-node scalability study: the EDAP-tuned cache
+/// at (node, tech, capacity), with the circuit-level figures the
+/// journal extension plots against deeply-scaled nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct NodePoint {
+    pub node_nm: u32,
+    pub tech: MemTech,
+    pub capacity_mb: u64,
+    pub read_latency: f64,
+    pub write_latency: f64,
+    pub leakage_power: f64,
+    pub area: f64,
+    /// Circuit-level EDAP figure of merit ([`crate::nvsim::CachePpa::edap`]).
+    pub edap: f64,
+}
+
+/// Cross-node scalability sweep: EDAP-tune every (node, tech,
+/// capacity) and report PPA + EDAP per point, in spec order (node
+/// outermost). The cross-node co-optimization view the 7/5 nm
+/// calibration lights up.
+pub fn node_sweep(capacities_mb: &[u64], nodes_nm: &[u32]) -> anyhow::Result<Vec<NodePoint>> {
+    node_sweep_with(capacities_mb, nodes_nm, 0, sweep::memo::global())
+}
+
+/// As [`node_sweep`] against an explicit worker budget and memo cache
+/// (fallible: both axes may arrive from untrusted CLI/HTTP inputs).
+pub fn node_sweep_with(
+    capacities_mb: &[u64],
+    nodes_nm: &[u32],
+    jobs: usize,
+    memo: &sweep::Memo,
+) -> anyhow::Result<Vec<NodePoint>> {
+    if capacities_mb.is_empty() || nodes_nm.is_empty() {
+        return Ok(Vec::new());
+    }
+    let spec = SweepSpec {
+        nodes_nm: nodes_nm.to_vec(),
+        ..SweepSpec::circuit_only(MemTech::ALL.to_vec(), capacities_mb.to_vec())
+    };
+    let res = sweep::run(&spec, jobs, memo)?;
+    Ok(res
+        .points
+        .into_iter()
+        .map(|p| NodePoint {
+            node_nm: p.point.node_nm,
+            tech: p.point.tech,
+            capacity_mb: p.point.capacity_mb,
+            read_latency: p.tuned.ppa.read_latency,
+            write_latency: p.tuned.ppa.write_latency,
+            leakage_power: p.tuned.ppa.leakage_power,
+            area: p.tuned.ppa.area,
+            edap: p.tuned.ppa.edap(),
+        })
+        .collect())
+}
+
+/// Per (node, NVM technology): the smallest swept capacity at which
+/// the NVM cache's EDAP beats the same-node SRAM cache — the
+/// crossover point the scalability story hinges on. `None` when SRAM
+/// wins across the whole swept range.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeCrossover {
+    pub node_nm: u32,
+    pub tech: MemTech,
+    pub crossover_mb: Option<u64>,
+}
+
+/// Extract the NVM-vs-SRAM crossover per node from a [`node_sweep`]
+/// result.
+pub fn nvm_crossovers(points: &[NodePoint]) -> Vec<NodeCrossover> {
+    // Order-preserving unique: the input is grouped by node when it
+    // comes straight from node_sweep, but callers may re-sort/filter.
+    let mut nodes: Vec<u32> = Vec::new();
+    for p in points {
+        if !nodes.contains(&p.node_nm) {
+            nodes.push(p.node_nm);
+        }
+    }
+    let mut out = Vec::new();
+    for &node in &nodes {
+        for tech in [MemTech::SttMram, MemTech::SotMram] {
+            let mut caps: Vec<u64> = points
+                .iter()
+                .filter(|p| p.node_nm == node && p.tech == tech)
+                .map(|p| p.capacity_mb)
+                .collect();
+            caps.sort_unstable();
+            let at = |t: MemTech, mb: u64| {
+                points
+                    .iter()
+                    .find(|p| p.node_nm == node && p.tech == t && p.capacity_mb == mb)
+                    .map(|p| p.edap)
+            };
+            let crossover_mb = caps.into_iter().find(|&mb| {
+                matches!(
+                    (at(tech, mb), at(MemTech::Sram, mb)),
+                    (Some(nvm), Some(sram)) if nvm < sram
+                )
+            });
+            out.push(NodeCrossover { node_nm: node, tech, crossover_mb });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,6 +335,64 @@ mod tests {
             assert!(p.energy_norm_std >= 0.0 && p.energy_norm_std.is_finite());
             assert!(p.edp_norm_std >= 0.0);
             assert!(p.latency_norm_mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn node_sweep_covers_the_grid_with_distinct_nodes() {
+        let memo = sweep::Memo::new();
+        let pts = node_sweep_with(&[2, 8], &[16, 7], 2, &memo).unwrap();
+        assert_eq!(pts.len(), 2 * 3 * 2, "nodes x techs x caps");
+        for p in &pts {
+            assert!(p.edap > 0.0 && p.edap.is_finite());
+            assert!(p.area > 0.0 && p.leakage_power > 0.0);
+        }
+        // per-node designs are distinct: 7 nm is denser at iso-capacity
+        let area = |node, tech, mb| {
+            pts.iter()
+                .find(|p| p.node_nm == node && p.tech == tech && p.capacity_mb == mb)
+                .unwrap()
+                .area
+        };
+        for tech in MemTech::ALL {
+            for mb in [2u64, 8] {
+                assert!(
+                    area(7, tech, mb) < area(16, tech, mb),
+                    "{tech} {mb}MB must shrink at 7nm"
+                );
+            }
+        }
+        // empty axes are total
+        assert!(node_sweep_with(&[], &[16], 1, &memo).unwrap().is_empty());
+        assert!(node_sweep_with(&[2], &[], 1, &memo).unwrap().is_empty());
+        // uncalibrated axis surfaces the spec error
+        assert!(node_sweep_with(&[2], &[9], 1, &memo).is_err());
+    }
+
+    #[test]
+    fn nvm_crossover_exists_and_moves_down_at_deep_nodes() {
+        let memo = sweep::Memo::new();
+        let pts =
+            node_sweep_with(&[1, 2, 4, 8, 16, 32], &[16, 7, 5], 0, &memo).unwrap();
+        let xs = nvm_crossovers(&pts);
+        assert_eq!(xs.len(), 3 * 2, "nodes x NVM techs");
+        let get = |node, tech| {
+            xs.iter()
+                .find(|x| x.node_nm == node && x.tech == tech)
+                .unwrap()
+                .crossover_mb
+        };
+        for tech in [MemTech::SttMram, MemTech::SotMram] {
+            for node in [16u32, 7, 5] {
+                assert!(
+                    get(node, tech).is_some(),
+                    "{tech} must overtake SRAM within 32MB at {node}nm"
+                );
+            }
+            // deeply-scaled SRAM leaks harder, so the crossover can
+            // only hold or move toward smaller capacities
+            assert!(get(7, tech).unwrap() <= get(16, tech).unwrap(), "{tech}");
+            assert!(get(5, tech).unwrap() <= get(16, tech).unwrap(), "{tech}");
         }
     }
 }

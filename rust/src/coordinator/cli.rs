@@ -25,6 +25,8 @@ COMMANDS (paper artifacts):
   fig6          DRAM reduction vs L2 capacity (hierarchy simulation)
   fig7 fig8     Iso-area energy / EDP studies
   fig9 fig10    Scalability sweeps (1-32 MB)
+  nodes         Cross-node scalability: EDAP-tuned PPA per process node
+                plus the NVM-vs-SRAM crossover point per node
   ext-area      Extension: spend the freed area on compute (paper SSV)
   ext-mobile    Extension: mobile inference LLC design space (paper SSV)
   ext-hybrid    Extension: hybrid SRAM+STT way-partitioned caches (SSII)
@@ -59,6 +61,8 @@ SWEEP OPTIONS:
   --caps LIST     capacities in MB (default: 1,2,4,8,16,32)
   --dnns LIST     zoo workloads, or 'none' for a circuit-only PPA sweep
   --phases LIST   inference,training (default: both)
+  --nodes LIST    process nodes in nm (calibrated: 16,7,5; default: 16) —
+                  also the `nodes` report axis
   --jobs N        worker threads (default: one per core)
   --pareto        print the EDP/area/capacity Pareto frontier
   --nvm-only      drop SRAM rows (the baseline is still solved for norms)
@@ -105,6 +109,8 @@ pub struct CliOptions {
     pub caps: Vec<u64>,
     pub dnns: Vec<String>,
     pub phases: Vec<Phase>,
+    /// Process-node axis in nm (empty = the 16 nm default).
+    pub nodes: Vec<u32>,
     /// Sweep worker threads (0 = one per core).
     pub jobs: usize,
     pub pareto: bool,
@@ -142,6 +148,7 @@ impl Default for CliOptions {
             caps: vec![],
             dnns: vec![],
             phases: vec![],
+            nodes: vec![],
             jobs: 0,
             pareto: false,
             nvm_only: false,
@@ -230,6 +237,16 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
                     bail!("--phases needs at least one value");
                 }
             }
+            "--nodes" => {
+                o.nodes = split_list(value()?)
+                    .iter()
+                    .map(|s| s.parse::<u32>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad --nodes: {e}"))?;
+                if o.nodes.is_empty() {
+                    bail!("--nodes needs at least one value");
+                }
+            }
             "--jobs" => {
                 o.jobs = value()?.parse()?;
             }
@@ -310,6 +327,7 @@ pub fn sweep_spec_from(o: &CliOptions) -> Result<SweepSpec> {
     };
     let phases = if o.phases.is_empty() { Phase::ALL.to_vec() } else { o.phases.clone() };
     let batches = if o.batches_explicit { o.batches.clone() } else { vec![] };
+    let nodes_nm = if o.nodes.is_empty() { vec![16] } else { o.nodes.clone() };
     let filters = if o.nvm_only { vec![Filter::NvmOnly] } else { vec![] };
     Ok(SweepSpec {
         techs,
@@ -317,7 +335,7 @@ pub fn sweep_spec_from(o: &CliOptions) -> Result<SweepSpec> {
         dnns,
         phases,
         batches,
-        nodes_nm: vec![16],
+        nodes_nm,
         filters,
     })
 }
@@ -346,6 +364,39 @@ pub fn generate(o: &CliOptions) -> Result<Vec<Report>> {
         }
         "fig9" => vec![reports::fig9(&scal_caps(o.quick))],
         "fig10" => vec![reports::fig10(&scal_caps(o.quick))],
+        "nodes" => {
+            let caps = if o.caps.is_empty() { scal_caps(o.quick) } else { o.caps.clone() };
+            let nodes = if o.nodes.is_empty() {
+                crate::device::CALIBRATED_NODES_NM.to_vec()
+            } else {
+                o.nodes.clone()
+            };
+            // Same memo lifecycle as `sweep`: warm-load the on-disk
+            // cache (unless --cold) and persist afterwards, so repeated
+            // cross-node reports replay instead of re-solving.
+            let store = Store::new(&o.out);
+            let memo = crate::sweep::memo::global();
+            memo.set_point_capacity(o.memo_cap);
+            if !o.cold {
+                match memo.load_from(&store) {
+                    Ok(n) if n > 0 => {
+                        eprintln!("nodes: warmed memo with {n} cached entries");
+                    }
+                    Ok(_) => {}
+                    Err(e) => eprintln!("warning: ignoring memo cache: {e}"),
+                }
+            }
+            let r = reports::nodes_report_with(&caps, &nodes, o.jobs, memo)?;
+            if o.cold {
+                if let Err(e) = memo.load_from(&store) {
+                    eprintln!("warning: ignoring memo cache: {e}");
+                }
+            }
+            if let Err(e) = memo.save_to(&store) {
+                eprintln!("warning: could not persist sweep memo: {e}");
+            }
+            vec![r]
+        }
         "sweep" => {
             let spec = sweep_spec_from(o)?;
             let store = Store::new(&o.out);
@@ -707,6 +758,44 @@ mod tests {
         let spec = sweep_spec_from(&o).unwrap();
         assert!(spec.dnns.is_empty());
         assert_eq!(spec.expand().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn parses_the_nodes_axis() {
+        let o = parse_args(&sv(&[
+            "sweep", "--nodes", "16,7,5", "--dnns", "none", "--caps", "1",
+        ]))
+        .unwrap();
+        assert_eq!(o.nodes, vec![16, 7, 5]);
+        let spec = sweep_spec_from(&o).unwrap();
+        assert_eq!(spec.nodes_nm, vec![16, 7, 5]);
+        assert_eq!(spec.expand().unwrap().len(), 9, "3 nodes x 3 techs x 1 cap");
+
+        // default stays the paper's 16 nm
+        let o = parse_args(&sv(&["sweep", "--dnns", "none", "--caps", "1"])).unwrap();
+        assert_eq!(sweep_spec_from(&o).unwrap().nodes_nm, vec![16]);
+
+        // uncalibrated nodes parse but fail spec validation up front
+        let o = parse_args(&sv(&["sweep", "--nodes", "9", "--caps", "1"])).unwrap();
+        assert!(sweep_spec_from(&o).unwrap().expand().is_err());
+
+        assert!(parse_args(&sv(&["sweep", "--nodes", "x"])).is_err());
+        assert!(parse_args(&sv(&["sweep", "--nodes", ","])).is_err());
+    }
+
+    #[test]
+    fn nodes_command_generates_the_cross_node_report() {
+        let out = std::env::temp_dir().join("deepnvm_nodes_cli_test");
+        let o = parse_args(&sv(&[
+            "nodes", "--caps", "2,8", "--nodes", "16,7", "--quick", "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let rs = generate(&o).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, "NODES");
+        assert_eq!(rs[0].csv.n_rows(), 2 * 3 * 2);
+        assert!(rs[0].text.contains("crossover"));
     }
 
     #[test]

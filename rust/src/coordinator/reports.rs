@@ -320,6 +320,74 @@ pub fn fig10_with(
     Ok(Report { id: "F10", title: "Fig 10".into(), text: t.to_string(), csv })
 }
 
+/// Cross-node scalability report (`deepnvm nodes`): the EDAP-tuned
+/// cache at every (node, tech, capacity) with the per-node NVM-vs-SRAM
+/// EDAP crossover — the co-optimization view the 7/5 nm calibration
+/// lights up (journal extension's scalability axis).
+pub fn nodes_report(capacities_mb: &[u64], nodes_nm: &[u32]) -> anyhow::Result<Report> {
+    nodes_report_with(capacities_mb, nodes_nm, 0, memo::global())
+}
+
+/// As [`nodes_report`] against an explicit worker budget and memo
+/// cache (fallible: both axes may arrive from untrusted inputs).
+pub fn nodes_report_with(
+    capacities_mb: &[u64],
+    nodes_nm: &[u32],
+    jobs: usize,
+    memo: &memo::Memo,
+) -> anyhow::Result<Report> {
+    let pts = scalability::node_sweep_with(capacities_mb, nodes_nm, jobs, memo)?;
+    let mut t = Table::new(&[
+        "node", "tech", "MB", "RdLat(ns)", "WrLat(ns)", "Leak(mW)", "Area(mm2)",
+        "EDAP",
+    ])
+    .title("Process-node scaling: EDAP-optimal caches per (node, tech, capacity)");
+    let mut csv = Csv::new(&[
+        "node_nm", "tech", "mb", "read_lat_ns", "write_lat_ns", "leak_mw",
+        "area_mm2", "edap",
+    ]);
+    for p in &pts {
+        let cells = [
+            format!("{}nm", p.node_nm),
+            p.tech.name().to_string(),
+            p.capacity_mb.to_string(),
+            f(p.read_latency * 1e9, 2),
+            f(p.write_latency * 1e9, 2),
+            f(p.leakage_power * 1e3, 0),
+            f(p.area * 1e6, 2),
+            format!("{:.4e}", p.edap),
+        ];
+        t.row(&cells);
+        csv.row(&[
+            p.node_nm.to_string(),
+            p.tech.name().to_string(),
+            p.capacity_mb.to_string(),
+            f(p.read_latency * 1e9, 4),
+            f(p.write_latency * 1e9, 4),
+            f(p.leakage_power * 1e3, 2),
+            f(p.area * 1e6, 4),
+            format!("{:.6e}", p.edap),
+        ]);
+    }
+    let mut text = t.to_string();
+    text.push_str("NVM-vs-SRAM EDAP crossover per node (smallest winning capacity):\n");
+    for x in scalability::nvm_crossovers(&pts) {
+        match x.crossover_mb {
+            Some(mb) => text.push_str(&format!(
+                "  {:>4}nm {:9}  >= {mb} MB\n",
+                x.node_nm,
+                x.tech.name()
+            )),
+            None => text.push_str(&format!(
+                "  {:>4}nm {:9}  SRAM wins across the swept range\n",
+                x.node_nm,
+                x.tech.name()
+            )),
+        }
+    }
+    Ok(Report { id: "NODES", title: "Process-node scaling".into(), text, csv })
+}
+
 /// Extension A (paper §V, implemented): what the freed iso-capacity
 /// area buys in compute.
 pub fn ext_area_reuse() -> Report {
@@ -610,6 +678,16 @@ mod tests {
     fn fig9_rows_complete() {
         let r = fig9(&[2, 8]);
         assert_eq!(r.csv.n_rows(), 3 * 2);
+    }
+
+    #[test]
+    fn nodes_report_renders_cross_node_grid() {
+        let r = nodes_report_with(&[2, 8], &[16, 7], 1, &memo::Memo::new()).unwrap();
+        assert_eq!(r.csv.n_rows(), 2 * 3 * 2, "nodes x techs x caps");
+        assert!(r.text.contains("crossover"));
+        assert!(r.csv.to_string().lines().any(|l| l.starts_with("7,")));
+        // an uncalibrated node axis errors instead of panicking
+        assert!(nodes_report_with(&[2], &[9], 1, &memo::Memo::new()).is_err());
     }
 
     #[test]

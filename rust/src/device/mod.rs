@@ -36,5 +36,8 @@ pub mod mtj;
 pub mod transient;
 pub mod types;
 
-pub use characterize::{characterize, CharacterizeResult};
-pub use types::{BitcellParams, MemTech, WritePolarity};
+pub use characterize::{characterize, characterize_at, sram_cell_area, CharacterizeResult};
+pub use types::{
+    node_calibrated, BitcellParams, MemTech, NodeScale, UncalibratedNode, WritePolarity,
+    CALIBRATED_NODES_NM,
+};

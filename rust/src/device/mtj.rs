@@ -125,6 +125,90 @@ impl Mtj {
             polarization: 0.60,
         }
     }
+
+    /// 7nm-class STT stack, scaled from [`Mtj::stt_16nm`]: the pillar
+    /// shrinks to ~35 nm (MTJ patterning limits it well above the logic
+    /// pitch), and the anisotropy field rises to hold the retention
+    /// barrier Delta >= 40 at the smaller free-layer volume — the
+    /// interfacial-PMA scaling path the deeply-scaled-node literature
+    /// (journal extension, SOT-DTCO'23) assumes. RA and TMR tick up
+    /// with stack maturity to preserve read margin.
+    pub fn stt_7nm() -> Self {
+        Mtj {
+            diameter: 35e-9,
+            t_free: 1.2e-9,
+            ms: 0.90e6,
+            alpha: 0.0064,
+            hk: 3.45e5, // Delta ~54 at the smaller volume
+            ra_p: 8.0e-12,
+            tmr: 1.6,
+            polarization: 0.65,
+        }
+    }
+
+    /// 5nm-class STT stack (see [`Mtj::stt_7nm`] for the scaling
+    /// rationale; the ~30 nm pillar is near the patterning floor).
+    pub fn stt_5nm() -> Self {
+        Mtj {
+            diameter: 30e-9,
+            t_free: 1.1e-9,
+            ms: 0.95e6,
+            alpha: 0.0064,
+            hk: 4.3e5, // Delta ~48
+            ra_p: 8.0e-12,
+            tmr: 1.7,
+            polarization: 0.65,
+        }
+    }
+
+    /// 7nm-class SOT stack, scaled from [`Mtj::sot_16nm`] like
+    /// [`Mtj::stt_7nm`].
+    pub fn sot_7nm() -> Self {
+        Mtj {
+            diameter: 30e-9,
+            t_free: 1.1e-9,
+            ms: 0.95e6,
+            alpha: 0.010,
+            hk: 4.9e5,
+            ra_p: 9.0e-12,
+            tmr: 1.9,
+            polarization: 0.60,
+        }
+    }
+
+    /// 5nm-class SOT stack.
+    pub fn sot_5nm() -> Self {
+        Mtj {
+            diameter: 26e-9,
+            t_free: 1.0e-9,
+            ms: 1.0e6,
+            alpha: 0.010,
+            hk: 6.2e5,
+            ra_p: 10.0e-12,
+            tmr: 2.0,
+            polarization: 0.60,
+        }
+    }
+
+    /// Calibrated STT stack at a process node.
+    pub fn stt_at(node_nm: u32) -> Result<Self, super::types::UncalibratedNode> {
+        Ok(match node_nm {
+            16 => Self::stt_16nm(),
+            7 => Self::stt_7nm(),
+            5 => Self::stt_5nm(),
+            other => return Err(super::types::UncalibratedNode(other)),
+        })
+    }
+
+    /// Calibrated SOT stack at a process node.
+    pub fn sot_at(node_nm: u32) -> Result<Self, super::types::UncalibratedNode> {
+        Ok(match node_nm {
+            16 => Self::sot_16nm(),
+            7 => Self::sot_7nm(),
+            5 => Self::sot_5nm(),
+            other => return Err(super::types::UncalibratedNode(other)),
+        })
+    }
 }
 
 /// Heavy-metal write channel of a SOT cell.
@@ -148,6 +232,39 @@ impl SotChannel {
             t_channel: 4e-9,
             width: 40e-9,
         }
+    }
+
+    /// 7nm-class channel: width tracks the smaller junction and the
+    /// shrinking cross-section raises the channel resistance; the spin
+    /// Hall angle is a material property and stays put.
+    pub fn beta_w_7nm() -> Self {
+        SotChannel {
+            theta_sh: 0.30,
+            r_channel: 850.0,
+            t_channel: 3.5e-9,
+            width: 30e-9,
+        }
+    }
+
+    /// 5nm-class channel.
+    pub fn beta_w_5nm() -> Self {
+        SotChannel {
+            theta_sh: 0.30,
+            r_channel: 1000.0,
+            t_channel: 3.2e-9,
+            width: 26e-9,
+        }
+    }
+
+    /// Calibrated channel at a process node (paired with
+    /// [`Mtj::sot_at`]).
+    pub fn beta_w_at(node_nm: u32) -> Result<Self, super::types::UncalibratedNode> {
+        Ok(match node_nm {
+            16 => Self::beta_w_16nm(),
+            7 => Self::beta_w_7nm(),
+            5 => Self::beta_w_5nm(),
+            other => return Err(super::types::UncalibratedNode(other)),
+        })
     }
 
     /// Effective spin current injected into the free layer for a charge
@@ -204,5 +321,29 @@ mod tests {
     fn theta0_small_angle() {
         let m = Mtj::stt_16nm();
         assert!(m.theta0() < 0.2, "theta0 {}", m.theta0());
+    }
+
+    #[test]
+    fn scaled_stacks_hold_retention_and_shrink() {
+        for node in crate::device::CALIBRATED_NODES_NM {
+            for m in [Mtj::stt_at(node).unwrap(), Mtj::sot_at(node).unwrap()] {
+                let d = m.thermal_stability();
+                assert!((40.0..120.0).contains(&d), "{node}nm Delta {d}");
+                assert!(m.r_ap() > m.r_p());
+                assert!(m.theta0() < 0.25, "{node}nm theta0 {}", m.theta0());
+            }
+        }
+        // pillars shrink monotonically with the node
+        assert!(Mtj::stt_7nm().area() < Mtj::stt_16nm().area());
+        assert!(Mtj::stt_5nm().area() < Mtj::stt_7nm().area());
+        assert!(Mtj::sot_5nm().area() < Mtj::sot_7nm().area());
+        // the channel narrows with the junction and resists more
+        assert!(SotChannel::beta_w_7nm().r_channel > SotChannel::beta_w_16nm().r_channel);
+        assert!(SotChannel::beta_w_5nm().width < SotChannel::beta_w_7nm().width);
+        // 16 nm accessors are the legacy constructors, uncalibrated errors
+        assert_eq!(Mtj::stt_at(16).unwrap().diameter, Mtj::stt_16nm().diameter);
+        assert!(Mtj::stt_at(10).is_err());
+        assert!(Mtj::sot_at(3).is_err());
+        assert!(SotChannel::beta_w_at(9).is_err());
     }
 }

@@ -1,7 +1,41 @@
-//! Shared device-layer types: the memory technologies under study and
-//! the bitcell parameter bundle handed to the cache modeler.
+//! Shared device-layer types: the memory technologies under study, the
+//! calibrated process-node set, and the bitcell parameter bundle handed
+//! to the cache modeler.
 
 use std::fmt;
+
+/// Process nodes (nm) with full cross-layer calibration: interconnect
+/// and periphery ([`crate::nvsim::TechParams`]), bitcell geometry
+/// ([`super::characterize::layout`]) and device stacks
+/// ([`super::mtj::Mtj`]). This list is THE source of truth — sweep-spec
+/// validation, the serve routes and the memo merge path all check
+/// against it, so adding a node here (plus its calibration data) lights
+/// it up everywhere at once.
+pub const CALIBRATED_NODES_NM: [u32; 3] = [16, 7, 5];
+
+/// Whether `node_nm` names a calibrated process node.
+pub fn node_calibrated(node_nm: u32) -> bool {
+    CALIBRATED_NODES_NM.contains(&node_nm)
+}
+
+/// Typed error for a process node outside [`CALIBRATED_NODES_NM`].
+/// Model entry points return this instead of panicking so untrusted
+/// inputs (HTTP bodies, merged memo documents) degrade to an error
+/// response, never a dead worker thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UncalibratedNode(pub u32);
+
+impl fmt::Display for UncalibratedNode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "process node {}nm is not calibrated (calibrated:", self.0)?;
+        for (i, n) in CALIBRATED_NODES_NM.iter().enumerate() {
+            write!(f, "{}{n}", if i == 0 { " " } else { ", " })?;
+        }
+        write!(f, " nm)")
+    }
+}
+
+impl std::error::Error for UncalibratedNode {}
 
 /// Memory technology under study (paper's set M in Algorithm 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -139,13 +173,100 @@ impl BitcellParams {
         }
     }
 
-    /// Paper defaults per technology.
+    /// Paper defaults per technology (the 16 nm Table I calibration).
     pub fn paper(tech: MemTech) -> Self {
         match tech {
             MemTech::Sram => Self::paper_sram(),
             MemTech::SttMram => Self::paper_stt(),
             MemTech::SotMram => Self::paper_sot(),
         }
+    }
+
+    /// Calibrated bitcell parameters at a process node, scaled from the
+    /// 16 nm Table I baselines by [`NodeScale`]. 16 nm returns the
+    /// baselines bit-for-bit.
+    pub fn paper_at(tech: MemTech, node_nm: u32) -> Result<Self, UncalibratedNode> {
+        let s = NodeScale::at(node_nm)?;
+        let base = Self::paper(tech);
+        let area_rel = match tech {
+            MemTech::Sram => base.area_rel,
+            _ => base.area_rel * s.mram_area_rel,
+        };
+        Ok(BitcellParams {
+            sense_latency: base.sense_latency * s.latency,
+            sense_energy: base.sense_energy * s.energy,
+            write_latency_set: base.write_latency_set * s.latency,
+            write_latency_reset: base.write_latency_reset * s.latency,
+            write_energy_set: base.write_energy_set * s.energy,
+            write_energy_reset: base.write_energy_reset * s.energy,
+            area_rel,
+            cell_leakage: base.cell_leakage * s.sram_cell_leak,
+            ..base
+        })
+    }
+}
+
+/// Deep-scaling multipliers applied to the 16 nm bitcell calibration
+/// (DeepNVM++'s journal extension carries the scalability analysis to
+/// deeply-scaled nodes; these factors follow its first-order trends):
+///
+/// * `latency` — switching and sensing speed up with faster access
+///   devices, but less than the FO4 gain (the MTJ dynamics and the
+///   sense window are device-limited, not logic-limited).
+/// * `energy` — CV²: cell and driver capacitance shrink with geometry
+///   while VDD drops 0.8 -> 0.7 -> 0.65 V.
+/// * `sram_cell_leak` — per-cell 6T leakage *rises* at deeply-scaled
+///   geometries (DIBL, gate leakage, worst-corner Vt spread) even as
+///   dynamic energy falls — the effect that widens the NVM advantage
+///   at 7/5 nm.
+/// * `mram_area_rel` — the MTJ pillar is patterning-limited (~30-50 nm)
+///   and shrinks slower than the logic pitch, so the cell's area
+///   *relative to same-node SRAM* grows; MRAM stays denser (< 1) but
+///   the density edge narrows.
+/// * `periph_leak_density` — leakage per mm^2 of peripheral silicon
+///   *rises* as more (leakier) transistors pack each unit area; the
+///   cache model applies it to decoder/sense/driver strips.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeScale {
+    pub latency: f64,
+    pub energy: f64,
+    pub sram_cell_leak: f64,
+    pub mram_area_rel: f64,
+    pub periph_leak_density: f64,
+}
+
+impl NodeScale {
+    /// Scaling factors for a calibrated node (16 nm is identity).
+    /// This is the ONLY per-node factor table: every other node switch
+    /// (`TechParams::at`, `Layout::at`, `Mtj::*_at`) dispatches to
+    /// full calibration structs, and the cache model's periphery reads
+    /// its factors from here, so a node added to
+    /// [`CALIBRATED_NODES_NM`] cannot be half-wired.
+    pub fn at(node_nm: u32) -> Result<Self, UncalibratedNode> {
+        Ok(match node_nm {
+            16 => NodeScale {
+                latency: 1.0,
+                energy: 1.0,
+                sram_cell_leak: 1.0,
+                mram_area_rel: 1.0,
+                periph_leak_density: 1.0,
+            },
+            7 => NodeScale {
+                latency: 0.82,
+                energy: 0.55,
+                sram_cell_leak: 1.35,
+                mram_area_rel: 1.30,
+                periph_leak_density: 2.2,
+            },
+            5 => NodeScale {
+                latency: 0.74,
+                energy: 0.42,
+                sram_cell_leak: 1.60,
+                mram_area_rel: 1.55,
+                periph_leak_density: 2.8,
+            },
+            other => return Err(UncalibratedNode(other)),
+        })
     }
 }
 
@@ -170,6 +291,54 @@ mod tests {
         assert_eq!(BitcellParams::paper_stt().cell_leakage, 0.0);
         assert_eq!(BitcellParams::paper_sot().cell_leakage, 0.0);
         assert!(BitcellParams::paper_sram().cell_leakage > 0.0);
+    }
+
+    #[test]
+    fn node_list_and_errors() {
+        assert_eq!(CALIBRATED_NODES_NM, [16, 7, 5]);
+        assert!(node_calibrated(16) && node_calibrated(7) && node_calibrated(5));
+        assert!(!node_calibrated(9) && !node_calibrated(0));
+        let e = NodeScale::at(9).unwrap_err();
+        assert_eq!(e, UncalibratedNode(9));
+        assert!(e.to_string().contains("9nm"));
+        // the error names the calibrated set, derived from the constant
+        assert!(e.to_string().contains("16, 7, 5 nm"), "{e}");
+        assert!(BitcellParams::paper_at(MemTech::Sram, 3).is_err());
+    }
+
+    #[test]
+    fn sixteen_nm_scaling_is_identity() {
+        for tech in MemTech::ALL {
+            let base = BitcellParams::paper(tech);
+            let scaled = BitcellParams::paper_at(tech, 16).unwrap();
+            assert_eq!(base, scaled, "{tech}");
+        }
+    }
+
+    #[test]
+    fn scaled_nodes_follow_first_order_trends() {
+        for tech in MemTech::ALL {
+            let n16 = BitcellParams::paper_at(tech, 16).unwrap();
+            let n7 = BitcellParams::paper_at(tech, 7).unwrap();
+            let n5 = BitcellParams::paper_at(tech, 5).unwrap();
+            // faster and cheaper accesses as the node scales
+            assert!(n5.sense_latency < n7.sense_latency);
+            assert!(n7.sense_latency < n16.sense_latency, "{tech}");
+            assert!(n5.write_energy() < n7.write_energy());
+            assert!(n7.write_energy() < n16.write_energy(), "{tech}");
+            if tech == MemTech::Sram {
+                // SRAM leaks *more* per cell at deep nodes
+                assert!(n5.cell_leakage > n7.cell_leakage);
+                assert!(n7.cell_leakage > n16.cell_leakage);
+                assert_eq!(n7.area_rel, 1.0, "SRAM is its own area baseline");
+            } else {
+                // MRAM density edge narrows but never inverts
+                assert!(n16.area_rel < n7.area_rel);
+                assert!(n7.area_rel < n5.area_rel);
+                assert!(n5.area_rel < 1.0, "{tech} must stay denser than SRAM");
+                assert_eq!(n7.cell_leakage, 0.0, "MTJs do not leak at any node");
+            }
+        }
     }
 
     #[test]

@@ -114,11 +114,23 @@ impl TunedConfig {
     }
 }
 
-/// Evaluate every (org, opt, mode) for one memory + capacity and return
-/// the EDAP-optimal configuration.
+/// Evaluate every (org, opt, mode) for one memory + capacity on the
+/// paper's 16 nm node and return the EDAP-optimal configuration.
 pub fn tuned_cache(mem: MemTech, capacity_bytes: u64) -> TunedConfig {
-    let tech = TechParams::n16();
-    let cell = Bitcell::paper(mem);
+    tuned_cache_at(mem, capacity_bytes, 16).expect("16 nm is calibrated")
+}
+
+/// As [`tuned_cache`] at an explicit process node: Algorithm 1 against
+/// that node's interconnect parameters and bitcell geometry. Returns a
+/// typed error for uncalibrated nodes, so untrusted node axes degrade
+/// to an error response instead of a panic.
+pub fn tuned_cache_at(
+    mem: MemTech,
+    capacity_bytes: u64,
+    node_nm: u32,
+) -> Result<TunedConfig, crate::device::UncalibratedNode> {
+    let tech = TechParams::at(node_nm)?;
+    let cell = Bitcell::at(mem, node_nm)?;
     let mut best: Option<TunedConfig> = None;
     for mode in AccessMode::ALL {
         for org in CacheOrg::enumerate(capacity_bytes, mode) {
@@ -142,7 +154,7 @@ pub fn tuned_cache(mem: MemTech, capacity_bytes: u64) -> TunedConfig {
             }
         }
     }
-    best.expect("no consistent organization for capacity")
+    Ok(best.expect("no consistent organization for capacity"))
 }
 
 /// Algorithm 1 over a capacity list: the `TunedConfig` table.
@@ -228,5 +240,30 @@ mod tests {
                 "{mem}"
             );
         }
+    }
+
+    #[test]
+    fn tuned_cache_at_is_node_distinct() {
+        // 16 nm through the node-aware entry point is the legacy solve
+        let legacy = tuned_cache(MemTech::SttMram, 2 * MB);
+        let at16 = tuned_cache_at(MemTech::SttMram, 2 * MB, 16).unwrap();
+        assert_eq!(format!("{legacy:?}"), format!("{at16:?}"));
+
+        // deep nodes tune to genuinely different designs — smaller
+        // area at iso-capacity, never 16 nm aliasing
+        for mem in MemTech::ALL {
+            let n16 = tuned_cache_at(mem, 2 * MB, 16).unwrap();
+            let n7 = tuned_cache_at(mem, 2 * MB, 7).unwrap();
+            let n5 = tuned_cache_at(mem, 2 * MB, 5).unwrap();
+            assert!(n7.ppa.area < n16.ppa.area, "{mem} 7nm must be denser");
+            assert!(n5.ppa.area < n7.ppa.area, "{mem} 5nm must be denser");
+            assert_ne!(
+                format!("{:?}", n7.ppa),
+                format!("{:?}", n16.ppa),
+                "{mem} nodes must not alias"
+            );
+        }
+        // uncalibrated nodes error instead of panicking
+        assert!(tuned_cache_at(MemTech::Sram, 2 * MB, 9).is_err());
     }
 }

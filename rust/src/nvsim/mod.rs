@@ -31,7 +31,7 @@ pub mod model;
 pub mod org;
 pub mod tech;
 
-pub use explorer::{explore, tuned_cache, OptTarget, TunedConfig};
+pub use explorer::{explore, tuned_cache, tuned_cache_at, OptTarget, TunedConfig};
 pub use model::{CacheDesign, CachePpa};
 pub use org::{AccessMode, CacheOrg};
 pub use tech::TechParams;

@@ -1,15 +1,18 @@
-//! 16nm interconnect + periphery technology parameters ("the internal
-//! technology file of NVSim, modified to the corresponding 16nm
-//! technology parameters" — paper §III-B), plus the per-technology
+//! Interconnect + periphery technology parameters ("the internal
+//! technology file of NVSim", paper §III-B), node-indexed: the 16 nm
+//! set the paper reproduces, plus deeply-scaled 7/5 nm calibrations
+//! (the journal extension's scalability axis), plus the per-technology
 //! bitcell wrapper the array model consumes.
 
-use crate::device::{BitcellParams, MemTech};
+use crate::device::{BitcellParams, MemTech, UncalibratedNode};
 
-/// Wire/device constants of the modeled 16nm node. Local (M2-class)
+/// Wire/device constants of one calibrated node. Local (M2-class)
 /// wires inside subarrays, intermediate for mat routing, global
 /// repeatered wires for the H-tree.
 #[derive(Clone, Copy, Debug)]
 pub struct TechParams {
+    /// The process node these parameters calibrate (nm).
+    pub node_nm: u32,
     /// Local wire resistance (Ohm/m).
     pub r_wire_local: f64,
     /// Local wire capacitance (F/m).
@@ -36,12 +39,20 @@ pub struct TechParams {
     pub c_cell_drain: f64,
     /// Gate capacitance a cell adds to its wordline (F).
     pub c_cell_gate: f64,
+    /// Foundry 6T SRAM cell area at this node (m^2) — read from the
+    /// device layer's layout tables, never duplicated here; the array
+    /// model's tag arrays and the Table I normalization share it.
+    pub sram_cell_area: f64,
+    /// Linear shrink of the absolute peripheral strip dimensions
+    /// (sense-amp / decoder silicon) relative to the 16 nm layout.
+    pub periph_scale: f64,
 }
 
 impl TechParams {
     /// The 16nm node used throughout the paper reproduction.
     pub fn n16() -> Self {
         TechParams {
+            node_nm: 16,
             r_wire_local: 4.0e6,    // 4 Ohm/um
             c_wire_local: 0.20e-9,  // 0.20 fF/um
             // Semi-global (non-repeated M4-class) routing inside the
@@ -59,7 +70,73 @@ impl TechParams {
             leak_mat_ctrl: 60e-6,
             c_cell_drain: 0.10e-15,
             c_cell_gate: 0.10e-15,
+            sram_cell_area: crate::device::characterize::layout::Layout::n16()
+                .sram_cell_area,
+            periph_scale: 1.0,
         }
+    }
+
+    /// 7nm calibration. Devices get faster (FO4 9 -> 6.5 ps) and
+    /// cheaper (CV^2 at VDD 0.7 V), but wires get *worse* per unit
+    /// length (narrower lines, resistivity size effect) and leakage
+    /// per instance rises — the deep-scaling regime where the journal
+    /// extension and the 7 nm SOT-DTCO study show NVM pulling further
+    /// ahead of SRAM.
+    pub fn n7() -> Self {
+        TechParams {
+            node_nm: 7,
+            r_wire_local: 9.0e6,    // 9 Ohm/um
+            c_wire_local: 0.19e-9,
+            t_wire_global: 850e-12 / 1e-3,
+            e_wire_global: 0.21e-12 / 1e-3,
+            leak_wire_global: 1.6e-6 / 1e-3,
+            vdd: 0.7,
+            t_fo4: 6.5e-12,
+            e_dec_stage: 0.35e-15,
+            leak_senseamp: 1.9e-6,
+            leak_row_driver: 0.5e-6,
+            leak_mat_ctrl: 75e-6,
+            c_cell_drain: 0.06e-15,
+            c_cell_gate: 0.06e-15,
+            sram_cell_area: crate::device::characterize::layout::Layout::n7()
+                .sram_cell_area,
+            periph_scale: 0.60,
+        }
+    }
+
+    /// 5nm calibration (see [`TechParams::n7`] for the scaling story;
+    /// every trend continues: faster gates, slower wires, leakier
+    /// silicon per instance).
+    pub fn n5() -> Self {
+        TechParams {
+            node_nm: 5,
+            r_wire_local: 12.5e6,   // 12.5 Ohm/um
+            c_wire_local: 0.18e-9,
+            t_wire_global: 980e-12 / 1e-3,
+            e_wire_global: 0.17e-12 / 1e-3,
+            leak_wire_global: 1.9e-6 / 1e-3,
+            vdd: 0.65,
+            t_fo4: 5.8e-12,
+            e_dec_stage: 0.28e-15,
+            leak_senseamp: 2.1e-6,
+            leak_row_driver: 0.55e-6,
+            leak_mat_ctrl: 85e-6,
+            c_cell_drain: 0.05e-15,
+            c_cell_gate: 0.05e-15,
+            sram_cell_area: crate::device::characterize::layout::Layout::n5()
+                .sram_cell_area,
+            periph_scale: 0.50,
+        }
+    }
+
+    /// Technology parameters for a calibrated node.
+    pub fn at(node_nm: u32) -> Result<Self, UncalibratedNode> {
+        Ok(match node_nm {
+            16 => Self::n16(),
+            7 => Self::n7(),
+            5 => Self::n5(),
+            other => return Err(UncalibratedNode(other)),
+        })
     }
 }
 
@@ -75,32 +152,49 @@ pub struct Bitcell {
     pub height: f64,
 }
 
-/// Foundry 6T SRAM cell area at the modeled node (m^2) — the Table I
-/// normalization base (shared with `device::characterize::layout`).
-pub const SRAM_CELL_AREA: f64 = 0.074e-12;
+/// Foundry 6T SRAM cell area at a calibrated node (m^2) — delegates to
+/// the device layer's layout tables, the single source of truth shared
+/// with `device::characterize`.
+pub fn sram_cell_area(node_nm: u32) -> Result<f64, UncalibratedNode> {
+    crate::device::sram_cell_area(node_nm)
+}
 
 impl Bitcell {
-    /// Wrap device-layer parameters with layout geometry. Aspect ratio
-    /// (width/height): 6T cells are wide (~2.2), 1T1R MTJ stacks are
-    /// roughly square (~1.1).
+    /// Wrap device-layer parameters with 16 nm layout geometry. Aspect
+    /// ratio (width/height): 6T cells are wide (~2.2), 1T1R MTJ stacks
+    /// are roughly square (~1.1).
     pub fn from_params(params: BitcellParams) -> Self {
-        let area = params.area_rel * SRAM_CELL_AREA;
+        Self::from_params_at(params, 16).expect("16 nm is calibrated")
+    }
+
+    /// As [`Bitcell::from_params`] against an explicit node's SRAM
+    /// area base (`area_rel` is relative to the same-node SRAM cell).
+    pub fn from_params_at(
+        params: BitcellParams,
+        node_nm: u32,
+    ) -> Result<Self, UncalibratedNode> {
+        let area = params.area_rel * sram_cell_area(node_nm)?;
         let aspect = match params.tech {
             MemTech::Sram => 2.2,
             MemTech::SttMram => 1.15,
             MemTech::SotMram => 1.15,
         };
-        Bitcell {
+        Ok(Bitcell {
             params,
             area,
             width: (area * aspect).sqrt(),
             height: (area / aspect).sqrt(),
-        }
+        })
     }
 
-    /// Paper-calibrated bitcell of the given technology.
+    /// Paper-calibrated bitcell of the given technology (16 nm).
     pub fn paper(tech: MemTech) -> Self {
         Self::from_params(BitcellParams::paper(tech))
+    }
+
+    /// Calibrated bitcell of the given technology at a process node.
+    pub fn at(tech: MemTech, node_nm: u32) -> Result<Self, UncalibratedNode> {
+        Self::from_params_at(BitcellParams::paper_at(tech, node_nm)?, node_nm)
     }
 
     /// Local sense time excluding the characterization testbench's
@@ -119,7 +213,8 @@ mod tests {
     #[test]
     fn sram_cell_geometry() {
         let c = Bitcell::paper(MemTech::Sram);
-        assert!((c.area - SRAM_CELL_AREA).abs() / SRAM_CELL_AREA < 1e-12);
+        let base = sram_cell_area(16).unwrap();
+        assert!((c.area - base).abs() / base < 1e-12);
         assert!(c.width > c.height, "6T cells are wide");
         assert!((c.width * c.height - c.area).abs() / c.area < 1e-9);
     }
@@ -140,5 +235,48 @@ mod tests {
             assert!(c.sense_development() > 0.0, "{t}");
             assert!(c.sense_development() < c.params.sense_latency);
         }
+    }
+
+    #[test]
+    fn node_params_follow_scaling_trends() {
+        let n16 = TechParams::n16();
+        let n7 = TechParams::n7();
+        let n5 = TechParams::n5();
+        for (a, b) in [(&n16, &n7), (&n7, &n5)] {
+            assert!(b.vdd < a.vdd, "supply drops with the node");
+            assert!(b.t_fo4 < a.t_fo4, "gates speed up");
+            assert!(b.e_dec_stage < a.e_dec_stage, "CV^2 shrinks");
+            assert!(b.r_wire_local > a.r_wire_local, "wires worsen");
+            assert!(b.t_wire_global > a.t_wire_global);
+            assert!(b.sram_cell_area < a.sram_cell_area, "cells shrink");
+            assert!(b.periph_scale < a.periph_scale);
+        }
+        assert_eq!(TechParams::at(16).unwrap().node_nm, 16);
+        assert_eq!(TechParams::at(7).unwrap().node_nm, 7);
+        assert_eq!(TechParams::at(5).unwrap().node_nm, 5);
+        assert!(TechParams::at(10).is_err());
+    }
+
+    #[test]
+    fn node_indexed_bitcells() {
+        for t in MemTech::ALL {
+            let b16 = Bitcell::at(t, 16).unwrap();
+            let b7 = Bitcell::at(t, 7).unwrap();
+            let b5 = Bitcell::at(t, 5).unwrap();
+            // 16 nm accessor is the paper cell, bit for bit
+            assert_eq!(b16.area, Bitcell::paper(t).area, "{t}");
+            assert!(b7.area < b16.area, "{t} cells shrink at 7nm");
+            assert!(b5.area < b7.area, "{t} cells shrink at 5nm");
+            assert!(b7.sense_development() > 0.0);
+        }
+        // the MRAM-vs-SRAM density edge narrows but survives
+        let sram7 = Bitcell::at(MemTech::Sram, 7).unwrap();
+        let stt7 = Bitcell::at(MemTech::SttMram, 7).unwrap();
+        assert!(stt7.area < sram7.area);
+        assert!(
+            stt7.area / sram7.area
+                > Bitcell::paper(MemTech::SttMram).area / Bitcell::paper(MemTech::Sram).area
+        );
+        assert!(Bitcell::at(MemTech::Sram, 9).is_err());
     }
 }

@@ -145,8 +145,11 @@ fn solve_point_from_json(j: &Json) -> Result<GridPoint> {
             .ok_or_else(|| anyhow!("'node_nm' must be an integer"))?,
         None => 16,
     };
-    if node_nm != 16 {
-        bail!("process node {node_nm}nm is not calibrated (only 16nm)");
+    if node_nm > u32::MAX as u64 {
+        bail!("'node_nm' {node_nm} is out of range");
+    }
+    if !crate::device::node_calibrated(node_nm as u32) {
+        bail!("{}", crate::device::UncalibratedNode(node_nm as u32));
     }
     let node_nm = node_nm as u32;
     let workload = match j.get("dnn") {
@@ -188,7 +191,13 @@ fn solve(ctx: &ServerCtx, req: &Request) -> Response {
         Err(e) => return Response::error(422, &e.to_string()),
     };
     let cached = ctx.memo.has_point(&point);
-    let result = sweep::evaluate_point(&point, ctx.memo);
+    // The point is validated above, but the evaluation stays fallible:
+    // an uncalibrated node that slips past any parser becomes a 422,
+    // never a panicked worker thread.
+    let result = match sweep::evaluate_point(&point, ctx.memo) {
+        Ok(r) => r,
+        Err(e) => return Response::error(422, &format!("{e:#}")),
+    };
     let mut j = Json::obj();
     j.set("cached", Json::Bool(cached));
     j.set("result", memo::point_to_json(&result));
@@ -427,6 +436,18 @@ mod tests {
         assert_eq!(p.node_nm, 16);
         assert!(p.workload.is_none());
 
+        // calibrated deep nodes are first-class solve targets
+        for node in [7u32, 5] {
+            let p = solve_point_from_json(
+                &crate::util::json::parse(&format!(
+                    r#"{{"tech": "stt", "capacity_mb": 2, "node_nm": {node}}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+            assert_eq!(p.node_nm, node);
+        }
+
         let p = solve_point_from_json(
             &crate::util::json::parse(
                 r#"{"tech": "stt", "capacity_mb": 3, "dnn": "alexnet", "phase": "training"}"#,
@@ -444,7 +465,7 @@ mod tests {
             r#"{"tech": "dram", "capacity_mb": 1}"#,
             r#"{"tech": "stt"}"#,
             r#"{"tech": "stt", "capacity_mb": 0}"#,
-            r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 7}"#,
+            r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 9}"#,
             // 2^32 + 16 must not alias to the calibrated 16 nm node
             r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 4294967312}"#,
             // 2^44 MB would overflow the capacity byte math
@@ -455,6 +476,61 @@ mod tests {
             let j = crate::util::json::parse(bad).unwrap();
             assert!(solve_point_from_json(&j).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn multi_node_solve_and_shard_run() {
+        let c = ctx();
+        let area_of = |r: &Response| {
+            body_json(r)
+                .get("result")
+                .unwrap()
+                .get("tuned")
+                .unwrap()
+                .get("ppa")
+                .unwrap()
+                .get("area")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // a 7 nm solve is a first-class query and lands on a genuinely
+        // different design than the 16 nm one
+        let r7 = handle(
+            &c,
+            &post("/solve", r#"{"tech": "stt", "capacity_mb": 2, "node_nm": 7}"#),
+        );
+        assert_eq!(r7.status, 200);
+        let r16 = handle(&c, &post("/solve", r#"{"tech": "stt", "capacity_mb": 2}"#));
+        assert!(area_of(&r7) < area_of(&r16), "7 nm must tune denser");
+
+        // an uncalibrated node is a 422 and the server keeps serving
+        let bad = handle(
+            &c,
+            &post("/solve", r#"{"tech": "stt", "capacity_mb": 2, "node_nm": 9}"#),
+        );
+        assert_eq!(bad.status, 422);
+        assert_eq!(handle(&c, &get("/healthz")).status, 200);
+
+        // a multi-node shard runs end to end and exports both nodes'
+        // circuit entries (the distributed path gets nodes for free)
+        let body =
+            r#"{"techs": ["stt"], "caps_mb": [1], "dnns": [], "nodes_nm": [16, 7], "jobs": 1}"#;
+        let r = handle(&c, &post("/shard/run", body));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        assert_eq!(j.get("points").unwrap().as_u64(), Some(2));
+        let fresh = Memo::new();
+        let st = fresh.merge_json(j.get("export").unwrap());
+        assert!(st.version_ok);
+        assert_eq!(st.rejected, 0);
+        assert_eq!(fresh.circuit_len(), 2, "one circuit entry per node");
+        assert_eq!(fresh.point_len(), 2);
+
+        // an uncalibrated node axis in a shard spec is a 422, not a
+        // dead worker
+        assert_eq!(handle(&c, &post("/shard/run", r#"{"nodes_nm": [9]}"#)).status, 422);
+        assert_eq!(handle(&c, &get("/healthz")).status, 200);
     }
 
     #[test]

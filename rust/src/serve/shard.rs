@@ -155,6 +155,53 @@ mod tests {
     }
 
     #[test]
+    fn multi_node_shards_partition_and_replay_solve_free() {
+        // Because CircuitKey and the point keys carry node_nm, the
+        // shard exchange handles multi-node grids with no extra code:
+        // cut a {16, 7} nm grid, run each shard on its own worker memo,
+        // merge, and replay the full cross-node grid from cache alone.
+        let full = SweepSpec {
+            techs: vec![MemTech::SttMram],
+            capacities_mb: vec![1, 2, 4],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![],
+            nodes_nm: vec![16, 7],
+            filters: vec![],
+        };
+        let shards = split_caps(&full, 2);
+        assert_eq!(shards.len(), 2);
+        for s in &shards {
+            assert_eq!(s.nodes_nm, vec![16, 7], "shards keep the node axis");
+        }
+        // shards partition the multi-node expansion exactly
+        let all: HashSet<_> = full.expand().unwrap().into_iter().collect();
+        let mut seen = HashSet::new();
+        for s in &shards {
+            for p in s.expand().unwrap() {
+                assert!(seen.insert(p), "multi-node shards must be disjoint");
+            }
+        }
+        assert_eq!(seen, all);
+
+        let coordinator = Memo::new();
+        for s in &shards {
+            let worker = Memo::new();
+            let doc = run_shard(s, 2, &worker).unwrap();
+            let st = coordinator.merge_json(&doc);
+            assert!(st.version_ok);
+            assert_eq!(st.rejected, 0);
+        }
+        let res = crate::sweep::run(&full, 2, &coordinator).unwrap();
+        assert_eq!(res.points.len(), all.len());
+        assert_eq!(coordinator.solve_count(), 0, "multi-node replay must not solve");
+        assert_eq!(coordinator.eval_count(), 0);
+        // both nodes' circuits are resident and distinct: stt + sram
+        // baseline per (cap, node)
+        assert_eq!(coordinator.circuit_len(), 2 * 3 * 2);
+    }
+
+    #[test]
     fn merged_shard_memos_answer_full_grid_without_solving() {
         let full = spec();
         let shards = split_caps(&full, 2);

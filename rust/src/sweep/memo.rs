@@ -24,8 +24,8 @@ use std::sync::{Mutex, OnceLock};
 use anyhow::Result;
 
 use crate::coordinator::store::Store;
-use crate::device::MemTech;
-use crate::nvsim::explorer::{tuned_cache, OptTarget, TunedConfig};
+use crate::device::{node_calibrated, MemTech, UncalibratedNode};
+use crate::nvsim::explorer::{tuned_cache_at, OptTarget, TunedConfig};
 use crate::nvsim::org::{AccessMode, CacheOrg};
 use crate::nvsim::CachePpa;
 use crate::util::json::{self, Json};
@@ -34,8 +34,10 @@ use super::spec::{parse_phase, parse_tech, resolve_dnn, GridPoint, WorkloadPoint
 use super::{PointResult, WorkloadEval};
 
 /// Bump when any model feeding the sweep changes numerically; stale
-/// on-disk caches are then ignored wholesale.
-pub const MODEL_VERSION: u32 = 1;
+/// on-disk caches are then ignored wholesale. v2: the process-node
+/// axis went live (7/5 nm calibration) and circuit payload hashes now
+/// bind the node id, so v1 caches — hashed without it — are retired.
+pub const MODEL_VERSION: u32 = 2;
 
 /// File name of the persisted cache inside a results directory.
 pub const MEMO_FILE: &str = "sweep_memo.json";
@@ -257,23 +259,31 @@ impl Memo {
     /// EDAP-optimal cache at (tech, capacity) on the default 16 nm
     /// node, solving on a cache miss.
     pub fn tuned(&self, tech: MemTech, capacity_bytes: u64) -> TunedConfig {
-        self.tuned_at(tech, capacity_bytes, 16)
+        self.tuned_at(tech, capacity_bytes, 16).expect("16 nm is calibrated")
     }
 
-    /// As [`Memo::tuned`] with an explicit process node.
-    pub fn tuned_at(&self, tech: MemTech, capacity_bytes: u64, node_nm: u32) -> TunedConfig {
-        assert_eq!(node_nm, 16, "only the 16nm node is calibrated");
+    /// As [`Memo::tuned`] with an explicit process node. Returns a
+    /// typed error for uncalibrated nodes — spec expansion and the
+    /// serve routes validate earlier, but a corrupt or hostile body
+    /// that slips through must degrade to an error response, never
+    /// kill a worker thread.
+    pub fn tuned_at(
+        &self,
+        tech: MemTech,
+        capacity_bytes: u64,
+        node_nm: u32,
+    ) -> Result<TunedConfig, UncalibratedNode> {
         let key = CircuitKey { tech, capacity_bytes, node_nm };
         let cached = self.circuit.lock().unwrap().get(&key).copied();
         if let Some(c) = cached {
-            return c;
+            return Ok(c);
         }
         // Solve outside the lock so distinct keys solve concurrently.
         // A racing duplicate solve is possible but harmless: the solver
         // is deterministic and the first insert wins.
-        let solved = tuned_cache(tech, capacity_bytes);
+        let solved = tuned_cache_at(tech, capacity_bytes, node_nm)?;
         self.solves.fetch_add(1, Ordering::Relaxed);
-        *self.circuit.lock().unwrap().entry(key).or_insert(solved)
+        Ok(*self.circuit.lock().unwrap().entry(key).or_insert(solved))
     }
 
     /// Whether a circuit solve is already cached for this key.
@@ -414,9 +424,18 @@ impl Memo {
                     st.rejected += 1;
                     continue;
                 };
+                // A node outside the calibrated set could never be
+                // re-derived locally; reject it instead of caching an
+                // unverifiable entry. (The f64 -> u32 cast saturates,
+                // so 2^32 + 16 cannot alias to 16 nm either.)
+                if node < 0.0 || node > u32::MAX as f64 || !node_calibrated(node as u32) {
+                    st.rejected += 1;
+                    continue;
+                }
                 // Integrity: the stored hash must match the payload as
-                // the reconstructed config re-serializes it.
-                let expect = payload_hash(&tuned_to_json(&t));
+                // the reconstructed config re-serializes it, node id
+                // included (a relabeled node must not verify).
+                let expect = circuit_payload_hash(node as u32, &tuned_to_json(&t));
                 if e.get("payload_hash").and_then(Json::as_str) != Some(expect.as_str()) {
                     st.rejected += 1;
                     continue;
@@ -441,6 +460,10 @@ impl Memo {
                     st.rejected += 1;
                     continue;
                 };
+                if !node_calibrated(r.point.node_nm) {
+                    st.rejected += 1;
+                    continue;
+                }
                 // Content checks: identity key + hash, and the payload
                 // hash over the re-serialized result values.
                 let expect_key = r.point.key();
@@ -509,7 +532,10 @@ fn assemble_doc(
             let tuned = tuned_to_json(t);
             let mut e = Json::obj();
             e.set("node_nm", Json::Num(k.node_nm as f64));
-            e.set("payload_hash", Json::Str(payload_hash(&tuned)));
+            e.set(
+                "payload_hash",
+                Json::Str(circuit_payload_hash(k.node_nm, &tuned)),
+            );
             e.set("tuned", tuned);
             e
         })
@@ -525,6 +551,17 @@ fn assemble_doc(
 /// entries; stable because `Json` serialization is deterministic).
 fn payload_hash(j: &Json) -> String {
     format!("{:016x}", fnv1a64(&j.to_string()))
+}
+
+/// Payload hash of a circuit entry: the tuned config *bound to its
+/// process node*. `TunedConfig` itself carries no node, so hashing the
+/// config alone would let a relabeled entry (7 nm rewritten to 5 nm)
+/// pass the integrity check and poison the other node's cache.
+fn circuit_payload_hash(node_nm: u32, tuned: &Json) -> String {
+    let mut payload = Json::obj();
+    payload.set("node_nm", Json::Num(node_nm as f64));
+    payload.set("tuned", tuned.clone());
+    payload_hash(&payload)
 }
 
 /// All PPA terms must be finite and positive for a cached design to be
@@ -701,6 +738,7 @@ pub fn point_from_json(j: &Json) -> Option<PointResult> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nvsim::explorer::tuned_cache;
 
     const MB: u64 = 1024 * 1024;
 
@@ -774,7 +812,7 @@ mod tests {
         let m = Memo::new();
         let t = m.tuned(MemTech::Sram, MB);
         let text = m.to_json().to_pretty();
-        let hash = payload_hash(&tuned_to_json(&t));
+        let hash = circuit_payload_hash(16, &tuned_to_json(&t));
         assert!(text.contains(&hash), "serialized doc must carry the payload hash");
         let tampered = text.replace(&hash, "0000000000000000");
         let fresh = Memo::new();
@@ -796,11 +834,11 @@ mod tests {
             workload: None,
         };
         let (a, b, c) = (pt(1), pt(2), pt(3));
-        evaluate_point(&a, &m);
-        evaluate_point(&b, &m);
+        evaluate_point(&a, &m).unwrap();
+        evaluate_point(&b, &m).unwrap();
         // touch `a` so `b` becomes least recently used
         assert!(m.cached_point(&a).is_some());
-        evaluate_point(&c, &m);
+        evaluate_point(&c, &m).unwrap();
         assert_eq!(m.point_len(), 2, "cap must hold");
         assert!(m.has_point(&a), "recently touched entry must survive");
         assert!(!m.has_point(&b), "LRU entry must be evicted");
@@ -813,8 +851,8 @@ mod tests {
         assert_eq!(m.point_len(), 1);
         // lifting it allows regrowth
         m.set_point_capacity(None);
-        evaluate_point(&b, &m);
-        evaluate_point(&a, &m);
+        evaluate_point(&b, &m).unwrap();
+        evaluate_point(&a, &m).unwrap();
         assert_eq!(m.point_len(), 3);
         // bounding a previously unbounded cache (where recency was not
         // tracked) still trims to the cap
@@ -846,7 +884,8 @@ mod tests {
                     workload: None,
                 },
                 &m,
-            );
+            )
+            .unwrap();
         }
         let doc = m.to_json();
         assert_eq!(doc.get("points").unwrap().as_arr().unwrap().len(), 1);
@@ -870,7 +909,7 @@ mod tests {
                 batch: 4,
             }),
         };
-        crate::sweep::evaluate_point(&wl, &m);
+        crate::sweep::evaluate_point(&wl, &m).unwrap();
         for mb in [2u64, 3] {
             crate::sweep::evaluate_point(
                 &GridPoint {
@@ -880,7 +919,8 @@ mod tests {
                     workload: None,
                 },
                 &m,
-            );
+            )
+            .unwrap();
         }
         assert_eq!(m.point_len(), 3);
         assert_eq!(m.circuit_len(), 4, "stt@1 + sram@1 baseline + sot@2 + sot@3");
@@ -897,7 +937,7 @@ mod tests {
         let st = fresh.merge_json(&doc);
         assert!(st.version_ok);
         assert_eq!((st.accepted, st.rejected), (3, 0));
-        crate::sweep::evaluate_point(&wl, &fresh);
+        crate::sweep::evaluate_point(&wl, &fresh).unwrap();
         assert_eq!(fresh.solve_count(), 0);
         assert_eq!(fresh.eval_count(), 0);
     }
@@ -925,7 +965,7 @@ mod tests {
         // tampered hash: rejected, not silently dropped
         let t = a.tuned(MemTech::Sram, MB);
         let text = doc.to_pretty();
-        let hash = payload_hash(&tuned_to_json(&t));
+        let hash = circuit_payload_hash(16, &tuned_to_json(&t));
         let tampered = text.replace(&hash, "ffffffffffffffff");
         let st = Memo::new().merge_json(&json::parse(&tampered).unwrap());
         assert_eq!(st.accepted, 1);
@@ -937,6 +977,75 @@ mod tests {
         let st = Memo::new().merge_json(&stale);
         assert!(!st.version_ok);
         assert_eq!(st.accepted + st.skipped + st.rejected, 0);
+    }
+
+    #[test]
+    fn cross_node_round_trip_and_per_node_isolation() {
+        let m = Memo::new();
+        // the same (tech, capacity) across every calibrated node
+        let mut cfgs = Vec::new();
+        for node in crate::device::CALIBRATED_NODES_NM {
+            cfgs.push(m.tuned_at(MemTech::SttMram, 2 * MB, node).unwrap());
+        }
+        assert_eq!(m.solve_count(), 3, "per-node CircuitKeys must not alias");
+        assert_eq!(m.circuit_len(), 3);
+        // each node tunes to a distinct design (no 16 nm aliasing)
+        assert!(cfgs[0].ppa.area > cfgs[1].ppa.area, "7nm denser than 16nm");
+        assert!(cfgs[1].ppa.area > cfgs[2].ppa.area, "5nm denser than 7nm");
+        // re-queries on every node are pure cache hits
+        for node in crate::device::CALIBRATED_NODES_NM {
+            m.tuned_at(MemTech::SttMram, 2 * MB, node).unwrap();
+        }
+        assert_eq!(m.solve_count(), 3);
+        // an uncalibrated node is a typed error, not a panic, and
+        // leaves the cache untouched
+        let err = m.tuned_at(MemTech::SttMram, 2 * MB, 9).unwrap_err();
+        assert_eq!(err, UncalibratedNode(9));
+        assert_eq!(m.circuit_len(), 3);
+        assert_eq!(m.solve_count(), 3);
+
+        // export -> merge: a fresh memo answers all three nodes with
+        // zero solves, through the JSON text round trip
+        let text = m.to_json().to_pretty();
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&text).unwrap());
+        assert!(st.version_ok);
+        assert_eq!((st.accepted, st.rejected), (3, 0));
+        for (node, want) in crate::device::CALIBRATED_NODES_NM.iter().zip(&cfgs) {
+            let got = fresh.tuned_at(MemTech::SttMram, 2 * MB, *node).unwrap();
+            assert_eq!(format!("{got:?}"), format!("{want:?}"), "{node}nm");
+        }
+        assert_eq!(fresh.solve_count(), 0, "multi-node replay must be solve-free");
+    }
+
+    #[test]
+    fn merge_rejects_forged_node_entries() {
+        let m = Memo::new();
+        m.tuned_at(MemTech::Sram, MB, 7).unwrap();
+        let text = m.to_json().to_pretty();
+        assert!(text.contains("\"node_nm\": 7"), "{text}");
+        // an uncalibrated node id could never be re-derived locally:
+        // rejected outright
+        let forged = text.replace("\"node_nm\": 7", "\"node_nm\": 9");
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&forged).unwrap());
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+        assert_eq!(fresh.circuit_len(), 0);
+
+        // relabeling to a *calibrated* node must fail the payload hash
+        // (the node id is bound into it) — otherwise a 7 nm design
+        // could masquerade as 5 nm and poison that node's cache
+        let relabeled = text.replace("\"node_nm\": 7", "\"node_nm\": 5");
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&relabeled).unwrap());
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+        assert_eq!(fresh.circuit_len(), 0);
+
+        // the untampered document still merges cleanly
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&text).unwrap());
+        assert_eq!((st.accepted, st.rejected), (1, 0));
+        assert!(fresh.has_circuit(MemTech::Sram, MB, 7));
     }
 
     #[test]

@@ -65,33 +65,39 @@ pub struct PointResult {
 
 /// Evaluate one grid point against the memo cache. Self-contained: a
 /// workload point pulls its own SRAM baseline through the same cache,
-/// so points can be scheduled in any order on any worker.
-pub fn evaluate_point(point: &GridPoint, memo: &Memo) -> PointResult {
+/// so points can be scheduled in any order on any worker. Fallible: a
+/// point naming an uncalibrated process node surfaces the typed
+/// device-layer error (spec expansion validates earlier, but points
+/// can also arrive from untrusted HTTP bodies).
+pub fn evaluate_point(point: &GridPoint, memo: &Memo) -> Result<PointResult> {
     if let Some(hit) = memo.cached_point(point) {
-        return hit;
+        return Ok(hit);
     }
     let bytes = point.capacity_mb * MB;
-    let tuned = memo.tuned_at(point.tech, bytes, point.node_nm);
-    let eval = point.workload.map(|w| {
-        let dnn = Dnn::by_name(w.dnn).expect("spec expansion resolves workloads");
-        let traffic = TrafficModel { l2_bytes: bytes, ..Default::default() };
-        let stats = traffic.run(&dnn, w.phase, w.batch);
-        let dram = DramCost::default();
-        let e = evaluate(&stats, &tuned.ppa, Some(dram));
-        let sram = memo.tuned_at(MemTech::Sram, bytes, point.node_nm);
-        let base = evaluate(&stats, &sram.ppa, Some(dram));
-        WorkloadEval {
-            energy_j: e.energy(),
-            time_s: e.time_total,
-            edp: e.edp(),
-            energy_norm: e.energy() / base.energy(),
-            latency_norm: e.time_total / base.time_total,
-            edp_norm: e.edp() / base.edp(),
+    let tuned = memo.tuned_at(point.tech, bytes, point.node_nm)?;
+    let eval = match point.workload {
+        None => None,
+        Some(w) => {
+            let dnn = Dnn::by_name(w.dnn).expect("spec expansion resolves workloads");
+            let traffic = TrafficModel { l2_bytes: bytes, ..Default::default() };
+            let stats = traffic.run(&dnn, w.phase, w.batch);
+            let dram = DramCost::default();
+            let e = evaluate(&stats, &tuned.ppa, Some(dram));
+            let sram = memo.tuned_at(MemTech::Sram, bytes, point.node_nm)?;
+            let base = evaluate(&stats, &sram.ppa, Some(dram));
+            Some(WorkloadEval {
+                energy_j: e.energy(),
+                time_s: e.time_total,
+                edp: e.edp(),
+                energy_norm: e.energy() / base.energy(),
+                latency_norm: e.time_total / base.time_total,
+                edp_norm: e.edp() / base.edp(),
+            })
         }
-    });
+    };
     let result = PointResult { point: *point, tuned, eval };
     memo.record_point(result.clone());
-    result
+    Ok(result)
 }
 
 /// A completed sweep: the spec and one result per surviving grid
@@ -144,9 +150,13 @@ pub fn run(spec: &SweepSpec, jobs: usize, memo: &Memo) -> Result<SweepResults> {
         }
     }
     if !circuits.is_empty() {
-        exec::run_ordered(&circuits, jobs, |&(tech, mb, node)| {
-            memo.tuned_at(tech, mb * MB, node);
-        });
+        for solved in exec::run_ordered(&circuits, jobs, |&(tech, mb, node)| {
+            memo.tuned_at(tech, mb * MB, node)
+        }) {
+            // Expansion already validated the node axis, so this only
+            // fires if the calibrated set and the validator drift.
+            solved?;
+        }
     }
 
     // Phase 2: the full grid (cheap traffic evaluations against the
@@ -155,8 +165,11 @@ pub fn run(spec: &SweepSpec, jobs: usize, memo: &Memo) -> Result<SweepResults> {
     // thread spawns, which keeps warm-query latency at cache speed.
     let all_cached = points.iter().all(|p| memo.has_point(p));
     let jobs = if all_cached { 1 } else { jobs };
-    let results = exec::run_ordered(&points, jobs, |p| evaluate_point(p, memo));
-    Ok(SweepResults { spec: spec.clone(), points: results })
+    let results: std::result::Result<Vec<PointResult>, _> =
+        exec::run_ordered(&points, jobs, |p| evaluate_point(p, memo))
+            .into_iter()
+            .collect();
+    Ok(SweepResults { spec: spec.clone(), points: results? })
 }
 
 #[cfg(test)]
@@ -203,6 +216,37 @@ mod tests {
         assert_eq!(e.energy_norm, 1.0);
         assert_eq!(e.latency_norm, 1.0);
         assert_eq!(e.edp_norm, 1.0);
+    }
+
+    #[test]
+    fn multi_node_run_solves_per_node_and_keeps_nodes_distinct() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::SttMram],
+            capacities_mb: vec![1],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![],
+            nodes_nm: vec![16, 7, 5],
+            filters: vec![],
+        };
+        let memo = Memo::new();
+        let res = run(&spec, 2, &memo).unwrap();
+        assert_eq!(res.points.len(), 3, "one workload point per node");
+        // STT + the SRAM baseline solve once per node — never aliased
+        assert_eq!(memo.solve_count(), 6);
+        assert_eq!(res.tuned_configs().len(), 3, "one tuned design per node");
+        for p in &res.points {
+            assert!(p.eval.is_some(), "each node normalizes against its own SRAM");
+        }
+        let areas: Vec<f64> = res.points.iter().map(|p| p.tuned.ppa.area).collect();
+        assert!(
+            areas[0] > areas[1] && areas[1] > areas[2],
+            "deeper nodes must tune denser: {areas:?}"
+        );
+        // a warm rerun of the multi-node grid is pure cache hits
+        run(&spec, 2, &memo).unwrap();
+        assert_eq!(memo.solve_count(), 6);
+        assert_eq!(memo.eval_count(), 3);
     }
 
     #[test]

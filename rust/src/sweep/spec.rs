@@ -44,7 +44,8 @@ pub struct WorkloadPoint {
 pub struct GridPoint {
     pub tech: MemTech,
     pub capacity_mb: u64,
-    /// Process node (nm); only 16 nm is calibrated today.
+    /// Process node (nm); see
+    /// [`crate::device::CALIBRATED_NODES_NM`] for the calibrated set.
     pub node_nm: u32,
     pub workload: Option<WorkloadPoint>,
 }
@@ -183,8 +184,8 @@ impl SweepSpec {
             bail!("sweep spec has no process nodes");
         }
         for &node in &self.nodes_nm {
-            if node != 16 {
-                bail!("process node {node}nm is not calibrated (only 16nm)");
+            if !crate::device::node_calibrated(node) {
+                bail!("{}", crate::device::UncalibratedNode(node));
             }
         }
         for &mb in &self.capacities_mb {
@@ -536,6 +537,25 @@ mod tests {
     }
 
     #[test]
+    fn multi_node_expansion_is_node_outermost_and_keyed_apart() {
+        let spec = SweepSpec {
+            nodes_nm: vec![16, 7, 5],
+            ..SweepSpec::circuit_only(vec![MemTech::SttMram], vec![1, 2])
+        };
+        let pts = spec.expand().unwrap();
+        assert_eq!(pts.len(), 6, "3 nodes x 2 caps");
+        assert_eq!(pts[0].node_nm, 16);
+        assert_eq!(pts[2].node_nm, 7);
+        assert_eq!(pts[4].node_nm, 5);
+        // same (tech, capacity) at different nodes must never share a
+        // content key — the memo isolation guarantee
+        let keys: std::collections::HashSet<String> =
+            pts.iter().map(|p| p.key()).collect();
+        assert_eq!(keys.len(), 6);
+        assert!(pts[0].key().contains("16nm") && pts[4].key().contains("5nm"));
+    }
+
+    #[test]
     fn filters_prune_but_keep_order() {
         let spec = SweepSpec {
             filters: vec![Filter::NvmOnly, Filter::CapacityAtLeast(8)],
@@ -553,7 +573,10 @@ mod tests {
         let s = SweepSpec { dnns: vec!["NotANet".into()], ..SweepSpec::default() };
         assert!(s.expand().is_err());
 
-        let s = SweepSpec { nodes_nm: vec![7], ..SweepSpec::default() };
+        let s = SweepSpec { nodes_nm: vec![9], ..SweepSpec::default() };
+        assert!(s.expand().is_err());
+
+        let s = SweepSpec { nodes_nm: vec![], ..SweepSpec::default() };
         assert!(s.expand().is_err());
 
         let s = SweepSpec { techs: vec![], ..SweepSpec::default() };
@@ -574,9 +597,13 @@ mod tests {
     fn summary_names_the_grid_shape() {
         let s = SweepSpec::circuit_only(MemTech::ALL.to_vec(), vec![1, 2]);
         assert_eq!(s.summary(), "3 tech(s) x 2 cap(s) x circuit-only on 1 node(s): 6 points");
-        let d = SweepSpec::default();
+        let d = SweepSpec {
+            nodes_nm: vec![16, 7, 5],
+            ..SweepSpec::default()
+        };
         assert!(d.summary().contains("5 dnn(s) x 2 phase(s)"));
-        let bad = SweepSpec { nodes_nm: vec![7], ..SweepSpec::default() };
+        assert!(d.summary().contains("on 3 node(s)"));
+        let bad = SweepSpec { nodes_nm: vec![9], ..SweepSpec::default() };
         assert!(bad.summary().ends_with("? points"));
     }
 
@@ -608,7 +635,7 @@ mod tests {
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Training],
             batches: vec![16, 64],
-            nodes_nm: vec![16],
+            nodes_nm: vec![16, 7, 5],
             filters: vec![
                 Filter::NvmOnly,
                 Filter::TechIs(MemTech::SttMram),

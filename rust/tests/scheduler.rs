@@ -124,6 +124,39 @@ fn two_worker_fleet_completes_the_grid_with_zero_solve_replay() {
     assert_eq!(memo.solve_count(), 0);
 }
 
+#[test]
+fn multi_node_grid_distributes_and_replays_solve_free() {
+    // the 7/5 nm calibration rides the existing shard protocol: a
+    // cross-node spec fans out over a real two-worker fleet and the
+    // merged union replays every node from cache alone
+    let (w1, w2) = (worker(), worker());
+    let cfg = ScheduleConfig {
+        workers: vec![w1.local_addr().to_string(), w2.local_addr().to_string()],
+        ..ScheduleConfig::default()
+    };
+    let spec = SweepSpec {
+        techs: vec![MemTech::SttMram, MemTech::SotMram],
+        capacities_mb: vec![1, 2],
+        dnns: vec![],
+        phases: Phase::ALL.to_vec(),
+        batches: vec![],
+        nodes_nm: vec![16, 7],
+        filters: vec![],
+    };
+    let memo = Memo::new();
+    let report = coordinate(&spec, &cfg, &memo).unwrap();
+    assert_eq!(report.grid_points, 2 * 2 * 2, "techs x caps x nodes");
+    assert_eq!(report.replay_solves, 0);
+    assert_eq!(report.replay_evals, 0);
+    assert_eq!(memo.solve_count(), 0, "the coordinator never solves");
+
+    // the merged cache answers each node with a distinct design
+    let n16 = memo.tuned_at(MemTech::SttMram, 2 * 1024 * 1024, 16).unwrap();
+    let n7 = memo.tuned_at(MemTech::SttMram, 2 * 1024 * 1024, 7).unwrap();
+    assert!(n7.ppa.area < n16.ppa.area, "no 16 nm aliasing after the merge");
+    assert_eq!(memo.solve_count(), 0);
+}
+
 // ---------------------------------------------------------------- (b)
 
 #[test]
