@@ -72,6 +72,38 @@ if sweep is not None:
             f"BENCH_sweep.json: node_sweep_nodes {nodes} < 3 "
             "(the bench must cover 16/7/5 nm)"
         )
+    # batch axis: traffic-coefficient builds are bounded by the number
+    # of (dnn, phase) pairs, NEVER by the batch count — the closed-form
+    # BatchLine engine's contract
+    traffic_evals = recorded(
+        sweep, "BENCH_sweep.json", "batch_sweep_traffic_evals"
+    )
+    traffic_ceiling = acc.get("batch_sweep_traffic_evals_max")
+    if (
+        traffic_evals is not None
+        and traffic_ceiling is not None
+        and traffic_evals > traffic_ceiling
+    ):
+        failures.append(
+            "BENCH_sweep.json: batch_sweep_traffic_evals "
+            f"{traffic_evals} > allowed {traffic_ceiling} "
+            "(one traffic build per (dnn, phase))"
+        )
+    warm_traffic = recorded(
+        sweep, "BENCH_sweep.json", "batch_sweep_warm_rerun_traffic_evals"
+    )
+    warm_traffic_ceiling = acc.get("batch_sweep_warm_rerun_traffic_evals_max", 0)
+    if warm_traffic is not None and warm_traffic > warm_traffic_ceiling:
+        failures.append(
+            "BENCH_sweep.json: batch_sweep_warm_rerun_traffic_evals "
+            f"{warm_traffic} > allowed {warm_traffic_ceiling}"
+        )
+    batches = recorded(sweep, "BENCH_sweep.json", "batch_sweep_batches")
+    if batches is not None and batches < 16:
+        failures.append(
+            f"BENCH_sweep.json: batch_sweep_batches {batches} < 16 "
+            "(the batch sweep must be wide enough to prove the axis is free)"
+        )
 
 serve = load("BENCH_serve.json")
 if serve is not None:

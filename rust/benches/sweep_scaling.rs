@@ -8,9 +8,11 @@ mod bench_common;
 
 use std::time::Instant;
 
+use deepnvm::device::MemTech;
 use deepnvm::sweep::{self, exec, Memo, SweepSpec};
 use deepnvm::util::bench::Bench;
 use deepnvm::util::json::Json;
+use deepnvm::workload::models::{Dnn, Phase};
 
 fn grid(quick: bool) -> SweepSpec {
     let capacities_mb = if quick {
@@ -90,6 +92,47 @@ fn main() {
         "warm rerun must re-solve nothing across all nodes"
     );
 
+    // Batch-axis sweep: 16 batch sizes across the workload zoo at one
+    // capacity. The closed-form BatchLine engine must lower each
+    // workload's GEMMs exactly once per (dnn, phase) — traffic work
+    // must NOT scale with the batch count — and the warm rerun must
+    // fold everything from cache.
+    let batch_dnns: Vec<String> = if quick {
+        vec!["AlexNet".into(), "VGG-16".into()]
+    } else {
+        Dnn::zoo().iter().map(|d| d.name.to_string()).collect()
+    };
+    let batch_spec = SweepSpec {
+        techs: vec![MemTech::SttMram],
+        capacities_mb: vec![3],
+        dnns: batch_dnns,
+        phases: Phase::ALL.to_vec(),
+        batches: vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let batch_points = batch_spec.expand().expect("batch bench spec").len();
+    let workload_pairs = (batch_spec.dnns.len() * batch_spec.phases.len()) as u64;
+    let batch_memo = Memo::new();
+    let t_batch_cold = timed(&batch_spec, jobs, &batch_memo);
+    let batch_traffic_evals = batch_memo.traffic_build_count();
+    let t_batch_warm = timed(&batch_spec, jobs, &batch_memo);
+    let batch_warm_traffic = batch_memo.traffic_build_count() - batch_traffic_evals;
+    println!(
+        "  batch sweep ({} batches, {batch_points} points) {:>6.2} ms cold \
+         ({batch_traffic_evals} traffic builds for {workload_pairs} workload pairs), \
+         {:.2} ms warm ({batch_warm_traffic} new builds)",
+        batch_spec.batches.len(),
+        t_batch_cold * 1e3,
+        t_batch_warm * 1e3,
+    );
+    assert!(
+        batch_traffic_evals <= workload_pairs,
+        "traffic lowering must run at most once per (dnn, phase), \
+         not per batch: {batch_traffic_evals} > {workload_pairs}"
+    );
+    assert_eq!(batch_warm_traffic, 0, "warm batch sweep must not re-lower");
+
     // Steady-state warm-grid query rate (the serving path the ROADMAP
     // cares about: many scenarios against one resident grid).
     let mut b = if quick { Bench::quick() } else { Bench::new() };
@@ -111,6 +154,10 @@ fn main() {
     acc.set("parallel_speedup_min", Json::Num(1.5));
     acc.set("warm_rerun_circuit_solves_max", Json::Num(0.0));
     acc.set("node_sweep_warm_rerun_circuit_solves_max", Json::Num(0.0));
+    // one traffic-coefficient build per (dnn, phase), however many
+    // batches the axis carries
+    acc.set("batch_sweep_traffic_evals_max", Json::Num(workload_pairs as f64));
+    acc.set("batch_sweep_warm_rerun_traffic_evals_max", Json::Num(0.0));
     j.set("acceptance", acc);
     j.set("quick", Json::Bool(quick));
     j.set("grid_points", Json::Num(n_points as f64));
@@ -131,6 +178,16 @@ fn main() {
         "node_sweep_warm_rerun_circuit_solves",
         Json::Num(node_warm_solves as f64),
     );
+    j.set("batch_sweep_batches", Json::Num(batch_spec.batches.len() as f64));
+    j.set("batch_sweep_grid_points", Json::Num(batch_points as f64));
+    j.set("batch_sweep_workload_pairs", Json::Num(workload_pairs as f64));
+    j.set("batch_sweep_traffic_evals", Json::Num(batch_traffic_evals as f64));
+    j.set(
+        "batch_sweep_warm_rerun_traffic_evals",
+        Json::Num(batch_warm_traffic as f64),
+    );
+    j.set("batch_sweep_cold_ms", Json::Num(t_batch_cold * 1e3));
+    j.set("batch_sweep_warm_ms", Json::Num(t_batch_warm * 1e3));
 
     // Land next to CHANGES.md when run from rust/ or the repo root.
     let path = if std::path::Path::new("../CHANGES.md").exists() {

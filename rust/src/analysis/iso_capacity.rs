@@ -76,19 +76,25 @@ pub fn study() -> Vec<IsoCapRow> {
 
 /// Fig 5: EDP vs batch size for AlexNet (normalized to SRAM at the
 /// same batch). Returns (batch, tech, phase, edp_norm).
+///
+/// Rides the closed-form batch engine: the GEMM lowering runs once per
+/// phase, and every batch on the axis is an O(layers) coefficient fold
+/// — bit-identical to re-running `TrafficModel::run` at that batch
+/// (pinned byte-for-byte in `rust/tests/cli_reports.rs`).
 pub fn batch_study(batches: &[usize]) -> Vec<(usize, MemTech, Phase, f64)> {
     let caches = iso_caches();
     let traffic = TrafficModel { l2_bytes: ISO_CAPACITY, ..Default::default() };
     let dram = DramCost::default();
     let dnn = Dnn::by_name("AlexNet").expect("zoo");
+    let lines = Phase::ALL.map(|phase| (phase, traffic.line(&dnn, phase)));
     let mut out = Vec::new();
     for &b in batches {
-        for phase in Phase::ALL {
-            let stats = traffic.run(&dnn, phase, b);
+        for (phase, line) in &lines {
+            let stats = line.at(b);
             let sram = evaluate(&stats, &caches[0].1, Some(dram));
             for &(tech, ppa) in &caches[1..] {
                 let e = evaluate(&stats, &ppa, Some(dram));
-                out.push((b, tech, phase, e.edp() / sram.edp()));
+                out.push((b, tech, *phase, e.edp() / sram.edp()));
             }
         }
     }

@@ -36,7 +36,10 @@ COMMANDS (paper artifacts):
 DESIGN-SPACE ENGINE:
   sweep         Evaluate any tech x capacity x workload x phase x batch
                 grid in parallel, with memoized circuit solves persisted
-                to <out>/sweep_memo.json (warm reruns solve nothing)
+                to <out>/sweep_memo.json (warm reruns solve nothing).
+                The batch axis is closed-form: traffic coefficients are
+                lowered once per workload x phase, so wide --batches
+                sweeps cost O(batches) folds, not O(batches) lowerings
   serve         Long-lived HTTP server over the same engine: scenario
                 queries at cache-hit latency (POST /solve, /sweep) and
                 shardable memo exchange (GET /memo/export, POST

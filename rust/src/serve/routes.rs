@@ -24,7 +24,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::reports::{self, Report};
 use crate::sweep::spec::{
     parse_phase, parse_tech, resolve_dnn, spec_from_json, DEFAULT_CAPACITIES_MB,
-    MAX_CAPACITY_MB,
+    MAX_BATCH, MAX_CAPACITY_MB,
 };
 use crate::sweep::{self, memo, GridPoint, Memo, WorkloadPoint};
 use crate::util::json::Json;
@@ -108,8 +108,10 @@ fn memo_stats(ctx: &ServerCtx) -> Response {
     let m = ctx.memo;
     let mut j = Json::obj();
     j.set("circuit_entries", Json::Num(m.circuit_len() as f64));
+    j.set("traffic_entries", Json::Num(m.traffic_len() as f64));
     j.set("point_entries", Json::Num(m.point_len() as f64));
     j.set("solve_count", Json::Num(m.solve_count() as f64));
+    j.set("traffic_build_count", Json::Num(m.traffic_build_count() as f64));
     j.set("eval_count", Json::Num(m.eval_count() as f64));
     j.set(
         "point_capacity",
@@ -166,8 +168,11 @@ fn solve_point_from_json(j: &Json) -> Result<GridPoint> {
                     let b = v
                         .as_u64()
                         .ok_or_else(|| anyhow!("'batch' must be a positive integer"))?;
-                    if b == 0 || b > usize::MAX as u64 {
-                        bail!("batch size {b} is out of range");
+                    // The MAX_BATCH ceiling is what keeps batch-line
+                    // term evaluation inside the overflow envelope the
+                    // memo's merge sanity gate proves.
+                    if b == 0 || b > MAX_BATCH as u64 {
+                        bail!("batch size {b} is out of range (1..={MAX_BATCH})");
                     }
                     b as usize
                 }
@@ -472,6 +477,8 @@ mod tests {
             r#"{"tech": "stt", "capacity_mb": 17592186044416}"#,
             r#"{"tech": "stt", "capacity_mb": 1, "dnn": "NotANet"}"#,
             r#"{"tech": "stt", "capacity_mb": 1, "dnn": "AlexNet", "batch": 0}"#,
+            // beyond MAX_BATCH: outside the proven overflow envelope
+            r#"{"tech": "stt", "capacity_mb": 1, "dnn": "AlexNet", "batch": 1048577}"#,
         ] {
             let j = crate::util::json::parse(bad).unwrap();
             assert!(solve_point_from_json(&j).is_err(), "{bad}");

@@ -40,6 +40,7 @@ pub fn merge(ctx: &ServerCtx, req: &Request) -> Response {
     j.set("skipped", Json::Num(st.skipped as f64));
     j.set("rejected", Json::Num(st.rejected as f64));
     j.set("circuit_entries", Json::Num(ctx.memo().circuit_len() as f64));
+    j.set("traffic_entries", Json::Num(ctx.memo().traffic_len() as f64));
     j.set("point_entries", Json::Num(ctx.memo().point_len() as f64));
     let status = if st.version_ok { 200 } else { 409 };
     Response::json(status, &j)

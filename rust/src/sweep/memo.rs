@@ -1,15 +1,20 @@
 //! Content-addressed memoization for the sweep engine.
 //!
-//! Two cache layers, both safe to share across worker threads:
+//! Three cache layers, all safe to share across worker threads:
 //!
 //! * **circuit** — `(tech, capacity, node) -> TunedConfig`, so each
 //!   NVSim-style Algorithm-1 solve (the expensive enumeration of
 //!   organizations x targets x modes) runs at most once per process,
 //!   no matter how many figures, workloads or batches query it.
+//! * **traffic** — `(dnn, phase) -> BatchLine`: the closed-form batch
+//!   coefficients of the workload layer. Keyed WITHOUT the batch (and
+//!   without the capacity — spill terms take it at evaluation time),
+//!   so a `--batches` sweep over any number of batch sizes lowers each
+//!   workload's GEMMs exactly once.
 //! * **points** — `GridPoint -> PointResult`, so repeated sweeps skip
-//!   the traffic-model evaluation as well.
+//!   even the per-batch coefficient folds.
 //!
-//! Both layers serialize to one JSON document keyed by hashed spec
+//! All layers serialize to one JSON document keyed by hashed spec
 //! points and persist through [`crate::coordinator::store::Store`]
 //! (`sweep_memo.json` in the results directory), so a *second process*
 //! re-running the same grid performs zero circuit solves. Entries carry
@@ -19,7 +24,7 @@
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::Result;
 
@@ -29,6 +34,8 @@ use crate::nvsim::explorer::{tuned_cache_at, OptTarget, TunedConfig};
 use crate::nvsim::org::{AccessMode, CacheOrg};
 use crate::nvsim::CachePpa;
 use crate::util::json::{self, Json};
+use crate::workload::models::{Dnn, Phase};
+use crate::workload::traffic::{BatchLine, DramTerm, TrafficModel, TxTerm, SUPERTILE};
 
 use super::spec::{parse_phase, parse_tech, resolve_dnn, GridPoint, WorkloadPoint};
 use super::{PointResult, WorkloadEval};
@@ -37,7 +44,13 @@ use super::{PointResult, WorkloadEval};
 /// on-disk caches are then ignored wholesale. v2: the process-node
 /// axis went live (7/5 nm calibration) and circuit payload hashes now
 /// bind the node id, so v1 caches — hashed without it — are retired.
-pub const MODEL_VERSION: u32 = 2;
+/// v3: the batch-axis traffic engine — the wire format gained the
+/// `traffic` section of `(dnn, phase)`-keyed [`BatchLine`]
+/// coefficients, whose payload hashes bind the coefficient payload to
+/// its workload key; v2 documents, whose entries were derived strictly
+/// per batch, are rejected wholesale so shard merges can never mix the
+/// two generations.
+pub const MODEL_VERSION: u32 = 3;
 
 /// File name of the persisted cache inside a results directory.
 pub const MEMO_FILE: &str = "sweep_memo.json";
@@ -226,10 +239,16 @@ impl MergeStats {
 #[derive(Default)]
 pub struct Memo {
     circuit: Mutex<HashMap<CircuitKey, TunedConfig>>,
+    traffic: Mutex<HashMap<TrafficKey, Arc<BatchLine>>>,
     points: Mutex<PointCache>,
     solves: AtomicU64,
+    traffic_builds: AtomicU64,
     evals: AtomicU64,
 }
+
+/// Key of the traffic sub-memo: resolved zoo name + phase — no batch,
+/// no capacity (see [`BatchLine::at_capacity`]).
+type TrafficKey = (&'static str, Phase);
 
 impl Memo {
     pub fn new() -> Self {
@@ -292,6 +311,46 @@ impl Memo {
         self.circuit.lock().unwrap().contains_key(&key)
     }
 
+    /// The closed-form batch-traffic line of `(dnn, phase)`, lowering
+    /// the workload's GEMMs on the first query only. `dnn` must be a
+    /// resolved zoo name (spec expansion, the serve routes and
+    /// [`point_from_json`] all resolve before reaching here). Every
+    /// batch and every cache capacity evaluates against the same line,
+    /// so a wide `--batches` sweep performs exactly one traffic build
+    /// per workload x phase.
+    pub fn traffic_line(&self, dnn: &'static str, phase: Phase) -> Arc<BatchLine> {
+        let key: TrafficKey = (dnn, phase);
+        if let Some(line) = self.traffic.lock().unwrap().get(&key) {
+            return line.clone();
+        }
+        // Resolve OUTSIDE the lock: an unresolved name panics this
+        // call only, instead of poisoning the shared Mutex for every
+        // other worker thread.
+        let net = Dnn::by_name(dnn).expect("traffic lines are keyed by resolved zoo names");
+        // The build itself happens under a re-checked lock: lowering
+        // is O(layers) and re-entrancy-free, and the re-check keeps
+        // `traffic_build_count` exact — at most one build per key even
+        // with racing workers, which is what the batch-sweep bench
+        // gate measures.
+        let mut map = self.traffic.lock().unwrap();
+        if let Some(line) = map.get(&key) {
+            return line.clone();
+        }
+        let line = Arc::new(TrafficModel::default().line(&net, phase));
+        self.traffic_builds.fetch_add(1, Ordering::Relaxed);
+        map.insert(key, line.clone());
+        line
+    }
+
+    /// Whether a traffic line is already cached for `(dnn, phase)`.
+    pub fn has_traffic_line(&self, dnn: &str, phase: Phase) -> bool {
+        self.traffic
+            .lock()
+            .unwrap()
+            .keys()
+            .any(|(d, p)| *d == dnn && *p == phase)
+    }
+
     /// Cached full grid-point result, if any (bumps LRU recency).
     pub fn cached_point(&self, p: &GridPoint) -> Option<PointResult> {
         self.points.lock().unwrap().get_touch(p)
@@ -315,6 +374,13 @@ impl Memo {
         self.solves.load(Ordering::Relaxed)
     }
 
+    /// Traffic-coefficient builds performed (not served from cache) —
+    /// the number the batch-sweep bench gates at one per
+    /// `(dnn, phase)`.
+    pub fn traffic_build_count(&self) -> u64 {
+        self.traffic_builds.load(Ordering::Relaxed)
+    }
+
     /// Grid-point evaluations performed (not served from cache).
     pub fn eval_count(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
@@ -322,6 +388,10 @@ impl Memo {
 
     pub fn circuit_len(&self) -> usize {
         self.circuit.lock().unwrap().len()
+    }
+
+    pub fn traffic_len(&self) -> usize {
+        self.traffic.lock().unwrap().len()
     }
 
     pub fn point_len(&self) -> usize {
@@ -332,12 +402,15 @@ impl Memo {
     /// kept).
     pub fn clear(&self) {
         self.circuit.lock().unwrap().clear();
+        self.traffic.lock().unwrap().clear();
         self.points.lock().unwrap().clear();
         self.solves.store(0, Ordering::Relaxed);
+        self.traffic_builds.store(0, Ordering::Relaxed);
         self.evals.store(0, Ordering::Relaxed);
     }
 
-    /// Serialize both layers (entries sorted for diffable output).
+    /// Serialize all three layers (entries sorted for diffable
+    /// output).
     pub fn to_json(&self) -> Json {
         let circuit: Vec<(CircuitKey, TunedConfig)> = self
             .circuit
@@ -346,8 +419,15 @@ impl Memo {
             .iter()
             .map(|(k, v)| (*k, *v))
             .collect();
+        let traffic: Vec<(TrafficKey, Arc<BatchLine>)> = self
+            .traffic
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
         let points = self.points.lock().unwrap().snapshot();
-        assemble_doc(circuit, points)
+        assemble_doc(circuit, traffic, points)
     }
 
     /// Serialize only the entries answering `wanted` grid points: each
@@ -359,6 +439,7 @@ impl Memo {
     pub fn to_json_for(&self, wanted: &[GridPoint]) -> Json {
         let mut pset: HashSet<GridPoint> = HashSet::new();
         let mut cset: HashSet<CircuitKey> = HashSet::new();
+        let mut tset: HashSet<TrafficKey> = HashSet::new();
         for p in wanted {
             pset.insert(*p);
             let bytes = p.capacity_mb * MB;
@@ -367,12 +448,13 @@ impl Memo {
                 capacity_bytes: bytes,
                 node_nm: p.node_nm,
             });
-            if p.workload.is_some() {
+            if let Some(w) = p.workload {
                 cset.insert(CircuitKey {
                     tech: MemTech::Sram,
                     capacity_bytes: bytes,
                     node_nm: p.node_nm,
                 });
+                tset.insert((w.dnn, w.phase));
             }
         }
         let circuit: Vec<(CircuitKey, TunedConfig)> = self
@@ -383,8 +465,16 @@ impl Memo {
             .filter(|(k, _)| cset.contains(k))
             .map(|(k, v)| (*k, *v))
             .collect();
+        let traffic: Vec<(TrafficKey, Arc<BatchLine>)> = self
+            .traffic
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| tset.contains(k))
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
         let points = self.points.lock().unwrap().snapshot_for(&pset);
-        assemble_doc(circuit, points)
+        assemble_doc(circuit, traffic, points)
     }
 
     /// Merge entries from a serialized cache. Returns how many entries
@@ -406,7 +496,8 @@ impl Memo {
     /// coordinator union shard caches in any order). Entries whose
     /// stored payload hash does not match their re-serialized content
     /// — or whose values fail basic sanity (non-finite/non-positive
-    /// PPA, inconsistent organization) — are rejected.
+    /// PPA, inconsistent organization, non-integer traffic
+    /// coefficients) — are rejected.
     pub fn merge_json(&self, doc: &Json) -> MergeStats {
         let mut st = MergeStats { version_ok: true, ..MergeStats::default() };
         let version = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0);
@@ -450,6 +541,51 @@ impl Memo {
                     st.skipped += 1;
                 } else {
                     map.insert(key, t);
+                    st.accepted += 1;
+                }
+            }
+        }
+        if let Some(entries) = doc.get("traffic").and_then(Json::as_arr) {
+            for e in entries {
+                // Key: a resolvable zoo workload + phase. An unknown
+                // workload could never be re-derived locally.
+                let parsed = e
+                    .get("dnn")
+                    .and_then(Json::as_str)
+                    .and_then(|d| resolve_dnn(d).ok())
+                    .zip(
+                        e.get("phase")
+                            .and_then(Json::as_str)
+                            .and_then(|p| parse_phase(p).ok()),
+                    )
+                    .zip(e.get("line").and_then(line_from_json));
+                let Some(((dnn, phase), line)) = parsed else {
+                    st.rejected += 1;
+                    continue;
+                };
+                // Value sanity: the payload hash is a content address,
+                // not a MAC, so bound the coefficients to the
+                // derivable range (see [`line_sane`]) before trusting
+                // them — a pa = 0 term would underflow spill math.
+                if !line_sane(&line) {
+                    st.rejected += 1;
+                    continue;
+                }
+                // Integrity: the stored hash must match the coefficient
+                // payload as the reconstructed line re-serializes it,
+                // workload key included (a relabeled dnn or phase must
+                // not verify — it would poison that workload's whole
+                // batch axis).
+                let expect = traffic_payload_hash(dnn, phase, &line_to_json(&line));
+                if e.get("payload_hash").and_then(Json::as_str) != Some(expect.as_str()) {
+                    st.rejected += 1;
+                    continue;
+                }
+                let mut map = self.traffic.lock().unwrap();
+                if map.contains_key(&(dnn, phase)) {
+                    st.skipped += 1;
+                } else {
+                    map.insert((dnn, phase), Arc::new(line));
                     st.accepted += 1;
                 }
             }
@@ -521,6 +657,7 @@ pub fn tuned(tech: MemTech, capacity_bytes: u64) -> TunedConfig {
 /// entries are sorted so output is diffable).
 fn assemble_doc(
     mut circuit: Vec<(CircuitKey, TunedConfig)>,
+    mut traffic: Vec<(TrafficKey, Arc<BatchLine>)>,
     mut points: Vec<PointResult>,
 ) -> Json {
     let mut root = Json::obj();
@@ -541,6 +678,12 @@ fn assemble_doc(
         })
         .collect();
     root.set("circuit", Json::Arr(centries));
+    traffic.sort_by_key(|(k, _)| (k.0, k.1.name()));
+    let tentries: Vec<Json> = traffic
+        .iter()
+        .map(|(k, line)| traffic_to_json(k.0, k.1, line))
+        .collect();
+    root.set("traffic", Json::Arr(tentries));
     points.sort_by_key(|r| r.point.key());
     let pentries: Vec<Json> = points.iter().map(point_to_json).collect();
     root.set("points", Json::Arr(pentries));
@@ -562,6 +705,221 @@ fn circuit_payload_hash(node_nm: u32, tuned: &Json) -> String {
     payload.set("node_nm", Json::Num(node_nm as f64));
     payload.set("tuned", tuned.clone());
     payload_hash(&payload)
+}
+
+/// Payload hash of a traffic entry: the coefficient payload *bound to
+/// its workload key*. A [`BatchLine`] carries no workload identity of
+/// its own, so hashing the coefficients alone would let an AlexNet
+/// line relabeled as VGG-16 (or inference relabeled as training) pass
+/// the integrity check and poison the whole batch axis of that
+/// workload.
+fn traffic_payload_hash(dnn: &str, phase: Phase, line: &Json) -> String {
+    let mut payload = Json::obj();
+    payload.set("dnn", Json::Str(dnn.to_string()));
+    payload.set("phase", Json::Str(phase.name().to_string()));
+    payload.set("line", line.clone());
+    payload_hash(&payload)
+}
+
+/// Serialize one closed-form transaction term as a fixed-shape array
+/// `[base, slope, ceil_mult, ceil_unit]`.
+fn tx_term_to_json(t: &TxTerm) -> Json {
+    Json::Arr(
+        [t.base, t.slope, t.ceil_mult, t.ceil_unit]
+            .iter()
+            .map(|&v| Json::Num(v as f64))
+            .collect(),
+    )
+}
+
+/// Parse `[base, slope, ceil_mult, ceil_unit]` back, rejecting
+/// anything that is not an exact non-negative integer (coefficients
+/// are element counts; a fractional or negative value can only be
+/// corruption).
+fn tx_term_from_json(j: &Json) -> Option<TxTerm> {
+    let a = j.as_arr()?;
+    if a.len() != 4 {
+        return None;
+    }
+    Some(TxTerm {
+        base: a[0].as_u64()?,
+        slope: a[1].as_u64()?,
+        ceil_mult: a[2].as_u64()?,
+        ceil_unit: a[3].as_u64()?,
+    })
+}
+
+/// Serialize one DRAM spill term as
+/// `[a_base, a_slope, b_base, b_slope, c_base, c_slope, pa, pb_const, pb_unit]`.
+fn dram_term_to_json(t: &DramTerm) -> Json {
+    Json::Arr(
+        [
+            t.a_base, t.a_slope, t.b_base, t.b_slope, t.c_base, t.c_slope,
+            t.pa, t.pb_const, t.pb_unit,
+        ]
+        .iter()
+        .map(|&v| Json::Num(v as f64))
+        .collect(),
+    )
+}
+
+fn dram_term_from_json(j: &Json) -> Option<DramTerm> {
+    let a = j.as_arr()?;
+    if a.len() != 9 {
+        return None;
+    }
+    Some(DramTerm {
+        a_base: a[0].as_u64()?,
+        a_slope: a[1].as_u64()?,
+        b_base: a[2].as_u64()?,
+        b_slope: a[3].as_u64()?,
+        c_base: a[4].as_u64()?,
+        c_slope: a[5].as_u64()?,
+        pa: a[6].as_u64()?,
+        pb_const: a[7].as_u64()?,
+        pb_unit: a[8].as_u64()?,
+    })
+}
+
+/// Per-field magnitude bound for merged traffic coefficients: ~23x
+/// the largest coefficient the zoo can derive (~5e10), and small
+/// enough that every *intermediate* u64 product in term evaluation
+/// (`slope * b`, `ceil_unit * b`, `macs_slope * b`) stays in range for
+/// batches up to [`MAX_SANE_BATCH`].
+const MAX_TRAFFIC_COEFF: u64 = 1 << 40;
+
+/// The batch ceiling merged lines are sanity-evaluated at — the same
+/// [`super::spec::MAX_BATCH`] every untrusted entry point (spec
+/// expansion, the serve `/solve` body) enforces, so no accepted batch
+/// can exceed what the gate proved. Real zoo lines peak around 2^46
+/// elems here, a thousandfold under [`MAX_SANE_ELEMS`].
+const MAX_SANE_BATCH: u128 = super::spec::MAX_BATCH as u128;
+
+/// Element/byte ceiling for one term evaluated at [`MAX_SANE_BATCH`]:
+/// totals below this keep the u64 arithmetic of [`TxTerm::at`] /
+/// [`DramTerm::at`] (including the `* ELEM` and 3x spill factors)
+/// overflow-free for every batch up to the ceiling, since all terms
+/// are monotone in `b`.
+const MAX_SANE_ELEMS: u128 = 1 << 56;
+
+fn tx_term_sane(t: &TxTerm) -> bool {
+    let fields_ok = [t.base, t.slope, t.ceil_mult, t.ceil_unit]
+        .iter()
+        .all(|&v| v < MAX_TRAFFIC_COEFF);
+    // Per-field bounds alone do not bound the ceil_mult * ceil(...)
+    // PRODUCT; evaluate the whole term in u128 at the batch ceiling.
+    let elems = t.base as u128
+        + t.slope as u128 * MAX_SANE_BATCH
+        + t.ceil_mult as u128
+            * (t.ceil_unit as u128 * MAX_SANE_BATCH).div_ceil(SUPERTILE as u128);
+    fields_ok && elems < MAX_SANE_ELEMS
+}
+
+/// A derivable DRAM term always has `pa = ceil(N/T) >= 1` and a B
+/// stream that is either constant (`pb_const >= 1`) or symbolic
+/// (`pb_unit >= 1`) — `pa = 0` would underflow the `(pa - 1)` spill
+/// pass count in [`DramTerm::at`]. Operand footprints are checked in
+/// u128 at the batch ceiling (the spill path multiplies them by at
+/// most 4 overall).
+fn dram_term_sane(d: &DramTerm) -> bool {
+    let fields_ok = [
+        d.a_base, d.a_slope, d.b_base, d.b_slope, d.c_base, d.c_slope,
+        d.pa, d.pb_const, d.pb_unit,
+    ]
+    .iter()
+    .all(|&v| v < MAX_TRAFFIC_COEFF);
+    let footprint_ok = [
+        (d.a_base, d.a_slope),
+        (d.b_base, d.b_slope),
+        (d.c_base, d.c_slope),
+    ]
+    .iter()
+    .all(|&(base, slope)| {
+        base as u128 + slope as u128 * MAX_SANE_BATCH < MAX_SANE_ELEMS
+    });
+    fields_ok && footprint_ok && d.pa >= 1 && (d.pb_const >= 1 || d.pb_unit >= 1)
+}
+
+/// Term-count ceiling per coefficient vector. The deepest zoo network
+/// lowers to under 200 terms; the cap also bounds the evaluation SUM —
+/// 2^9 terms x at most 2^53 transactions each stays under 2^62, so the
+/// u64 accumulators in [`BatchLine::at_capacity`] cannot wrap — and
+/// caps per-entry memory in the merge path.
+const MAX_TRAFFIC_TERMS: usize = 512;
+
+/// Value-level sanity of a merged batch line (the traffic counterpart
+/// of [`ppa_sane`]): the payload hash is a content address, not a MAC,
+/// so this gate is what keeps a hash-consistent hostile document from
+/// parking terms whose arithmetic underflows or overflows.
+fn line_sane(l: &BatchLine) -> bool {
+    l.l2_reads.len() <= MAX_TRAFFIC_TERMS
+        && l.l2_writes.len() <= MAX_TRAFFIC_TERMS
+        && l.streams.len() <= MAX_TRAFFIC_TERMS
+        && l.dram.len() <= MAX_TRAFFIC_TERMS
+        && l.l2_reads
+            .iter()
+            .chain(&l.l2_writes)
+            .chain(&l.streams)
+            .all(tx_term_sane)
+        && l.dram.iter().all(dram_term_sane)
+        && l.const_reads < MAX_TRAFFIC_COEFF
+        && l.const_writes < MAX_TRAFFIC_COEFF
+        && l.macs_slope < MAX_TRAFFIC_COEFF
+        && l.macs_slope >= 1
+}
+
+/// Serialize a [`BatchLine`]'s coefficient payload.
+fn line_to_json(line: &BatchLine) -> Json {
+    let terms = |ts: &[TxTerm]| Json::Arr(ts.iter().map(tx_term_to_json).collect());
+    let mut o = Json::obj();
+    o.set("l2_bytes", Json::Num(line.l2_bytes as f64));
+    o.set("l2_reads", terms(&line.l2_reads));
+    o.set("l2_writes", terms(&line.l2_writes));
+    o.set("streams", terms(&line.streams));
+    o.set(
+        "dram",
+        Json::Arr(line.dram.iter().map(dram_term_to_json).collect()),
+    );
+    o.set("const_reads", Json::Num(line.const_reads as f64));
+    o.set("const_writes", Json::Num(line.const_writes as f64));
+    o.set("macs_slope", Json::Num(line.macs_slope as f64));
+    o
+}
+
+fn line_from_json(j: &Json) -> Option<BatchLine> {
+    let terms = |key: &str| -> Option<Vec<TxTerm>> {
+        j.get(key)?.as_arr()?.iter().map(tx_term_from_json).collect()
+    };
+    Some(BatchLine {
+        l2_bytes: j.get("l2_bytes")?.as_u64()?,
+        l2_reads: terms("l2_reads")?,
+        l2_writes: terms("l2_writes")?,
+        streams: terms("streams")?,
+        dram: j
+            .get("dram")?
+            .as_arr()?
+            .iter()
+            .map(dram_term_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        const_reads: j.get("const_reads")?.as_u64()?,
+        const_writes: j.get("const_writes")?.as_u64()?,
+        macs_slope: j.get("macs_slope")?.as_u64()?,
+    })
+}
+
+/// Serialize one traffic entry — workload key, payload hash bound to
+/// that key, and the coefficient payload.
+pub fn traffic_to_json(dnn: &str, phase: Phase, line: &BatchLine) -> Json {
+    let payload = line_to_json(line);
+    let mut e = Json::obj();
+    e.set("dnn", Json::Str(dnn.to_string()));
+    e.set("phase", Json::Str(phase.name().to_string()));
+    e.set(
+        "payload_hash",
+        Json::Str(traffic_payload_hash(dnn, phase, &payload)),
+    );
+    e.set("line", payload);
+    e
 }
 
 /// All PPA terms must be finite and positive for a cached design to be
@@ -924,22 +1282,27 @@ mod tests {
         }
         assert_eq!(m.point_len(), 3);
         assert_eq!(m.circuit_len(), 4, "stt@1 + sram@1 baseline + sot@2 + sot@3");
+        assert_eq!(m.traffic_len(), 1, "one batch line for AlexNet inference");
 
         // the filtered export carries only the wanted point and its
-        // circuit dependencies — including the SRAM baseline
+        // dependencies — the circuit solves (including the SRAM
+        // baseline) and the workload's traffic line
         let doc = m.to_json_for(&[wl]);
         assert_eq!(doc.get("points").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(doc.get("circuit").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(doc.get("traffic").unwrap().as_arr().unwrap().len(), 1);
 
         // and it is self-sufficient: a fresh memo merged from it
-        // replays the point with zero solves and zero evals
+        // replays the point with zero solves, zero evals and zero
+        // traffic lowerings
         let fresh = Memo::new();
         let st = fresh.merge_json(&doc);
         assert!(st.version_ok);
-        assert_eq!((st.accepted, st.rejected), (3, 0));
+        assert_eq!((st.accepted, st.rejected), (4, 0));
         crate::sweep::evaluate_point(&wl, &fresh).unwrap();
         assert_eq!(fresh.solve_count(), 0);
         assert_eq!(fresh.eval_count(), 0);
+        assert_eq!(fresh.traffic_build_count(), 0);
     }
 
     #[test]
@@ -1046,6 +1409,189 @@ mod tests {
         let st = fresh.merge_json(&json::parse(&text).unwrap());
         assert_eq!((st.accepted, st.rejected), (1, 0));
         assert!(fresh.has_circuit(MemTech::Sram, MB, 7));
+    }
+
+    #[test]
+    fn traffic_lines_round_trip_and_replay_without_rebuilds() {
+        let m = Memo::new();
+        let a = m.traffic_line("AlexNet", Phase::Training);
+        assert_eq!(m.traffic_build_count(), 1);
+        // second query is a cache hit on the same Arc'd coefficients
+        let b = m.traffic_line("AlexNet", Phase::Training);
+        assert_eq!(m.traffic_build_count(), 1);
+        assert_eq!(*a, *b);
+        // phases never alias
+        m.traffic_line("AlexNet", Phase::Inference);
+        assert_eq!(m.traffic_build_count(), 2);
+        assert_eq!(m.traffic_len(), 2);
+
+        // export -> text -> merge: a fresh memo answers both phases
+        // with zero lowerings, and the merged line is bit-identical
+        let text = m.to_json().to_pretty();
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&text).unwrap());
+        assert!(st.version_ok);
+        assert_eq!((st.accepted, st.skipped, st.rejected), (2, 0, 0));
+        let back = fresh.traffic_line("AlexNet", Phase::Training);
+        assert_eq!(fresh.traffic_build_count(), 0, "merged lines serve directly");
+        assert_eq!(*a, *back);
+        // the coefficients drive identical stats on both sides
+        for batch in [1usize, 4, 64, 129] {
+            assert_eq!(a.at(batch), back.at(batch));
+        }
+
+        m.clear();
+        assert_eq!(m.traffic_len(), 0);
+        assert_eq!(m.traffic_build_count(), 0);
+    }
+
+    #[test]
+    fn merge_rejects_forged_traffic_coefficients() {
+        let m = Memo::new();
+        let line = m.traffic_line("AlexNet", Phase::Training);
+        let text = m.to_json().to_pretty();
+
+        // a tampered coefficient no longer matches the payload hash —
+        // it must be rejected, never poison the batch axis
+        let needle = format!("\"macs_slope\": {}", line.macs_slope);
+        assert!(text.contains(&needle), "{text}");
+        let forged = text.replace(&needle, "\"macs_slope\": 1");
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&forged).unwrap());
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+        assert_eq!(fresh.traffic_len(), 0);
+        // ...and the poisoned-axis check end to end: the fresh memo
+        // re-derives the true line locally
+        let rebuilt = fresh.traffic_line("AlexNet", Phase::Training);
+        assert_eq!(*rebuilt, *line);
+
+        // relabeling the workload key must fail the hash (the payload
+        // hash binds dnn + phase, not just the coefficients)
+        for (from, to) in [
+            ("\"phase\": \"training\"", "\"phase\": \"inference\""),
+            ("\"dnn\": \"AlexNet\"", "\"dnn\": \"VGG-16\""),
+        ] {
+            let relabeled = text.replace(from, to);
+            assert_ne!(relabeled, text, "{from}");
+            let fresh = Memo::new();
+            let st = fresh.merge_json(&json::parse(&relabeled).unwrap());
+            assert_eq!((st.accepted, st.rejected), (0, 1), "{from}");
+            assert_eq!(fresh.traffic_len(), 0);
+        }
+
+        // fractional coefficients cannot be element counts: rejected
+        // in parsing, before any hash check
+        let frac = text.replace(&needle, "\"macs_slope\": 1.5");
+        let st = Memo::new().merge_json(&json::parse(&frac).unwrap());
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+
+        // an unknown workload could never be re-derived locally
+        let unknown = text.replace("\"dnn\": \"AlexNet\"", "\"dnn\": \"LeNet\"");
+        let st = Memo::new().merge_json(&json::parse(&unknown).unwrap());
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+
+        // the untampered document still merges cleanly
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&text).unwrap());
+        assert_eq!((st.accepted, st.rejected), (1, 0));
+        assert!(fresh.has_traffic_line("AlexNet", Phase::Training));
+    }
+
+    #[test]
+    fn merge_rejects_hash_consistent_but_insane_traffic_lines() {
+        // The payload hash is a content address anyone can recompute,
+        // so a crafted document can be hash-consistent and still carry
+        // underivable values: those must fail the value-sanity gate,
+        // the same way insane PPA fails circuit entries.
+        let m = Memo::new();
+        let line = m.traffic_line("AlexNet", Phase::Inference);
+
+        let doc_for = |evil: &BatchLine| {
+            let mut doc = Json::obj();
+            doc.set("version", Json::Num(MODEL_VERSION as f64));
+            doc.set(
+                "traffic",
+                Json::Arr(vec![traffic_to_json("AlexNet", Phase::Inference, evil)]),
+            );
+            doc
+        };
+
+        // pa = 0 would underflow the (pa - 1) spill pass count
+        let mut evil = (*line).clone();
+        evil.dram[0].pa = 0;
+        let st = Memo::new().merge_json(&doc_for(&evil));
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+
+        // a B stream that is neither constant nor symbolic
+        let mut evil = (*line).clone();
+        evil.dram[0].pb_const = 0;
+        evil.dram[0].pb_unit = 0;
+        let st = Memo::new().merge_json(&doc_for(&evil));
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+
+        // coefficients beyond any derivable magnitude (1 << 50 round-
+        // trips f64 exactly, so the hash stays consistent)
+        let mut evil = (*line).clone();
+        evil.macs_slope = 1 << 50;
+        let st = Memo::new().merge_json(&doc_for(&evil));
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+
+        // per-field bounds alone would pass this, but the symbolic
+        // ceil product would overflow u64 evaluation: the u128 total
+        // check must reject it
+        let mut evil = (*line).clone();
+        evil.l2_reads[0].ceil_mult = (1 << 40) - 1;
+        evil.l2_reads[0].ceil_unit = (1 << 40) - 1;
+        let st = Memo::new().merge_json(&doc_for(&evil));
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+
+        // a term-count bomb: every term individually sane, but the
+        // accumulated SUM would wrap — the length cap must reject it
+        let mut evil = (*line).clone();
+        let t = evil.l2_reads[0];
+        evil.l2_reads = vec![t; MAX_TRAFFIC_TERMS + 1];
+        let st = Memo::new().merge_json(&doc_for(&evil));
+        assert_eq!((st.accepted, st.rejected), (0, 1));
+
+        // the genuine line still passes the same gate
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&doc_for(&line));
+        assert_eq!((st.accepted, st.rejected), (1, 0));
+        assert_eq!(fresh.traffic_len(), 1);
+    }
+
+    #[test]
+    fn model_version_2_documents_rejected_wholesale() {
+        // v2 documents predate the batch-axis engine: their point
+        // entries were derived strictly per batch and their hashes
+        // know nothing of traffic lines. A merge must reject the whole
+        // generation — version_ok false, zero entries in any bucket —
+        // so shard exchanges can never mix the two.
+        let m = Memo::new();
+        m.tuned(MemTech::SttMram, MB);
+        crate::sweep::evaluate_point(
+            &GridPoint {
+                tech: MemTech::SttMram,
+                capacity_mb: 1,
+                node_nm: 16,
+                workload: Some(WorkloadPoint {
+                    dnn: "AlexNet",
+                    phase: Phase::Inference,
+                    batch: 4,
+                }),
+            },
+            &m,
+        )
+        .unwrap();
+        let mut doc = m.to_json();
+        doc.set("version", Json::Num(2.0));
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&doc);
+        assert!(!st.version_ok);
+        assert_eq!(st.total(), 0, "exact accounting: nothing in any bucket");
+        assert_eq!(fresh.circuit_len(), 0);
+        assert_eq!(fresh.traffic_len(), 0);
+        assert_eq!(fresh.point_len(), 0);
     }
 
     #[test]

@@ -13,8 +13,10 @@
 //!   that evaluates points in parallel yet returns results in spec
 //!   order, so output is byte-identical for any `--jobs`.
 //! * [`memo`] — content-addressed memoization (in-memory + on-disk via
-//!   the results store): each Algorithm-1 circuit solve and each
-//!   traffic-model evaluation runs at most once per content key.
+//!   the results store): each Algorithm-1 circuit solve, each
+//!   closed-form traffic lowering (once per `(dnn, phase)` — the batch
+//!   axis folds coefficients instead of re-lowering GEMMs) and each
+//!   grid-point evaluation runs at most once per content key.
 //! * [`pareto`] — Pareto-frontier extraction over EDP / area / capacity
 //!   for co-optimization queries.
 //!
@@ -36,8 +38,6 @@ use std::collections::HashSet;
 use crate::analysis::energy::{evaluate, DramCost};
 use crate::device::MemTech;
 use crate::nvsim::explorer::TunedConfig;
-use crate::workload::models::Dnn;
-use crate::workload::traffic::TrafficModel;
 
 const MB: u64 = 1024 * 1024;
 
@@ -78,9 +78,13 @@ pub fn evaluate_point(point: &GridPoint, memo: &Memo) -> Result<PointResult> {
     let eval = match point.workload {
         None => None,
         Some(w) => {
-            let dnn = Dnn::by_name(w.dnn).expect("spec expansion resolves workloads");
-            let traffic = TrafficModel { l2_bytes: bytes, ..Default::default() };
-            let stats = traffic.run(&dnn, w.phase, w.batch);
+            // The closed-form batch line is built once per
+            // (dnn, phase) across the WHOLE sweep — every batch on the
+            // axis and every cache capacity folds the same
+            // coefficients (bit-identical to re-running the GEMM
+            // lowering; see rust/tests/properties.rs).
+            let line = memo.traffic_line(w.dnn, w.phase);
+            let stats = line.at_capacity(w.batch, bytes);
             let dram = DramCost::default();
             let e = evaluate(&stats, &tuned.ppa, Some(dram));
             let sram = memo.tuned_at(MemTech::Sram, bytes, point.node_nm)?;
@@ -247,6 +251,32 @@ mod tests {
         run(&spec, 2, &memo).unwrap();
         assert_eq!(memo.solve_count(), 6);
         assert_eq!(memo.eval_count(), 3);
+    }
+
+    #[test]
+    fn batch_axis_lowers_traffic_once_per_workload_phase() {
+        // A wide --batches grid must not scale traffic-coefficient
+        // work with the batch count: one lowering per (dnn, phase),
+        // shared by every batch AND every capacity.
+        let spec = SweepSpec {
+            techs: vec![MemTech::SttMram],
+            capacities_mb: vec![1, 2],
+            dnns: vec!["AlexNet".into()],
+            phases: Phase::ALL.to_vec(),
+            batches: vec![1, 2, 4, 8, 16, 32],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let memo = Memo::new();
+        let res = run(&spec, 3, &memo).unwrap();
+        assert_eq!(res.points.len(), 2 * 2 * 6);
+        assert_eq!(memo.eval_count(), 24);
+        assert_eq!(memo.traffic_build_count(), 2, "one lowering per (dnn, phase)");
+        assert_eq!(memo.traffic_len(), 2);
+        // a warm rerun folds coefficients from cache: no new builds
+        run(&spec, 3, &memo).unwrap();
+        assert_eq!(memo.traffic_build_count(), 2);
+        assert_eq!(memo.eval_count(), 24);
     }
 
     #[test]

@@ -27,6 +27,15 @@ pub const DEFAULT_CAPACITIES_MB: [u64; 6] =
 /// reach [`SweepSpec::expand`] unfiltered.
 pub const MAX_CAPACITY_MB: u64 = 4096;
 
+/// Largest accepted batch size. Far beyond any practical sweep axis
+/// (the paper uses 4/64), but small enough that batch-line term
+/// evaluation stays within the overflow-free envelope the memo's
+/// merge-time sanity gate proves for merged traffic coefficients
+/// (which checks terms at exactly this batch). Enforced wherever a
+/// grid point is formed from untrusted input: spec expansion and the
+/// serve `/solve` body.
+pub const MAX_BATCH: usize = 1 << 20;
+
 /// The workload coordinates of a grid point (absent for circuit-only
 /// sweeps such as Fig 9, where only the cache PPA is of interest).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -206,6 +215,9 @@ impl SweepSpec {
         for &b in &self.batches {
             if b == 0 {
                 bail!("batch size must be at least 1");
+            }
+            if b > MAX_BATCH {
+                bail!("batch size {b} exceeds the {MAX_BATCH} model limit");
             }
         }
 
@@ -584,6 +596,16 @@ mod tests {
 
         let s = SweepSpec { batches: vec![0], ..SweepSpec::default() };
         assert!(s.expand().is_err());
+
+        // a batch beyond MAX_BATCH would escape the overflow envelope
+        // the memo's merge sanity gate proves for traffic coefficients
+        let s = SweepSpec {
+            batches: vec![MAX_BATCH + 1],
+            ..SweepSpec::default()
+        };
+        assert!(s.expand().is_err());
+        let s = SweepSpec { batches: vec![MAX_BATCH], ..SweepSpec::default() };
+        assert!(s.expand().is_ok());
 
         // 2^44 MB would overflow the byte math (mb * 2^20) downstream
         let s = SweepSpec {

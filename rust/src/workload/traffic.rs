@@ -34,8 +34,10 @@ pub const TX_BYTES: u64 = 32;
 /// Bytes per fp32 element.
 const ELEM: u64 = 4;
 /// Supertile edge: the effective SM-level reuse tile (the thread-block
-/// C-tile of Pascal-class SGEMM).
-const SUPERTILE: u64 = 128;
+/// C-tile of Pascal-class SGEMM). Public because it is also the ceil
+/// divisor of the closed-form batch terms, which the sweep memo's
+/// merge-time sanity gate re-evaluates.
+pub const SUPERTILE: u64 = 128;
 
 /// Memory statistics for one workload execution (whole network, one
 /// batch through one phase).
@@ -134,6 +136,327 @@ fn gemm_dram(m: u64, k: u64, n: u64, l2_bytes: u64) -> (u64, u64) {
         }
     }
     (ceil_div(reads, TX_BYTES), ceil_div(writes, TX_BYTES))
+}
+
+// ---------------------------------------------------------------------
+// Closed-form batch axis.
+//
+// Every quantity above is piecewise-affine in the batch size `b`: the
+// GEMM dims are (b*m1, K, N) with only M batch-dependent, so per GEMM
+//
+//   read_elems(b)  = slope*b + coeff * ceil(m1*b / T)      (T = 128)
+//   write_elems(b) = slope*b (+ const)
+//   {a,b,c}_bytes(b) = base + slope*b                      (DRAM spill)
+//
+// The only non-affine piece is the ceil(M/T) weight re-streaming term,
+// which [`TxTerm`]/[`DramTerm`] keep symbolic. [`TrafficModel::line`]
+// folds a whole (dnn, phase) into one [`BatchLine`] of such terms —
+// built once, then evaluated at ANY batch in O(layers) integer folds,
+// bit-identical to [`TrafficModel::run`] (each GEMM keeps its own
+// transaction rounding, so no ceil is ever merged across GEMMs).
+// ---------------------------------------------------------------------
+
+/// One ceil-rounded L2 transaction term, symbolic in the batch size:
+///
+/// `tx(b) = ceil((base + slope*b + ceil_mult * ceil(ceil_unit*b / T)) * ELEM / TX_BYTES)`
+///
+/// with `T = SUPERTILE`. This is exactly one GEMM's read or write
+/// stream from [`gemm_l2`], with the batch left symbolic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TxTerm {
+    pub base: u64,
+    pub slope: u64,
+    /// Multiplier of the piecewise ceil(M/T) re-streaming term (the
+    /// weight-stream pass count); 0 when the GEMM's M is constant.
+    pub ceil_mult: u64,
+    /// Rows added per batch item (`m1`): the ceil argument is
+    /// `ceil_unit * b`.
+    pub ceil_unit: u64,
+}
+
+impl TxTerm {
+    /// Transactions at batch `b`.
+    pub fn at(&self, b: u64) -> u64 {
+        let elems = self.base
+            + self.slope * b
+            + self.ceil_mult * ceil_div(self.ceil_unit * b, SUPERTILE);
+        ceil_div(elems * ELEM, TX_BYTES)
+    }
+
+    /// Whether the term is a batch-independent constant.
+    fn is_const(&self) -> bool {
+        self.slope == 0 && self.ceil_mult == 0
+    }
+}
+
+/// One GEMM's DRAM compulsory + capacity-spill traffic, symbolic in the
+/// batch size. Operand footprints are affine (`x_base + x_slope*b`
+/// bytes); the pass counts stay symbolic exactly as in [`gemm_dram`]:
+/// `pa` is constant (the third GEMM dim never carries the batch) and
+/// `pb` is `pb_const` or the piecewise `ceil(pb_unit*b / T)`. The L2
+/// capacity is an *evaluation-time* parameter — coefficients are
+/// capacity-independent, which is what lets one [`BatchLine`] serve
+/// every cache size in a sweep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DramTerm {
+    pub a_base: u64,
+    pub a_slope: u64,
+    pub b_base: u64,
+    pub b_slope: u64,
+    pub c_base: u64,
+    pub c_slope: u64,
+    /// A-stream pass count: ceil(N/T), constant.
+    pub pa: u64,
+    /// B-stream pass count when constant (`pb_unit == 0`).
+    pub pb_const: u64,
+    /// When non-zero, `pb(b) = ceil(pb_unit*b / T)`.
+    pub pb_unit: u64,
+}
+
+impl DramTerm {
+    /// (read, write) transactions at batch `b` against an L2 of
+    /// `l2_bytes` — the same arithmetic as [`gemm_dram`], term for
+    /// term.
+    pub fn at(&self, b: u64, l2_bytes: u64) -> (u64, u64) {
+        let a_bytes = self.a_base + self.a_slope * b;
+        let b_bytes = self.b_base + self.b_slope * b;
+        let c_bytes = self.c_base + self.c_slope * b;
+        let pb = if self.pb_unit == 0 {
+            self.pb_const
+        } else {
+            ceil_div(self.pb_unit * b, SUPERTILE)
+        };
+        let mut reads = a_bytes + b_bytes;
+        let writes = c_bytes;
+        if a_bytes + b_bytes > l2_bytes {
+            if a_bytes > b_bytes {
+                reads += a_bytes.min(a_bytes.saturating_sub(l2_bytes / 2))
+                    * (self.pa - 1).min(3);
+            } else {
+                reads += b_bytes.min(b_bytes.saturating_sub(l2_bytes / 2))
+                    * (pb - 1).min(3);
+            }
+        }
+        (ceil_div(reads, TX_BYTES), ceil_div(writes, TX_BYTES))
+    }
+}
+
+/// A whole network's traffic for one phase, as closed-form batch
+/// coefficients: build once per `(dnn, phase)` with
+/// [`TrafficModel::line`], evaluate any batch with [`BatchLine::at`] /
+/// [`BatchLine::at_capacity`] — bit-identical to re-running the full
+/// GEMM lowering at that batch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchLine {
+    /// L2 capacity (bytes) [`BatchLine::at`] evaluates spill terms
+    /// against — the building model's `l2_bytes`. The coefficients
+    /// themselves are capacity-independent.
+    pub l2_bytes: u64,
+    /// Per-GEMM L2 read terms (one transaction rounding each, exactly
+    /// like the direct path).
+    pub l2_reads: Vec<TxTerm>,
+    /// Per-GEMM L2 write terms.
+    pub l2_writes: Vec<TxTerm>,
+    /// Pool/eltwise activation streams: reads += tx(b), writes +=
+    /// tx(b)/2.
+    pub streams: Vec<TxTerm>,
+    /// Per-GEMM DRAM terms.
+    pub dram: Vec<DramTerm>,
+    /// Batch-independent L2 read transactions (training weight
+    /// updates and constant-M GEMM streams), prefolded.
+    pub const_reads: u64,
+    /// Batch-independent L2 write transactions, prefolded.
+    pub const_writes: u64,
+    /// MACs per batch item (forward, plus backward when training).
+    pub macs_slope: u64,
+}
+
+impl BatchLine {
+    /// Stats at batch `b` against the line's own L2 capacity.
+    pub fn at(&self, b: usize) -> WorkloadStats {
+        self.at_capacity(b, self.l2_bytes)
+    }
+
+    /// Stats at batch `b` against an explicit L2 capacity (the sweep
+    /// engine's path: one line per `(dnn, phase)` serves every cache
+    /// size on the capacity axis).
+    pub fn at_capacity(&self, b: usize, l2_bytes: u64) -> WorkloadStats {
+        let b = b as u64;
+        let mut s = WorkloadStats {
+            l2_reads: self.const_reads,
+            l2_writes: self.const_writes,
+            macs: self.macs_slope * b,
+            ..WorkloadStats::default()
+        };
+        for t in &self.l2_reads {
+            s.l2_reads += t.at(b);
+        }
+        for t in &self.l2_writes {
+            s.l2_writes += t.at(b);
+        }
+        for t in &self.streams {
+            let tx = t.at(b);
+            s.l2_reads += tx;
+            s.l2_writes += tx / 2;
+        }
+        for d in &self.dram {
+            let (r, w) = d.at(b, l2_bytes);
+            s.dram_reads += r;
+            s.dram_writes += w;
+        }
+        s
+    }
+
+    fn push_read(&mut self, t: TxTerm) {
+        if t.is_const() {
+            self.const_reads += t.at(0);
+        } else {
+            self.l2_reads.push(t);
+        }
+    }
+
+    fn push_write(&mut self, t: TxTerm) {
+        if t.is_const() {
+            self.const_writes += t.at(0);
+        } else {
+            self.l2_writes.push(t);
+        }
+    }
+}
+
+/// A GEMM dimension symbolic in the batch: `value(b) = c + s*b`. Every
+/// lowered dim carries the batch wholly or not at all, so exactly one
+/// of the two fields is non-zero (enforced by [`dim_mul`]).
+#[derive(Clone, Copy, Debug)]
+struct Dim {
+    c: u64,
+    s: u64,
+}
+
+const fn con(c: u64) -> Dim {
+    Dim { c, s: 0 }
+}
+
+const fn lin(s: u64) -> Dim {
+    Dim { c: 0, s }
+}
+
+/// Product of two symbolic dims; at most one may carry the batch (a
+/// quadratic term would mean the lowering changed shape — the debug
+/// assert pins that invariant).
+fn dim_mul(a: Dim, b: Dim) -> Dim {
+    debug_assert!(a.s == 0 || b.s == 0, "batch-quadratic GEMM term");
+    Dim { c: a.c * b.c, s: a.c * b.s + a.s * b.c }
+}
+
+/// One GEMM's traffic with the batch symbolic: the closed-form twin of
+/// [`gemm_l2`] + [`gemm_dram`] for dims `(m, k, n)` where `n` is always
+/// batch-free (true for every lowered GEMM: forward, dX and dW).
+fn gemm_line(m: Dim, k: Dim, n: u64, im2col: bool) -> (TxTerm, TxTerm, DramTerm) {
+    let pa = ceil_div(n, SUPERTILE);
+    let mk = dim_mul(m, k);
+    let kn = dim_mul(k, con(n));
+    let mn = dim_mul(m, con(n));
+
+    // read_elems = m*k*pa + k*n*pb, pb = ceil(m/T)
+    let (read, pb_const, pb_unit) = if m.s == 0 {
+        let pb = ceil_div(m.c, SUPERTILE);
+        (
+            TxTerm {
+                base: mk.c * pa + kn.c * pb,
+                slope: mk.s * pa + kn.s * pb,
+                ceil_mult: 0,
+                ceil_unit: 0,
+            },
+            pb,
+            0,
+        )
+    } else {
+        // m carries the batch, so k and n do not: k*n is constant and
+        // multiplies the symbolic ceil directly.
+        debug_assert_eq!(kn.s, 0);
+        (
+            TxTerm {
+                base: mk.c * pa,
+                slope: mk.s * pa,
+                ceil_mult: kn.c,
+                ceil_unit: m.s,
+            },
+            0,
+            m.s,
+        )
+    };
+
+    // write_elems = m*n (+ m*k for a materialized im2col buffer)
+    let w = if im2col {
+        Dim { c: mn.c + mk.c, s: mn.s + mk.s }
+    } else {
+        mn
+    };
+    let write = TxTerm { base: w.c, slope: w.s, ceil_mult: 0, ceil_unit: 0 };
+
+    let dram = DramTerm {
+        a_base: mk.c * ELEM,
+        a_slope: mk.s * ELEM,
+        b_base: kn.c * ELEM,
+        b_slope: kn.s * ELEM,
+        c_base: mn.c * ELEM,
+        c_slope: mn.s * ELEM,
+        pa,
+        pb_const,
+        pb_unit,
+    };
+    (read, write, dram)
+}
+
+impl TrafficModel {
+    /// Lower `(dnn, phase)` into its closed-form batch coefficients —
+    /// the one-time cost that makes every batch on the axis an
+    /// O(layers) evaluation. `line(d, ph).at(b)` is bit-identical to
+    /// `run(d, ph, b)` for every `b` (pinned exhaustively in
+    /// `rust/tests/properties.rs`).
+    pub fn line(&self, dnn: &Dnn, phase: Phase) -> BatchLine {
+        let mut line = BatchLine { l2_bytes: self.l2_bytes, ..BatchLine::default() };
+        for layer in &dnn.layers {
+            // gemm_dims(b) = (b*m1, k, n): only M carries the batch.
+            let Some((m1, k, n)) = layer.gemm_dims(1) else {
+                let kappa = (layer.in_hw * layer.in_hw) as u64
+                    * layer.cout().max(64) as u64;
+                line.streams.push(TxTerm { slope: kappa, ..TxTerm::default() });
+                continue;
+            };
+            let m = lin(m1);
+            let spatial = matches!(
+                layer.kind,
+                super::models::LayerKind::Conv { k, .. } if k > 1
+            );
+            let (r, w, d) =
+                gemm_line(m, con(k), n, self.materialize_im2col && spatial);
+            line.push_read(r);
+            line.push_write(w);
+            line.dram.push(d);
+            line.macs_slope += m1 * k * n;
+
+            if phase == Phase::Training {
+                // dX: (M x N) @ (N x K); dW: (K x M) @ (M x N)
+                let (r1, w1, d1) = gemm_line(m, con(n), k, false);
+                let (r2, w2, d2) = gemm_line(con(k), m, n, false);
+                line.push_read(r1);
+                line.push_read(r2);
+                line.push_write(w1);
+                line.push_write(w2);
+                line.dram.push(d1);
+                line.dram.push(d2);
+                line.macs_slope += 2 * m1 * k * n;
+
+                // weight update: read W + dW, write W (batch-free)
+                let upd = ceil_div(k * n * ELEM, TX_BYTES);
+                line.const_reads += 2 * upd;
+                line.const_writes += upd;
+            }
+        }
+        line
+    }
 }
 
 impl TrafficModel {
@@ -246,23 +569,78 @@ mod tests {
     #[test]
     fn training_more_read_dominant_with_batch() {
         // Paper Fig 5: "training workloads become more read dominant
-        // as batch size increases".
+        // as batch size increases". Proven on the closed-form fast
+        // path (the one batch sweeps actually ride), which the
+        // equality asserts tie back to the direct lowering.
         let m = TrafficModel::default();
         let d = Dnn::by_name("AlexNet").unwrap();
-        let r16 = m.run(&d, Phase::Training, 16).rw_ratio();
-        let r256 = m.run(&d, Phase::Training, 256).rw_ratio();
+        let line = m.line(&d, Phase::Training);
+        assert_eq!(line.at(16), m.run(&d, Phase::Training, 16));
+        assert_eq!(line.at(256), m.run(&d, Phase::Training, 256));
+        let r16 = line.at(16).rw_ratio();
+        let r256 = line.at(256).rw_ratio();
         assert!(r256 > r16, "train R/W: b16 {r16}, b256 {r256}");
     }
 
     #[test]
     fn inference_rw_ratio_falls_with_batch() {
         // Paper Fig 5: "inference workloads have lower read/write ratio
-        // as batch size increases".
+        // as batch size increases" — again on the BatchLine fast path.
         let m = TrafficModel::default();
         let d = Dnn::by_name("AlexNet").unwrap();
-        let r1 = m.run(&d, Phase::Inference, 1).rw_ratio();
-        let r64 = m.run(&d, Phase::Inference, 64).rw_ratio();
+        let line = m.line(&d, Phase::Inference);
+        assert_eq!(line.at(1), m.run(&d, Phase::Inference, 1));
+        assert_eq!(line.at(64), m.run(&d, Phase::Inference, 64));
+        let r1 = line.at(1).rw_ratio();
+        let r64 = line.at(64).rw_ratio();
         assert!(r64 < r1, "infer R/W: b1 {r1}, b64 {r64}");
+    }
+
+    #[test]
+    fn batch_line_matches_direct_run_smoke() {
+        // Unit-level anchor; the exhaustive zoo x phase x batch x
+        // breakpoint suite lives in rust/tests/properties.rs.
+        let m = TrafficModel::default();
+        let d = Dnn::by_name("GoogLeNet").unwrap();
+        for ph in Phase::ALL {
+            let line = m.line(&d, ph);
+            for b in [1usize, 4, 64, 129] {
+                assert_eq!(line.at(b), m.run(&d, ph, b), "{} b{b}", ph.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_line_coefficients_are_capacity_independent() {
+        // Only DRAM spill evaluation sees the L2 capacity: a line built
+        // at one capacity must reproduce the direct path at another via
+        // at_capacity — the invariant that lets the sweep memo key
+        // traffic on (dnn, phase) alone.
+        let d = Dnn::by_name("VGG-16").unwrap();
+        let line = TrafficModel::default().line(&d, Phase::Training);
+        for l2 in [1u64 << 20, 6 << 20, 24 << 20] {
+            let direct = TrafficModel { l2_bytes: l2, ..Default::default() };
+            assert_eq!(line.at_capacity(32, l2), direct.run(&d, Phase::Training, 32));
+        }
+    }
+
+    #[test]
+    fn batch_line_folds_constants_and_keeps_piecewise_terms() {
+        let d = Dnn::by_name("AlexNet").unwrap();
+        let m = TrafficModel::default();
+        let inf = m.line(&d, Phase::Inference);
+        // inference: no weight-update constants, one read term per
+        // conv/fc layer, each carrying the symbolic ceil(M/T) stream
+        assert_eq!(inf.const_reads, 0);
+        assert_eq!(inf.l2_reads.len(), 8, "5 conv + 3 fc");
+        assert!(inf.l2_reads.iter().all(|t| t.ceil_unit > 0));
+        assert_eq!(inf.streams.len(), 3, "3 pools");
+        assert_eq!(inf.macs_slope, d.total_macs());
+        // training: dW GEMMs and weight updates contribute constants
+        let tr = m.line(&d, Phase::Training);
+        assert!(tr.const_reads > 0 && tr.const_writes > 0);
+        assert_eq!(tr.macs_slope, 3 * d.total_macs());
+        assert_eq!(tr.dram.len(), 3 * 8);
     }
 
     #[test]

@@ -1,10 +1,18 @@
 //! CLI + report + store integration: every fast command produces a
 //! printable table and a persistable CSV, and the store index is
-//! readable back.
+//! readable back. Also the golden paper-batch pins: fig5 and table2
+//! rows must be byte-identical to the pre-BatchLine per-batch
+//! recompute path.
 
+use deepnvm::analysis::{evaluate, iso_capacity, DramCost};
 use deepnvm::coordinator::cli::{generate, parse_args, CliOptions};
+use deepnvm::coordinator::reports;
 use deepnvm::coordinator::store::Store;
+use deepnvm::nvsim::explorer::tuned_cache;
 use deepnvm::util::json;
+use deepnvm::util::table::f;
+use deepnvm::workload::models::{Dnn, Phase};
+use deepnvm::workload::traffic::TrafficModel;
 
 fn opts(cmd: &str) -> CliOptions {
     parse_args(&[cmd.to_string(), "--quick".to_string()]).unwrap()
@@ -58,4 +66,85 @@ fn fig5_custom_batches_respected() {
     .unwrap();
     let rs = generate(&o).unwrap();
     assert_eq!(rs[0].csv.n_rows(), 2 * 2 * 2);
+}
+
+#[test]
+fn fig5_csv_byte_identical_to_per_batch_recompute_at_paper_batches() {
+    // Golden pin for the BatchLine rewire: the fig5 rows at the paper
+    // batches — 4 (inference) and 64 (training) — must be
+    // byte-identical to the pre-BatchLine implementation, which re-ran
+    // the full GEMM lowering at every batch. That legacy path is
+    // inlined here verbatim (same loop order, same float ops, same
+    // formatting).
+    let o = parse_args(&[
+        "fig5".to_string(),
+        "--batches".to_string(),
+        "4,64".to_string(),
+    ])
+    .unwrap();
+    let csv = generate(&o).unwrap()[0].csv.to_string();
+
+    let caches = iso_capacity::iso_caches();
+    let traffic = TrafficModel {
+        l2_bytes: iso_capacity::ISO_CAPACITY,
+        ..Default::default()
+    };
+    let dram = DramCost::default();
+    let dnn = Dnn::by_name("AlexNet").unwrap();
+    let mut want = vec!["batch,phase,tech,edp_reduction".to_string()];
+    for &b in &[4usize, 64] {
+        for phase in Phase::ALL {
+            let stats = traffic.run(&dnn, phase, b);
+            let sram = evaluate(&stats, &caches[0].1, Some(dram));
+            for &(tech, ppa) in &caches[1..] {
+                let e = evaluate(&stats, &ppa, Some(dram));
+                let norm = e.edp() / sram.edp();
+                want.push(format!(
+                    "{b},{},{},{}",
+                    phase.name(),
+                    tech.name(),
+                    f(1.0 / norm, 2)
+                ));
+            }
+        }
+    }
+    assert_eq!(csv.lines().collect::<Vec<_>>(), want, "fig5 rows drifted");
+}
+
+#[test]
+fn table2_csv_byte_identical_to_direct_solver_rows() {
+    // table2 carries no traffic terms, so the batch-axis rewire must
+    // leave it untouched: rows pinned against direct Algorithm-1
+    // solves, and stable across repeated generation.
+    let report = reports::table2();
+    let csv = report.csv.to_string();
+    assert_eq!(csv, reports::table2().csv.to_string(), "non-deterministic");
+
+    const MB: u64 = 1024 * 1024;
+    let points: [(&str, deepnvm::device::MemTech, u64); 5] = [
+        ("SRAM 3MB", deepnvm::device::MemTech::Sram, 3),
+        ("STT 3MB (iso-cap)", deepnvm::device::MemTech::SttMram, 3),
+        ("STT 7MB (iso-area)", deepnvm::device::MemTech::SttMram, 7),
+        ("SOT 3MB (iso-cap)", deepnvm::device::MemTech::SotMram, 3),
+        ("SOT 10MB (iso-area)", deepnvm::device::MemTech::SotMram, 10),
+    ];
+    let mut want = vec![
+        "design,read_lat_ns,write_lat_ns,read_nj,write_nj,leak_mw,area_mm2,org"
+            .to_string(),
+    ];
+    for (name, tech, mb) in points {
+        let c = tuned_cache(tech, mb * MB);
+        let p = c.ppa;
+        want.push(format!(
+            "{name},{},{},{},{},{},{},{}",
+            f(p.read_latency * 1e9, 2),
+            f(p.write_latency * 1e9, 2),
+            f(p.read_energy * 1e9, 2),
+            f(p.write_energy * 1e9, 2),
+            f(p.leakage_power * 1e3, 0),
+            f(p.area * 1e6, 2),
+            c.org.describe(),
+        ));
+    }
+    assert_eq!(csv.lines().collect::<Vec<_>>(), want, "table2 rows drifted");
 }

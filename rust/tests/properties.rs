@@ -76,6 +76,100 @@ fn cache_ppa_monotone_in_capacity() {
     }
 }
 
+// ------------------------------------------------------------------
+// Closed-form batch-axis equivalence: BatchLine::at(b) must be
+// bit-identical to the direct GEMM re-lowering at every batch, for
+// every workload, phase, capacity and im2col setting — including the
+// ceil(M/T) re-streaming breakpoints.
+// ------------------------------------------------------------------
+
+/// The dense batch set of the equivalence contract: small batches, the
+/// paper batches (4 / 64) and their neighbours, and a deep batch that
+/// crosses the fc-layer supertile boundary (m1 = 1 breaks first at
+/// b = 129).
+const EQUIV_BATCHES: [usize; 10] = [1, 2, 3, 4, 7, 8, 63, 64, 65, 512];
+
+#[test]
+fn batch_line_bit_identical_to_direct_traffic_across_zoo() {
+    let m = TrafficModel::default();
+    for d in Dnn::zoo() {
+        for ph in Phase::ALL {
+            let line = m.line(&d, ph);
+            for &b in &EQUIV_BATCHES {
+                assert_eq!(
+                    line.at(b),
+                    m.run(&d, ph, b),
+                    "{} {} b{b}",
+                    d.name,
+                    ph.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_line_exact_across_restreaming_breakpoints() {
+    // ceil(m1*b / T) (T = 128) increments for layer rows-per-batch m1
+    // exactly at b = floor(T*j / m1) + 1. For every layer of every
+    // network, straddle the first few breakpoints explicitly
+    // (b-1, b, b+1): these are the seams where an affine-only
+    // approximation would go wrong.
+    const T: u64 = 128;
+    let m = TrafficModel::default();
+    for d in Dnn::zoo() {
+        let mut breakpoints = std::collections::BTreeSet::new();
+        for l in &d.layers {
+            let Some((m1, _, _)) = l.gemm_dims(1) else { continue };
+            for j in 1..=3u64 {
+                breakpoints.insert((T * j / m1 + 1) as usize);
+            }
+        }
+        assert!(!breakpoints.is_empty(), "{}", d.name);
+        for ph in Phase::ALL {
+            let line = m.line(&d, ph);
+            for &bp in &breakpoints {
+                for b in [bp.saturating_sub(1).max(1), bp, bp + 1] {
+                    assert_eq!(
+                        line.at(b),
+                        m.run(&d, ph, b),
+                        "{} {} breakpoint {bp} at b{b}",
+                        d.name,
+                        ph.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_line_matches_direct_at_any_capacity_and_im2col() {
+    // The coefficients must be capacity-independent (the L2 size only
+    // enters DRAM spill EVALUATION) and respect the builder's im2col
+    // setting — the two invariants behind the sweep memo's
+    // (dnn, phase) traffic key.
+    check(60, |g| {
+        let zoo = Dnn::zoo();
+        let d = g.choose(&zoo);
+        let ph = *g.choose(&Phase::ALL);
+        let b = g.usize_in(1, 600);
+        let l2 = g.u64_in(1 << 18, 64 << 20);
+        let im2col = g.bool();
+        let direct = TrafficModel { l2_bytes: l2, materialize_im2col: im2col };
+        // line built at a DIFFERENT capacity, evaluated at l2
+        let builder = TrafficModel { l2_bytes: 3 << 20, materialize_im2col: im2col };
+        let line = builder.line(d, ph);
+        assert_eq!(
+            line.at_capacity(b, l2),
+            direct.run(d, ph, b),
+            "{} {} b{b} l2={l2} im2col={im2col}",
+            d.name,
+            ph.name()
+        );
+    });
+}
+
 #[test]
 fn traffic_monotone_in_batch() {
     check(30, |g| {

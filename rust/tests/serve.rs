@@ -192,8 +192,9 @@ fn disjoint_shard_merges_reproduce_the_full_grid_memo() {
 fn partial_merge_accounts_exactly_and_leaves_the_memo_consistent() {
     // Worker A's shard: caps [1]; the full export additionally carries
     // caps [2]. Per capacity the export holds 2 circuit entries
-    // (stt + the sram baseline) and 2 point entries (two phases):
-    // 4 entries per capacity, 8 in the full document.
+    // (stt + the sram baseline) and 2 point entries (two phases), plus
+    // — shared across the capacities — 2 traffic lines (AlexNet x two
+    // phases): 6 entries in shard A's document, 10 in the full one.
     let spec = SweepSpec {
         techs: vec![MemTech::SttMram],
         capacities_mb: vec![1, 2],
@@ -208,6 +209,7 @@ fn partial_merge_accounts_exactly_and_leaves_the_memo_consistent() {
     let worker = Memo::new();
     let export_a = shard::run_shard(&shard_a, 1, &worker).unwrap();
     let export_full = shard::run_shard(&spec, 1, &worker).unwrap();
+    assert_eq!(export_a.get("traffic").unwrap().as_arr().unwrap().len(), 2);
 
     // tamper with exactly one cap-2 point entry in the full document
     let victim = export_full
@@ -229,32 +231,136 @@ fn partial_merge_accounts_exactly_and_leaves_the_memo_consistent() {
     let (status, body) = post(&server, "/memo/merge", &export_a.to_pretty());
     assert_eq!(status, 200, "{body}");
     let j = json::parse(&body).unwrap();
-    assert_eq!(j.get("accepted").unwrap().as_u64(), Some(4), "{body}");
+    assert_eq!(j.get("accepted").unwrap().as_u64(), Some(6), "{body}");
     assert_eq!(j.get("skipped").unwrap().as_u64(), Some(0));
     assert_eq!(j.get("rejected").unwrap().as_u64(), Some(0));
 
-    // the mixed document: 3 fresh valid entries, 4 duplicates of shard
-    // A, 1 tampered — every entry lands in exactly one bucket
+    // the mixed document: 3 fresh valid entries, 6 duplicates of shard
+    // A (circuit + point + traffic), 1 tampered — every entry lands in
+    // exactly one bucket
     let (status, body) = post(&server, "/memo/merge", &tampered);
     assert_eq!(status, 200, "{body}");
     let j = json::parse(&body).unwrap();
     assert_eq!(j.get("accepted").unwrap().as_u64(), Some(3), "{body}");
-    assert_eq!(j.get("skipped").unwrap().as_u64(), Some(4), "{body}");
+    assert_eq!(j.get("skipped").unwrap().as_u64(), Some(6), "{body}");
     assert_eq!(j.get("rejected").unwrap().as_u64(), Some(1), "{body}");
 
     // the rejected entry was NOT merged: the memo still answers the
     // untampered slice without it...
     assert_eq!(memo.circuit_len(), 4);
+    assert_eq!(memo.traffic_len(), 2);
     assert_eq!(memo.point_len(), 3);
     // ...and re-merging the clean document back-fills exactly that one
     // entry, after which the full grid replays with zero work
     let st = memo.merge_json(&export_full);
-    assert_eq!((st.accepted, st.skipped, st.rejected), (1, 7, 0));
-    assert_eq!(st.total(), 8);
+    assert_eq!((st.accepted, st.skipped, st.rejected), (1, 9, 0));
+    assert_eq!(st.total(), 10);
     let res = deepnvm::sweep::run(&spec, 1, memo).unwrap();
     assert_eq!(res.points.len(), 4);
     assert_eq!(memo.solve_count(), 0, "consistent memo: replay solves nothing");
     assert_eq!(memo.eval_count(), 0);
+    assert_eq!(memo.traffic_build_count(), 0, "replay folds merged coefficients");
+}
+
+#[test]
+fn forged_traffic_coefficients_never_poison_the_batch_axis() {
+    // A worker ships a batch-axis shard; an attacker rewrites one
+    // traffic line's coefficients in flight. The merge must reject the
+    // entry on its payload-hash check, and the server must keep
+    // serving CORRECT batch rows afterwards (re-deriving the line
+    // locally instead of trusting the forged one).
+    let spec = SweepSpec {
+        techs: vec![MemTech::SttMram],
+        capacities_mb: vec![1],
+        dnns: vec!["AlexNet".into()],
+        phases: vec![Phase::Training],
+        batches: vec![8, 16],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let worker = Memo::new();
+    let export = shard::run_shard(&spec, 1, &worker).unwrap();
+    let text = export.to_pretty();
+    // rewrite the MAC slope inside the (only) traffic entry
+    let slope = worker.traffic_line("AlexNet", Phase::Training).macs_slope;
+    let needle = format!("\"macs_slope\": {slope}");
+    let forged = text.replace(&needle, "\"macs_slope\": 1");
+    assert_ne!(forged, text);
+
+    let memo = leaked_memo();
+    let server = boot(memo);
+    let (status, body) = post(&server, "/memo/merge", &forged);
+    assert_eq!(status, 200, "{body}");
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("rejected").unwrap().as_u64(), Some(1), "{body}");
+    assert_eq!(memo.traffic_len(), 0, "forged line must not become resident");
+
+    // Query a batch the merged export did NOT carry (32): its point is
+    // uncached, so the server must evaluate through a traffic line —
+    // forcing it to re-derive the genuine coefficients locally instead
+    // of trusting anything forged. Rows must equal a clean local
+    // computation, batch for batch.
+    let query_spec = SweepSpec { batches: vec![8, 32], ..spec.clone() };
+    let body_sweep = r#"{"techs": ["stt"], "caps_mb": [1], "dnns": ["AlexNet"],
+                         "phases": ["training"], "batches": [8, 32]}"#;
+    let (status, body) = post(&server, "/sweep", body_sweep);
+    assert_eq!(status, 200, "{body}");
+    let j = json::parse(&body).unwrap();
+    assert_eq!(
+        memo.traffic_build_count(),
+        1,
+        "the uncached batch must have forced a local line derivation"
+    );
+    let clean = deepnvm::coordinator::reports::sweep_report_with(
+        &query_spec,
+        1,
+        false,
+        &Memo::new(),
+    )
+    .unwrap();
+    let rows = j.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), clean.csv.rows().len());
+    for (row, want) in rows.iter().zip(clean.csv.rows()) {
+        let got: Vec<&str> =
+            row.as_arr().unwrap().iter().map(|c| c.as_str().unwrap()).collect();
+        let want: Vec<&str> = want.iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn model_version_2_shard_documents_are_rejected_on_merge() {
+    // Pre-BatchLine (v2) exports carried strictly per-batch results;
+    // mixing them into a v3 memo would resurrect entries whose hashes
+    // know nothing of the traffic section. The merge route must 409
+    // with zero entries accounted.
+    let worker = Memo::new();
+    let mut doc = shard::run_shard(
+        &SweepSpec {
+            techs: vec![MemTech::SttMram],
+            capacities_mb: vec![1],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![4],
+            nodes_nm: vec![16],
+            filters: vec![],
+        },
+        1,
+        &worker,
+    )
+    .unwrap();
+    doc.set("version", Json::Num(2.0));
+
+    let memo = leaked_memo();
+    let server = boot(memo);
+    let (status, body) = post(&server, "/memo/merge", &doc.to_pretty());
+    assert_eq!(status, 409, "{body}");
+    let j = json::parse(&body).unwrap();
+    assert_eq!(j.get("version_ok").unwrap().as_bool(), Some(false));
+    assert_eq!(j.get("accepted").unwrap().as_u64(), Some(0));
+    assert_eq!(j.get("skipped").unwrap().as_u64(), Some(0));
+    assert_eq!(j.get("rejected").unwrap().as_u64(), Some(0));
+    assert_eq!(memo.circuit_len() + memo.traffic_len() + memo.point_len(), 0);
 }
 
 #[test]

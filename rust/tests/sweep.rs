@@ -97,6 +97,49 @@ fn on_disk_memo_restores_across_processes() {
     assert_eq!(format!("{:?}", first.points), format!("{:?}", second.points));
 }
 
+#[test]
+fn batch_axis_sweep_identical_to_per_batch_recompute() {
+    // The closed-form batch engine: coefficients lowered once per
+    // (dnn, phase), every batch a fold — and every eval field exactly
+    // equal to the legacy path that re-ran TrafficModel::run at each
+    // (batch, capacity), inlined here verbatim.
+    let spec = SweepSpec {
+        techs: vec![MemTech::SttMram, MemTech::SotMram],
+        capacities_mb: vec![2],
+        dnns: vec!["AlexNet".into(), "SqueezeNet".into()],
+        phases: Phase::ALL.to_vec(),
+        batches: vec![1, 4, 64, 65],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let memo = Memo::new();
+    let res = sweep::run(&spec, 2, &memo).unwrap();
+    assert_eq!(res.points.len(), 2 * 2 * 2 * 4);
+    assert_eq!(
+        memo.traffic_build_count(),
+        4,
+        "2 dnns x 2 phases — NOT x 4 batches"
+    );
+
+    let dram = DramCost::default();
+    for p in &res.points {
+        let w = p.point.workload.unwrap();
+        let bytes = p.point.capacity_mb * MB;
+        let dnn = Dnn::by_name(w.dnn).unwrap();
+        let traffic = TrafficModel { l2_bytes: bytes, ..Default::default() };
+        let stats = traffic.run(&dnn, w.phase, w.batch);
+        let e = evaluate(&stats, &tuned_cache(p.point.tech, bytes).ppa, Some(dram));
+        let base = evaluate(&stats, &tuned_cache(MemTech::Sram, bytes).ppa, Some(dram));
+        let ev = p.eval.unwrap();
+        assert_eq!(ev.energy_j, e.energy(), "{w:?}");
+        assert_eq!(ev.time_s, e.time_total, "{w:?}");
+        assert_eq!(ev.edp, e.edp(), "{w:?}");
+        assert_eq!(ev.energy_norm, e.energy() / base.energy(), "{w:?}");
+        assert_eq!(ev.latency_norm, e.time_total / base.time_total, "{w:?}");
+        assert_eq!(ev.edp_norm, e.edp() / base.edp(), "{w:?}");
+    }
+}
+
 // ---------------------------------------------------------------- (c)
 
 #[test]
