@@ -39,6 +39,25 @@ def recorded(doc, name, key):
     return value
 
 
+def ratio_gate(name, doc, fast_key, slow_key, tolerance=1.0, why=""):
+    """Require doc[fast_key] < doc[slow_key] * tolerance.
+
+    Both values must have been recorded (null timings already fail via
+    recorded()); the gate itself only fires when both are numbers, so
+    a single missing field produces one clear failure, not two.
+    """
+    fast = recorded(doc, name, fast_key)
+    slow = recorded(doc, name, slow_key)
+    if fast is None or slow is None:
+        return
+    if fast >= slow * tolerance:
+        bound = f"{slow_key} * {tolerance}" if tolerance != 1.0 else slow_key
+        failures.append(
+            f"{name}: {fast_key} {fast:.3f} ms >= {bound} "
+            f"({slow * tolerance:.3f} ms){' — ' + why if why else ''}"
+        )
+
+
 sweep = load("BENCH_sweep.json")
 if sweep is not None:
     acc = sweep.get("acceptance", {})
@@ -104,6 +123,21 @@ if sweep is not None:
             f"BENCH_sweep.json: batch_sweep_batches {batches} < 16 "
             "(the batch sweep must be wide enough to prove the axis is free)"
         )
+    # Timing fields are now sourced from the obs histograms; they must
+    # be recorded (non-null) and the memoized paths must actually win.
+    recorded(sweep, "BENCH_sweep.json", "parallel_ms")
+    ratio_gate(
+        "BENCH_sweep.json", sweep, "warm_ms", "serial_ms",
+        why="a warm rerun must beat the cold serial sweep",
+    )
+    ratio_gate(
+        "BENCH_sweep.json", sweep, "node_sweep_warm_ms", "node_sweep_cold_ms",
+        why="the warm node sweep must beat its cold run",
+    )
+    ratio_gate(
+        "BENCH_sweep.json", sweep, "batch_sweep_warm_ms", "batch_sweep_cold_ms",
+        why="the warm batch sweep must beat its cold run",
+    )
 
 serve = load("BENCH_serve.json")
 if serve is not None:
@@ -114,6 +148,14 @@ if serve is not None:
             f"BENCH_serve.json: warm_solve_ms {warm:.3f} >= cold_solve_ms "
             f"{cold:.3f} (the memo hit must beat the cold solve)"
         )
+    # Keep-alive reuses one pooled connection; it must not lose to the
+    # connect-per-request path (tolerance absorbs scheduler noise on
+    # sub-millisecond loopback calls).
+    ratio_gate(
+        "BENCH_serve.json", serve, "warm_solve_keepalive_ms", "warm_solve_ms",
+        tolerance=1.25,
+        why="pooled keep-alive calls must not be slower than one-shot",
+    )
 
 dist = load("BENCH_distributed.json")
 if dist is not None:
@@ -129,6 +171,14 @@ if dist is not None:
                 f"BENCH_distributed.json: {key} {value} > allowed {ceiling} "
                 "(the merged shard union must cover the full grid)"
             )
+    recorded(dist, "BENCH_distributed.json", "single_ms")
+    recorded(dist, "BENCH_distributed.json", "distributed_ms")
+    retries = recorded(dist, "BENCH_distributed.json", "dispatch_retries")
+    if retries is not None and retries > 0:
+        failures.append(
+            f"BENCH_distributed.json: dispatch_retries {retries} > 0 "
+            "(loopback workers must not shed shards)"
+        )
 
 if failures:
     print("bench acceptance FAILED:")

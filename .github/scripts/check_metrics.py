@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Cross-check a /metrics scrape against a /memo/stats snapshot.
+
+The serve-smoke CI step curls GET /metrics (Prometheus text) and then
+GET /memo/stats (JSON) from the same server and passes both files here.
+The gate asserts that the exposition is real telemetry, not a static
+page: enough distinct series, a live request counter, and memo counters
+that agree exactly with the server's own /memo/stats numbers (the
+registry mirrors and the memo's per-instance atomics must never drift —
+GET requests between the two scrapes change request counts but never
+solve/eval/traffic counts, so those must match exactly).
+
+Usage: check_metrics.py <metrics.txt> <stats.json>
+"""
+
+import json
+import pathlib
+import sys
+
+if len(sys.argv) != 3:
+    sys.exit("usage: check_metrics.py <metrics.txt> <stats.json>")
+
+metrics_text = pathlib.Path(sys.argv[1]).read_text()
+stats = json.loads(pathlib.Path(sys.argv[2]).read_text())
+failures = []
+
+# Parse the exposition: every non-comment line is `<series> <value>`.
+series = {}
+for line in metrics_text.splitlines():
+    line = line.strip()
+    if not line or line.startswith("#"):
+        continue
+    try:
+        key, value = line.rsplit(None, 1)
+        series[key] = float(value)
+    except ValueError:
+        failures.append(f"unparseable exposition line: {line!r}")
+
+MIN_SERIES = 10
+if len(series) < MIN_SERIES:
+    failures.append(
+        f"only {len(series)} series exposed (need >= {MIN_SERIES}); "
+        "is the registry actually wired into the hot paths?"
+    )
+
+requests = series.get("deepnvm_http_requests_total")
+if requests is None or requests <= 0:
+    failures.append(
+        f"deepnvm_http_requests_total is {requests!r} after live traffic"
+    )
+
+# The memo counters exposed by the registry must agree exactly with the
+# per-instance counters /memo/stats reports (one memo per process).
+for metric, stats_key in (
+    ("deepnvm_circuit_solves_total", "solve_count"),
+    ("deepnvm_point_evals_total", "eval_count"),
+    ("deepnvm_memo_traffic_builds_total", "traffic_build_count"),
+):
+    got = series.get(metric)
+    want = stats.get(stats_key)
+    if got is None:
+        failures.append(f"{metric} missing from the exposition")
+    elif want is None:
+        failures.append(f"{stats_key} missing from /memo/stats")
+    elif got != want:
+        failures.append(
+            f"{metric} {got} != /memo/stats {stats_key} {want} "
+            "(the same event is counted in two places)"
+        )
+
+if series.get("deepnvm_circuit_solves_total", 0) <= 0:
+    failures.append(
+        "deepnvm_circuit_solves_total is 0 — the smoke traffic must "
+        "have forced at least one circuit solve"
+    )
+
+# /memo/stats was scraped after /metrics on the same server, so its
+# request counter can only be larger.
+stats_requests = stats.get("requests")
+if stats_requests is None:
+    failures.append("/memo/stats has no 'requests' key")
+elif requests is not None and stats_requests < requests:
+    failures.append(
+        f"/memo/stats requests {stats_requests} < /metrics "
+        f"deepnvm_http_requests_total {requests} (scraped later, on the "
+        "same server — the counter went backwards)"
+    )
+
+if failures:
+    print("metrics consistency FAILED:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+print(f"metrics consistency OK ({len(series)} series)")

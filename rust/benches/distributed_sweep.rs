@@ -13,12 +13,12 @@
 mod bench_common;
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use deepnvm::serve::http::Server;
 use deepnvm::serve::routes::{self, ServerCtx};
 use deepnvm::serve::scheduler::{coordinate, ScheduleConfig};
 use deepnvm::sweep::{self, Memo, SweepSpec};
+use deepnvm::util::bench;
 use deepnvm::util::json::Json;
 
 fn worker() -> Server {
@@ -36,10 +36,12 @@ fn main() {
     };
     let n_points = spec.expand().expect("bench spec").len();
 
-    // reference: the same grid in-process, cold
-    let t0 = Instant::now();
-    let single = sweep::run(&spec, 2, &Memo::new()).expect("single-process sweep");
-    let single_s = t0.elapsed().as_secs_f64();
+    // reference: the same grid in-process, cold (timed into the global
+    // obs registry, which the JSON fields below read back)
+    let single = bench::time_into("bench_dist_single", || {
+        sweep::run(&spec, 2, &Memo::new()).expect("single-process sweep")
+    });
+    let single_s = bench::hist_ms("bench_dist_single").expect("recorded").mean_ms / 1e3;
     assert_eq!(single.points.len(), n_points);
 
     // fleet: two workers, one coordinator, everything over loopback
@@ -50,9 +52,10 @@ fn main() {
         ..ScheduleConfig::default()
     };
     let memo = Memo::new();
-    let t0 = Instant::now();
-    let report = coordinate(&spec, &cfg, &memo).expect("coordinate");
-    let dist_s = t0.elapsed().as_secs_f64();
+    let report = bench::time_into("bench_dist_coordinated", || {
+        coordinate(&spec, &cfg, &memo).expect("coordinate")
+    });
+    let dist_s = bench::hist_ms("bench_dist_coordinated").expect("recorded").mean_ms / 1e3;
 
     assert_eq!(report.grid_points, n_points);
     assert_eq!(report.replay_solves, 0, "merged union must replay without solving");
@@ -97,6 +100,23 @@ fn main() {
     j.set("merge_accepted", Json::Num(report.accepted as f64));
     j.set("replay_solves", Json::Num(report.replay_solves as f64));
     j.set("replay_evals", Json::Num(report.replay_evals as f64));
+
+    // Scheduler-side obs counters for this process: dispatch volume,
+    // retry count, and the dispatch latency histogram.
+    let dispatches = deepnvm::obs::global().counter("deepnvm_shard_dispatches_total").get();
+    let retries = deepnvm::obs::global().counter("deepnvm_shard_retries_total").get();
+    j.set("dispatches", Json::Num(dispatches as f64));
+    j.set("dispatch_retries", Json::Num(retries as f64));
+    match bench::hist_ms("deepnvm_shard_dispatch_duration_ns") {
+        Some(h) => {
+            j.set("dispatch_p50_ms", Json::Num(h.p50_ms));
+            j.set("dispatch_p99_ms", Json::Num(h.p99_ms));
+        }
+        None => {
+            j.set("dispatch_p50_ms", Json::Null);
+            j.set("dispatch_p99_ms", Json::Null);
+        }
+    }
 
     // Land next to CHANGES.md when run from rust/ or the repo root.
     let path = if std::path::Path::new("../CHANGES.md").exists() {

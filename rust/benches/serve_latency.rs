@@ -10,12 +10,12 @@ mod bench_common;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
-use deepnvm::serve::http::Server;
+use deepnvm::serve::http::{Client, Server};
 use deepnvm::serve::routes::{self, ServerCtx};
 use deepnvm::sweep::Memo;
-use deepnvm::util::bench::Bench;
+use deepnvm::util::bench::{self, Bench};
 use deepnvm::util::json::Json;
 
 fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, usize) {
@@ -43,10 +43,10 @@ fn main() {
     // Algorithm-1 enumeration behind the HTTP hop.
     let cap_mb = if quick { 2 } else { 8 };
     let solve_body = format!("{{\"tech\": \"stt\", \"capacity_mb\": {cap_mb}}}");
-    let t0 = Instant::now();
-    let (status, _) = post(addr, "/solve", &solve_body);
+    let (status, _) =
+        bench::time_into("bench_serve_cold_solve", || post(addr, "/solve", &solve_body));
     assert_eq!(status, 200);
-    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cold_ms = bench::hist_ms("bench_serve_cold_solve").expect("recorded").mean_ms;
 
     // Warm: identical query, answered from the resident cache.
     let mut b = if quick { Bench::quick() } else { Bench::new() };
@@ -70,10 +70,25 @@ fn main() {
         })
         .clone();
 
+    // Keep-alive: the same warm query over one pooled connection — no
+    // TCP handshake per request (the `http::Client` path the
+    // coordinator's dispatch loop uses).
+    let mut client = Client::new(&addr.to_string(), Duration::from_secs(10));
+    let ka = b
+        .run("serve/solve_warm_keepalive", || {
+            let (status, body) = client.call("POST", "/solve", &solve_body).expect("keepalive");
+            assert_eq!(status, 200);
+            body.len()
+        })
+        .clone();
+
     let warm_ms = warm.mean_ns / 1e6;
     let speedup = cold_ms / warm_ms.max(1e-9);
+    let ka_ms = ka.mean_ns / 1e6;
+    let ka_speedup = warm_ms / ka_ms.max(1e-9);
     println!("serve_latency: cold /solve ({cap_mb}MB STT) {cold_ms:>10.2} ms");
     println!("               warm /solve              {warm_ms:>10.3} ms  ({speedup:.0}x)");
+    println!("               warm keep-alive /solve   {ka_ms:>10.3} ms  ({ka_speedup:.2}x)");
     println!(
         "               warm /sweep fig9         {:>10.3} ms",
         sweep_warm.mean_ns / 1e6
@@ -101,7 +116,24 @@ fn main() {
     j.set("cold_solve_ms", Json::Num(cold_ms));
     j.set("warm_solve_ms", Json::Num(warm_ms));
     j.set("warm_solve_speedup", Json::Num(speedup));
+    j.set("warm_solve_keepalive_ms", Json::Num(ka_ms));
+    j.set("keepalive_speedup", Json::Num(ka_speedup));
     j.set("warm_sweep_fig9_ms", Json::Num(sweep_warm.mean_ns / 1e6));
+
+    // The per-route latency histogram the server recorded for /solve —
+    // the identical series a `GET /metrics` scrape would export.
+    match bench::hist_ms("deepnvm_http_request_duration_ns{route=\"/solve\"}") {
+        Some(h) => {
+            j.set("solve_route_requests", Json::Num(h.count as f64));
+            j.set("solve_route_p50_ms", Json::Num(h.p50_ms));
+            j.set("solve_route_p99_ms", Json::Num(h.p99_ms));
+        }
+        None => {
+            j.set("solve_route_requests", Json::Null);
+            j.set("solve_route_p50_ms", Json::Null);
+            j.set("solve_route_p99_ms", Json::Null);
+        }
+    }
 
     let path = if std::path::Path::new("../CHANGES.md").exists() {
         "../BENCH_serve.json"

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use deepnvm::device::MemTech;
 use deepnvm::sweep::{self, exec, Memo, SweepSpec};
-use deepnvm::util::bench::Bench;
+use deepnvm::util::bench::{self, Bench};
 use deepnvm::util::json::Json;
 use deepnvm::workload::models::{Dnn, Phase};
 
@@ -24,11 +24,26 @@ fn grid(quick: bool) -> SweepSpec {
 }
 
 /// Wall-clock of one full sweep under the given schedule and cache.
-fn timed(spec: &SweepSpec, jobs: usize, memo: &Memo) -> f64 {
+/// Each run also lands in the global `name` histogram, so the BENCH
+/// JSON timing fields below are read back out of the same registry
+/// `GET /metrics` serves.
+fn timed(name: &str, spec: &SweepSpec, jobs: usize, memo: &Memo) -> f64 {
     let t0 = Instant::now();
-    let res = sweep::run(spec, jobs, memo).expect("bench spec expands");
+    let res =
+        bench::time_into(name, || sweep::run(spec, jobs, memo).expect("bench spec expands"));
     assert!(!res.points.is_empty());
     t0.elapsed().as_secs_f64()
+}
+
+/// Write `key` from the mean of the global histogram `hist`, or null
+/// when it has no samples — an absent measurement must never read as
+/// 0 ms.
+fn set_hist_ms(j: &mut Json, key: &str, hist: &str) {
+    let v = match bench::hist_ms(hist) {
+        Some(h) => Json::Num(h.mean_ms),
+        None => Json::Null,
+    };
+    j.set(key, v);
 }
 
 fn main() {
@@ -38,13 +53,13 @@ fn main() {
     let jobs = exec::default_jobs().clamp(1, 4);
 
     let serial_memo = Memo::new();
-    let t_serial = timed(&spec, 1, &serial_memo);
+    let t_serial = timed("bench_sweep_serial", &spec, 1, &serial_memo);
 
     let par_memo = Memo::new();
-    let t_parallel = timed(&spec, jobs, &par_memo);
+    let t_parallel = timed("bench_sweep_parallel", &spec, jobs, &par_memo);
     let cold_solves = par_memo.solve_count();
 
-    let t_memoized = timed(&spec, jobs, &par_memo);
+    let t_memoized = timed("bench_sweep_memoized", &spec, jobs, &par_memo);
     let warm_solves = par_memo.solve_count() - cold_solves;
 
     println!(
@@ -76,9 +91,9 @@ fn main() {
     };
     let node_points = node_spec.expand().expect("node bench spec").len();
     let node_memo = Memo::new();
-    let t_node_cold = timed(&node_spec, jobs, &node_memo);
+    let t_node_cold = timed("bench_node_sweep_cold", &node_spec, jobs, &node_memo);
     let node_solves = node_memo.solve_count();
-    let t_node_warm = timed(&node_spec, jobs, &node_memo);
+    let t_node_warm = timed("bench_node_sweep_warm", &node_spec, jobs, &node_memo);
     let node_warm_solves = node_memo.solve_count() - node_solves;
     println!(
         "  node sweep ({} nodes) {:>8.2} ms cold ({node_solves} solves), \
@@ -114,9 +129,9 @@ fn main() {
     let batch_points = batch_spec.expand().expect("batch bench spec").len();
     let workload_pairs = (batch_spec.dnns.len() * batch_spec.phases.len()) as u64;
     let batch_memo = Memo::new();
-    let t_batch_cold = timed(&batch_spec, jobs, &batch_memo);
+    let t_batch_cold = timed("bench_batch_sweep_cold", &batch_spec, jobs, &batch_memo);
     let batch_traffic_evals = batch_memo.traffic_build_count();
-    let t_batch_warm = timed(&batch_spec, jobs, &batch_memo);
+    let t_batch_warm = timed("bench_batch_sweep_warm", &batch_spec, jobs, &batch_memo);
     let batch_warm_traffic = batch_memo.traffic_build_count() - batch_traffic_evals;
     println!(
         "  batch sweep ({} batches, {batch_points} points) {:>6.2} ms cold \
@@ -163,17 +178,20 @@ fn main() {
     j.set("grid_points", Json::Num(n_points as f64));
     j.set("circuit_solves", Json::Num(cold_solves as f64));
     j.set("jobs", Json::Num(jobs as f64));
-    j.set("serial_ms", Json::Num(t_serial * 1e3));
-    j.set("parallel_ms", Json::Num(t_parallel * 1e3));
-    j.set("memoized_rerun_ms", Json::Num(t_memoized * 1e3));
+    // Timing fields come from the obs histograms the runs above fed —
+    // the same source `GET /metrics` scrapes on a server.
+    set_hist_ms(&mut j, "serial_ms", "bench_sweep_serial");
+    set_hist_ms(&mut j, "parallel_ms", "bench_sweep_parallel");
+    set_hist_ms(&mut j, "memoized_rerun_ms", "bench_sweep_memoized");
+    set_hist_ms(&mut j, "warm_ms", "bench_sweep_memoized");
     j.set("parallel_speedup", Json::Num(t_serial / t_parallel));
     j.set("memoized_speedup", Json::Num(t_serial / t_memoized));
     j.set("warm_rerun_circuit_solves", Json::Num(warm_solves as f64));
     j.set("node_sweep_nodes", Json::Num(node_spec.nodes_nm.len() as f64));
     j.set("node_sweep_grid_points", Json::Num(node_points as f64));
     j.set("node_sweep_circuit_solves", Json::Num(node_solves as f64));
-    j.set("node_sweep_cold_ms", Json::Num(t_node_cold * 1e3));
-    j.set("node_sweep_warm_ms", Json::Num(t_node_warm * 1e3));
+    set_hist_ms(&mut j, "node_sweep_cold_ms", "bench_node_sweep_cold");
+    set_hist_ms(&mut j, "node_sweep_warm_ms", "bench_node_sweep_warm");
     j.set(
         "node_sweep_warm_rerun_circuit_solves",
         Json::Num(node_warm_solves as f64),
@@ -186,8 +204,23 @@ fn main() {
         "batch_sweep_warm_rerun_traffic_evals",
         Json::Num(batch_warm_traffic as f64),
     );
-    j.set("batch_sweep_cold_ms", Json::Num(t_batch_cold * 1e3));
-    j.set("batch_sweep_warm_ms", Json::Num(t_batch_warm * 1e3));
+    set_hist_ms(&mut j, "batch_sweep_cold_ms", "bench_batch_sweep_cold");
+    set_hist_ms(&mut j, "batch_sweep_warm_ms", "bench_batch_sweep_warm");
+
+    // Algorithm-1 solve latency across every cold sweep above, from
+    // the instrumentation inside sweep::memo itself.
+    match bench::hist_ms("deepnvm_circuit_solve_duration_ns") {
+        Some(h) => {
+            j.set("circuit_solve_samples", Json::Num(h.count as f64));
+            j.set("circuit_solve_p50_ms", Json::Num(h.p50_ms));
+            j.set("circuit_solve_p99_ms", Json::Num(h.p99_ms));
+        }
+        None => {
+            j.set("circuit_solve_samples", Json::Null);
+            j.set("circuit_solve_p50_ms", Json::Null);
+            j.set("circuit_solve_p99_ms", Json::Null);
+        }
+    }
 
     // Land next to CHANGES.md when run from rust/ or the repo root.
     let path = if std::path::Path::new("../CHANGES.md").exists() {
@@ -198,5 +231,17 @@ fn main() {
     match std::fs::write(path, j.to_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    // The span timeline of the whole bench run (CI uploads this next
+    // to the BENCH JSONs; open in chrome://tracing).
+    let trace_path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_trace.json"
+    } else {
+        "BENCH_trace.json"
+    };
+    match std::fs::write(trace_path, deepnvm::obs::trace::chrome_trace_json().to_pretty()) {
+        Ok(()) => println!("wrote {trace_path} ({} spans)", deepnvm::obs::trace::span_count()),
+        Err(e) => eprintln!("warning: could not write {trace_path}: {e}"),
     }
 }

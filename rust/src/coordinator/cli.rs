@@ -58,6 +58,9 @@ OPTIONS:
   --quick         cheaper settings (fig6 batch 1, coarser sweeps)
   --batches LIST  comma-separated batch sizes (fig5 axis; sweep batch axis)
   --steps N       training steps for e2e-train (default 60)
+  --trace-out F   on exit, write the run's span timeline as Chrome
+                  trace-event JSON to F (open in chrome://tracing; any
+                  command except serve, which exposes GET /trace instead)
 
 SWEEP OPTIONS:
   --techs LIST    sram,stt,sot (default: all three)
@@ -136,6 +139,9 @@ pub struct CliOptions {
     pub deadline_secs: u64,
     /// Status-server bind address for `coordinate` (`--status-addr`).
     pub status_addr: Option<String>,
+    /// Write the run's span timeline here as Chrome trace-event JSON
+    /// on exit (`--trace-out`).
+    pub trace_out: Option<String>,
 }
 
 impl Default for CliOptions {
@@ -164,6 +170,7 @@ impl Default for CliOptions {
             retries: 3,
             deadline_secs: 120,
             status_addr: None,
+            trace_out: None,
         }
     }
 }
@@ -296,6 +303,9 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
             }
             "--status-addr" => {
                 o.status_addr = Some(value()?.clone());
+            }
+            "--trace-out" => {
+                o.trace_out = Some(value()?.clone());
             }
             other => bail!("unknown option '{other}' (try: deepnvm help)"),
         }
@@ -580,8 +590,22 @@ fn e2e_train(_o: &CliOptions) -> Result<()> {
     )
 }
 
+/// Dump the span ring as Chrome trace-event JSON (`--trace-out`).
+fn write_trace(path: &str) {
+    let doc = crate::obs::trace::chrome_trace_json();
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => {
+            eprintln!("trace: wrote {} span(s) to {path}", crate::obs::trace::span_count());
+        }
+        Err(e) => eprintln!("warning: could not write --trace-out {path}: {e}"),
+    }
+}
+
 /// Full CLI entry point. Returns the process exit code.
 pub fn run_cli(args: &[String]) -> i32 {
+    // Anchor the obs clock first, so span timestamps and the uptime
+    // metrics measure from process start rather than first use.
+    crate::obs::epoch();
     let o = match parse_args(args) {
         Ok(o) => o,
         Err(e) => {
@@ -589,7 +613,7 @@ pub fn run_cli(args: &[String]) -> i32 {
             return 2;
         }
     };
-    match o.command.as_str() {
+    let code = match o.command.as_str() {
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             0
@@ -644,7 +668,13 @@ pub fn run_cli(args: &[String]) -> i32 {
                 1
             }
         },
+    };
+    // `serve` never reaches this point (it runs until killed; its span
+    // ring is live over `GET /trace` instead).
+    if let Some(path) = &o.trace_out {
+        write_trace(path);
     }
+    code
 }
 
 #[cfg(test)]
@@ -799,6 +829,15 @@ mod tests {
         assert_eq!(rs[0].id, "NODES");
         assert_eq!(rs[0].csv.n_rows(), 2 * 3 * 2);
         assert!(rs[0].text.contains("crossover"));
+    }
+
+    #[test]
+    fn parses_trace_out() {
+        let o = parse_args(&sv(&["fig1", "--trace-out", "/tmp/t.json"])).unwrap();
+        assert_eq!(o.trace_out.as_deref(), Some("/tmp/t.json"));
+        let o = parse_args(&sv(&["fig1"])).unwrap();
+        assert!(o.trace_out.is_none());
+        assert!(parse_args(&sv(&["fig1", "--trace-out"])).is_err());
     }
 
     #[test]

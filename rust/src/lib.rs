@@ -12,6 +12,7 @@ pub mod workload;
 pub mod gpusim;
 pub mod analysis;
 pub mod sweep;
+pub mod obs;
 pub mod serve;
 pub mod runtime;
 pub mod coordinator;

@@ -1,0 +1,613 @@
+//! Process-global metric registry: counters, gauges, and log₂-bucket
+//! latency histograms, all std-only and lock-free on the hot path.
+//!
+//! A [`Registry`] maps series keys (`name` or `name{k="v",...}`) to
+//! atomic cells; handles are `Arc`s, so a call site pays the registry
+//! mutex once at registration and a relaxed atomic op per event after
+//! that. The [`LazyCounter`]/[`LazyGauge`]/[`LazyHistogram`] wrappers
+//! make that pattern a one-liner for `static` call sites.
+//!
+//! Histograms use 65 fixed buckets with upper bounds `2^0 .. 2^63` plus
+//! `+Inf`, which covers 1 ns to ~292 years at a guaranteed 2x quantile
+//! resolution without any configuration. [`Registry::prometheus_text`]
+//! renders the whole registry in Prometheus text exposition format for
+//! `GET /metrics`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A monotonically increasing event count.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A signed instantaneous level (queue depth, uptime seconds).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, d: i64) {
+        self.0.fetch_sub(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count: upper bounds `2^0 .. 2^63` plus an overflow bucket.
+pub const BUCKETS: usize = 65;
+
+/// Values above this saturate: they land in the overflow bucket and
+/// contribute exactly `2^63` to the sum, so one absurd sample cannot
+/// wrap the running total.
+const SATURATION: u64 = 1 << 63;
+
+/// A fixed log₂-bucket histogram (nanoseconds by convention). Recording
+/// is three relaxed `fetch_add`s — no locks, no allocation — and the
+/// bucket layout needs no configuration: bucket `i` holds values in
+/// `(2^(i-1), 2^i]`, bucket 0 holds `0..=1`, bucket 64 is `+Inf`.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            // Smallest i with v <= 2^i; v > 2^63 lands in the overflow
+            // bucket because (v - 1).leading_zeros() is then 0.
+            64 - (v - 1).leading_zeros() as usize
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v.min(SATURATION), Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Time one call of `f` into this histogram.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_duration(t0.elapsed());
+        out
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.snapshot().mean()
+    }
+
+    /// See [`HistSnapshot::quantile`].
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+
+    /// A point-in-time copy. Buckets, count, and sum are read with
+    /// independent relaxed loads, so a snapshot taken under concurrent
+    /// recording can be off by in-flight events — fine for reporting.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count(),
+            sum: self.sum(),
+        }
+    }
+}
+
+/// An owned copy of a [`Histogram`]'s state.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the q-quantile (cumulative
+    /// walk), i.e. the true quantile rounded up to the next power of
+    /// two — within 2x by construction. Returns 0 on an empty
+    /// histogram and `u64::MAX` when the quantile falls in `+Inf`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return if i >= BUCKETS - 1 { u64::MAX } else { 1u64 << i };
+            }
+        }
+        u64::MAX
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics. Production code uses the process
+/// [`global`] registry; tests construct private registries so exact
+/// counter assertions never race with unrelated instrumentation.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// Build the canonical series key: sanitized metric name plus a fixed
+/// `{k="v",...}` label rendering (values escaped Prometheus-style).
+/// `name` may itself carry a literal label block (a `Lazy*` static
+/// naming one series) — it is kept verbatim past the first `{`.
+fn series_key(name: &str, labels: &[(&str, &str)]) -> String {
+    let (base, suffix) = match name.split_once('{') {
+        Some((b, rest)) => (b, Some(rest)),
+        None => (name, None),
+    };
+    let mut key: String = base
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if let Some(rest) = suffix {
+        key.push('{');
+        key.push_str(rest);
+        return key;
+    }
+    if !labels.is_empty() {
+        key.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                key.push(',');
+            }
+            key.push_str(k);
+            key.push_str("=\"");
+            for ch in v.chars() {
+                match ch {
+                    '\\' => key.push_str("\\\\"),
+                    '"' => key.push_str("\\\""),
+                    '\n' => key.push_str("\\n"),
+                    c => key.push(c),
+                }
+            }
+            key.push('"');
+        }
+        key.push('}');
+    }
+    key
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counter_key(&series_key(name, &[]))
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        self.counter_key(&series_key(name, labels))
+    }
+
+    fn counter_key(&self, key: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())));
+        match entry {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{key}' is already registered with another type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let key = series_key(name, &[]);
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m.entry(key).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())));
+        match entry {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' is already registered with another type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_key(&series_key(name, &[]))
+    }
+
+    pub fn histogram_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        self.histogram_key(&series_key(name, labels))
+    }
+
+    fn histogram_key(&self, key: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())));
+        match entry {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{key}' is already registered with another type"),
+        }
+    }
+
+    /// Number of registered series (histograms count as one here; the
+    /// text exposition expands them into `_bucket`/`_sum`/`_count`).
+    pub fn series_count(&self) -> usize {
+        self.metrics.lock().unwrap().len()
+    }
+
+    /// Render every series in Prometheus text exposition format
+    /// (version 0.0.4): `# TYPE` once per metric family, labeled
+    /// series grouped under it, histograms expanded into cumulative
+    /// `_bucket{le=...}` lines plus `_sum` and `_count`.
+    pub fn prometheus_text(&self) -> String {
+        let metrics = self.metrics.lock().unwrap();
+        let mut families: BTreeMap<&str, Vec<(&str, &Metric)>> = BTreeMap::new();
+        for (key, m) in metrics.iter() {
+            let fam = key.split('{').next().unwrap_or(key);
+            families.entry(fam).or_default().push((key.as_str(), m));
+        }
+        let mut out = String::new();
+        for (fam, series) in &families {
+            let kind = match series[0].1 {
+                Metric::Counter(_) => "counter",
+                Metric::Gauge(_) => "gauge",
+                Metric::Histogram(_) => "histogram",
+            };
+            out.push_str("# TYPE ");
+            out.push_str(fam);
+            out.push(' ');
+            out.push_str(kind);
+            out.push('\n');
+            for (key, m) in series {
+                match m {
+                    Metric::Counter(c) => {
+                        out.push_str(&format!("{key} {}\n", c.get()));
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(&format!("{key} {}\n", g.get()));
+                    }
+                    Metric::Histogram(h) => write_histogram(&mut out, fam, key, h),
+                }
+            }
+        }
+        out
+    }
+}
+
+fn write_histogram(out: &mut String, fam: &str, key: &str, h: &Histogram) {
+    let snap = h.snapshot();
+    // "" for a bare family, or the literal `{...}` label block.
+    let labels = key.strip_prefix(fam).unwrap_or("");
+    let inner = labels.trim_start_matches('{').trim_end_matches('}');
+    let with_le = |le: &str| {
+        if inner.is_empty() {
+            format!("{fam}_bucket{{le=\"{le}\"}}")
+        } else {
+            format!("{fam}_bucket{{{inner},le=\"{le}\"}}")
+        }
+    };
+    let last = snap.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, &c) in snap.buckets.iter().enumerate().take(last.min(BUCKETS - 2) + 1) {
+        cum += c;
+        out.push_str(&format!("{} {cum}\n", with_le(&(1u64 << i).to_string())));
+    }
+    out.push_str(&format!("{} {}\n", with_le("+Inf"), snap.count));
+    out.push_str(&format!("{fam}_sum{labels} {}\n", snap.sum));
+    out.push_str(&format!("{fam}_count{labels} {}\n", snap.count));
+}
+
+/// The process-global registry behind `GET /metrics` and the `Lazy*`
+/// statics.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// A `static`-friendly handle to one global-registry counter:
+/// registration happens on first use, after which every increment is
+/// one relaxed atomic op with no registry lock. The name may carry a
+/// literal label block (`probes_total{result="ok"}`) to pin a series.
+pub struct LazyCounter {
+    name: &'static str,
+    cell: OnceLock<Arc<Counter>>,
+}
+
+impl LazyCounter {
+    pub const fn new(name: &'static str) -> LazyCounter {
+        LazyCounter { name, cell: OnceLock::new() }
+    }
+
+    pub fn handle(&self) -> &Counter {
+        self.cell.get_or_init(|| global().counter(self.name))
+    }
+
+    pub fn inc(&self) {
+        self.handle().inc();
+    }
+
+    pub fn add(&self, n: u64) {
+        self.handle().add(n);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.handle().get()
+    }
+}
+
+/// [`LazyCounter`], for gauges.
+pub struct LazyGauge {
+    name: &'static str,
+    cell: OnceLock<Arc<Gauge>>,
+}
+
+impl LazyGauge {
+    pub const fn new(name: &'static str) -> LazyGauge {
+        LazyGauge { name, cell: OnceLock::new() }
+    }
+
+    pub fn handle(&self) -> &Gauge {
+        self.cell.get_or_init(|| global().gauge(self.name))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.handle().set(v);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.handle().add(d);
+    }
+
+    pub fn sub(&self, d: i64) {
+        self.handle().sub(d);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.handle().get()
+    }
+}
+
+/// [`LazyCounter`], for histograms.
+pub struct LazyHistogram {
+    name: &'static str,
+    cell: OnceLock<Arc<Histogram>>,
+}
+
+impl LazyHistogram {
+    pub const fn new(name: &'static str) -> LazyHistogram {
+        LazyHistogram { name, cell: OnceLock::new() }
+    }
+
+    pub fn handle(&self) -> &Histogram {
+        self.cell.get_or_init(|| global().histogram(self.name))
+    }
+
+    pub fn record(&self, v: u64) {
+        self.handle().record(v);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.handle().record_duration(d);
+    }
+
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        self.handle().time(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_exact_under_racing_workers() {
+        let r = Registry::new();
+        let total = r.counter("race_total");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = r.counter("race_total");
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(total.get(), 80_000);
+    }
+
+    #[test]
+    fn histogram_is_exact_under_racing_workers() {
+        let r = Registry::new();
+        let h = r.histogram("race_ns");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = r.histogram("race_ns");
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        h.record(5);
+                    }
+                });
+            }
+        });
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 80_000);
+        assert_eq!(snap.sum, 400_000);
+        // 5 lands in (4, 8] — bucket index 3 — and nowhere else
+        assert_eq!(snap.buckets[3], 80_000);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 80_000);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        let h = Histogram::new();
+        h.record(0); // bucket 0 (le = 1)
+        h.record(1); // bucket 0: the 1 ns floor
+        h.record(2); // bucket 1 (le = 2)
+        h.record((1 << 20) - 1); // bucket 20 (le = 2^20)
+        h.record(1 << 20); // exactly on the 2^20 boundary: still bucket 20
+        h.record((1 << 20) + 1); // first value of bucket 21
+        h.record((1 << 62) + 1); // bucket 63 (le = 2^63)
+        h.record(u64::MAX); // overflow bucket; sum saturates at 2^63
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 2);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[20], 2);
+        assert_eq!(s.buckets[21], 1);
+        assert_eq!(s.buckets[63], 1);
+        assert_eq!(s.buckets[BUCKETS - 1], 1);
+        assert_eq!(s.count, 8);
+        let exact: u64 = 3 + ((1 << 20) - 1) + (1 << 20) + ((1 << 20) + 1) + ((1 << 62) + 1);
+        assert_eq!(s.sum, exact + (1 << 63), "u64::MAX contributes a saturated 2^63");
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_buckets() {
+        let h = Histogram::new();
+        for _ in 0..8 {
+            h.record(100); // bucket with upper bound 128
+        }
+        for _ in 0..2 {
+            h.record(10_000); // bucket with upper bound 16384
+        }
+        assert_eq!(h.quantile(0.5), 128);
+        assert_eq!(h.quantile(0.9), 16_384);
+        assert_eq!(h.quantile(0.99), 16_384);
+        assert!((h.mean() - 2_080.0).abs() < 1e-9);
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn prometheus_text_golden() {
+        let r = Registry::new();
+        r.counter("golden_total").add(3);
+        r.gauge("golden_gauge").set(-2);
+        let h = r.histogram("golden_ns");
+        h.record(1);
+        h.record(3);
+        let want = "# TYPE golden_gauge gauge\n\
+                    golden_gauge -2\n\
+                    # TYPE golden_ns histogram\n\
+                    golden_ns_bucket{le=\"1\"} 1\n\
+                    golden_ns_bucket{le=\"2\"} 1\n\
+                    golden_ns_bucket{le=\"4\"} 2\n\
+                    golden_ns_bucket{le=\"+Inf\"} 2\n\
+                    golden_ns_sum 4\n\
+                    golden_ns_count 2\n\
+                    # TYPE golden_total counter\n\
+                    golden_total 3\n";
+        assert_eq!(r.prometheus_text(), want);
+    }
+
+    #[test]
+    fn labeled_series_share_one_type_line() {
+        let r = Registry::new();
+        r.counter_with("lbl_total", &[("route", "/solve"), ("status", "200")]).inc();
+        r.counter_with("lbl_total", &[("route", "/sweep"), ("status", "200")]).add(2);
+        let text = r.prometheus_text();
+        assert_eq!(text.matches("# TYPE lbl_total counter").count(), 1);
+        assert!(text.contains("lbl_total{route=\"/solve\",status=\"200\"} 1\n"));
+        assert!(text.contains("lbl_total{route=\"/sweep\",status=\"200\"} 2\n"));
+    }
+
+    #[test]
+    fn labeled_histogram_renders_le_after_labels() {
+        let r = Registry::new();
+        r.histogram_with("lat_ns", &[("route", "/x")]).record(2);
+        let text = r.prometheus_text();
+        assert!(text.contains("lat_ns_bucket{route=\"/x\",le=\"2\"} 1\n"));
+        assert!(text.contains("lat_ns_bucket{route=\"/x\",le=\"+Inf\"} 1\n"));
+        assert!(text.contains("lat_ns_sum{route=\"/x\"} 2\n"));
+        assert!(text.contains("lat_ns_count{route=\"/x\"} 1\n"));
+    }
+
+    #[test]
+    fn names_are_sanitized_and_handles_alias() {
+        let r = Registry::new();
+        r.counter("bench_sweep/serial").inc();
+        assert_eq!(r.counter("bench_sweep_serial").get(), 1, "same cell after sanitizing");
+        assert!(r.prometheus_text().contains("bench_sweep_serial 1\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "another type")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("dual");
+        r.gauge("dual");
+    }
+
+    #[test]
+    fn lazy_handles_register_globally_once() {
+        static LAZY: LazyCounter = LazyCounter::new("obs_lazy_test_total");
+        LAZY.inc();
+        LAZY.add(2);
+        assert_eq!(LAZY.value(), 3);
+        assert_eq!(global().counter("obs_lazy_test_total").get(), 3);
+    }
+}

@@ -1,0 +1,58 @@
+//! `obs` — zero-dependency observability: metrics and span tracing for
+//! the sweep engine, the serve stack, and the coordinator fleet.
+//!
+//! Everything here is std-only (matching the house style of
+//! [`crate::serve::http`]): no tracing/prometheus/opentelemetry crates,
+//! just atomics, a `Mutex<BTreeMap>` registry, and a bounded ring.
+//!
+//! Two primitives:
+//!
+//! * **Metrics** ([`metrics`]) — a process-global [`Registry`] of
+//!   [`Counter`]s, [`Gauge`]s, and fixed log₂-bucket [`Histogram`]s
+//!   (65 `AtomicU64` buckets, `le = 2^0 .. 2^63` plus `+Inf`; p50/p90/
+//!   p99 derivable to within 2x). Hot paths hold handles in `static`
+//!   [`LazyCounter`]/[`LazyGauge`]/[`LazyHistogram`] cells, so steady-
+//!   state cost is one relaxed atomic op per event. Rendered as
+//!   Prometheus text by `GET /metrics`.
+//! * **Spans** ([`trace`]) — `let _span = Span::enter("circuit.solve")`
+//!   RAII guards recording (name, start, duration, thread, parent)
+//!   into a bounded ring, exported as Chrome trace-event JSON by
+//!   `GET /trace` and `deepnvm <cmd> --trace-out FILE`.
+//!
+//! Instrumented layers: `sweep::memo` (circuit-solve durations, memo
+//! hit/miss and traffic-build counters, lock-wait time), `serve::http`
+//! + `routes` (per-route latency histograms, status counters, worker
+//! queue depth), `serve::scheduler` (shard dispatch/merge timelines,
+//! retry and probe counts), and `util::bench`, which fills the BENCH
+//! JSON timing fields from these same histograms — one clock for
+//! scrapes, traces, and committed baselines.
+//!
+//! Tests needing exact counts construct a private [`Registry`] (see
+//! `ServerCtx::with_registry`) instead of asserting on [`global`],
+//! which is shared by every test in the process.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    global, Counter, Gauge, HistSnapshot, Histogram, LazyCounter, LazyGauge, LazyHistogram,
+    Registry,
+};
+pub use trace::Span;
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// The process observability epoch: all span timestamps and uptime
+/// reports are measured from here. Anchored on first call — the CLI
+/// entry point calls this immediately, so route uptimes and the span
+/// clock agree.
+pub fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic time since [`epoch`].
+pub fn uptime() -> Duration {
+    epoch().elapsed()
+}

@@ -1,0 +1,261 @@
+//! Lightweight span tracer: RAII guards recording (name, start,
+//! duration, thread, parent) into a bounded process-global ring buffer,
+//! exportable as Chrome trace-event JSON (`chrome://tracing`,
+//! <https://ui.perfetto.dev>).
+//!
+//! `Span::enter("circuit.solve")` pushes onto a thread-local stack so
+//! nested spans record their parent id; the record lands in the ring on
+//! drop. The ring keeps the newest [`RING_CAPACITY`] spans and counts
+//! what it evicts, so a long-lived server never grows without bound and
+//! a trace dump is honest about truncation.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Newest spans kept; ~100 bytes each, so the ring tops out near 6 MB.
+pub const RING_CAPACITY: usize = 65_536;
+
+/// One completed span. Times are nanoseconds since [`super::epoch`].
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    pub id: u64,
+    /// Id of the enclosing span on the same thread; 0 for roots.
+    pub parent: u64,
+    /// Small dense thread number (assigned on first span per thread).
+    pub tid: u64,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Optional single numeric argument, e.g. `("shard", 3)`.
+    pub arg: Option<(&'static str, u64)>,
+}
+
+/// Drop-oldest bounded buffer; factored out of the global so the
+/// eviction policy is testable at tiny capacities.
+struct Ring {
+    cap: usize,
+    buf: VecDeque<SpanRecord>,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { cap, buf: VecDeque::new(), dropped: 0 }
+    }
+
+    fn push(&mut self, rec: SpanRecord) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(rec);
+    }
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(Ring::new(RING_CAPACITY)))
+}
+
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// An in-flight span. Create with [`Span::enter`]; the record is
+/// committed to the ring when the guard drops.
+pub struct Span {
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    start: Instant,
+    start_ns: u64,
+    arg: Option<(&'static str, u64)>,
+}
+
+impl Span {
+    pub fn enter(name: &'static str) -> Span {
+        let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+        let parent = STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let parent = s.last().copied().unwrap_or(0);
+            s.push(id);
+            parent
+        });
+        let start_ns = super::epoch().elapsed().as_nanos() as u64;
+        Span { name, id, parent, start: Instant::now(), start_ns, arg: None }
+    }
+
+    /// Attach one numeric argument (shard index, batch, ...).
+    pub fn arg(mut self, key: &'static str, value: u64) -> Span {
+        self.arg = Some((key, value));
+        self
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // Spans normally drop LIFO; a guard held across scopes can
+            // drop out of order, so remove by id rather than popping.
+            if s.last() == Some(&self.id) {
+                s.pop();
+            } else {
+                s.retain(|&x| x != self.id);
+            }
+        });
+        let tid = TID.with(|t| {
+            if t.get() == 0 {
+                t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+            }
+            t.get()
+        });
+        let rec = SpanRecord {
+            name: self.name,
+            id: self.id,
+            parent: self.parent,
+            tid,
+            start_ns: self.start_ns,
+            dur_ns: self.start.elapsed().as_nanos() as u64,
+            arg: self.arg,
+        };
+        ring().lock().unwrap().push(rec);
+    }
+}
+
+/// Snapshot of the ring, oldest first.
+pub fn records() -> Vec<SpanRecord> {
+    ring().lock().unwrap().buf.iter().copied().collect()
+}
+
+/// Completed spans currently held in the ring.
+pub fn span_count() -> usize {
+    ring().lock().unwrap().buf.len()
+}
+
+/// Spans evicted from the ring since process start.
+pub fn dropped() -> u64 {
+    ring().lock().unwrap().dropped
+}
+
+/// The ring as a Chrome trace-event JSON document: complete (`ph: "X"`)
+/// events with microsecond timestamps, one Chrome "thread" per traced
+/// OS thread, span/parent ids under `args`.
+pub fn chrome_trace_json() -> Json {
+    let (recs, dropped) = {
+        let r = ring().lock().unwrap();
+        (r.buf.iter().copied().collect::<Vec<_>>(), r.dropped)
+    };
+    let mut events = Vec::with_capacity(recs.len());
+    for r in recs {
+        let mut args = Json::obj();
+        args.set("id", Json::Num(r.id as f64));
+        args.set("parent", Json::Num(r.parent as f64));
+        if let Some((k, v)) = r.arg {
+            args.set(k, Json::Num(v as f64));
+        }
+        let mut e = Json::obj();
+        e.set("name", Json::Str(r.name.to_string()));
+        e.set("cat", Json::Str("deepnvm".to_string()));
+        e.set("ph", Json::Str("X".to_string()));
+        e.set("ts", Json::Num(r.start_ns as f64 / 1e3));
+        e.set("dur", Json::Num(r.dur_ns as f64 / 1e3));
+        e.set("pid", Json::Num(1.0));
+        e.set("tid", Json::Num(r.tid as f64));
+        e.set("args", args);
+        events.push(e);
+    }
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", Json::Str("ms".to_string()));
+    doc.set("droppedSpans", Json::Num(dropped as f64));
+    doc.set("traceEvents", Json::Arr(events));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64) -> SpanRecord {
+        SpanRecord { name: "t", id, parent: 0, tid: 1, start_ns: id, dur_ns: 1, arg: None }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_the_newest() {
+        let mut r = Ring::new(3);
+        for i in 0..5 {
+            r.push(rec(i));
+        }
+        assert_eq!(r.buf.len(), 3);
+        assert_eq!(r.dropped, 2);
+        assert_eq!(r.buf.front().unwrap().id, 2);
+        assert_eq!(r.buf.back().unwrap().id, 4);
+    }
+
+    #[test]
+    fn spans_record_parent_child_nesting() {
+        let parent = Span::enter("obs_test_parent");
+        let parent_id = parent.id();
+        {
+            let child = Span::enter("obs_test_child").arg("k", 7);
+            assert!(child.id() > parent_id, "span ids are monotone");
+        }
+        drop(parent);
+        let recs = records();
+        let p = recs.iter().rev().find(|r| r.name == "obs_test_parent").unwrap();
+        let c = recs.iter().rev().find(|r| r.name == "obs_test_child").unwrap();
+        assert_eq!(p.id, parent_id);
+        assert_eq!(c.parent, p.id, "child records the enclosing span");
+        assert_eq!(p.parent, 0, "top-level span is a root");
+        assert_eq!(c.tid, p.tid, "same thread, same lane");
+        assert_eq!(c.arg, Some(("k", 7)));
+        assert!(p.start_ns <= c.start_ns);
+        assert!(p.dur_ns >= c.dur_ns, "parent encloses the child");
+    }
+
+    #[test]
+    fn sibling_after_child_drop_sees_the_same_parent() {
+        let parent = Span::enter("obs_test_outer");
+        let first = Span::enter("obs_test_first");
+        drop(first);
+        let second = Span::enter("obs_test_second");
+        drop(second);
+        drop(parent);
+        let recs = records();
+        let outer = recs.iter().rev().find(|r| r.name == "obs_test_outer").unwrap();
+        let second = recs.iter().rev().find(|r| r.name == "obs_test_second").unwrap();
+        assert_eq!(second.parent, outer.id);
+    }
+
+    #[test]
+    fn chrome_trace_has_complete_events() {
+        {
+            let _s = Span::enter("obs_test_chrome");
+        }
+        let doc = chrome_trace_json();
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let e = events
+            .iter()
+            .rev()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("obs_test_chrome"))
+            .expect("span reaches the trace export");
+        assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(e.get("pid").and_then(|p| p.as_f64()), Some(1.0));
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("dur").and_then(|d| d.as_f64()).is_some());
+        assert!(e.get("args").and_then(|a| a.get("id")).is_some());
+    }
+}

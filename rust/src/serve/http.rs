@@ -7,22 +7,27 @@
 //! shared source of work and each idle worker claims the next
 //! connection — except that connections arrive over time rather than
 //! from a fixed slice, so the atomic cursor becomes a `Condvar`-backed
-//! queue. Semantics are deliberately small: one request per
-//! connection, `Connection: close` on every response, bounded header
-//! and body sizes, and read/write timeouts so a stalled peer can never
-//! wedge a worker.
+//! queue. Semantics are deliberately small: bounded header and body
+//! sizes, read/write timeouts so a stalled peer can never wedge a
+//! worker, and `Connection: close` by default. Keep-alive is strictly
+//! opt-in — a request carrying `Connection: keep-alive` holds its
+//! worker for follow-up requests (up to [`MAX_KEEPALIVE_REQUESTS`]),
+//! which is how a [`Client`] amortizes the TCP handshake the scheduler
+//! used to pay per shard dispatch. Plain clients that read to EOF keep
+//! working unchanged.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::{LazyCounter, LazyGauge};
 use crate::util::json::{self, Json};
 
 /// Reject requests whose request line + headers exceed this.
@@ -32,6 +37,14 @@ pub const MAX_HEADER_BYTES: usize = 16 * 1024;
 pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
 /// Per-connection socket timeout.
 const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Cap on requests served over one keep-alive connection, so a single
+/// chatty client cannot hold a pool worker forever.
+pub const MAX_KEEPALIVE_REQUESTS: u32 = 1024;
+
+// Accepted-connection count and queue depth across every in-process
+// server (the production binary runs one), feeding `GET /metrics`.
+static CONNECTIONS: LazyCounter = LazyCounter::new("deepnvm_http_connections_total");
+static QUEUE_DEPTH: LazyGauge = LazyGauge::new("deepnvm_http_queue_depth");
 
 /// Typed parse error for an over-limit body, so the connection
 /// handler can answer 413 instead of a generic 400.
@@ -45,6 +58,21 @@ impl std::fmt::Display for PayloadTooLarge {
 }
 
 impl std::error::Error for PayloadTooLarge {}
+
+/// Typed marker for a connection that closed cleanly before sending a
+/// request line. On a keep-alive connection this is the normal end of
+/// the exchange (the peer simply hung up between requests), so the
+/// connection handler drops the socket instead of answering 400.
+#[derive(Debug)]
+pub struct ConnClosed;
+
+impl std::fmt::Display for ConnClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "connection closed before a request line")
+    }
+}
+
+impl std::error::Error for ConnClosed {}
 
 /// One parsed HTTP request.
 #[derive(Clone, Debug)]
@@ -123,9 +151,17 @@ impl Response {
     }
 
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        self.write_to_with(w, false)
+    }
+
+    /// As [`Response::write_to`], announcing `Connection: keep-alive`
+    /// when the server intends to serve another request on the same
+    /// connection.
+    pub fn write_to_with(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
             self.status,
             status_text(self.status),
             self.content_type,
@@ -180,7 +216,7 @@ fn parse_head<R: BufRead>(reader: &mut R) -> Result<(Request, usize)> {
     let mut line = String::new();
     let n = read_limited_line(reader, &mut line, budget)?;
     if n == 0 {
-        bail!("connection closed before a request line");
+        return Err(ConnClosed.into());
     }
     budget -= n;
     let mut parts = line.split_whitespace();
@@ -328,6 +364,145 @@ pub fn call(
     Ok((status, body))
 }
 
+/// A persistent keep-alive HTTP client: holds one pooled connection to
+/// `addr` and reuses it across calls, so a scheduler dispatching many
+/// requests to the same worker pays the TCP handshake once instead of
+/// per request (the win shows up in the server's per-route latency
+/// histograms). If a pooled connection fails mid-call — the server
+/// idle-closed it, restarted, or hit its keep-alive cap — the client
+/// reconnects and retries exactly once; an error on a *fresh*
+/// connection is reported as-is.
+pub struct Client {
+    addr: String,
+    timeout: Duration,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl Client {
+    pub fn new(addr: &str, timeout: Duration) -> Client {
+        Client { addr: addr.to_string(), timeout, conn: None }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&self) -> Result<BufReader<TcpStream>> {
+        use std::net::ToSocketAddrs;
+
+        let sock = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("cannot resolve '{}'", self.addr))?
+            .next()
+            .ok_or_else(|| anyhow!("'{}' resolves to no address", self.addr))?;
+        let stream = TcpStream::connect_timeout(&sock, self.timeout.min(CONNECT_TIMEOUT))
+            .with_context(|| format!("cannot connect to {}", self.addr))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        Ok(BufReader::new(stream))
+    }
+
+    /// Send one request over the pooled connection (opening it first
+    /// if needed) and read the framed response.
+    pub fn call(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let had_pooled = self.conn.is_some();
+        match self.try_call(method, path, body) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.conn = None;
+                if had_pooled {
+                    // A pooled connection can die between calls for
+                    // reasons that say nothing about the server's
+                    // health; one fresh-connection retry tells a stale
+                    // socket apart from a dead worker.
+                    let retried = self.try_call(method, path, body);
+                    if retried.is_err() {
+                        self.conn = None;
+                    }
+                    retried
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    fn try_call(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        if self.conn.is_none() {
+            self.conn = Some(self.connect()?);
+        }
+        let reader = self.conn.as_mut().expect("connection just opened");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\n\
+             Connection: keep-alive\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        let stream = reader.get_mut();
+        stream
+            .write_all(head.as_bytes())
+            .and_then(|()| stream.write_all(body.as_bytes()))
+            .and_then(|()| stream.flush())
+            .with_context(|| format!("cannot send request to {}", self.addr))?;
+        let (status, close, text) =
+            read_response(reader).with_context(|| format!("bad response from {}", self.addr))?;
+        if close {
+            self.conn = None;
+        }
+        Ok((status, text))
+    }
+}
+
+/// Read one framed response — status line, headers, exactly
+/// `Content-Length` body bytes — without consuming past it, so a
+/// keep-alive connection stays aligned for the next exchange. Returns
+/// `(status, peer_will_close, body)`.
+fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(u16, bool, String)> {
+    let mut budget = MAX_HEADER_BYTES;
+    let mut line = String::new();
+    let n = read_limited_line(reader, &mut line, budget)?;
+    if n == 0 {
+        return Err(ConnClosed.into());
+    }
+    budget -= n;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line '{}'", line.trim()))?;
+    let mut content_length: Option<usize> = None;
+    let mut close = false;
+    loop {
+        let mut h = String::new();
+        let n = read_limited_line(reader, &mut h, budget)?;
+        if n == 0 {
+            bail!("connection closed inside the response headers");
+        }
+        budget -= n;
+        let h = h.trim_end_matches(&['\r', '\n'][..]);
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length = Some(value.parse().context("bad content-length in response")?);
+            } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                close = true;
+            }
+        }
+    }
+    let len = content_length.ok_or_else(|| anyhow!("response carries no content-length"))?;
+    if len > MAX_BODY_BYTES {
+        bail!("response body of {len} bytes exceeds the limit");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("connection closed inside the response body")?;
+    Ok((status, close, String::from_utf8_lossy(&body).into_owned()))
+}
+
 type Handler = dyn Fn(&Request) -> Response + Send + Sync;
 
 #[derive(Default)]
@@ -335,6 +510,7 @@ struct Shared {
     queue: Mutex<VecDeque<TcpStream>>,
     ready: Condvar,
     stop: AtomicBool,
+    conns: AtomicU64,
 }
 
 /// A running HTTP server: one accept thread feeding `jobs` connection
@@ -377,6 +553,13 @@ impl Server {
     /// The address actually bound (resolves ephemeral ports).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Connections accepted so far — not requests: a keep-alive
+    /// connection counts once however many requests it carries, which
+    /// is exactly what the [`Client`] reuse tests measure.
+    pub fn connections_served(&self) -> u64 {
+        self.shared.conns.load(Ordering::Relaxed)
     }
 
     /// Stop accepting, drain the workers, and join every thread.
@@ -425,8 +608,11 @@ fn accept_loop(listener: &TcpListener, shared: &Shared) {
             break;
         }
         if let Ok(s) = stream {
+            shared.conns.fetch_add(1, Ordering::Relaxed);
+            CONNECTIONS.inc();
             let mut q = shared.queue.lock().unwrap();
             q.push_back(s);
+            QUEUE_DEPTH.add(1);
             drop(q);
             shared.ready.notify_one();
         }
@@ -439,6 +625,7 @@ fn worker_loop(shared: &Shared, handler: &Arc<Handler>) {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if let Some(s) = q.pop_front() {
+                    QUEUE_DEPTH.sub(1);
                     break Some(s);
                 }
                 if shared.stop.load(Ordering::SeqCst) {
@@ -454,25 +641,47 @@ fn worker_loop(shared: &Shared, handler: &Arc<Handler>) {
     }
 }
 
+fn wants_keep_alive(req: &Request) -> bool {
+    req.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("keep-alive"))
+}
+
 fn handle_connection(stream: TcpStream, handler: &Arc<Handler>) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let mut reader = BufReader::new(stream);
-    let response = match read_request(&mut reader) {
-        // A panic in a route must not kill the worker: surface it as a
-        // 500 and keep serving.
-        Ok(req) => catch_unwind(AssertUnwindSafe(|| (**handler)(&req)))
-            .unwrap_or_else(|_| Response::error(500, "internal error: handler panicked")),
-        Err(e) => {
-            let status =
-                if e.downcast_ref::<PayloadTooLarge>().is_some() { 413 } else { 400 };
-            Response::error(status, &format!("bad request: {e}"))
+    // Keep-alive is opt-in per request: clients that read to EOF never
+    // send the header and get the historical one-request-then-close
+    // behavior; a [`Client`] asks for it and loops here.
+    for served in 1..=MAX_KEEPALIVE_REQUESTS {
+        let (response, keep) = match read_request(&mut reader) {
+            // A panic in a route must not kill the worker: surface it
+            // as a 500 and keep serving.
+            Ok(req) => {
+                let keep = served < MAX_KEEPALIVE_REQUESTS && wants_keep_alive(&req);
+                let resp = catch_unwind(AssertUnwindSafe(|| (**handler)(&req)))
+                    .unwrap_or_else(|_| Response::error(500, "internal error: handler panicked"));
+                (resp, keep)
+            }
+            Err(e) => {
+                if e.downcast_ref::<ConnClosed>().is_some() {
+                    // The peer hung up between requests (or this is
+                    // the shutdown poke): nothing to answer.
+                    break;
+                }
+                let status =
+                    if e.downcast_ref::<PayloadTooLarge>().is_some() { 413 } else { 400 };
+                (Response::error(status, &format!("bad request: {e}")), false)
+            }
+        };
+        let sent = {
+            let stream = reader.get_mut();
+            response.write_to_with(stream, keep).and_then(|()| stream.flush()).is_ok()
+        };
+        if !sent || !keep {
+            break;
         }
-    };
-    let mut stream = reader.into_inner();
-    let _ = response.write_to(&mut stream);
-    let _ = stream.flush();
-    let _ = stream.shutdown(Shutdown::Both);
+    }
+    let _ = reader.into_inner().shutdown(Shutdown::Both);
 }
 
 #[cfg(test)]
@@ -621,6 +830,72 @@ mod tests {
         assert!(call(&dead, "GET", "/", "", Duration::from_secs(1)).is_err());
         // unresolvable host
         assert!(call("no-such-host.invalid:1", "GET", "/", "", Duration::from_secs(1)).is_err());
+    }
+
+    #[test]
+    fn server_keepalive_serves_multiple_requests_per_connection() {
+        let server = Server::bind("127.0.0.1:0", 1, |req| {
+            Response::text(200, &format!("echo {}", req.path))
+        })
+        .unwrap();
+        let s = TcpStream::connect(server.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut writer = s.try_clone().unwrap();
+        let mut reader = BufReader::new(s);
+        for i in 0..3 {
+            let req = format!("GET /r{i} HTTP/1.1\r\nConnection: keep-alive\r\n\r\n");
+            writer.write_all(req.as_bytes()).unwrap();
+            let (status, close, body) = read_response(&mut reader).unwrap();
+            assert_eq!(status, 200);
+            assert!(!close, "server advertises keep-alive back");
+            assert_eq!(body, format!("echo /r{i}"));
+        }
+        assert_eq!(server.connections_served(), 1, "three requests, one connection");
+    }
+
+    #[test]
+    fn keepalive_client_reuses_one_connection() {
+        let server = Server::bind("127.0.0.1:0", 1, |req| {
+            Response::text(200, &format!("n={}", req.body.len()))
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let mut c = Client::new(&addr, Duration::from_secs(5));
+        for _ in 0..5 {
+            let (status, body) = c.call("POST", "/x", "abc").unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, "n=3");
+        }
+        assert_eq!(server.connections_served(), 1, "five calls, one connection");
+        // the one-shot client still opens (and closes) per call
+        call(&addr, "GET", "/", "", Duration::from_secs(5)).unwrap();
+        call(&addr, "GET", "/", "", Duration::from_secs(5)).unwrap();
+        assert_eq!(server.connections_served(), 3);
+    }
+
+    #[test]
+    fn keepalive_client_retries_a_stale_pooled_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let responder = std::thread::spawn(move || {
+            // Serve exactly one request per accepted connection, then
+            // close it — despite advertising keep-alive. The second
+            // client call therefore writes into a dead pooled socket.
+            for _ in 0..2 {
+                let (mut s, _) = listener.accept().unwrap();
+                let mut buf = [0u8; 512];
+                let _ = s.read(&mut buf);
+                let _ = s.write_all(
+                    b"HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\n\
+                      Content-Length: 2\r\nConnection: keep-alive\r\n\r\nok",
+                );
+            }
+        });
+        let mut c = Client::new(&addr, Duration::from_secs(5));
+        assert_eq!(c.call("GET", "/", "").unwrap(), (200, "ok".to_string()));
+        // recovery must be transparent: fresh connection, same answer
+        assert_eq!(c.call("GET", "/", "").unwrap(), (200, "ok".to_string()));
+        responder.join().unwrap();
     }
 
     #[test]

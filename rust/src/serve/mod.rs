@@ -115,7 +115,8 @@ pub fn run(cfg: &ServeConfig) -> Result<()> {
     let server = start(cfg, memo::global())?;
     println!(
         "deepnvm serve: listening on http://{} (GET / for usage; /healthz, \
-         /memo/stats, /memo/export; POST /solve, /sweep, /memo/merge, /shard/run)",
+         /memo/stats, /memo/export, /metrics, /trace; POST /solve, /sweep, \
+         /memo/merge, /shard/run)",
         server.local_addr()
     );
     server.join();

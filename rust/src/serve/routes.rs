@@ -10,18 +10,21 @@
 //! | `/memo/export`     | GET    | full memo document (shard exchange format)     |
 //! | `/memo/merge`      | POST   | memo document -> per-entry merge accounting    |
 //! | `/shard/run`       | POST   | shard `SweepSpec` -> run into memo + export    |
+//! | `/metrics`         | GET    | Prometheus text exposition of the obs registry |
+//! | `/trace`           | GET    | span ring as Chrome trace-event JSON           |
 //!
 //! `/sweep` renders through the exact same report pipeline as the CLI
 //! (`reports::sweep_report_with`, `fig9_with`, `fig10_with`), so the
 //! `rows` array is byte-identical, cell for cell, to the CSV the CLI
 //! writes for the same query.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::reports::{self, Report};
+use crate::obs::{self, Counter, Registry};
 use crate::sweep::spec::{
     parse_phase, parse_tech, resolve_dnn, spec_from_json, DEFAULT_CAPACITIES_MB,
     MAX_BATCH, MAX_CAPACITY_MB,
@@ -43,32 +46,76 @@ deepnvm serve — resident sweep-query server
   POST /memo/merge        memo document from a shard worker
   POST /shard/run         SweepSpec JSON: run the shard into the resident memo,
                           return the export (the `deepnvm coordinate` protocol)
+  GET  /metrics           Prometheus text: route latencies, memo hit/miss, solves
+  GET  /trace             span ring as Chrome trace-event JSON (chrome://tracing)
 ";
 
-/// Shared state behind every route: the resident memo cache plus
-/// serving counters. One instance lives for the whole server.
+/// Shared state behind every route: the resident memo cache plus the
+/// metric registry requests land in. One instance lives for the whole
+/// server.
 pub struct ServerCtx {
     memo: &'static Memo,
     /// Worker threads used *inside* a single `/sweep` evaluation.
     jobs: usize,
-    started: Instant,
-    requests: AtomicU64,
+    /// Registry of request metrics ([`obs::global`] in production;
+    /// tests inject a private one for exact-count assertions).
+    metrics: &'static Registry,
+    /// The one request counter — `healthz`, `/metrics` and
+    /// [`ServerCtx::request_count`] all read this same cell.
+    requests: Arc<Counter>,
 }
 
 impl ServerCtx {
     pub fn new(memo: &'static Memo, jobs: usize) -> Self {
-        ServerCtx { memo, jobs, started: Instant::now(), requests: AtomicU64::new(0) }
+        ServerCtx::with_registry(memo, jobs, obs::global())
+    }
+
+    /// As [`ServerCtx::new`] with an explicit metric registry, so
+    /// tests asserting exact counts are isolated from unrelated
+    /// instrumentation elsewhere in the process.
+    pub fn with_registry(memo: &'static Memo, jobs: usize, metrics: &'static Registry) -> Self {
+        let requests = metrics.counter("deepnvm_http_requests_total");
+        ServerCtx { memo, jobs, metrics, requests }
     }
 
     /// The resident cache this server answers from.
     pub fn memo(&self) -> &'static Memo {
         self.memo
     }
+
+    /// The registry `GET /metrics` renders.
+    pub fn metrics(&self) -> &'static Registry {
+        self.metrics
+    }
+
+    /// Requests handled since startup.
+    pub fn request_count(&self) -> u64 {
+        self.requests.get()
+    }
 }
 
-/// Top-level dispatch.
+/// Top-level dispatch, wrapped in per-request instrumentation: the
+/// request counter, a per-route latency histogram, a per-route/status
+/// response counter, and a span in the trace ring.
 pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
-    ctx.requests.fetch_add(1, Ordering::Relaxed);
+    ctx.requests.inc();
+    let (route, span_name) = route_meta(&req.path);
+    let _span = obs::Span::enter(span_name);
+    let t0 = Instant::now();
+    let resp = dispatch(ctx, req);
+    ctx.metrics
+        .histogram_with("deepnvm_http_request_duration_ns", &[("route", route)])
+        .record_duration(t0.elapsed());
+    ctx.metrics
+        .counter_with(
+            "deepnvm_http_responses_total",
+            &[("route", route), ("status", &resp.status.to_string())],
+        )
+        .inc();
+    resp
+}
+
+fn dispatch(ctx: &ServerCtx, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/") => Response::text(200, USAGE),
         ("GET", "/healthz") => healthz(ctx),
@@ -78,6 +125,8 @@ pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
         ("GET", "/memo/export") => shard::export(ctx, req),
         ("POST", "/memo/merge") => shard::merge(ctx, req),
         ("POST", "/shard/run") => shard_run(ctx, req),
+        ("GET", "/metrics") => metrics_text(ctx),
+        ("GET", "/trace") => trace_dump(),
         (_, path) if KNOWN_PATHS.contains(&path) => {
             Response::error(405, "method not allowed for this route")
         }
@@ -85,7 +134,7 @@ pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
     }
 }
 
-const KNOWN_PATHS: [&str; 8] = [
+const KNOWN_PATHS: [&str; 10] = [
     "/",
     "/healthz",
     "/memo/stats",
@@ -94,14 +143,55 @@ const KNOWN_PATHS: [&str; 8] = [
     "/memo/export",
     "/memo/merge",
     "/shard/run",
+    "/metrics",
+    "/trace",
 ];
+
+/// Static metric label and span name per route, so the hot path never
+/// builds label strings out of attacker-controlled paths (unknown
+/// paths collapse into one "other" series).
+fn route_meta(path: &str) -> (&'static str, &'static str) {
+    match path {
+        "/" => ("/", "http./"),
+        "/healthz" => ("/healthz", "http./healthz"),
+        "/memo/stats" => ("/memo/stats", "http./memo/stats"),
+        "/solve" => ("/solve", "http./solve"),
+        "/sweep" => ("/sweep", "http./sweep"),
+        "/memo/export" => ("/memo/export", "http./memo/export"),
+        "/memo/merge" => ("/memo/merge", "http./memo/merge"),
+        "/shard/run" => ("/shard/run", "http./shard/run"),
+        "/metrics" => ("/metrics", "http./metrics"),
+        "/trace" => ("/trace", "http./trace"),
+        _ => ("other", "http.other"),
+    }
+}
 
 fn healthz(ctx: &ServerCtx) -> Response {
     let mut j = Json::obj();
     j.set("status", Json::Str("ok".into()));
-    j.set("uptime_s", Json::Num(ctx.started.elapsed().as_secs_f64()));
-    j.set("requests", Json::Num(ctx.requests.load(Ordering::Relaxed) as f64));
+    // Monotonic process uptime from the obs epoch — the same clock
+    // the span traces and `/metrics` use. Key kept from the ad-hoc
+    // era; the value source is now the registry-backed one.
+    j.set("uptime_s", Json::Num(obs::uptime().as_secs_f64()));
+    j.set("requests", Json::Num(ctx.request_count() as f64));
     Response::json(200, &j)
+}
+
+/// `GET /metrics` — the whole registry in Prometheus text exposition
+/// format.
+fn metrics_text(ctx: &ServerCtx) -> Response {
+    // Scrape-time gauges refresh just before rendering.
+    ctx.metrics.gauge("deepnvm_uptime_seconds").set(obs::uptime().as_secs() as i64);
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4; charset=utf-8",
+        body: ctx.metrics.prometheus_text().into_bytes(),
+    }
+}
+
+/// `GET /trace` — the span ring as Chrome trace-event JSON.
+fn trace_dump() -> Response {
+    Response::json(200, &obs::trace::chrome_trace_json())
 }
 
 fn memo_stats(ctx: &ServerCtx) -> Response {
@@ -121,6 +211,10 @@ fn memo_stats(ctx: &ServerCtx) -> Response {
         },
     );
     j.set("model_version", Json::Num(memo::MODEL_VERSION as f64));
+    // obs-backed process counters, alongside the memo's own (all the
+    // pre-obs keys above are kept verbatim for existing scrapers).
+    j.set("uptime_s", Json::Num(obs::uptime().as_secs_f64()));
+    j.set("requests", Json::Num(ctx.request_count() as f64));
     Response::json(200, &j)
 }
 
@@ -347,7 +441,9 @@ mod tests {
     }
 
     fn ctx() -> ServerCtx {
-        ServerCtx::new(leaked(), 2)
+        // A private registry per test ctx: exact-count assertions must
+        // not see requests from other tests in the same process.
+        ServerCtx::with_registry(leaked(), 2, Box::leak(Box::new(Registry::new())))
     }
 
     fn post(path: &str, body: &str) -> Request {
@@ -385,7 +481,60 @@ mod tests {
         assert_eq!(handle(&c, &get("/solve")).status, 405);
         assert_eq!(handle(&c, &post("/healthz", "")).status, 405);
         assert_eq!(handle(&c, &get("/shard/run")).status, 405);
-        assert_eq!(c.requests.load(Ordering::Relaxed), 7);
+        assert_eq!(c.request_count(), 7);
+    }
+
+    #[test]
+    fn metrics_route_renders_prometheus_text() {
+        let c = ctx();
+        assert_eq!(handle(&c, &get("/healthz")).status, 200);
+        let solve = post("/solve", r#"{"tech": "stt", "capacity_mb": 1}"#);
+        assert_eq!(handle(&c, &solve).status, 200);
+        let r = handle(&c, &get("/metrics"));
+        assert_eq!(r.status, 200);
+        assert!(r.content_type.starts_with("text/plain"));
+        let text = std::str::from_utf8(&r.body).unwrap();
+        // the request counter includes the /metrics scrape itself
+        assert!(text.contains("deepnvm_http_requests_total 3"), "{text}");
+        assert!(text.contains("# TYPE deepnvm_http_request_duration_ns histogram"), "{text}");
+        let healthz_count = "deepnvm_http_request_duration_ns_count{route=\"/healthz\"} 1";
+        assert!(text.contains(healthz_count), "{text}");
+        let solve_ok = "deepnvm_http_responses_total{route=\"/solve\",status=\"200\"} 1";
+        assert!(text.contains(solve_ok), "{text}");
+        assert!(text.contains("# TYPE deepnvm_uptime_seconds gauge"), "{text}");
+        // /metrics is GET-only like every other read route
+        assert_eq!(handle(&c, &post("/metrics", "")).status, 405);
+    }
+
+    #[test]
+    fn trace_route_returns_chrome_events() {
+        let c = ctx();
+        assert_eq!(handle(&c, &get("/healthz")).status, 200);
+        let r = handle(&c, &get("/trace"));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("http./healthz")),
+            "the healthz request span must reach the trace ring"
+        );
+    }
+
+    #[test]
+    fn stats_and_healthz_report_obs_backed_counters() {
+        let c = ctx();
+        assert_eq!(handle(&c, &get("/")).status, 200);
+        let h = body_json(&handle(&c, &get("/healthz")));
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        assert!(h.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(h.get("requests").unwrap().as_u64(), Some(2));
+        let s = body_json(&handle(&c, &get("/memo/stats")));
+        // pre-obs keys survive for existing scrapers...
+        assert!(s.get("solve_count").is_some());
+        assert!(s.get("model_version").is_some());
+        // ...and the obs-backed ones ride along
+        assert_eq!(s.get("requests").unwrap().as_u64(), Some(3));
+        assert!(s.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

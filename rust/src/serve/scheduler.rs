@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::{LazyCounter, LazyHistogram, Span};
 use crate::sweep::spec::spec_to_json;
 use crate::sweep::{self, Memo, SweepSpec};
 use crate::util::json::{self, Json};
@@ -58,6 +59,16 @@ const POLL: Duration = Duration::from_millis(50);
 /// worker has failed it (otherwise two stuck workers would wait on
 /// each other forever instead of exhausting the retry budget).
 const GRACE_POLLS: usize = 20;
+
+// Fleet-level obs mirrors (global registry): dispatch/merge timelines
+// and probe outcomes, scraped via `GET /metrics` on any co-resident
+// server and summarized in `GET /scheduler/status`.
+static DISPATCHES: LazyCounter = LazyCounter::new("deepnvm_shard_dispatches_total");
+static RETRIES: LazyCounter = LazyCounter::new("deepnvm_shard_retries_total");
+static DISPATCH_NS: LazyHistogram = LazyHistogram::new("deepnvm_shard_dispatch_duration_ns");
+static MERGE_NS: LazyHistogram = LazyHistogram::new("deepnvm_shard_merge_duration_ns");
+static PROBES_OK: LazyCounter = LazyCounter::new("deepnvm_worker_probes_total{result=\"ok\"}");
+static PROBES_DEAD: LazyCounter = LazyCounter::new("deepnvm_worker_probes_total{result=\"dead\"}");
 
 /// Coordinator configuration (the CLI's `coordinate --workers
 /// --retries --deadline-secs --status-addr`).
@@ -397,6 +408,10 @@ impl Coordinator {
         // alive (a worker whose handler is broken for one shard must
         // not burn that shard's whole retry budget by itself).
         let mut failed_here: HashSet<usize> = HashSet::new();
+        // One pooled keep-alive connection per worker thread: every
+        // dispatch to this worker reuses the same socket instead of a
+        // fresh TCP handshake per shard.
+        let mut client = http::Client::new(addr, self.cfg.deadline);
         loop {
             let mut idle = 0usize;
             let idx = {
@@ -428,9 +443,16 @@ impl Coordinator {
                     core = sh.changed.wait_timeout(core, POLL).unwrap().0;
                 }
             };
-            match run_shard_on(addr, &sh.shards[idx], &self.cfg) {
+            let dispatched = {
+                let _span = Span::enter("shard.dispatch").arg("shard", idx as u64);
+                run_shard_on(&mut client, &sh.shards[idx], &self.cfg)
+            };
+            match dispatched {
                 Ok(export) => {
-                    let st = memo.merge_json(&export);
+                    let st = {
+                        let _span = Span::enter("shard.merge").arg("shard", idx as u64);
+                        MERGE_NS.time(|| memo.merge_json(&export))
+                    };
                     if !st.version_ok {
                         // A worker built against another MODEL_VERSION
                         // can never contribute; retire it.
@@ -508,6 +530,7 @@ impl Coordinator {
                 "scheduler: reassigning shard {idx} after attempt {} ({why})",
                 core.attempts[idx]
             );
+            RETRIES.inc();
             core.states[idx] = ShardState::Pending;
             core.queue.push(idx);
         }
@@ -533,19 +556,34 @@ impl Coordinator {
 
 /// `GET /healthz` answered 200 within the probe timeout?
 fn healthy(addr: &str) -> bool {
-    matches!(http::call(addr, "GET", "/healthz", "", PROBE_TIMEOUT), Ok((200, _)))
+    let ok = matches!(http::call(addr, "GET", "/healthz", "", PROBE_TIMEOUT), Ok((200, _)));
+    if ok {
+        PROBES_OK.inc();
+    } else {
+        PROBES_DEAD.inc();
+    }
+    ok
 }
 
 /// Dispatch one shard: `POST /shard/run` with the shard spec (plus the
-/// jobs hint) and return the worker's memo export. Any transport
-/// error, timeout, or non-200 is the caller's cue to reassign.
-fn run_shard_on(addr: &str, shard: &SweepSpec, cfg: &ScheduleConfig) -> Result<Json> {
+/// jobs hint) over the worker's pooled connection and return its memo
+/// export. Any transport error, timeout, or non-200 is the caller's
+/// cue to reassign. The dispatch histogram records transport-complete
+/// round trips only — a severed socket must not pollute the timeline.
+fn run_shard_on(
+    client: &mut http::Client,
+    shard: &SweepSpec,
+    cfg: &ScheduleConfig,
+) -> Result<Json> {
+    let addr = client.addr().to_string();
     let mut body = spec_to_json(shard);
     if cfg.jobs > 0 {
         body.set("jobs", Json::Num(cfg.jobs as f64));
     }
-    let (status, text) =
-        http::call(addr, "POST", "/shard/run", &body.to_string(), cfg.deadline)?;
+    DISPATCHES.inc();
+    let t0 = Instant::now();
+    let (status, text) = client.call("POST", "/shard/run", &body.to_string())?;
+    DISPATCH_NS.record_duration(t0.elapsed());
     if status != 200 {
         let detail = json::parse(&text)
             .ok()
@@ -620,6 +658,13 @@ fn status_json(sh: &Shared) -> Json {
     j.set("failed", Json::Num(counts[3] as f64));
     j.set("retried", Json::Num(retried as f64));
     j.set("uptime_s", Json::Num(sh.started.elapsed().as_secs_f64()));
+    // Process-wide obs counters (accumulate across runs in the same
+    // process; the pre-obs keys above are kept verbatim).
+    j.set("dispatches", Json::Num(DISPATCHES.value() as f64));
+    j.set("dispatch_retries", Json::Num(RETRIES.value() as f64));
+    j.set("probes_ok", Json::Num(PROBES_OK.value() as f64));
+    j.set("probes_dead", Json::Num(PROBES_DEAD.value() as f64));
+    j.set("process_uptime_s", Json::Num(crate::obs::uptime().as_secs_f64()));
     j
 }
 

@@ -25,6 +25,7 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -33,6 +34,7 @@ use crate::device::{node_calibrated, MemTech, UncalibratedNode};
 use crate::nvsim::explorer::{tuned_cache_at, OptTarget, TunedConfig};
 use crate::nvsim::org::{AccessMode, CacheOrg};
 use crate::nvsim::CachePpa;
+use crate::obs::{LazyCounter, LazyHistogram, Span};
 use crate::util::json::{self, Json};
 use crate::workload::models::{Dnn, Phase};
 use crate::workload::traffic::{BatchLine, DramTerm, TrafficModel, TxTerm, SUPERTILE};
@@ -56,6 +58,22 @@ pub const MODEL_VERSION: u32 = 3;
 pub const MEMO_FILE: &str = "sweep_memo.json";
 
 const MB: u64 = 1024 * 1024;
+
+// Global-registry mirrors of the memoization activity, feeding
+// `GET /metrics` and the span traces. The per-instance atomics on
+// [`Memo`] stay authoritative for `/memo/stats` and the exact-count
+// tests (which use private memos); these accumulate across every memo
+// in the process.
+static OBS_CIRCUIT_HITS: LazyCounter = LazyCounter::new("deepnvm_memo_circuit_hits_total");
+static OBS_CIRCUIT_MISSES: LazyCounter = LazyCounter::new("deepnvm_memo_circuit_misses_total");
+static OBS_SOLVES: LazyCounter = LazyCounter::new("deepnvm_circuit_solves_total");
+static OBS_TRAFFIC_HITS: LazyCounter = LazyCounter::new("deepnvm_memo_traffic_hits_total");
+static OBS_TRAFFIC_BUILDS: LazyCounter = LazyCounter::new("deepnvm_memo_traffic_builds_total");
+static OBS_POINT_HITS: LazyCounter = LazyCounter::new("deepnvm_memo_point_hits_total");
+static OBS_POINT_MISSES: LazyCounter = LazyCounter::new("deepnvm_memo_point_misses_total");
+static OBS_EVALS: LazyCounter = LazyCounter::new("deepnvm_point_evals_total");
+static OBS_SOLVE_NS: LazyHistogram = LazyHistogram::new("deepnvm_circuit_solve_duration_ns");
+static OBS_LOCK_WAIT_NS: LazyHistogram = LazyHistogram::new("deepnvm_memo_lock_wait_ns");
 
 /// 64-bit FNV-1a — the content-address hash for spec-point keys
 /// (dependency-free and stable across platforms/processes).
@@ -293,15 +311,26 @@ impl Memo {
         node_nm: u32,
     ) -> Result<TunedConfig, UncalibratedNode> {
         let key = CircuitKey { tech, capacity_bytes, node_nm };
-        let cached = self.circuit.lock().unwrap().get(&key).copied();
+        let cached = {
+            let wait = Instant::now();
+            let map = self.circuit.lock().unwrap();
+            OBS_LOCK_WAIT_NS.record_duration(wait.elapsed());
+            map.get(&key).copied()
+        };
         if let Some(c) = cached {
+            OBS_CIRCUIT_HITS.inc();
             return Ok(c);
         }
+        OBS_CIRCUIT_MISSES.inc();
         // Solve outside the lock so distinct keys solve concurrently.
         // A racing duplicate solve is possible but harmless: the solver
         // is deterministic and the first insert wins.
-        let solved = tuned_cache_at(tech, capacity_bytes, node_nm)?;
+        let solved = {
+            let _span = Span::enter("circuit.solve");
+            OBS_SOLVE_NS.time(|| tuned_cache_at(tech, capacity_bytes, node_nm))?
+        };
         self.solves.fetch_add(1, Ordering::Relaxed);
+        OBS_SOLVES.inc();
         Ok(*self.circuit.lock().unwrap().entry(key).or_insert(solved))
     }
 
@@ -320,8 +349,14 @@ impl Memo {
     /// per workload x phase.
     pub fn traffic_line(&self, dnn: &'static str, phase: Phase) -> Arc<BatchLine> {
         let key: TrafficKey = (dnn, phase);
-        if let Some(line) = self.traffic.lock().unwrap().get(&key) {
-            return line.clone();
+        {
+            let wait = Instant::now();
+            let map = self.traffic.lock().unwrap();
+            OBS_LOCK_WAIT_NS.record_duration(wait.elapsed());
+            if let Some(line) = map.get(&key) {
+                OBS_TRAFFIC_HITS.inc();
+                return line.clone();
+            }
         }
         // Resolve OUTSIDE the lock: an unresolved name panics this
         // call only, instead of poisoning the shared Mutex for every
@@ -334,10 +369,15 @@ impl Memo {
         // gate measures.
         let mut map = self.traffic.lock().unwrap();
         if let Some(line) = map.get(&key) {
+            OBS_TRAFFIC_HITS.inc();
             return line.clone();
         }
-        let line = Arc::new(TrafficModel::default().line(&net, phase));
+        let line = {
+            let _span = Span::enter("traffic.lower");
+            Arc::new(TrafficModel::default().line(&net, phase))
+        };
         self.traffic_builds.fetch_add(1, Ordering::Relaxed);
+        OBS_TRAFFIC_BUILDS.inc();
         map.insert(key, line.clone());
         line
     }
@@ -353,7 +393,13 @@ impl Memo {
 
     /// Cached full grid-point result, if any (bumps LRU recency).
     pub fn cached_point(&self, p: &GridPoint) -> Option<PointResult> {
-        self.points.lock().unwrap().get_touch(p)
+        let hit = self.points.lock().unwrap().get_touch(p);
+        if hit.is_some() {
+            OBS_POINT_HITS.inc();
+        } else {
+            OBS_POINT_MISSES.inc();
+        }
+        hit
     }
 
     /// Whether a grid-point result is already cached (cheaper than
@@ -366,6 +412,7 @@ impl Memo {
     /// model evaluation).
     pub fn record_point(&self, r: PointResult) {
         self.evals.fetch_add(1, Ordering::Relaxed);
+        OBS_EVALS.inc();
         self.points.lock().unwrap().insert(r);
     }
 

@@ -73,6 +73,10 @@ pub fn evaluate_point(point: &GridPoint, memo: &Memo) -> Result<PointResult> {
     if let Some(hit) = memo.cached_point(point) {
         return Ok(hit);
     }
+    // Span only the miss path: warm grids are pure map lookups and
+    // would otherwise flood the trace ring with microsecond noise.
+    // Any circuit.solve / traffic.lower spans nest under this one.
+    let _span = crate::obs::Span::enter("point.evaluate");
     let bytes = point.capacity_mb * MB;
     let tuned = memo.tuned_at(point.tech, bytes, point.node_nm)?;
     let eval = match point.workload {

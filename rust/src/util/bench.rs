@@ -5,6 +5,11 @@
 //! compatible with `cargo bench` output scraping. Not as rigorous as
 //! criterion, but deterministic, dependency-free, and honest about
 //! variance.
+//!
+//! The harness is wired into `obs`: every sample [`Bench`] takes is
+//! mirrored into a global `bench_<name>` histogram, and [`time_into`] /
+//! [`hist_ms`] let bench binaries fill their BENCH JSON timing fields
+//! from the exact same histograms `GET /metrics` exposes.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
@@ -141,6 +146,14 @@ impl Bench {
             }
         }
 
+        // Mirror every sample into the global obs histogram for this
+        // bench, so the BENCH JSON fields and `/metrics` quantiles are
+        // derived from the same data the printed report summarizes.
+        let hist = crate::obs::global().histogram(&format!("bench_{name}"));
+        for s in &samples {
+            hist.record(*s as u64);
+        }
+
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = samples[samples.len() / 2];
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
@@ -164,6 +177,43 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+}
+
+/// Time one call of `f` into the global histogram `name` and return
+/// `f`'s value. Bench binaries use this for one-shot phases (a cold
+/// sweep, a prewarm) whose durations should land in the same registry
+/// the repeated-sample benches feed.
+pub fn time_into<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    crate::obs::global().histogram(name).time(f)
+}
+
+/// Millisecond summary of one global histogram, ready for BENCH JSON.
+/// The mean is exact (sum/count); the quantiles are log2-bucket upper
+/// bounds, i.e. conservative within 2x.
+#[derive(Clone, Copy, Debug)]
+pub struct HistMs {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Summarize the global histogram `name`, or `None` when it has no
+/// samples (the caller then writes `null` into its BENCH JSON field —
+/// an absent measurement must never masquerade as 0 ms).
+pub fn hist_ms(name: &str) -> Option<HistMs> {
+    let snap = crate::obs::global().histogram(name).snapshot();
+    if snap.count == 0 {
+        return None;
+    }
+    Some(HistMs {
+        count: snap.count,
+        mean_ms: snap.mean() / 1e6,
+        p50_ms: snap.quantile(0.5) as f64 / 1e6,
+        p90_ms: snap.quantile(0.9) as f64 / 1e6,
+        p99_ms: snap.quantile(0.99) as f64 / 1e6,
+    })
 }
 
 #[cfg(test)]
@@ -191,6 +241,25 @@ mod tests {
         let m = b.run_items("add", 1000.0, &mut f).clone();
         assert!(m.throughput() > 0.0);
         assert!(m.report().contains("items/s"));
+    }
+
+    #[test]
+    fn run_mirrors_samples_into_the_global_histogram() {
+        let mut b = Bench::quick();
+        b.run("histmirror", || black_box(7u64).wrapping_mul(7));
+        let h = hist_ms("bench_histmirror").expect("samples were recorded");
+        assert!(h.count >= 3, "quick mode takes at least min_iters samples");
+        assert!(h.p50_ms <= h.p90_ms && h.p90_ms <= h.p99_ms);
+    }
+
+    #[test]
+    fn time_into_records_one_sample_and_returns_the_value() {
+        let v = time_into("bench_time_into_test", || 41 + 1);
+        assert_eq!(v, 42);
+        let h = hist_ms("bench_time_into_test").unwrap();
+        assert_eq!(h.count, 1);
+        assert!(h.mean_ms >= 0.0);
+        assert!(hist_ms("bench_never_recorded").is_none());
     }
 
     #[test]

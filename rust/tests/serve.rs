@@ -9,7 +9,9 @@
 //!     without solving — while tampered entries are rejected with
 //!     their payload-hash checks failing;
 //! (c) `/solve` answers from cache on repeat, and protocol errors map
-//!     to 4xx, never a hang or a worker death.
+//!     to 4xx, never a hang or a worker death;
+//! (d) `/metrics` and `/trace` expose live telemetry — the series and
+//!     spans this file's own traffic creates, not a static page.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -430,4 +432,55 @@ fn solve_healthz_and_protocol_errors() {
     assert_eq!(post(&server, "/solve", r#"{"tech": "stt"}"#).0, 422);
     assert_eq!(get(&server, "/bogus").0, 404);
     assert_eq!(get(&server, "/sweep").0, 405);
+}
+
+// ---------------------------------------------------------------- (d)
+
+#[test]
+fn metrics_and_trace_expose_live_telemetry_over_http() {
+    let memo = leaked_memo();
+    let server = boot(memo);
+
+    assert_eq!(get(&server, "/healthz").0, 200);
+    let solve = r#"{"tech": "stt", "capacity_mb": 1, "dnn": "AlexNet", "phase": "inference"}"#;
+    assert_eq!(post(&server, "/solve", solve).0, 200);
+
+    // raw scrape, so the exposition content type is visible
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\nContent-Length: 0\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let (head, text) = raw.split_once("\r\n\r\n").unwrap();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+
+    // The registry is process-global and shared by every test in this
+    // binary, so only floors are exact here — but this test's own two
+    // requests guarantee each of these series exists.
+    let series = text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')).count();
+    assert!(series >= 10, "only {series} series in:\n{text}");
+    for needle in [
+        "# TYPE deepnvm_http_requests_total counter",
+        "# TYPE deepnvm_circuit_solve_duration_ns histogram",
+        "deepnvm_circuit_solve_duration_ns_bucket{",
+        "deepnvm_circuit_solves_total",
+        "deepnvm_memo_circuit_misses_total",
+        "deepnvm_uptime_seconds",
+        "deepnvm_http_request_duration_ns_count{route=\"/solve\"}",
+        "deepnvm_http_responses_total{route=\"/healthz\",status=\"200\"}",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+
+    // the span timeline exports as Chrome trace events and holds the
+    // spans this test's own requests opened
+    let (status, text) = get(&server, "/trace");
+    assert_eq!(status, 200);
+    let j = json::parse(&text).unwrap();
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    assert!(
+        events.iter().any(|e| e.get("name").unwrap().as_str() == Some("http./solve")),
+        "no http./solve span recorded"
+    );
 }
