@@ -9,14 +9,24 @@ here, not a skip, because this gate is what keeps the perf trajectory
 honest (the committed baselines start null only in environments with
 no Rust toolchain — CI is not one of them).
 
-Usage: check_bench.py [dir-containing-the-BENCH-files]
+Beyond the absolute acceptance thresholds, every BENCH file is also
+trend-gated against its committed BASELINE_*.json: a recorded timing
+greater than trend_tolerance (default 1.5) times the committed
+baseline fails the build. Null baseline entries mean no baseline has
+been promoted yet — those gates print a note and skip, never guess.
+Run with --promote to copy the current recorded timings into the
+BASELINE files (then commit them) after an intentional perf change.
+
+Usage: check_bench.py [dir-containing-the-BENCH-files] [--promote]
 """
 
 import json
 import pathlib
 import sys
 
-root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+args = [a for a in sys.argv[1:] if a != "--promote"]
+promote = "--promote" in sys.argv[1:]
+root = pathlib.Path(args[0] if args else ".")
 failures = []
 
 
@@ -56,6 +66,58 @@ def ratio_gate(name, doc, fast_key, slow_key, tolerance=1.0, why=""):
             f"{name}: {fast_key} {fast:.3f} ms >= {bound} "
             f"({slow * tolerance:.3f} ms){' — ' + why if why else ''}"
         )
+
+
+def trend_gate(name, doc):
+    """Fail when a recorded timing regresses past the committed baseline.
+
+    The BASELINE file pins which keys are trend-tracked and at what
+    tolerance; a null committed value means nobody has promoted a
+    baseline yet, which skips (with a note) rather than inventing one.
+    """
+    base_name = name.replace("BENCH_", "BASELINE_")
+    path = root / base_name
+    if not path.exists():
+        print(f"note: {base_name} missing; trend gates skipped for {name}")
+        return
+    try:
+        base = json.loads(path.read_text())
+    except ValueError as e:
+        failures.append(f"{base_name}: unparseable ({e})")
+        return
+    tolerance = base.get("trend_tolerance", 1.5)
+    for key, committed in base.get("timings_ms", {}).items():
+        if committed is None:
+            print(f"note: {base_name}: '{key}' has no committed baseline yet")
+            continue
+        value = doc.get(key)
+        if value is None:
+            failures.append(
+                f"{name}: '{key}' was not recorded but {base_name} commits "
+                "a baseline for it"
+            )
+            continue
+        if value > committed * tolerance:
+            failures.append(
+                f"{name}: {key} {value:.3f} ms > {tolerance}x the committed "
+                f"baseline {committed:.3f} ms (see {base_name}; promote a new "
+                "baseline only for an intentional change)"
+            )
+
+
+def promote_baseline(name, doc):
+    """--promote: copy this run's timings into the BASELINE file."""
+    base_name = name.replace("BENCH_", "BASELINE_")
+    path = root / base_name
+    if not path.exists():
+        print(f"note: {base_name} missing; nothing to promote for {name}")
+        return
+    base = json.loads(path.read_text())
+    for key in base.get("timings_ms", {}):
+        if doc.get(key) is not None:
+            base["timings_ms"][key] = doc[key]
+    path.write_text(json.dumps(base, indent=2) + "\n")
+    print(f"promoted {name} timings into {base_name}")
 
 
 sweep = load("BENCH_sweep.json")
@@ -179,6 +241,18 @@ if dist is not None:
             f"BENCH_distributed.json: dispatch_retries {retries} > 0 "
             "(loopback workers must not shed shards)"
         )
+
+for name, doc in (
+    ("BENCH_sweep.json", sweep),
+    ("BENCH_serve.json", serve),
+    ("BENCH_distributed.json", dist),
+):
+    if doc is None:
+        continue
+    if promote:
+        promote_baseline(name, doc)
+    else:
+        trend_gate(name, doc)
 
 if failures:
     print("bench acceptance FAILED:")

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Assert a stitched fleet trace proves cross-process correlation.
+
+Reads the Chrome trace JSON `deepnvm coordinate --trace-out` writes and
+fails unless:
+  - the document carries a nonempty traceId;
+  - at least two distinct worker processes (pid >= 2) contributed
+    `http./shard/run` spans tagged with the coordinator's trace id;
+  - every such worker span names a coordinator `shard.dispatch` span
+    (pid 1, same trace id) as its remoteParent;
+  - flow-link events (`shard.dispatch.flow`, ph "s" and "f") connect
+    dispatches to worker spans.
+
+Usage: check_fleet_trace.py <trace.json> [min-worker-pids]
+"""
+
+import json
+import sys
+
+path = sys.argv[1]
+min_workers = int(sys.argv[2]) if len(sys.argv) > 2 else 2
+failures = []
+
+with open(path) as f:
+    doc = json.load(f)
+
+trace_id = doc.get("traceId")
+if not isinstance(trace_id, str) or not trace_id:
+    failures.append(f"traceId missing or empty: {trace_id!r}")
+
+events = doc.get("traceEvents", [])
+if not events:
+    failures.append("traceEvents is empty")
+
+
+def args(e):
+    a = e.get("args")
+    return a if isinstance(a, dict) else {}
+
+
+dispatch_ids = {
+    args(e).get("id")
+    for e in events
+    if e.get("name") == "shard.dispatch"
+    and e.get("pid") == 1
+    and args(e).get("trace") == trace_id
+}
+if not dispatch_ids:
+    failures.append("no coordinator shard.dispatch spans on the trace id")
+
+shard_runs = [
+    e
+    for e in events
+    if e.get("name") == "http./shard/run"
+    and e.get("pid", 0) >= 2
+    and args(e).get("trace") == trace_id
+]
+worker_pids = sorted({e["pid"] for e in shard_runs})
+if len(worker_pids) < min_workers:
+    failures.append(
+        f"only {len(worker_pids)} worker pid(s) {worker_pids} carry "
+        f"shard.run spans on trace {trace_id} (need >= {min_workers})"
+    )
+
+orphans = [
+    e for e in shard_runs if args(e).get("remoteParent") not in dispatch_ids
+]
+if orphans:
+    failures.append(
+        f"{len(orphans)} worker shard.run span(s) have a remoteParent "
+        "that is not a coordinator dispatch span"
+    )
+
+flow_phases = {
+    e.get("ph") for e in events if e.get("name") == "shard.dispatch.flow"
+}
+for ph in ("s", "f"):
+    if ph not in flow_phases:
+        failures.append(f"no flow event with ph={ph!r} links the processes")
+
+if failures:
+    print("fleet trace check FAILED:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+print(
+    f"fleet trace OK: {len(shard_runs)} worker shard.run span(s) across "
+    f"pids {worker_pids} correlated to {len(dispatch_ids)} dispatch span(s) "
+    f"on trace {trace_id}"
+)

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use deepnvm::serve::http::Server;
 use deepnvm::serve::routes::{self, ServerCtx};
-use deepnvm::serve::scheduler::{coordinate, ScheduleConfig};
+use deepnvm::serve::scheduler::{Coordinator, ScheduleConfig};
 use deepnvm::sweep::{self, Memo, SweepSpec};
 use deepnvm::util::bench;
 use deepnvm::util::json::Json;
@@ -52,8 +52,9 @@ fn main() {
         ..ScheduleConfig::default()
     };
     let memo = Memo::new();
+    let coordinator = Coordinator::new(&spec, &cfg).expect("coordinator");
     let report = bench::time_into("bench_dist_coordinated", || {
-        coordinate(&spec, &cfg, &memo).expect("coordinate")
+        coordinator.run(&memo).expect("coordinate")
     });
     let dist_s = bench::hist_ms("bench_dist_coordinated").expect("recorded").mean_ms / 1e3;
 
@@ -115,6 +116,28 @@ fn main() {
         None => {
             j.set("dispatch_p50_ms", Json::Null);
             j.set("dispatch_p99_ms", Json::Null);
+        }
+    }
+
+    // Fleet stitching cost and volume: scrape both workers' /trace,
+    // rebase, and flow-link — the observability path `coordinate
+    // --trace-out` pays after a run.
+    let fleet = bench::time_into("bench_dist_fleet_trace", || coordinator.fleet_trace());
+    let fleet_events =
+        fleet.get("traceEvents").and_then(Json::as_arr).map_or(0, |a| a.len());
+    assert!(fleet_events > 0, "the stitched trace must carry events");
+    println!("  stitched fleet trace: {fleet_events} events");
+    j.set("fleet_trace_events", Json::Num(fleet_events as f64));
+    j.set(
+        "fleet_trace_workers",
+        fleet.get("workersStitched").cloned().unwrap_or(Json::Null),
+    );
+    match bench::hist_ms("bench_dist_fleet_trace") {
+        Some(h) => {
+            j.set("fleet_trace_ms", Json::Num(h.mean_ms));
+        }
+        None => {
+            j.set("fleet_trace_ms", Json::Null);
         }
     }
 

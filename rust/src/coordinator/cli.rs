@@ -47,7 +47,14 @@ DESIGN-SPACE ENGINE:
   coordinate    Multi-host scheduler: split a grid into cost-balanced
                 shards, assign them to a fleet of `deepnvm serve`
                 workers, retry stragglers/dead workers, merge exports,
-                and verify a zero-solve full-grid replay
+                and verify a zero-solve full-grid replay. Dispatches
+                carry an X-Deepnvm-Trace header; --trace-out writes a
+                stitched fleet trace and --status-addr also serves
+                GET /scheduler/metrics (federated worker /metrics)
+  loadgen       Closed-loop soak harness: drive a mixed /solve+/sweep
+                workload at a running server over keep-alive
+                connections, report QPS and p50/p99, and optionally
+                gate on --p99-ms (nonzero exit on breach)
 
 OTHER:
   e2e-train     Train the TinyCNN artifact via PJRT (needs `make artifacts`)
@@ -60,7 +67,10 @@ OPTIONS:
   --steps N       training steps for e2e-train (default 60)
   --trace-out F   on exit, write the run's span timeline as Chrome
                   trace-event JSON to F (open in chrome://tracing; any
-                  command except serve, which exposes GET /trace instead)
+                  command except serve, which exposes GET /trace instead;
+                  a successful coordinate writes the stitched fleet trace)
+  --trace-ring N  span ring capacity (default 65536; or the
+                  DEEPNVM_TRACE_RING env var; must precede first span)
 
 SWEEP OPTIONS:
   --techs LIST    sram,stt,sot (default: all three)
@@ -88,8 +98,17 @@ COORDINATE OPTIONS:
                      axis flags above)
   --retries N        reassignments allowed per shard (default 3)
   --deadline-secs S  per-shard dispatch deadline (default 120)
-  --status-addr A:P  serve GET /scheduler/status here during the run
+  --status-addr A:P  serve GET /scheduler/status and /scheduler/metrics
+                     (federated fleet metrics) here during the run
   --jobs, --out, --cold as above (the merged memo persists to --out)
+
+LOADGEN OPTIONS:
+  --addr A:P      target server (default 127.0.0.1:8090)
+  --duration S    run length in seconds (default 10)
+  --concurrency N worker threads, one keep-alive connection each
+                  (default 4)
+  --mix SV:SW     solve:sweep request ratio (default 9:1)
+  --p99-ms MS     fail (exit 1) when overall p99 exceeds MS
 
 EXAMPLE:
   deepnvm sweep --techs stt,sot --caps 2,8,32 --dnns AlexNet,ResNet-18 \\
@@ -142,6 +161,17 @@ pub struct CliOptions {
     /// Write the run's span timeline here as Chrome trace-event JSON
     /// on exit (`--trace-out`).
     pub trace_out: Option<String>,
+    /// Span ring capacity (`--trace-ring`); None = the
+    /// `DEEPNVM_TRACE_RING` env var or the built-in default.
+    pub trace_ring: Option<usize>,
+    /// Loadgen run length in seconds (`--duration`).
+    pub duration_secs: u64,
+    /// Loadgen worker threads (`--concurrency`).
+    pub concurrency: usize,
+    /// Loadgen solve:sweep ratio (`--mix`).
+    pub mix: String,
+    /// Loadgen p99 gate in milliseconds (`--p99-ms`).
+    pub p99_ms: Option<f64>,
 }
 
 impl Default for CliOptions {
@@ -171,6 +201,11 @@ impl Default for CliOptions {
             deadline_secs: 120,
             status_addr: None,
             trace_out: None,
+            trace_ring: None,
+            duration_secs: 10,
+            concurrency: 4,
+            mix: "9:1".into(),
+            p99_ms: None,
         }
     }
 }
@@ -306,6 +341,47 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
             }
             "--trace-out" => {
                 o.trace_out = Some(value()?.clone());
+            }
+            "--trace-ring" => {
+                let cap: usize = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --trace-ring: {e}"))?;
+                if cap == 0 {
+                    bail!("--trace-ring must be at least 1");
+                }
+                o.trace_ring = Some(cap);
+            }
+            "--duration" => {
+                o.duration_secs = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --duration: {e}"))?;
+                if o.duration_secs == 0 {
+                    bail!("--duration must be at least 1 second");
+                }
+            }
+            "--concurrency" => {
+                o.concurrency = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --concurrency: {e}"))?;
+                if o.concurrency == 0 {
+                    bail!("--concurrency must be at least 1");
+                }
+            }
+            "--mix" => {
+                let v = value()?.clone();
+                // Validate eagerly so a typo fails at parse time, not
+                // mid-soak.
+                crate::serve::loadgen::parse_mix(&v)?;
+                o.mix = v;
+            }
+            "--p99-ms" => {
+                let ms: f64 = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --p99-ms: {e}"))?;
+                if ms.is_nan() || ms <= 0.0 {
+                    bail!("--p99-ms must be positive");
+                }
+                o.p99_ms = Some(ms);
             }
             other => bail!("unknown option '{other}' (try: deepnvm help)"),
         }
@@ -489,7 +565,7 @@ fn coordinate_spec(o: &CliOptions) -> Result<SweepSpec> {
 /// `deepnvm coordinate`: drive a worker fleet through one grid and
 /// persist the merged memo. Fails unless the merged union replays the
 /// full grid with zero circuit solves and zero traffic evals.
-fn coordinate_cmd(o: &CliOptions) -> Result<()> {
+fn coordinate_cmd(o: &CliOptions, trace_written: &mut bool) -> Result<()> {
     if o.workers.is_empty() {
         bail!("coordinate needs --workers host:port[,host:port...]");
     }
@@ -524,6 +600,24 @@ fn coordinate_cmd(o: &CliOptions) -> Result<()> {
         o.workers.len()
     );
     let report = coordinator.run(memo)?;
+    // A completed fleet run upgrades --trace-out from the local span
+    // ring to the stitched fleet trace (coordinator + every worker's
+    // /trace, clock-rebased and flow-linked). On failure the generic
+    // local dump in run_cli still fires.
+    if let Some(path) = &o.trace_out {
+        let doc = coordinator.fleet_trace();
+        let stitched = doc
+            .get("workersStitched")
+            .and_then(crate::util::json::Json::as_u64)
+            .unwrap_or(0);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => {
+                eprintln!("trace: wrote the stitched fleet trace ({stitched} worker(s)) to {path}");
+                *trace_written = true;
+            }
+            Err(e) => eprintln!("warning: could not write --trace-out {path}: {e}"),
+        }
+    }
     for (i, s) in report.shards.iter().enumerate() {
         println!(
             "  shard {i}: caps {:?} ({} points, {} attempt(s)) -> {}",
@@ -551,6 +645,39 @@ fn coordinate_cmd(o: &CliOptions) -> Result<()> {
     match memo.save_to(&store) {
         Ok(path) => println!("coordinate: merged memo persisted to {}", path.display()),
         Err(e) => eprintln!("warning: could not persist sweep memo: {e}"),
+    }
+    Ok(())
+}
+
+/// `deepnvm loadgen`: soak a running server and gate on the report.
+/// Fails on any transport error, on an idle run, and on a `--p99-ms`
+/// breach — so CI can use the exit code directly.
+fn loadgen_cmd(o: &CliOptions) -> Result<()> {
+    let (solve_weight, sweep_weight) = crate::serve::loadgen::parse_mix(&o.mix)?;
+    let cfg = crate::serve::LoadgenConfig {
+        addr: o.addr.clone(),
+        duration: std::time::Duration::from_secs(o.duration_secs),
+        concurrency: o.concurrency,
+        solve_weight,
+        sweep_weight,
+        p99_ms: o.p99_ms,
+    };
+    let report = crate::serve::loadgen::run(&cfg)?;
+    println!("{}", report.render());
+    if report.requests == 0 {
+        bail!("loadgen completed no successful requests");
+    }
+    if report.errors > 0 {
+        bail!("loadgen saw {} failed request(s)", report.errors);
+    }
+    if let Some(limit) = cfg.p99_ms {
+        if !report.meets_p99(limit) {
+            bail!(
+                "p99 {:.3} ms exceeds the --p99-ms gate of {limit} ms",
+                report.p99_ms
+            );
+        }
+        println!("loadgen: p99 {:.3} ms is within the {limit} ms gate", report.p99_ms);
     }
     Ok(())
 }
@@ -613,6 +740,12 @@ pub fn run_cli(args: &[String]) -> i32 {
             return 2;
         }
     };
+    if let Some(cap) = o.trace_ring {
+        if !crate::obs::trace::set_ring_capacity(cap) {
+            eprintln!("warning: --trace-ring ignored; the span ring is already live");
+        }
+    }
+    let mut fleet_trace_written = false;
     let code = match o.command.as_str() {
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -641,7 +774,14 @@ pub fn run_cli(args: &[String]) -> i32 {
                 }
             }
         }
-        "coordinate" => match coordinate_cmd(&o) {
+        "coordinate" => match coordinate_cmd(&o, &mut fleet_trace_written) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+        "loadgen" => match loadgen_cmd(&o) {
             Ok(()) => 0,
             Err(e) => {
                 eprintln!("error: {e:#}");
@@ -670,9 +810,12 @@ pub fn run_cli(args: &[String]) -> i32 {
         },
     };
     // `serve` never reaches this point (it runs until killed; its span
-    // ring is live over `GET /trace` instead).
+    // ring is live over `GET /trace` instead). A successful coordinate
+    // already wrote the richer stitched fleet trace.
     if let Some(path) = &o.trace_out {
-        write_trace(path);
+        if !fleet_trace_written {
+            write_trace(path);
+        }
     }
     code
 }
@@ -759,14 +902,14 @@ mod tests {
     #[test]
     fn coordinate_requires_workers_and_a_readable_spec() {
         let o = parse_args(&sv(&["coordinate"])).unwrap();
-        let e = coordinate_cmd(&o).unwrap_err();
+        let e = coordinate_cmd(&o, &mut false).unwrap_err();
         assert!(e.to_string().contains("--workers"), "{e}");
 
         let o = parse_args(&sv(&[
             "coordinate", "--workers", "h:1", "--spec", "/nonexistent/spec.json",
         ]))
         .unwrap();
-        let e = coordinate_cmd(&o).unwrap_err();
+        let e = coordinate_cmd(&o, &mut false).unwrap_err();
         assert!(format!("{e:#}").contains("--spec"), "{e:#}");
 
         // a spec file round-trips through the JSON codec
@@ -838,6 +981,44 @@ mod tests {
         let o = parse_args(&sv(&["fig1"])).unwrap();
         assert!(o.trace_out.is_none());
         assert!(parse_args(&sv(&["fig1", "--trace-out"])).is_err());
+    }
+
+    #[test]
+    fn parses_trace_ring() {
+        let o = parse_args(&sv(&["fig1", "--trace-ring", "1024"])).unwrap();
+        assert_eq!(o.trace_ring, Some(1024));
+        let o = parse_args(&sv(&["fig1"])).unwrap();
+        assert!(o.trace_ring.is_none());
+        assert!(parse_args(&sv(&["fig1", "--trace-ring", "0"])).is_err());
+        assert!(parse_args(&sv(&["fig1", "--trace-ring", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_loadgen_options() {
+        let o = parse_args(&sv(&[
+            "loadgen", "--addr", "127.0.0.1:8099", "--duration", "30",
+            "--concurrency", "8", "--mix", "3:2", "--p99-ms", "250",
+        ]))
+        .unwrap();
+        assert_eq!(o.command, "loadgen");
+        assert_eq!(o.addr, "127.0.0.1:8099");
+        assert_eq!(o.duration_secs, 30);
+        assert_eq!(o.concurrency, 8);
+        assert_eq!(o.mix, "3:2");
+        assert_eq!(o.p99_ms, Some(250.0));
+
+        // defaults
+        let o = parse_args(&sv(&["loadgen"])).unwrap();
+        assert_eq!(o.duration_secs, 10);
+        assert_eq!(o.concurrency, 4);
+        assert_eq!(o.mix, "9:1");
+        assert!(o.p99_ms.is_none());
+
+        assert!(parse_args(&sv(&["loadgen", "--duration", "0"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--concurrency", "0"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--mix", "0:0"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--mix", "nine"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--p99-ms", "-1"])).is_err());
     }
 
     #[test]

@@ -34,6 +34,14 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+
+    /// Raise the counter to `total` if it is below it (monotone — a
+    /// lower `total` is a no-op). For mirroring an externally-owned
+    /// monotone count (e.g. trace-ring evictions) into the registry at
+    /// scrape time.
+    pub fn set_max(&self, total: u64) {
+        self.0.fetch_max(total, Ordering::Relaxed);
+    }
 }
 
 /// A signed instantaneous level (queue depth, uptime seconds).
@@ -146,6 +154,31 @@ impl Histogram {
             sum: self.sum(),
         }
     }
+
+    /// Fold another histogram into this one: bucket-wise and count
+    /// adds, saturating sum. Exact for federation because every
+    /// histogram shares the same fixed log₂ bucket bounds — merging
+    /// buckets is indistinguishable from having recorded the
+    /// concatenated samples into one histogram.
+    pub fn merge_from(&self, other: &Histogram) {
+        self.merge_snapshot(&other.snapshot());
+    }
+
+    /// [`Histogram::merge_from`], from an owned snapshot.
+    pub fn merge_snapshot(&self, snap: &HistSnapshot) {
+        for (i, &c) in snap.buckets.iter().enumerate() {
+            if c > 0 {
+                self.buckets[i].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+        // fetch_update with a total function always returns Ok
+        let _ = self
+            .sum
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+                Some(s.saturating_add(snap.sum))
+            });
+    }
 }
 
 /// An owned copy of a [`Histogram`]'s state.
@@ -182,6 +215,20 @@ impl HistSnapshot {
             }
         }
         u64::MAX
+    }
+
+    /// The delta since an earlier snapshot of the same histogram
+    /// (saturating, so a racing in-flight record never underflows).
+    /// This is how `loadgen` isolates one run's latencies from a
+    /// process-lived histogram.
+    pub fn minus(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+        }
     }
 }
 
@@ -359,6 +406,234 @@ fn write_histogram(out: &mut String, fam: &str, key: &str, h: &Histogram) {
     out.push_str(&format!("{} {}\n", with_le("+Inf"), snap.count));
     out.push_str(&format!("{fam}_sum{labels} {}\n", snap.sum));
     out.push_str(&format!("{fam}_count{labels} {}\n", snap.count));
+}
+
+/// Split a `series value` exposition line at its last whitespace run.
+fn split_series_line(line: &str) -> Option<(&str, &str)> {
+    let (series, value) = line.rsplit_once(|c: char| c.is_whitespace())?;
+    Some((series.trim_end(), value))
+}
+
+/// Bucket index named by a `le="..."` label inside a label block, for
+/// the fixed log₂ layout: `le="2^i"` is bucket `i`, `+Inf` the
+/// overflow bucket. `None` for foreign bucket bounds.
+fn le_bucket_index(labels: &str) -> Option<usize> {
+    let le = labels.split(',').find_map(|kv| kv.strip_prefix("le=\""))?.trim_end_matches('"');
+    if le == "+Inf" {
+        return Some(BUCKETS - 1);
+    }
+    let v: u64 = le.parse().ok()?;
+    if !v.is_power_of_two() {
+        return None;
+    }
+    Some(v.trailing_zeros() as usize)
+}
+
+/// A histogram bucket line's label block with the `le` label removed —
+/// the key that groups one histogram's lines back together.
+fn labels_without_le(labels: &str) -> String {
+    labels.split(',').filter(|kv| !kv.starts_with("le=\"")).collect::<Vec<_>>().join(",")
+}
+
+fn fmt_metric_value(v: f64) -> String {
+    // 2^53: above this an f64 no longer holds every integer, so stop
+    // pretending the value is one
+    if v.fract() == 0.0 && v.abs() < 9_007_199_254_740_992.0 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Merge several Prometheus text expositions into one fleet-level
+/// exposition: scalar series with identical keys are summed, and
+/// histogram families are merged bucket-wise — each source's
+/// cumulative `_bucket{le=...}` lines are differenced back into
+/// per-bucket counts, summed, and re-rendered cumulatively. Because
+/// every [`Histogram`] shares the same fixed log₂ bounds, the merge is
+/// exact: the result is indistinguishable from one process having
+/// recorded all samples. Families and series keep first-appearance
+/// order; `# TYPE` lines are deduplicated. Histogram component lines
+/// are only recognized under a `# TYPE <fam> histogram` header (our
+/// own expositions always carry one).
+pub fn merge_expositions<T: AsRef<str>>(texts: &[T]) -> String {
+    use std::collections::HashMap;
+
+    struct Fam {
+        kind: String,
+        scalar_order: Vec<String>,
+        scalars: HashMap<String, f64>,
+        /// histogram groups keyed by label block minus `le`:
+        /// (per-bucket counts, sum, count)
+        group_order: Vec<String>,
+        groups: HashMap<String, ([u64; BUCKETS], u64, u64)>,
+    }
+    impl Fam {
+        fn new(kind: &str) -> Fam {
+            Fam {
+                kind: kind.to_string(),
+                scalar_order: Vec::new(),
+                scalars: HashMap::new(),
+                group_order: Vec::new(),
+                groups: HashMap::new(),
+            }
+        }
+        fn group(&mut self, labels: &str) -> &mut ([u64; BUCKETS], u64, u64) {
+            if !self.groups.contains_key(labels) {
+                self.group_order.push(labels.to_string());
+                self.groups.insert(labels.to_string(), ([0u64; BUCKETS], 0, 0));
+            }
+            self.groups.get_mut(labels).unwrap()
+        }
+    }
+
+    let mut order: Vec<String> = Vec::new();
+    let mut fams: HashMap<String, Fam> = HashMap::new();
+
+    for text in texts {
+        // this source's cumulative bucket lines, differenced into
+        // per-bucket counts once the source is fully read
+        let mut cums: HashMap<(String, String), Vec<(usize, u64)>> = HashMap::new();
+        let mut cum_order: Vec<(String, String)> = Vec::new();
+        for line in text.as_ref().lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                if let (Some(name), Some(kind)) = (it.next(), it.next()) {
+                    if !fams.contains_key(name) {
+                        order.push(name.to_string());
+                        fams.insert(name.to_string(), Fam::new(kind));
+                    }
+                }
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let Some((series, value)) = split_series_line(line) else { continue };
+            let base = series.split('{').next().unwrap_or(series);
+            let labels = series
+                .split_once('{')
+                .map(|(_, l)| l.trim_end_matches('}'))
+                .unwrap_or("");
+            let hist_part = ["_bucket", "_sum", "_count"].iter().find_map(|suf| {
+                let fam = base.strip_suffix(suf)?;
+                let is_hist = matches!(fams.get(fam), Some(f) if f.kind == "histogram");
+                is_hist.then(|| (fam.to_string(), *suf))
+            });
+            match hist_part {
+                Some((fam_name, "_bucket")) => {
+                    let Some(idx) = le_bucket_index(labels) else { continue };
+                    let Ok(cum) = value.parse::<u64>() else { continue };
+                    let gkey = (fam_name, labels_without_le(labels));
+                    let entry = cums.entry(gkey.clone()).or_default();
+                    if entry.is_empty() {
+                        cum_order.push(gkey);
+                    }
+                    entry.push((idx, cum));
+                }
+                Some((fam_name, suf)) => {
+                    let Ok(v) = value.parse::<u64>() else { continue };
+                    let g = fams.get_mut(&fam_name).unwrap().group(labels);
+                    if suf == "_sum" {
+                        g.1 = g.1.saturating_add(v);
+                    } else {
+                        g.2 = g.2.saturating_add(v);
+                    }
+                }
+                None => {
+                    let Ok(v) = value.parse::<f64>() else { continue };
+                    if !fams.contains_key(base) {
+                        order.push(base.to_string());
+                        fams.insert(base.to_string(), Fam::new("untyped"));
+                    }
+                    let fam = fams.get_mut(base).unwrap();
+                    if !fam.scalars.contains_key(series) {
+                        fam.scalar_order.push(series.to_string());
+                    }
+                    *fam.scalars.entry(series.to_string()).or_insert(0.0) += v;
+                }
+            }
+        }
+        for gkey in cum_order {
+            let mut lines = cums.remove(&gkey).unwrap();
+            lines.sort_by_key(|&(i, _)| i);
+            let (fam_name, labels) = gkey;
+            let g = fams.get_mut(&fam_name).unwrap().group(&labels);
+            let mut prev = 0u64;
+            for (idx, cum) in lines {
+                g.0[idx] = g.0[idx].saturating_add(cum.saturating_sub(prev));
+                prev = cum;
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for fam_name in &order {
+        let fam = &fams[fam_name];
+        if fam.kind != "untyped" {
+            out.push_str(&format!("# TYPE {fam_name} {}\n", fam.kind));
+        }
+        for key in &fam.scalar_order {
+            out.push_str(&format!("{key} {}\n", fmt_metric_value(fam.scalars[key])));
+        }
+        for labels in &fam.group_order {
+            let (buckets, sum, count) = &fam.groups[labels];
+            let count = (*count).max(buckets.iter().sum());
+            let with_le = |le: &str| {
+                if labels.is_empty() {
+                    format!("{fam_name}_bucket{{le=\"{le}\"}}")
+                } else {
+                    format!("{fam_name}_bucket{{{labels},le=\"{le}\"}}")
+                }
+            };
+            let last = buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+            let mut cum = 0u64;
+            for (i, &c) in buckets.iter().enumerate().take(last.min(BUCKETS - 2) + 1) {
+                cum += c;
+                out.push_str(&format!("{} {cum}\n", with_le(&(1u64 << i).to_string())));
+            }
+            out.push_str(&format!("{} {count}\n", with_le("+Inf")));
+            let block =
+                if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+            out.push_str(&format!("{fam_name}_sum{block} {sum}\n"));
+            out.push_str(&format!("{fam_name}_count{block} {count}\n"));
+        }
+    }
+    out
+}
+
+/// Inject `key="value"` as the first label of every series line in a
+/// Prometheus text exposition (comment lines pass through). The
+/// coordinator uses this to expose its own series next to the
+/// fleet-summed ones without key collisions.
+pub fn relabel_exposition(text: &str, key: &str, value: &str) -> String {
+    let mut out = String::with_capacity(text.len() + 64);
+    for line in text.lines() {
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            out.push_str(trimmed);
+            out.push('\n');
+            continue;
+        }
+        let Some((series, rest)) = split_series_line(trimmed) else {
+            out.push_str(trimmed);
+            out.push('\n');
+            continue;
+        };
+        match series.split_once('{') {
+            Some((name, labels)) => {
+                out.push_str(&format!("{name}{{{key}=\"{value}\",{labels} {rest}\n"));
+            }
+            None => {
+                out.push_str(&format!("{series}{{{key}=\"{value}\"}} {rest}\n"));
+            }
+        }
+    }
+    out
 }
 
 /// The process-global registry behind `GET /metrics` and the `Lazy*`
@@ -600,6 +875,122 @@ mod tests {
         let r = Registry::new();
         r.counter("dual");
         r.gauge("dual");
+    }
+
+    #[test]
+    fn counter_set_max_is_monotone() {
+        let c = Counter::default();
+        c.set_max(5);
+        assert_eq!(c.get(), 5);
+        c.set_max(3);
+        assert_eq!(c.get(), 5, "set_max never lowers the count");
+        c.set_max(9);
+        assert_eq!(c.get(), 9);
+    }
+
+    #[test]
+    fn merged_histograms_equal_concatenated_samples() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let both = Histogram::new();
+        let a_samples = [1u64, 3, 100, 1 << 20, 1 << 45];
+        let b_samples = [2u64, 5, 5, 900, 1 << 30];
+        for &v in &a_samples {
+            a.record(v);
+            both.record(v);
+        }
+        for &v in &b_samples {
+            b.record(v);
+            both.record(v);
+        }
+        let fed = Histogram::new();
+        fed.merge_from(&a);
+        fed.merge_from(&b);
+        let f = fed.snapshot();
+        let c = both.snapshot();
+        assert_eq!(f.buckets, c.buckets, "bucket-wise add == concatenated recording");
+        assert_eq!(f.count, c.count);
+        assert_eq!(f.sum, c.sum);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(f.quantile(q), c.quantile(q), "federated quantile at q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_saturates_the_sum() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(u64::MAX); // contributes a saturated 2^63 to the sum
+        b.record(u64::MAX);
+        let fed = Histogram::new();
+        fed.merge_from(&a);
+        fed.merge_from(&b);
+        assert_eq!(fed.sum(), u64::MAX, "2^63 + 2^63 saturates instead of wrapping");
+        assert_eq!(fed.count(), 2);
+        assert_eq!(fed.snapshot().buckets[BUCKETS - 1], 2);
+    }
+
+    #[test]
+    fn snapshot_minus_isolates_a_window() {
+        let h = Histogram::new();
+        h.record(10);
+        h.record(1000);
+        let before = h.snapshot();
+        h.record(10);
+        h.record(20);
+        let delta = h.snapshot().minus(&before);
+        assert_eq!(delta.count, 2);
+        assert_eq!(delta.sum, 30);
+        assert_eq!(delta.quantile(1.0), 32);
+    }
+
+    #[test]
+    fn merged_expositions_equal_one_registry_with_all_samples() {
+        let w1 = Registry::new();
+        let w2 = Registry::new();
+        let all = Registry::new();
+        for (r, n) in [(&w1, 3u64), (&w2, 7u64)] {
+            r.counter("fed_total").add(n);
+            all.counter("fed_total").add(n);
+            r.counter_with("fed_routes_total", &[("route", "/solve")]).add(n + 1);
+            all.counter_with("fed_routes_total", &[("route", "/solve")]).add(n + 1);
+            r.gauge("fed_gauge").add(n as i64);
+            all.gauge("fed_gauge").add(n as i64);
+        }
+        // deliberately different bucket spans so the merge has to
+        // reconcile cumulative lines of different lengths
+        let h1 = w1.histogram_with("fed_ns", &[("route", "/x")]);
+        let h2 = w2.histogram_with("fed_ns", &[("route", "/x")]);
+        let ha = all.histogram_with("fed_ns", &[("route", "/x")]);
+        for v in [1u64, 7, 30] {
+            h1.record(v);
+            ha.record(v);
+        }
+        for v in [2u64, 5_000_000] {
+            h2.record(v);
+            ha.record(v);
+        }
+        let merged = merge_expositions(&[w1.prometheus_text(), w2.prometheus_text()]);
+        assert_eq!(
+            merged,
+            all.prometheus_text(),
+            "federation by text merge is exact and order-stable"
+        );
+    }
+
+    #[test]
+    fn relabel_injects_a_first_label() {
+        let r = Registry::new();
+        r.counter("rl_total").add(2);
+        r.counter_with("rl_routes_total", &[("route", "/solve")]).inc();
+        r.histogram("rl_ns").record(3);
+        let text = relabel_exposition(&r.prometheus_text(), "role", "coordinator");
+        assert!(text.contains("# TYPE rl_total counter\n"), "comments pass through");
+        assert!(text.contains("rl_total{role=\"coordinator\"} 2\n"));
+        assert!(text.contains("rl_routes_total{role=\"coordinator\",route=\"/solve\"} 1\n"));
+        assert!(text.contains("rl_ns_bucket{role=\"coordinator\",le=\"4\"} 1\n"));
+        assert!(text.contains("rl_ns_sum{role=\"coordinator\"} 3\n"));
+        assert!(text.contains("rl_ns_count{role=\"coordinator\"} 1\n"));
     }
 
     #[test]

@@ -5,20 +5,37 @@
 //!
 //! `Span::enter("circuit.solve")` pushes onto a thread-local stack so
 //! nested spans record their parent id; the record lands in the ring on
-//! drop. The ring keeps the newest [`RING_CAPACITY`] spans and counts
-//! what it evicts, so a long-lived server never grows without bound and
-//! a trace dump is honest about truncation.
+//! drop. The ring keeps the newest [`RING_CAPACITY`] spans (tunable via
+//! [`set_ring_capacity`] or `DEEPNVM_TRACE_RING`) and counts what it
+//! evicts, so a long-lived server never grows without bound and a trace
+//! dump is honest about truncation.
+//!
+//! Spans also carry a **trace id** for cross-process correlation: every
+//! process owns one [`trace_id`], a root span started under an
+//! `X-Deepnvm-Trace: <trace>:<parent>` header adopts the remote trace
+//! via [`Span::remote`], and children inherit the adopted trace through
+//! the thread-local stack. The coordinator uses this to stitch worker
+//! span rings into one fleet-wide Chrome trace.
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::util::json::Json;
 
-/// Newest spans kept; ~100 bytes each, so the ring tops out near 6 MB.
+/// Default newest-spans-kept bound; ~100 bytes each, so the ring tops
+/// out near 6 MB. Override with [`set_ring_capacity`] (`--trace-ring`)
+/// or the `DEEPNVM_TRACE_RING` environment variable.
 pub const RING_CAPACITY: usize = 65_536;
+
+/// HTTP header carrying `trace_id:parent_span_id` (both zero-padded
+/// lowercase hex), stamped by the scheduler on every dispatch and probe.
+pub const TRACE_HEADER: &str = "X-Deepnvm-Trace";
+
+/// Maximum per-span numeric arguments (shard index, run sequence, ...).
+pub const MAX_ARGS: usize = 2;
 
 /// One completed span. Times are nanoseconds since [`super::epoch`].
 #[derive(Clone, Copy, Debug)]
@@ -29,10 +46,17 @@ pub struct SpanRecord {
     pub parent: u64,
     /// Small dense thread number (assigned on first span per thread).
     pub tid: u64,
+    /// Trace id this span belongs to: the process-wide [`trace_id`],
+    /// or a remote coordinator's id adopted via [`Span::remote`].
+    pub trace: u64,
+    /// Span id of the remote parent that dispatched the request this
+    /// span handles (from the `X-Deepnvm-Trace` header); 0 when local.
+    pub remote_parent: u64,
     pub start_ns: u64,
     pub dur_ns: u64,
-    /// Optional single numeric argument, e.g. `("shard", 3)`.
-    pub arg: Option<(&'static str, u64)>,
+    /// Optional numeric arguments, e.g. `("shard", 3)`, filled front
+    /// to back.
+    pub args: [Option<(&'static str, u64)>; MAX_ARGS],
 }
 
 /// Drop-oldest bounded buffer; factored out of the global so the
@@ -45,7 +69,7 @@ struct Ring {
 
 impl Ring {
     fn new(cap: usize) -> Ring {
-        Ring { cap, buf: VecDeque::new(), dropped: 0 }
+        Ring { cap: cap.max(1), buf: VecDeque::new(), dropped: 0 }
     }
 
     fn push(&mut self, rec: SpanRecord) {
@@ -57,9 +81,45 @@ impl Ring {
     }
 }
 
+static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+
+/// Capacity requested before first use; 0 means "not configured".
+static CONFIGURED_CAP: AtomicUsize = AtomicUsize::new(0);
+
+fn configured_capacity() -> usize {
+    let cap = CONFIGURED_CAP.load(Ordering::Relaxed);
+    if cap > 0 {
+        return cap;
+    }
+    if let Ok(v) = std::env::var("DEEPNVM_TRACE_RING") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    RING_CAPACITY
+}
+
 fn ring() -> &'static Mutex<Ring> {
-    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
-    RING.get_or_init(|| Mutex::new(Ring::new(RING_CAPACITY)))
+    RING.get_or_init(|| Mutex::new(Ring::new(configured_capacity())))
+}
+
+/// Configure the ring capacity (spans kept). Takes effect only if
+/// called before the first span commits (the ring is created lazily);
+/// returns whether the request landed in time. The `--trace-ring` flag
+/// and `DEEPNVM_TRACE_RING` both route through here.
+pub fn set_ring_capacity(cap: usize) -> bool {
+    CONFIGURED_CAP.store(cap.max(1), Ordering::Relaxed);
+    RING.get().is_none()
+}
+
+/// The capacity the ring is (or will be) using.
+pub fn ring_capacity() -> usize {
+    match RING.get() {
+        Some(r) => r.lock().unwrap().cap,
+        None => configured_capacity(),
+    }
 }
 
 static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
@@ -67,7 +127,50 @@ static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 
 thread_local! {
     static TID: Cell<u64> = const { Cell::new(0) };
-    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    /// In-flight spans on this thread: (span id, trace id). Children
+    /// read both so an adopted remote trace propagates to everything
+    /// nested under the adopting root.
+    static STACK: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The process-wide trace id: one nonzero 64-bit id minted per process,
+/// stamped on every local root span and propagated to workers in the
+/// `X-Deepnvm-Trace` header.
+pub fn trace_id() -> u64 {
+    static TRACE_ID: OnceLock<u64> = OnceLock::new();
+    *TRACE_ID.get_or_init(|| {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        // splitmix64 over (clock ^ pid) spreads ids minted in the same
+        // tick across the 64-bit space.
+        let mut x = nanos ^ (std::process::id() as u64).rotate_left(32);
+        x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^= x >> 31;
+        x.max(1) // 0 means "no trace" on the wire
+    })
+}
+
+/// Render an `X-Deepnvm-Trace` header value: `trace:parent`, both as
+/// fixed-width lowercase hex (u64 trace ids exceed 2^53, so they must
+/// never pass through a float-backed JSON number — hex strings only).
+pub fn trace_header_value(trace: u64, parent: u64) -> String {
+    format!("{trace:016x}:{parent:016x}")
+}
+
+/// Parse an `X-Deepnvm-Trace` header value. Returns `None` for
+/// malformed values or a zero trace id (zero means "no trace").
+pub fn parse_trace_header(value: &str) -> Option<(u64, u64)> {
+    let (trace, parent) = value.trim().split_once(':')?;
+    let trace = u64::from_str_radix(trace.trim(), 16).ok()?;
+    let parent = u64::from_str_radix(parent.trim(), 16).ok()?;
+    if trace == 0 {
+        return None;
+    }
+    Some((trace, parent))
 }
 
 /// An in-flight span. Create with [`Span::enter`]; the record is
@@ -76,32 +179,73 @@ pub struct Span {
     name: &'static str,
     id: u64,
     parent: u64,
+    trace: u64,
+    remote_parent: u64,
     start: Instant,
     start_ns: u64,
-    arg: Option<(&'static str, u64)>,
+    args: [Option<(&'static str, u64)>; MAX_ARGS],
 }
 
 impl Span {
     pub fn enter(name: &'static str) -> Span {
         let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
-        let parent = STACK.with(|s| {
+        let (parent, trace) = STACK.with(|s| {
             let mut s = s.borrow_mut();
-            let parent = s.last().copied().unwrap_or(0);
-            s.push(id);
-            parent
+            let (parent, trace) = match s.last() {
+                Some(&(pid, ptrace)) => (pid, ptrace),
+                None => (0, trace_id()),
+            };
+            s.push((id, trace));
+            (parent, trace)
         });
         let start_ns = super::epoch().elapsed().as_nanos() as u64;
-        Span { name, id, parent, start: Instant::now(), start_ns, arg: None }
+        Span {
+            name,
+            id,
+            parent,
+            trace,
+            remote_parent: 0,
+            start: Instant::now(),
+            start_ns,
+            args: [None; MAX_ARGS],
+        }
     }
 
-    /// Attach one numeric argument (shard index, batch, ...).
+    /// Adopt a remote trace context (from an `X-Deepnvm-Trace` header):
+    /// this span and everything nested under it record the remote
+    /// trace id, and this span records which remote span dispatched
+    /// it. A zero trace id is ignored.
+    pub fn remote(mut self, trace: u64, remote_parent: u64) -> Span {
+        if trace == 0 {
+            return self;
+        }
+        self.trace = trace;
+        self.remote_parent = remote_parent;
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if let Some(top) = s.iter_mut().rev().find(|(id, _)| *id == self.id) {
+                top.1 = trace;
+            }
+        });
+        self
+    }
+
+    /// Attach a numeric argument (shard index, batch, ...); the first
+    /// [`MAX_ARGS`] stick, later ones are dropped.
     pub fn arg(mut self, key: &'static str, value: u64) -> Span {
-        self.arg = Some((key, value));
+        if let Some(slot) = self.args.iter_mut().find(|a| a.is_none()) {
+            *slot = Some((key, value));
+        }
         self
     }
 
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The trace id this span currently records under.
+    pub fn trace(&self) -> u64 {
+        self.trace
     }
 }
 
@@ -111,10 +255,10 @@ impl Drop for Span {
             let mut s = s.borrow_mut();
             // Spans normally drop LIFO; a guard held across scopes can
             // drop out of order, so remove by id rather than popping.
-            if s.last() == Some(&self.id) {
+            if s.last().map(|&(id, _)| id) == Some(self.id) {
                 s.pop();
             } else {
-                s.retain(|&x| x != self.id);
+                s.retain(|&(id, _)| id != self.id);
             }
         });
         let tid = TID.with(|t| {
@@ -128,9 +272,11 @@ impl Drop for Span {
             id: self.id,
             parent: self.parent,
             tid,
+            trace: self.trace,
+            remote_parent: self.remote_parent,
             start_ns: self.start_ns,
             dur_ns: self.start.elapsed().as_nanos() as u64,
-            arg: self.arg,
+            args: self.args,
         };
         ring().lock().unwrap().push(rec);
     }
@@ -146,14 +292,17 @@ pub fn span_count() -> usize {
     ring().lock().unwrap().buf.len()
 }
 
-/// Spans evicted from the ring since process start.
+/// Spans evicted from the ring since process start. `/metrics` mirrors
+/// this as `deepnvm_trace_spans_dropped_total` at scrape time.
 pub fn dropped() -> u64 {
     ring().lock().unwrap().dropped
 }
 
 /// The ring as a Chrome trace-event JSON document: complete (`ph: "X"`)
 /// events with microsecond timestamps, one Chrome "thread" per traced
-/// OS thread, span/parent ids under `args`.
+/// OS thread, span/parent/trace ids under `args`. Trace ids are
+/// rendered as hex *strings* (they exceed f64's 2^53 integer range);
+/// span ids are small and stay numeric.
 pub fn chrome_trace_json() -> Json {
     let (recs, dropped) = {
         let r = ring().lock().unwrap();
@@ -164,8 +313,12 @@ pub fn chrome_trace_json() -> Json {
         let mut args = Json::obj();
         args.set("id", Json::Num(r.id as f64));
         args.set("parent", Json::Num(r.parent as f64));
-        if let Some((k, v)) = r.arg {
-            args.set(k, Json::Num(v as f64));
+        args.set("trace", Json::Str(format!("{:016x}", r.trace)));
+        if r.remote_parent != 0 {
+            args.set("remoteParent", Json::Num(r.remote_parent as f64));
+        }
+        for (k, v) in r.args.iter().flatten() {
+            args.set(k, Json::Num(*v as f64));
         }
         let mut e = Json::obj();
         e.set("name", Json::Str(r.name.to_string()));
@@ -180,6 +333,7 @@ pub fn chrome_trace_json() -> Json {
     }
     let mut doc = Json::obj();
     doc.set("displayTimeUnit", Json::Str("ms".to_string()));
+    doc.set("traceId", Json::Str(format!("{:016x}", trace_id())));
     doc.set("droppedSpans", Json::Num(dropped as f64));
     doc.set("traceEvents", Json::Arr(events));
     doc
@@ -190,7 +344,17 @@ mod tests {
     use super::*;
 
     fn rec(id: u64) -> SpanRecord {
-        SpanRecord { name: "t", id, parent: 0, tid: 1, start_ns: id, dur_ns: 1, arg: None }
+        SpanRecord {
+            name: "t",
+            id,
+            parent: 0,
+            tid: 1,
+            trace: 1,
+            remote_parent: 0,
+            start_ns: id,
+            dur_ns: 1,
+            args: [None; MAX_ARGS],
+        }
     }
 
     #[test]
@@ -221,7 +385,9 @@ mod tests {
         assert_eq!(c.parent, p.id, "child records the enclosing span");
         assert_eq!(p.parent, 0, "top-level span is a root");
         assert_eq!(c.tid, p.tid, "same thread, same lane");
-        assert_eq!(c.arg, Some(("k", 7)));
+        assert_eq!(c.args[0], Some(("k", 7)));
+        assert_eq!(p.trace, trace_id(), "local roots carry the process trace id");
+        assert_eq!(c.trace, trace_id());
         assert!(p.start_ns <= c.start_ns);
         assert!(p.dur_ns >= c.dur_ns, "parent encloses the child");
     }
@@ -241,11 +407,69 @@ mod tests {
     }
 
     #[test]
+    fn spans_fit_two_args_and_drop_the_rest() {
+        {
+            let _s = Span::enter("obs_test_args").arg("a", 1).arg("b", 2).arg("c", 3);
+        }
+        let recs = records();
+        let r = recs.iter().rev().find(|r| r.name == "obs_test_args").unwrap();
+        assert_eq!(r.args, [Some(("a", 1)), Some(("b", 2))]);
+    }
+
+    #[test]
+    fn remote_context_is_adopted_and_inherited() {
+        let remote_trace = 0xdead_beef_cafe_f00d_u64;
+        let (root_rec, child_rec, after_rec) = {
+            let root = Span::enter("obs_test_remote_root").remote(remote_trace, 42);
+            let root_id = root.id();
+            let child_id = {
+                let child = Span::enter("obs_test_remote_child");
+                assert_eq!(child.trace(), remote_trace, "children inherit the adopted trace");
+                child.id()
+            };
+            drop(root);
+            // a sibling AFTER the adopting root dropped is back on the
+            // process trace
+            let after = Span::enter("obs_test_remote_after");
+            let after_id = after.id();
+            drop(after);
+            (root_id, child_id, after_id)
+        };
+        let recs = records();
+        let root = recs.iter().rev().find(|r| r.id == root_rec).unwrap();
+        let child = recs.iter().rev().find(|r| r.id == child_rec).unwrap();
+        let after = recs.iter().rev().find(|r| r.id == after_rec).unwrap();
+        assert_eq!(root.trace, remote_trace);
+        assert_eq!(root.remote_parent, 42);
+        assert_eq!(child.trace, remote_trace);
+        assert_eq!(child.remote_parent, 0, "only the adopting root records the remote parent");
+        assert_eq!(after.trace, trace_id());
+    }
+
+    #[test]
+    fn trace_header_roundtrips() {
+        let v = trace_header_value(trace_id(), 7);
+        assert_eq!(parse_trace_header(&v), Some((trace_id(), 7)));
+        assert_eq!(parse_trace_header("nonsense"), None);
+        assert_eq!(parse_trace_header(""), None);
+        assert_eq!(
+            parse_trace_header("0000000000000000:0000000000000001"),
+            None,
+            "zero trace means no trace"
+        );
+        assert_eq!(parse_trace_header("00ff:0001"), Some((0xff, 1)));
+    }
+
+    #[test]
     fn chrome_trace_has_complete_events() {
         {
             let _s = Span::enter("obs_test_chrome");
         }
         let doc = chrome_trace_json();
+        assert_eq!(
+            doc.get("traceId").and_then(|t| t.as_str()),
+            Some(format!("{:016x}", trace_id()).as_str())
+        );
         let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
         let e = events
             .iter()
@@ -256,6 +480,28 @@ mod tests {
         assert_eq!(e.get("pid").and_then(|p| p.as_f64()), Some(1.0));
         assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
         assert!(e.get("dur").and_then(|d| d.as_f64()).is_some());
-        assert!(e.get("args").and_then(|a| a.get("id")).is_some());
+        let args = e.get("args").unwrap();
+        assert!(args.get("id").is_some());
+        assert_eq!(
+            args.get("trace").and_then(|t| t.as_str()),
+            Some(format!("{:016x}", trace_id()).as_str()),
+            "every exported span names its trace"
+        );
+    }
+
+    #[test]
+    fn ring_capacity_is_configurable_before_first_use() {
+        // The global ring may already exist (other tests create spans),
+        // so only the "too late" contract is assertable here; the
+        // capacity plumbing itself is covered via configured_capacity.
+        // Only capacities >= the default are used here so a parallel
+        // test initializing the global ring mid-test never shrinks it.
+        CONFIGURED_CAP.store(0, Ordering::Relaxed);
+        assert_eq!(configured_capacity(), RING_CAPACITY);
+        let landed = set_ring_capacity(RING_CAPACITY * 2);
+        assert_eq!(configured_capacity(), RING_CAPACITY * 2);
+        assert_eq!(landed, RING.get().is_none());
+        assert!(ring_capacity() >= RING_CAPACITY);
+        CONFIGURED_CAP.store(0, Ordering::Relaxed);
     }
 }

@@ -328,6 +328,31 @@ pub fn call(
     body: &str,
     timeout: Duration,
 ) -> Result<(u16, String)> {
+    call_with(addr, method, path, &[], body, timeout)
+}
+
+/// Render extra request headers as `Name: value\r\n` lines (the
+/// propagation hook: the scheduler stamps `X-Deepnvm-Trace` here).
+fn header_lines(headers: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (name, value) in headers {
+        out.push_str(name);
+        out.push_str(": ");
+        out.push_str(value);
+        out.push_str("\r\n");
+    }
+    out
+}
+
+/// [`call`] with extra request headers.
+pub fn call_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &str,
+    timeout: Duration,
+) -> Result<(u16, String)> {
     use std::net::ToSocketAddrs;
 
     let sock = addr
@@ -340,9 +365,10 @@ pub fn call(
     stream.set_read_timeout(Some(timeout))?;
     stream.set_write_timeout(Some(timeout))?;
     let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n{}\
          Connection: close\r\n\r\n",
-        body.len()
+        body.len(),
+        header_lines(headers),
     );
     stream
         .write_all(head.as_bytes())
@@ -406,8 +432,19 @@ impl Client {
     /// Send one request over the pooled connection (opening it first
     /// if needed) and read the framed response.
     pub fn call(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        self.call_with(method, path, &[], body)
+    }
+
+    /// [`Client::call`] with extra request headers.
+    pub fn call_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &str,
+    ) -> Result<(u16, String)> {
         let had_pooled = self.conn.is_some();
-        match self.try_call(method, path, body) {
+        match self.try_call(method, path, headers, body) {
             Ok(out) => Ok(out),
             Err(e) => {
                 self.conn = None;
@@ -416,7 +453,7 @@ impl Client {
                     // reasons that say nothing about the server's
                     // health; one fresh-connection retry tells a stale
                     // socket apart from a dead worker.
-                    let retried = self.try_call(method, path, body);
+                    let retried = self.try_call(method, path, headers, body);
                     if retried.is_err() {
                         self.conn = None;
                     }
@@ -428,16 +465,23 @@ impl Client {
         }
     }
 
-    fn try_call(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    fn try_call(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &str,
+    ) -> Result<(u16, String)> {
         if self.conn.is_none() {
             self.conn = Some(self.connect()?);
         }
         let reader = self.conn.as_mut().expect("connection just opened");
         let head = format!(
-            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\n\
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\n{}\
              Connection: keep-alive\r\n\r\n",
             self.addr,
-            body.len()
+            body.len(),
+            header_lines(headers),
         );
         let stream = reader.get_mut();
         stream
@@ -792,6 +836,36 @@ mod tests {
 
         server.shutdown();
         server.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn extra_headers_reach_the_handler() {
+        let server = Server::bind("127.0.0.1:0", 1, |req| {
+            let trace = req.header("x-deepnvm-trace").unwrap_or("none");
+            Response::text(200, &format!("trace {trace}"))
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        // one-shot path
+        let (status, body) = call_with(
+            &addr,
+            "GET",
+            "/probe",
+            &[("X-Deepnvm-Trace", "00ff:0001")],
+            "",
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "trace 00ff:0001");
+        // pooled keep-alive path
+        let mut c = Client::new(&addr, Duration::from_secs(5));
+        let (status, body) =
+            c.call_with("GET", "/probe", &[("X-Deepnvm-Trace", "00aa:0002")], "").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "trace 00aa:0002");
+        let (_, body) = c.call("GET", "/probe", "").unwrap();
+        assert_eq!(body, "trace none", "headers are per-call, not sticky");
     }
 
     #[test]

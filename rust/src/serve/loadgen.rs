@@ -1,0 +1,294 @@
+//! `deepnvm loadgen` — a closed-loop soak harness for a running
+//! server.
+//!
+//! `N` worker threads each hold one keep-alive connection
+//! ([`super::http::Client`]) and drive a mixed `POST /solve` +
+//! `POST /sweep` workload against `--addr` for `--duration` seconds.
+//! The mix is a ratio (`--mix 9:1` = nine solves per sweep), rotated
+//! deterministically per thread so the blend holds at any concurrency.
+//!
+//! Latencies land in the same registry `GET /metrics` serves, as
+//! `deepnvm_loadgen_request_duration_ns{kind="solve"|"sweep"}` — the
+//! report's quantiles are computed from those histograms (via
+//! before/after [`HistSnapshot::minus`] deltas, so a loadgen run in a
+//! long-lived process reports only its own window), which keeps the
+//! printed numbers and the scrape-visible numbers one source of truth.
+//! Quantiles are log2-bucket upper bounds, i.e. conservative within
+//! 2x; the p99 gate (`--p99-ms`) compares against that upper bound,
+//! so a pass is a real pass.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::obs::{Histogram, LazyCounter, LazyHistogram};
+
+use super::http;
+
+/// Per-request socket deadline. Generous: the gate is on quantiles,
+/// not on individual stragglers, and a cold first solve may be slow.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long the pre-flight `/healthz` probe may take.
+const PREFLIGHT_TIMEOUT: Duration = Duration::from_secs(3);
+
+// Loadgen's own obs series: scrape-visible on any co-resident server
+// and the source of the report's quantiles.
+static SOLVE_NS: LazyHistogram =
+    LazyHistogram::new("deepnvm_loadgen_request_duration_ns{kind=\"solve\"}");
+static SWEEP_NS: LazyHistogram =
+    LazyHistogram::new("deepnvm_loadgen_request_duration_ns{kind=\"sweep\"}");
+static ERRORS: LazyCounter = LazyCounter::new("deepnvm_loadgen_errors_total");
+
+/// Configuration for one loadgen run (the CLI's `loadgen --addr
+/// --duration --concurrency --mix --p99-ms`).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Target server (`host:port` of a running `deepnvm serve`).
+    pub addr: String,
+    /// Wall-clock run length.
+    pub duration: Duration,
+    /// Worker threads, one keep-alive connection each.
+    pub concurrency: usize,
+    /// Solve requests per mix cycle.
+    pub solve_weight: u32,
+    /// Sweep requests per mix cycle.
+    pub sweep_weight: u32,
+    /// Overall p99 gate in milliseconds; `None` disables gating.
+    pub p99_ms: Option<f64>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8090".into(),
+            duration: Duration::from_secs(10),
+            concurrency: 4,
+            solve_weight: 9,
+            sweep_weight: 1,
+            p99_ms: None,
+        }
+    }
+}
+
+/// Parse a `--mix` ratio like `"9:1"` into (solve, sweep) weights.
+pub fn parse_mix(s: &str) -> Result<(u32, u32)> {
+    let (sv, sw) = s
+        .split_once(':')
+        .with_context(|| format!("--mix wants SOLVE:SWEEP (e.g. 9:1), got {s:?}"))?;
+    let sv: u32 = sv.trim().parse().with_context(|| format!("bad solve weight {sv:?}"))?;
+    let sw: u32 = sw.trim().parse().with_context(|| format!("bad sweep weight {sw:?}"))?;
+    ensure!(sv + sw > 0, "--mix {s:?} would send no requests");
+    Ok((sv, sw))
+}
+
+/// Latency summary for one request kind.
+#[derive(Clone, Copy, Debug)]
+pub struct KindStats {
+    pub requests: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// What one loadgen run measured.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// Requests answered 200.
+    pub requests: u64,
+    /// Transport failures and non-200 answers.
+    pub errors: u64,
+    /// Successful requests per wall-clock second.
+    pub qps: f64,
+    /// Overall latency quantiles (log2-bucket upper bounds, ms).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub solve: KindStats,
+    pub sweep: KindStats,
+    pub wall: Duration,
+}
+
+impl LoadgenReport {
+    /// Does the run pass a p99 gate of `limit_ms`?
+    pub fn meets_p99(&self, limit_ms: f64) -> bool {
+        self.p99_ms <= limit_ms
+    }
+
+    /// The human report `deepnvm loadgen` prints.
+    pub fn render(&self) -> String {
+        format!(
+            "loadgen: {} requests in {:.1}s ({:.0} req/s), {} errors\n\
+             loadgen: overall  p50 {:.3} ms  p99 {:.3} ms\n\
+             loadgen: solve    {} requests  p50 {:.3} ms  p99 {:.3} ms\n\
+             loadgen: sweep    {} requests  p50 {:.3} ms  p99 {:.3} ms",
+            self.requests,
+            self.wall.as_secs_f64(),
+            self.qps,
+            self.errors,
+            self.p50_ms,
+            self.p99_ms,
+            self.solve.requests,
+            self.solve.p50_ms,
+            self.solve.p99_ms,
+            self.sweep.requests,
+            self.sweep.p50_ms,
+            self.sweep.p99_ms,
+        )
+    }
+}
+
+/// The request bodies one thread rotates through. Small pools on
+/// purpose: after each body's first solve the server answers from its
+/// memo, so a soak measures steady-state serving, not solver cost.
+fn solve_bodies() -> Vec<String> {
+    let mut v = Vec::new();
+    for tech in ["stt", "sot", "sram"] {
+        for cap in [1u64, 2] {
+            v.push(format!(r#"{{"tech": "{tech}", "capacity_mb": {cap}}}"#));
+        }
+    }
+    v
+}
+
+fn sweep_bodies() -> Vec<String> {
+    vec![
+        r#"{"techs": ["stt"], "caps_mb": [1, 2], "dnns": [], "jobs": 1}"#.to_string(),
+        r#"{"techs": ["sot"], "caps_mb": [1, 2], "dnns": [], "jobs": 1}"#.to_string(),
+    ]
+}
+
+fn kind_stats(delta: &crate::obs::HistSnapshot) -> KindStats {
+    KindStats {
+        requests: delta.count,
+        p50_ms: delta.quantile(0.5) as f64 / 1e6,
+        p99_ms: delta.quantile(0.99) as f64 / 1e6,
+    }
+}
+
+/// Run the soak: probe `/healthz`, drive the mixed workload from
+/// `concurrency` threads until `duration` elapses, and summarize this
+/// run's latency window. Transport errors and non-200s never abort
+/// the run — they count into `errors` (and the CLI gates on them).
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    ensure!(cfg.concurrency > 0, "--concurrency must be at least 1");
+    ensure!(
+        cfg.solve_weight + cfg.sweep_weight > 0,
+        "the mix would send no requests"
+    );
+    match http::call(&cfg.addr, "GET", "/healthz", "", PREFLIGHT_TIMEOUT) {
+        Ok((200, _)) => {}
+        Ok((status, _)) => bail!("{} answered {status} to /healthz", cfg.addr),
+        Err(e) => bail!("{} is not answering /healthz: {e:#}", cfg.addr),
+    }
+
+    let solve_before = SOLVE_NS.handle().snapshot();
+    let sweep_before = SWEEP_NS.handle().snapshot();
+    let errors_before = ERRORS.value();
+    let solves = solve_bodies();
+    let sweeps = sweep_bodies();
+    let cycle = (cfg.solve_weight + cfg.sweep_weight) as u64;
+    let started = Instant::now();
+    let deadline = started + cfg.duration;
+
+    std::thread::scope(|scope| {
+        for t in 0..cfg.concurrency {
+            let (solves, sweeps) = (&solves, &sweeps);
+            scope.spawn(move || {
+                let mut client = http::Client::new(&cfg.addr, REQUEST_TIMEOUT);
+                // Offset each thread's rotation so the fleet of
+                // threads interleaves kinds instead of phase-locking.
+                let mut i = t as u64;
+                while Instant::now() < deadline {
+                    let is_solve = i % cycle < cfg.solve_weight as u64;
+                    let (path, body, hist) = if is_solve {
+                        let b = &solves[(i / cycle) as usize % solves.len()];
+                        ("/solve", b, &SOLVE_NS)
+                    } else {
+                        let b = &sweeps[(i / cycle) as usize % sweeps.len()];
+                        ("/sweep", b, &SWEEP_NS)
+                    };
+                    let t0 = Instant::now();
+                    match client.call("POST", path, body) {
+                        Ok((200, _)) => hist.record_duration(t0.elapsed()),
+                        Ok(_) | Err(_) => ERRORS.inc(),
+                    }
+                    i += 1;
+                }
+            });
+        }
+    });
+
+    let wall = started.elapsed();
+    let solve_delta = SOLVE_NS.handle().snapshot().minus(&solve_before);
+    let sweep_delta = SWEEP_NS.handle().snapshot().minus(&sweep_before);
+    // The overall quantiles come from federating the two per-kind
+    // windows — the same bucket-wise merge `/scheduler/metrics` uses.
+    let overall = Histogram::new();
+    overall.merge_snapshot(&solve_delta);
+    overall.merge_snapshot(&sweep_delta);
+    let requests = solve_delta.count + sweep_delta.count;
+    Ok(LoadgenReport {
+        requests,
+        errors: ERRORS.value() - errors_before,
+        qps: requests as f64 / wall.as_secs_f64().max(1e-9),
+        p50_ms: overall.quantile(0.5) as f64 / 1e6,
+        p99_ms: overall.quantile(0.99) as f64 / 1e6,
+        solve: kind_stats(&solve_delta),
+        sweep: kind_stats(&sweep_delta),
+        wall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_parses_and_rejects_nonsense() {
+        assert_eq!(parse_mix("9:1").unwrap(), (9, 1));
+        assert_eq!(parse_mix("1:0").unwrap(), (1, 0));
+        assert_eq!(parse_mix(" 3 : 2 ").unwrap(), (3, 2));
+        assert!(parse_mix("9").is_err());
+        assert!(parse_mix("a:b").is_err());
+        assert!(parse_mix("0:0").is_err());
+    }
+
+    #[test]
+    fn report_renders_and_gates() {
+        let r = LoadgenReport {
+            requests: 100,
+            errors: 0,
+            qps: 50.0,
+            p50_ms: 1.0,
+            p99_ms: 4.0,
+            solve: KindStats { requests: 90, p50_ms: 1.0, p99_ms: 4.0 },
+            sweep: KindStats { requests: 10, p50_ms: 2.0, p99_ms: 4.0 },
+            wall: Duration::from_secs(2),
+        };
+        assert!(r.meets_p99(4.0));
+        assert!(!r.meets_p99(3.9));
+        let text = r.render();
+        assert!(text.contains("100 requests"), "{text}");
+        assert!(text.contains("p99 4.000 ms"), "{text}");
+    }
+
+    #[test]
+    fn loadgen_refuses_a_dead_target() {
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:1".into(), // reserved port: nothing listens
+            duration: Duration::from_millis(50),
+            ..LoadgenConfig::default()
+        };
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("/healthz"), "{err}");
+    }
+
+    #[test]
+    fn body_pools_are_nonempty_and_distinct() {
+        let sv = solve_bodies();
+        let sw = sweep_bodies();
+        assert!(sv.len() >= 4 && sw.len() >= 2);
+        for b in sv.iter().chain(sw.iter()) {
+            assert!(crate::util::json::parse(b).is_ok(), "{b}");
+        }
+    }
+}

@@ -16,11 +16,13 @@
 //! `util::json`, matching the offline vendor set.
 
 pub mod http;
+pub mod loadgen;
 pub mod routes;
 pub mod scheduler;
 pub mod shard;
 
 pub use http::{Request, Response, Server};
+pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use routes::ServerCtx;
 pub use scheduler::{coordinate, Coordinator, ScheduleConfig, ScheduleReport};
 

@@ -96,11 +96,21 @@ impl ServerCtx {
 
 /// Top-level dispatch, wrapped in per-request instrumentation: the
 /// request counter, a per-route latency histogram, a per-route/status
-/// response counter, and a span in the trace ring.
+/// response counter, and a span in the trace ring. A request stamped
+/// with `X-Deepnvm-Trace: <trace>:<parent>` (the scheduler does this
+/// on every dispatch and probe) has its root span adopted into the
+/// remote trace, so the coordinator can stitch worker rings into one
+/// fleet-wide timeline.
 pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
     ctx.requests.inc();
     let (route, span_name) = route_meta(&req.path);
-    let _span = obs::Span::enter(span_name);
+    let mut span = obs::Span::enter(span_name);
+    if let Some((trace, parent)) =
+        req.header(obs::trace::TRACE_HEADER).and_then(obs::trace::parse_trace_header)
+    {
+        span = span.remote(trace, parent);
+    }
+    let _span = span;
     let t0 = Instant::now();
     let resp = dispatch(ctx, req);
     ctx.metrics
@@ -174,6 +184,12 @@ fn healthz(ctx: &ServerCtx) -> Response {
     // era; the value source is now the registry-backed one.
     j.set("uptime_s", Json::Num(obs::uptime().as_secs_f64()));
     j.set("requests", Json::Num(ctx.request_count() as f64));
+    // Nanoseconds on this process's span clock (the obs epoch) at the
+    // moment the probe was handled. The coordinator reads this against
+    // the probe's RTT midpoint to estimate a per-worker clock offset
+    // for fleet trace stitching. Stays exact in an f64 JSON number for
+    // ~104 days of uptime (2^53 ns).
+    j.set("clock_ns", Json::Num(obs::uptime().as_nanos() as f64));
     Response::json(200, &j)
 }
 
@@ -182,6 +198,12 @@ fn healthz(ctx: &ServerCtx) -> Response {
 fn metrics_text(ctx: &ServerCtx) -> Response {
     // Scrape-time gauges refresh just before rendering.
     ctx.metrics.gauge("deepnvm_uptime_seconds").set(obs::uptime().as_secs() as i64);
+    // The trace ring owns its eviction count; mirror it into the
+    // registry monotonically so truncated traces are visible to any
+    // Prometheus scraper, not just readers of `/trace`.
+    ctx.metrics
+        .counter("deepnvm_trace_spans_dropped_total")
+        .set_max(obs::trace::dropped());
     Response {
         status: 200,
         content_type: "text/plain; version=0.0.4; charset=utf-8",
@@ -535,6 +557,46 @@ mod tests {
         // ...and the obs-backed ones ride along
         assert_eq!(s.get("requests").unwrap().as_u64(), Some(3));
         assert!(s.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        // the probe clock the coordinator's offset estimate reads
+        assert!(h.get("clock_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn trace_header_is_adopted_into_the_request_span() {
+        let c = ctx();
+        let mut req = get("/healthz");
+        // stored header names are lowercase (parse_request lowercases)
+        req.headers
+            .push(("x-deepnvm-trace".into(), obs::trace::trace_header_value(0xfeed, 99)));
+        assert_eq!(handle(&c, &req).status, 200);
+        let rec = obs::trace::records()
+            .into_iter()
+            .rev()
+            .find(|r| r.name == "http./healthz" && r.remote_parent == 99)
+            .expect("adopted request span reaches the ring");
+        assert_eq!(rec.trace, 0xfeed);
+
+        // a malformed header is ignored, not adopted
+        let mut req = get("/healthz");
+        req.headers.push(("x-deepnvm-trace".into(), "garbage".into()));
+        assert_eq!(handle(&c, &req).status, 200);
+        let rec = obs::trace::records()
+            .into_iter()
+            .rev()
+            .find(|r| r.name == "http./healthz" && r.remote_parent != 99)
+            .expect("span still recorded");
+        assert_eq!(rec.trace, obs::trace::trace_id());
+    }
+
+    #[test]
+    fn metrics_expose_trace_ring_drops() {
+        let c = ctx();
+        let r = handle(&c, &get("/metrics"));
+        let text = std::str::from_utf8(&r.body).unwrap();
+        assert!(
+            text.contains("# TYPE deepnvm_trace_spans_dropped_total counter"),
+            "{text}"
+        );
     }
 
     #[test]

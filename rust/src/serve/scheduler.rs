@@ -24,15 +24,28 @@
 //! merged / failed, with attempt counts) is observable over
 //! `GET /scheduler/status` when a status address is configured — the
 //! same view `deepnvm coordinate` prints when it finishes.
+//!
+//! The coordinator is also the fleet's observability aggregator.
+//! Every dispatch and probe is stamped with an `X-Deepnvm-Trace`
+//! header (`trace_id:parent_span_id`), which workers adopt into their
+//! request spans; [`Coordinator::fleet_trace`] then scrapes each
+//! worker's `GET /trace`, rebases timestamps by the probe-estimated
+//! clock offsets, and stitches one Chrome trace with a distinct `pid`
+//! per worker and flow arrows from each `shard.dispatch` span to the
+//! worker-side `http./shard/run` span it caused. `GET
+//! /scheduler/metrics` on the status server federates every worker's
+//! `/metrics` into one exposition: counters sum and the fixed-width
+//! log₂ histogram buckets add exactly.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::obs::{LazyCounter, LazyHistogram, Span};
+use crate::obs::{metrics, trace, LazyCounter, LazyHistogram, Span};
 use crate::sweep::spec::spec_to_json;
 use crate::sweep::{self, Memo, SweepSpec};
 use crate::util::json::{self, Json};
@@ -204,7 +217,16 @@ struct Shared {
     workers: Vec<String>,
     total_points: usize,
     started: Instant,
+    /// Per-worker span-clock offset (coordinator ns minus worker ns),
+    /// estimated from `/healthz` probe RTT midpoints; `None` until a
+    /// probe succeeds (or when the worker omits `clock_ns`). Used to
+    /// rebase scraped worker timestamps in [`Coordinator::fleet_trace`].
+    offsets: Mutex<Vec<Option<i64>>>,
 }
+
+/// Distinguishes one Coordinator's dispatch spans (`args.run`) from
+/// other runs sharing the process span ring.
+static NEXT_RUN_SEQ: AtomicU64 = AtomicU64::new(1);
 
 /// A prepared coordination run: shards cut, status server (optionally)
 /// bound. [`Coordinator::run`] executes it.
@@ -213,6 +235,7 @@ pub struct Coordinator {
     cfg: ScheduleConfig,
     spec: SweepSpec,
     status: Option<Server>,
+    run_seq: u64,
 }
 
 /// One-call form: prepare and run. The fleet workflow as a function.
@@ -258,6 +281,7 @@ impl Coordinator {
             worker_merged: vec![0; workers.len()],
             fatal: None,
         };
+        let worker_count = workers.len();
         let shared = Arc::new(Shared {
             core: Mutex::new(core),
             changed: Condvar::new(),
@@ -266,6 +290,7 @@ impl Coordinator {
             workers,
             total_points,
             started: Instant::now(),
+            offsets: Mutex::new(vec![None; worker_count]),
         });
         let status = match &cfg.status_addr {
             Some(addr) => {
@@ -275,13 +300,17 @@ impl Coordinator {
                         ("GET", "/scheduler/status") => {
                             Response::json(200, &status_json(&view))
                         }
+                        ("GET", "/scheduler/metrics") => fleet_metrics(&view),
                         ("GET", "/healthz") => {
                             let mut j = Json::obj();
                             j.set("status", Json::Str("ok".into()));
                             j.set("role", Json::Str("coordinator".into()));
                             Response::json(200, &j)
                         }
-                        _ => Response::error(404, "no such route (GET /scheduler/status)"),
+                        _ => Response::error(
+                            404,
+                            "no such route (GET /scheduler/status or /scheduler/metrics)",
+                        ),
                     }
                 })
                 .context("cannot bind the scheduler status address")?;
@@ -289,7 +318,20 @@ impl Coordinator {
             }
             None => None,
         };
-        Ok(Coordinator { shared, cfg: cfg.clone(), spec: spec.clone(), status })
+        Ok(Coordinator {
+            shared,
+            cfg: cfg.clone(),
+            spec: spec.clone(),
+            status,
+            run_seq: NEXT_RUN_SEQ.fetch_add(1, Ordering::Relaxed),
+        })
+    }
+
+    /// The `args.run` tag on this run's `shard.dispatch` spans — what
+    /// lets a reader (or test) pick one run's dispatches out of a span
+    /// ring shared by several Coordinators in one process.
+    pub fn run_seq(&self) -> u64 {
+        self.run_seq
     }
 
     /// Where the status server listens, if one was configured.
@@ -320,7 +362,7 @@ impl Coordinator {
         {
             let mut core = sh.core.lock().unwrap();
             for (w, addr) in sh.workers.iter().enumerate() {
-                if healthy(addr) {
+                if self.probe_worker(w, addr) {
                     core.worker_alive[w] = true;
                     live.push((w, addr.clone()));
                 } else {
@@ -444,13 +486,17 @@ impl Coordinator {
                 }
             };
             let dispatched = {
-                let _span = Span::enter("shard.dispatch").arg("shard", idx as u64);
-                run_shard_on(&mut client, &sh.shards[idx], &self.cfg)
+                let span = Span::enter("shard.dispatch")
+                    .arg("shard", idx as u64)
+                    .arg("run", self.run_seq);
+                run_shard_on(&mut client, &sh.shards[idx], &self.cfg, span.id())
             };
             match dispatched {
                 Ok(export) => {
                     let st = {
-                        let _span = Span::enter("shard.merge").arg("shard", idx as u64);
+                        let _span = Span::enter("shard.merge")
+                            .arg("shard", idx as u64)
+                            .arg("run", self.run_seq);
                         MERGE_NS.time(|| memo.merge_json(&export))
                     };
                     if !st.version_ok {
@@ -492,7 +538,7 @@ impl Coordinator {
                     // Straggler past the deadline, severed connection,
                     // or a worker-side error — probe before deciding
                     // whether this worker keeps scheduling.
-                    let alive = healthy(addr);
+                    let alive = self.probe_worker(widx, addr);
                     if !self.shed(widx, addr, idx, &mut failed_here, &format!("{e:#}"), alive)
                     {
                         return;
@@ -552,17 +598,208 @@ impl Coordinator {
         sh.changed.notify_all();
         alive && core.fatal.is_none()
     }
+
+    /// Probe worker `widx` and record its estimated clock offset (used
+    /// by [`Coordinator::fleet_trace`] to rebase scraped timestamps).
+    fn probe_worker(&self, widx: usize, addr: &str) -> bool {
+        let (alive, offset) = probe(addr);
+        if let Some(off) = offset {
+            self.shared.offsets.lock().unwrap()[widx] = Some(off);
+        }
+        alive
+    }
+
+    /// Stitch this process's span ring together with every live
+    /// worker's `GET /trace` export into one Chrome trace document.
+    ///
+    /// The coordinator keeps `pid` 1; worker `w` gets `pid` `w + 2`,
+    /// and its timestamps are rebased by the clock offset estimated
+    /// from the most recent `/healthz` probe RTT midpoint (accurate to
+    /// about half the probe round trip). Worker spans that carry this
+    /// process's trace id are flow-linked (`ph:"s"`/`ph:"f"`) back to
+    /// the `shard.dispatch` span that stamped them.
+    pub fn fleet_trace(&self) -> Json {
+        let local = trace::chrome_trace_json();
+        let trace_hex = format!("{:016x}", trace::trace_id());
+        let mut events: Vec<Json> = Vec::new();
+        // Where each local dispatch span sits, keyed by its span id —
+        // the flow arrow's source end.
+        let mut dispatch_at: HashMap<u64, (f64, f64, f64)> = HashMap::new();
+        if let Some(Json::Arr(evs)) = local.get("traceEvents") {
+            for ev in evs {
+                if ev.get("name").and_then(Json::as_str) == Some("shard.dispatch") {
+                    let args = ev.get("args");
+                    let id = args
+                        .and_then(|a| a.get("id"))
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0);
+                    let ts = ev.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+                    let tid = ev.get("tid").and_then(Json::as_f64).unwrap_or(0.0);
+                    dispatch_at.insert(id, (ts, 1.0, tid));
+                }
+                events.push(ev.clone());
+            }
+        }
+        events.push(process_name_event(1.0, "coordinator"));
+        let offsets = self.shared.offsets.lock().unwrap().clone();
+        let mut stitched = 0usize;
+        for (w, addr) in self.shared.workers.iter().enumerate() {
+            let pid = (w + 2) as f64;
+            let body = match http::call(addr, "GET", "/trace", "", PROBE_TIMEOUT) {
+                Ok((200, body)) => body,
+                _ => {
+                    eprintln!("scheduler: worker {addr} /trace scrape failed; skipping");
+                    continue;
+                }
+            };
+            let doc = match json::parse(&body) {
+                Ok(d) => d,
+                Err(_) => {
+                    eprintln!("scheduler: worker {addr} /trace was malformed; skipping");
+                    continue;
+                }
+            };
+            let off_us = offsets[w].unwrap_or(0) as f64 / 1e3;
+            events.push(process_name_event(pid, &format!("worker {addr}")));
+            stitched += 1;
+            if let Some(Json::Arr(evs)) = doc.get("traceEvents") {
+                for ev in evs {
+                    let mut e = ev.clone();
+                    e.set("pid", Json::Num(pid));
+                    let ts = ev.get("ts").and_then(Json::as_f64).unwrap_or(0.0) + off_us;
+                    e.set("ts", Json::Num(ts));
+                    let args = ev.get("args");
+                    let on_trace = args
+                        .and_then(|a| a.get("trace"))
+                        .and_then(Json::as_str)
+                        == Some(trace_hex.as_str());
+                    let remote_parent = args
+                        .and_then(|a| a.get("remoteParent"))
+                        .and_then(Json::as_u64);
+                    if on_trace {
+                        if let Some(parent) = remote_parent {
+                            if let Some(&(dts, dpid, dtid)) = dispatch_at.get(&parent) {
+                                let tid =
+                                    ev.get("tid").and_then(Json::as_f64).unwrap_or(0.0);
+                                events.push(flow_event("s", parent, dpid, dtid, dts));
+                                events.push(flow_event("f", parent, pid, tid, ts));
+                            }
+                        }
+                    }
+                    events.push(e);
+                }
+            }
+        }
+        let mut doc = Json::obj();
+        doc.set("displayTimeUnit", Json::Str("ms".into()));
+        doc.set("traceId", Json::Str(trace_hex));
+        doc.set(
+            "droppedSpans",
+            local.get("droppedSpans").cloned().unwrap_or(Json::Num(0.0)),
+        );
+        doc.set("workersStitched", Json::Num(stitched as f64));
+        doc.set("traceEvents", Json::Arr(events));
+        doc
+    }
 }
 
-/// `GET /healthz` answered 200 within the probe timeout?
-fn healthy(addr: &str) -> bool {
-    let ok = matches!(http::call(addr, "GET", "/healthz", "", PROBE_TIMEOUT), Ok((200, _)));
-    if ok {
-        PROBES_OK.inc();
-    } else {
-        PROBES_DEAD.inc();
+/// `GET /healthz` answered 200 within the probe timeout? Also returns
+/// the estimated clock offset (coordinator ns minus worker ns) from
+/// the probe's RTT midpoint, when the worker reported `clock_ns`.
+fn probe(addr: &str) -> (bool, Option<i64>) {
+    let span = Span::enter("worker.probe");
+    let header = trace::trace_header_value(trace::trace_id(), span.id());
+    let t0 = crate::obs::uptime().as_nanos() as i64;
+    let reply = http::call_with(
+        addr,
+        "GET",
+        "/healthz",
+        &[(trace::TRACE_HEADER, header.as_str())],
+        "",
+        PROBE_TIMEOUT,
+    );
+    let t1 = crate::obs::uptime().as_nanos() as i64;
+    match reply {
+        Ok((200, body)) => {
+            PROBES_OK.inc();
+            // Midpoint estimate: the worker read its clock roughly
+            // half an RTT after t0, so offset = midpoint - worker_ns.
+            let offset = json::parse(&body)
+                .ok()
+                .and_then(|j| j.get("clock_ns").and_then(Json::as_f64))
+                .map(|worker_ns| t0 + (t1 - t0) / 2 - worker_ns as i64);
+            (true, offset)
+        }
+        _ => {
+            PROBES_DEAD.inc();
+            (false, None)
+        }
     }
-    ok
+}
+
+/// A Chrome trace `process_name` metadata event: names the row a
+/// process's spans render under.
+fn process_name_event(pid: f64, name: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", Json::Str(name.to_string()));
+    let mut e = Json::obj();
+    e.set("ph", Json::Str("M".into()));
+    e.set("name", Json::Str("process_name".into()));
+    e.set("pid", Json::Num(pid));
+    e.set("tid", Json::Num(0.0));
+    e.set("args", args);
+    e
+}
+
+/// One end of a flow arrow between a dispatch span and the worker span
+/// it produced (`ph` is `"s"` at the source, `"f"` at the sink).
+fn flow_event(ph: &str, id: u64, pid: f64, tid: f64, ts: f64) -> Json {
+    let mut e = Json::obj();
+    e.set("ph", Json::Str(ph.to_string()));
+    if ph == "f" {
+        // Bind to the enclosing slice so the arrow lands on the span
+        // itself rather than the next event on the thread.
+        e.set("bp", Json::Str("e".into()));
+    }
+    e.set("name", Json::Str("shard.dispatch.flow".into()));
+    e.set("cat", Json::Str("deepnvm".into()));
+    e.set("id", Json::Num(id as f64));
+    e.set("pid", Json::Num(pid));
+    e.set("tid", Json::Num(tid));
+    e.set("ts", Json::Num(ts));
+    e
+}
+
+/// `GET /scheduler/metrics`: scrape every worker's `/metrics`, merge
+/// the expositions (summed counters and gauges, bucket-wise histogram
+/// addition — exact because every process uses the same log2 bucket
+/// bounds), and append the coordinator's own series relabeled with
+/// `role="coordinator"` so they never collide with fleet series.
+fn fleet_metrics(sh: &Shared) -> Response {
+    let mut texts: Vec<String> = Vec::new();
+    let mut scraped = 0usize;
+    for addr in &sh.workers {
+        if let Ok((200, body)) = http::call(addr, "GET", "/metrics", "", PROBE_TIMEOUT) {
+            texts.push(body);
+            scraped += 1;
+        }
+    }
+    texts.push(metrics::relabel_exposition(
+        &crate::obs::global().prometheus_text(),
+        "role",
+        "coordinator",
+    ));
+    let comment = format!(
+        "# fleet: merged /metrics from {scraped}/{} workers plus coordinator-local \
+         series (role=\"coordinator\")\n",
+        sh.workers.len()
+    );
+    let body = comment + &metrics::merge_expositions(&texts);
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4; charset=utf-8",
+        body: body.into_bytes(),
+    }
 }
 
 /// Dispatch one shard: `POST /shard/run` with the shard spec (plus the
@@ -574,6 +811,7 @@ fn run_shard_on(
     client: &mut http::Client,
     shard: &SweepSpec,
     cfg: &ScheduleConfig,
+    parent_span: u64,
 ) -> Result<Json> {
     let addr = client.addr().to_string();
     let mut body = spec_to_json(shard);
@@ -581,8 +819,17 @@ fn run_shard_on(
         body.set("jobs", Json::Num(cfg.jobs as f64));
     }
     DISPATCHES.inc();
+    // Stamp the dispatch so the worker's root span joins this trace:
+    // its record comes back via `GET /trace` with `remoteParent` set
+    // to the dispatch span id, which is what fleet_trace flow-links.
+    let header = trace::trace_header_value(trace::trace_id(), parent_span);
     let t0 = Instant::now();
-    let (status, text) = client.call("POST", "/shard/run", &body.to_string())?;
+    let (status, text) = client.call_with(
+        "POST",
+        "/shard/run",
+        &[(trace::TRACE_HEADER, header.as_str())],
+        &body.to_string(),
+    )?;
     DISPATCH_NS.record_duration(t0.elapsed());
     if status != 200 {
         let detail = json::parse(&text)
@@ -635,6 +882,7 @@ fn status_json(sh: &Shared) -> Json {
         };
         counts[k] += 1;
     }
+    let offsets = sh.offsets.lock().unwrap();
     let workers: Vec<Json> = sh
         .workers
         .iter()
@@ -644,6 +892,13 @@ fn status_json(sh: &Shared) -> Json {
             o.set("addr", Json::Str(addr.clone()));
             o.set("alive", Json::Bool(core.worker_alive[w]));
             o.set("shards_merged", Json::Num(core.worker_merged[w] as f64));
+            o.set(
+                "clock_offset_ns",
+                match offsets[w] {
+                    Some(off) => Json::Num(off as f64),
+                    None => Json::Null,
+                },
+            );
             o
         })
         .collect();

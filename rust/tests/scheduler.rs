@@ -9,7 +9,13 @@
 //!     worker and the run still converges;
 //! (c) a fleet with nobody listening fails cleanly, as does a run
 //!     whose every worker dies;
-//! (d) `GET /scheduler/status` reports per-shard scheduler state.
+//! (d) `GET /scheduler/status` reports per-shard scheduler state;
+//! (e) trace propagation survives a reassignment — a shard that fails
+//!     on one worker and lands on another keeps one trace id across
+//!     both dispatch attempts, and the stitched fleet trace carries
+//!     both plus the worker-side span flow-linked to its dispatch;
+//! (f) `GET /scheduler/metrics` federates worker expositions exactly
+//!     (fleet value = sum of per-worker scrapes).
 
 use std::io::{Read, Write};
 use std::net::TcpListener;
@@ -328,4 +334,166 @@ fn status_route_reports_scheduler_state() {
         http::call(&addr, "GET", "/healthz", "", Duration::from_secs(5)).unwrap();
     assert_eq!(status, 200);
     assert!(body.contains("coordinator"), "{body}");
+}
+
+// ---------------------------------------------------------------- (e)
+
+#[test]
+fn reassigned_shard_keeps_one_trace_id_across_both_attempts() {
+    use deepnvm::obs::trace;
+    use deepnvm::util::json::Json;
+
+    let gate = Arc::new(AtomicBool::new(false));
+    let (dead_addr, dying) = dying_worker(Arc::clone(&gate));
+    let live = gated_worker(Arc::clone(&gate));
+
+    let cfg = ScheduleConfig {
+        workers: vec![dead_addr, live.local_addr().to_string()],
+        retries: 3,
+        deadline: Duration::from_secs(60),
+        ..ScheduleConfig::default()
+    };
+    let c = Coordinator::new(&grid(), &cfg).unwrap();
+    let run = c.run_seq();
+    let memo = Memo::new();
+    let report = c.run(&memo).unwrap();
+    dying.join().unwrap();
+    let reassigned = report
+        .shards
+        .iter()
+        .position(|s| s.attempts > 1)
+        .expect("the killed worker's shard must have been retried");
+
+    // Both dispatch attempts of the reassigned shard are in the span
+    // ring, tagged with this run, on the one process-wide trace id.
+    let has = |r: &trace::SpanRecord, k: &str, v: u64| {
+        r.args.iter().flatten().any(|&(n, x)| n == k && x == v)
+    };
+    let dispatches: Vec<trace::SpanRecord> = trace::records()
+        .into_iter()
+        .filter(|r| {
+            r.name == "shard.dispatch"
+                && has(r, "run", run)
+                && has(r, "shard", reassigned as u64)
+        })
+        .collect();
+    assert!(
+        dispatches.len() >= 2,
+        "both attempts must be spans: {dispatches:?}"
+    );
+    for d in &dispatches {
+        assert_eq!(d.trace, trace::trace_id(), "one trace id end-to-end");
+    }
+
+    // The worker that completed the shard adopted the header: its
+    // request span's remote parent is one of this run's dispatches.
+    let run_dispatch_ids: Vec<u64> = trace::records()
+        .iter()
+        .filter(|r| r.name == "shard.dispatch" && has(r, "run", run))
+        .map(|r| r.id)
+        .collect();
+    let adopted = trace::records().into_iter().any(|r| {
+        r.name == "http./shard/run"
+            && r.trace == trace::trace_id()
+            && run_dispatch_ids.contains(&r.remote_parent)
+    });
+    assert!(adopted, "a worker span must join the coordinator's trace");
+
+    // The stitched fleet trace carries the same story: one traceId,
+    // both dispatch attempts, the surviving worker's process, and flow
+    // links from dispatch spans to worker spans.
+    let doc = c.fleet_trace();
+    let trace_hex = format!("{:016x}", trace::trace_id());
+    assert_eq!(doc.get("traceId").and_then(Json::as_str), Some(trace_hex.as_str()));
+    assert!(
+        doc.get("workersStitched").and_then(Json::as_u64) >= Some(1),
+        "the survivor must be scraped"
+    );
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let stitched_dispatches = events
+        .iter()
+        .filter(|e| {
+            e.get("name").and_then(Json::as_str) == Some("shard.dispatch")
+                && e.get("pid").and_then(Json::as_u64) == Some(1)
+                && e.get("args").and_then(|a| a.get("run")).and_then(Json::as_u64)
+                    == Some(run)
+                && e.get("args").and_then(|a| a.get("shard")).and_then(Json::as_u64)
+                    == Some(reassigned as u64)
+        })
+        .count();
+    assert!(stitched_dispatches >= 2, "both attempts in the stitched trace");
+    assert!(
+        events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("shard.dispatch.flow")
+        }),
+        "dispatch -> worker flow links must be present"
+    );
+    assert!(
+        events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("http./shard/run")
+                && e.get("pid").and_then(Json::as_u64) > Some(1)
+                && e.get("args").and_then(|a| a.get("trace")).and_then(Json::as_str)
+                    == Some(trace_hex.as_str())
+        }),
+        "a worker-pid span must share the coordinator's trace id"
+    );
+}
+
+// ---------------------------------------------------------------- (f)
+
+#[test]
+fn scheduler_metrics_federate_worker_scrapes_exactly() {
+    // Series owned by this test alone: in-process workers share one
+    // global registry, so a uniquely named counter/histogram gives a
+    // deterministic expectation — each worker scrape reports the same
+    // value v, and the fleet view must show exactly workers x v.
+    let reg = deepnvm::obs::global();
+    reg.counter("test_federation_counter_total").add(7);
+    let h = reg.histogram("test_federation_hist");
+    h.record(1);
+    h.record(100);
+
+    let (w1, w2) = (worker(), worker());
+    let cfg = ScheduleConfig {
+        workers: vec![w1.local_addr().to_string(), w2.local_addr().to_string()],
+        status_addr: Some("127.0.0.1:0".into()),
+        ..ScheduleConfig::default()
+    };
+    let c = Coordinator::new(&grid(), &cfg).unwrap();
+    let addr = c.status_addr().unwrap().to_string();
+    let memo = Memo::new();
+    c.run(&memo).unwrap();
+
+    let (status, body) =
+        http::call(&addr, "GET", "/scheduler/metrics", "", Duration::from_secs(5))
+            .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("merged /metrics from 2/2 workers"), "{body}");
+    // counter: 7 per worker scrape -> 14 fleet-wide, 7 coordinator-local
+    assert!(body.contains("test_federation_counter_total 14"), "{body}");
+    assert!(
+        body.contains("test_federation_counter_total{role=\"coordinator\"} 7"),
+        "{body}"
+    );
+    // histogram: bucket-wise addition of the two worker scrapes
+    // (1 -> le="1", 100 -> le="128"; cumulative doubles per worker)
+    assert!(body.contains("test_federation_hist_bucket{le=\"1\"} 2"), "{body}");
+    assert!(body.contains("test_federation_hist_count 4"), "{body}");
+    assert!(
+        body.contains("test_federation_hist_count{role=\"coordinator\"} 2"),
+        "{body}"
+    );
+
+    // the probes also estimated clock offsets for the status view
+    let (status, body) =
+        http::call(&addr, "GET", "/scheduler/status", "", Duration::from_secs(5))
+            .unwrap();
+    assert_eq!(status, 200);
+    let j = json::parse(&body).unwrap();
+    for w in j.get("workers").unwrap().as_arr().unwrap() {
+        assert!(
+            w.get("clock_offset_ns").unwrap().as_f64().is_some(),
+            "in-process workers report clock_ns, so offsets must be estimated: {body}"
+        );
+    }
 }

@@ -484,3 +484,42 @@ fn metrics_and_trace_expose_live_telemetry_over_http() {
         "no http./solve span recorded"
     );
 }
+
+// ---------------------------------------------------------------- (e)
+
+#[test]
+fn loadgen_soaks_a_live_server_and_reports_quantiles() {
+    use deepnvm::serve::loadgen::{self, LoadgenConfig};
+    use std::time::Duration;
+
+    let memo = leaked_memo();
+    let server = boot(memo);
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        duration: Duration::from_millis(800),
+        concurrency: 2,
+        solve_weight: 3,
+        sweep_weight: 1,
+        p99_ms: None,
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert!(report.requests > 0, "{report:?}");
+    assert_eq!(report.errors, 0, "{report:?}");
+    assert!(report.qps > 0.0, "{report:?}");
+    assert!(
+        report.solve.requests > 0 && report.sweep.requests > 0,
+        "the 3:1 mix must exercise both kinds: {report:?}"
+    );
+    assert!(report.p50_ms <= report.p99_ms, "{report:?}");
+    assert!(report.meets_p99(f64::INFINITY));
+    assert!(!report.meets_p99(0.0), "bucketed quantiles are never zero");
+    assert!(report.render().contains("req/s"));
+
+    // the soak's latency series is scrape-visible on the same registry
+    let (status, text) = get(&server, "/metrics");
+    assert_eq!(status, 200);
+    assert!(
+        text.contains("deepnvm_loadgen_request_duration_ns_count{kind=\"solve\"}"),
+        "{text}"
+    );
+}
