@@ -185,6 +185,21 @@ if sweep is not None:
             f"BENCH_sweep.json: batch_sweep_batches {batches} < 16 "
             "(the batch sweep must be wide enough to prove the axis is free)"
         )
+    # /optimize search: branch-and-bound must prune at least
+    # optimize_prune_ratio_min grid points per point evaluated (the
+    # whole reason the search beats the sweep)
+    opt_evaluated = recorded(sweep, "BENCH_sweep.json", "optimize_points_evaluated")
+    opt_pruned = recorded(sweep, "BENCH_sweep.json", "optimize_points_pruned")
+    opt_floor = acc.get("optimize_prune_ratio_min")
+    if opt_evaluated is not None and opt_pruned is not None and opt_floor is not None:
+        opt_ratio = opt_pruned / max(opt_evaluated, 1)
+        if opt_ratio < opt_floor:
+            failures.append(
+                "BENCH_sweep.json: optimize pruned/evaluated ratio "
+                f"{opt_ratio:.1f} < required {opt_floor} "
+                f"({opt_pruned} pruned vs {opt_evaluated} evaluated)"
+            )
+    recorded(sweep, "BENCH_sweep.json", "optimize_ms")
     # Timing fields are now sourced from the obs histograms; they must
     # be recorded (non-null) and the memoized paths must actually win.
     recorded(sweep, "BENCH_sweep.json", "parallel_ms")

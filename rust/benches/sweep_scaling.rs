@@ -148,6 +148,42 @@ fn main() {
     );
     assert_eq!(batch_warm_traffic, 0, "warm batch sweep must not re-lower");
 
+    // Optimize: branch-and-bound argmin over a wide implicit grid. The
+    // search returns the exhaustive argmin bit-for-bit (tests prove
+    // that) while materializing a fraction of the grid — the pruning
+    // ratio recorded here is CI-gated at >= 10x.
+    let opt_spec = SweepSpec {
+        techs: MemTech::ALL.to_vec(),
+        capacities_mb: if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8] },
+        dnns: batch_spec.dnns.clone(),
+        phases: Phase::ALL.to_vec(),
+        batches: batch_spec.batches.clone(),
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let opt_req = deepnvm::sweep::OptimizeRequest {
+        spec: opt_spec,
+        objective: deepnvm::sweep::OptObjective::Edp,
+        area_max_mm2: None,
+        leakage_max_w: None,
+        frontier: false,
+    };
+    let opt_memo = Memo::new();
+    let t_opt_start = Instant::now();
+    let opt = bench::time_into("bench_optimize_search", || {
+        deepnvm::sweep::optimize::run(&opt_req, jobs, &opt_memo).expect("optimize bench")
+    });
+    let t_optimize = t_opt_start.elapsed().as_secs_f64();
+    assert!(opt.winner.is_some(), "the optimize bench grid must yield a winner");
+    println!(
+        "  optimize ({} points) {:>8.2} ms: {} evaluated, {} pruned ({:.0}x)",
+        opt.points_total,
+        t_optimize * 1e3,
+        opt.points_evaluated,
+        opt.points_pruned,
+        opt.points_pruned as f64 / opt.points_evaluated.max(1) as f64
+    );
+
     // Steady-state warm-grid query rate (the serving path the ROADMAP
     // cares about: many scenarios against one resident grid).
     let mut b = if quick { Bench::quick() } else { Bench::new() };
@@ -173,6 +209,9 @@ fn main() {
     // batches the axis carries
     acc.set("batch_sweep_traffic_evals_max", Json::Num(workload_pairs as f64));
     acc.set("batch_sweep_warm_rerun_traffic_evals_max", Json::Num(0.0));
+    // branch-and-bound must prune at least 10 grid points for every
+    // one it evaluates on the wide search grid
+    acc.set("optimize_prune_ratio_min", Json::Num(10.0));
     j.set("acceptance", acc);
     j.set("quick", Json::Bool(quick));
     j.set("grid_points", Json::Num(n_points as f64));
@@ -206,6 +245,10 @@ fn main() {
     );
     set_hist_ms(&mut j, "batch_sweep_cold_ms", "bench_batch_sweep_cold");
     set_hist_ms(&mut j, "batch_sweep_warm_ms", "bench_batch_sweep_warm");
+    set_hist_ms(&mut j, "optimize_ms", "bench_optimize_search");
+    j.set("optimize_grid_points", Json::Num(opt.points_total as f64));
+    j.set("optimize_points_evaluated", Json::Num(opt.points_evaluated as f64));
+    j.set("optimize_points_pruned", Json::Num(opt.points_pruned as f64));
 
     // Algorithm-1 solve latency across every cold sweep above, from
     // the instrumentation inside sweep::memo itself.

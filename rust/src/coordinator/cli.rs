@@ -40,10 +40,16 @@ DESIGN-SPACE ENGINE:
                 The batch axis is closed-form: traffic coefficients are
                 lowered once per workload x phase, so wide --batches
                 sweeps cost O(batches) folds, not O(batches) lowerings
+  optimize      Search the implicit grid instead of sweeping it:
+                branch-and-bound with closed-form lower bounds finds
+                the argmin of --objective under --area-max/--leak-max
+                budgets, bit-identical to the exhaustive answer while
+                evaluating a fraction of the grid (--frontier returns
+                the Pareto frontier of the feasible set instead)
   serve         Long-lived HTTP server over the same engine: scenario
-                queries at cache-hit latency (POST /solve, /sweep) and
-                shardable memo exchange (GET /memo/export, POST
-                /memo/merge, POST /shard/run)
+                queries at cache-hit latency (POST /solve, /sweep,
+                /optimize) and shardable memo exchange (GET
+                /memo/export, POST /memo/merge, POST /shard/run)
   coordinate    Multi-host scheduler: split a grid into cost-balanced
                 shards, assign them to a fleet of `deepnvm serve`
                 workers, retry stragglers/dead workers, merge exports,
@@ -51,10 +57,11 @@ DESIGN-SPACE ENGINE:
                 carry an X-Deepnvm-Trace header; --trace-out writes a
                 stitched fleet trace and --status-addr also serves
                 GET /scheduler/metrics (federated worker /metrics)
-  loadgen       Closed-loop soak harness: drive a mixed /solve+/sweep
-                workload at a running server over keep-alive
-                connections, report QPS and p50/p99, and optionally
-                gate on --p99-ms (nonzero exit on breach)
+  loadgen       Closed-loop soak harness: drive a mixed
+                /solve+/sweep+/optimize workload at a running server
+                over keep-alive connections, report QPS and p50/p99,
+                and optionally gate on --p99-ms (nonzero exit on
+                breach)
 
 OTHER:
   e2e-train     Train the TinyCNN artifact via PJRT (needs `make artifacts`)
@@ -86,6 +93,17 @@ SWEEP OPTIONS:
   --memo-cap N    LRU-bound the memo's point layer to N entries (keeps
                   sweep_memo.json from growing without limit)
 
+OPTIMIZE OPTIONS (plus the sweep axis flags above):
+  --objective O   edp|edap|energy|latency|capacity (default: edp;
+                  capacity is maximized, the rest are minimized)
+  --area-max MM2  feasibility budget: tuned cache area must not
+                  exceed MM2 mm²
+  --leak-max W    feasibility budget: tuned leakage power must not
+                  exceed W watts
+  --frontier      return the EDP/area/capacity Pareto frontier of the
+                  feasible set instead of a scalar winner
+  --jobs, --out, --cold, --memo-cap as above
+
 SERVE OPTIONS:
   --addr A:P      bind address (default 127.0.0.1:8090; :0 = ephemeral)
   --prewarm       solve the full paper grid before accepting traffic,
@@ -107,7 +125,7 @@ LOADGEN OPTIONS:
   --duration S    run length in seconds (default 10)
   --concurrency N worker threads, one keep-alive connection each
                   (default 4)
-  --mix SV:SW     solve:sweep request ratio (default 9:1)
+  --mix SV:SW[:SO] solve:sweep[:optimize] request ratio (default 9:1)
   --p99-ms MS     fail (exit 1) when overall p99 exceeds MS
 
 EXAMPLE:
@@ -168,10 +186,18 @@ pub struct CliOptions {
     pub duration_secs: u64,
     /// Loadgen worker threads (`--concurrency`).
     pub concurrency: usize,
-    /// Loadgen solve:sweep ratio (`--mix`).
+    /// Loadgen solve:sweep[:optimize] ratio (`--mix`).
     pub mix: String,
     /// Loadgen p99 gate in milliseconds (`--p99-ms`).
     pub p99_ms: Option<f64>,
+    /// Search objective for `optimize` (`--objective`).
+    pub objective: crate::sweep::OptObjective,
+    /// Area budget in mm² for `optimize` (`--area-max`).
+    pub area_max: Option<f64>,
+    /// Leakage budget in watts for `optimize` (`--leak-max`).
+    pub leak_max: Option<f64>,
+    /// Pareto-frontier mode for `optimize` (`--frontier`).
+    pub frontier: bool,
 }
 
 impl Default for CliOptions {
@@ -206,6 +232,10 @@ impl Default for CliOptions {
             concurrency: 4,
             mix: "9:1".into(),
             p99_ms: None,
+            objective: crate::sweep::OptObjective::Edp,
+            area_max: None,
+            leak_max: None,
+            frontier: false,
         }
     }
 }
@@ -383,6 +413,28 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
                 }
                 o.p99_ms = Some(ms);
             }
+            "--objective" => {
+                o.objective = crate::sweep::spec::parse_objective(value()?)?;
+            }
+            "--area-max" => {
+                let a: f64 = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --area-max: {e}"))?;
+                if !a.is_finite() || a <= 0.0 {
+                    bail!("--area-max must be a positive number of mm²");
+                }
+                o.area_max = Some(a);
+            }
+            "--leak-max" => {
+                let l: f64 = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --leak-max: {e}"))?;
+                if !l.is_finite() || l <= 0.0 {
+                    bail!("--leak-max must be a positive number of watts");
+                }
+                o.leak_max = Some(l);
+            }
+            "--frontier" => o.frontier = true,
             other => bail!("unknown option '{other}' (try: deepnvm help)"),
         }
     }
@@ -649,17 +701,63 @@ fn coordinate_cmd(o: &CliOptions, trace_written: &mut bool) -> Result<()> {
     Ok(())
 }
 
+/// `deepnvm optimize`: branch-and-bound search over the implicit grid,
+/// with the same memo lifecycle as `sweep` (warm-load the on-disk
+/// cache unless --cold, persist afterwards) so repeated searches reuse
+/// every circuit solve the search did materialize.
+fn optimize_cmd(o: &CliOptions) -> Result<()> {
+    let req = crate::sweep::OptimizeRequest {
+        spec: sweep_spec_from(o)?,
+        objective: o.objective,
+        area_max_mm2: o.area_max,
+        leakage_max_w: o.leak_max,
+        frontier: o.frontier,
+    };
+    let store = Store::new(&o.out);
+    let memo = crate::sweep::memo::global();
+    memo.set_point_capacity(o.memo_cap);
+    if !o.cold {
+        match memo.load_from(&store) {
+            Ok(n) if n > 0 => {
+                eprintln!("optimize: warmed memo with {n} cached entries");
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("warning: ignoring memo cache: {e}"),
+        }
+    }
+    let resp = crate::sweep::optimize::run(&req, o.jobs, memo)?;
+    println!(
+        "optimize: {} over {} implicit point(s): evaluated {}, pruned {}",
+        req.objective.name(),
+        resp.points_total,
+        resp.points_evaluated,
+        resp.points_pruned
+    );
+    println!("{}", crate::sweep::spec::optimize_response_to_json(&resp).to_pretty());
+    if o.cold {
+        if let Err(e) = memo.load_from(&store) {
+            eprintln!("warning: ignoring memo cache: {e}");
+        }
+    }
+    if let Err(e) = memo.save_to(&store) {
+        eprintln!("warning: could not persist sweep memo: {e}");
+    }
+    Ok(())
+}
+
 /// `deepnvm loadgen`: soak a running server and gate on the report.
 /// Fails on any transport error, on an idle run, and on a `--p99-ms`
 /// breach — so CI can use the exit code directly.
 fn loadgen_cmd(o: &CliOptions) -> Result<()> {
-    let (solve_weight, sweep_weight) = crate::serve::loadgen::parse_mix(&o.mix)?;
+    let (solve_weight, sweep_weight, optimize_weight) =
+        crate::serve::loadgen::parse_mix(&o.mix)?;
     let cfg = crate::serve::LoadgenConfig {
         addr: o.addr.clone(),
         duration: std::time::Duration::from_secs(o.duration_secs),
         concurrency: o.concurrency,
         solve_weight,
         sweep_weight,
+        optimize_weight,
         p99_ms: o.p99_ms,
     };
     let report = crate::serve::loadgen::run(&cfg)?;
@@ -774,6 +872,13 @@ pub fn run_cli(args: &[String]) -> i32 {
                 }
             }
         }
+        "optimize" => match optimize_cmd(&o) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
         "coordinate" => match coordinate_cmd(&o, &mut fleet_trace_written) {
             Ok(()) => 0,
             Err(e) => {
@@ -1017,8 +1122,38 @@ mod tests {
         assert!(parse_args(&sv(&["loadgen", "--duration", "0"])).is_err());
         assert!(parse_args(&sv(&["loadgen", "--concurrency", "0"])).is_err());
         assert!(parse_args(&sv(&["loadgen", "--mix", "0:0"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--mix", "0:0:0"])).is_err());
         assert!(parse_args(&sv(&["loadgen", "--mix", "nine"])).is_err());
         assert!(parse_args(&sv(&["loadgen", "--p99-ms", "-1"])).is_err());
+
+        // the optimize kind rides the same flag
+        let o = parse_args(&sv(&["loadgen", "--mix", "8:1:1"])).unwrap();
+        assert_eq!(o.mix, "8:1:1");
+    }
+
+    #[test]
+    fn parses_optimize_options() {
+        let o = parse_args(&sv(&[
+            "optimize", "--objective", "edap", "--area-max", "25", "--leak-max",
+            "0.5", "--frontier", "--techs", "stt,sot", "--caps", "1,2",
+        ]))
+        .unwrap();
+        assert_eq!(o.command, "optimize");
+        assert_eq!(o.objective, crate::sweep::OptObjective::Edap);
+        assert_eq!(o.area_max, Some(25.0));
+        assert_eq!(o.leak_max, Some(0.5));
+        assert!(o.frontier);
+        assert_eq!(o.caps, vec![1, 2]);
+
+        // defaults
+        let o = parse_args(&sv(&["optimize"])).unwrap();
+        assert_eq!(o.objective, crate::sweep::OptObjective::Edp);
+        assert!(o.area_max.is_none() && o.leak_max.is_none() && !o.frontier);
+
+        assert!(parse_args(&sv(&["optimize", "--objective", "speed"])).is_err());
+        assert!(parse_args(&sv(&["optimize", "--area-max", "0"])).is_err());
+        assert!(parse_args(&sv(&["optimize", "--area-max", "nan"])).is_err());
+        assert!(parse_args(&sv(&["optimize", "--leak-max", "-2"])).is_err());
     }
 
     #[test]

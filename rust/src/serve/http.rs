@@ -143,10 +143,26 @@ impl Response {
         }
     }
 
-    /// A JSON error body: `{"error": "..."}`.
+    /// A JSON error body in the v1 typed envelope with the `kind`
+    /// derived from the status code:
+    /// `{"error": {"code": 404, "kind": "not_found", "message": "…"}}`.
+    /// Routes with a more specific classification (uncalibrated node,
+    /// infeasible budgets, …) use [`Response::error_kind`] directly.
     pub fn error(status: u16, msg: &str) -> Response {
+        Response::error_kind(status, default_error_kind(status), msg)
+    }
+
+    /// The typed error envelope with an explicit machine-readable
+    /// `kind`. Kinds are part of the v1 API contract: clients branch on
+    /// them, so they must stay stable across releases (the human
+    /// `message` may change freely).
+    pub fn error_kind(status: u16, kind: &str, msg: &str) -> Response {
+        let mut e = Json::obj();
+        e.set("code", Json::Num(status as f64));
+        e.set("kind", Json::Str(kind.to_string()));
+        e.set("message", Json::Str(msg.to_string()));
         let mut j = Json::obj();
-        j.set("error", Json::Str(msg.to_string()));
+        j.set("error", e);
         Response::json(status, &j)
     }
 
@@ -161,13 +177,31 @@ impl Response {
         let conn = if keep_alive { "keep-alive" } else { "close" };
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+             Deepnvm-Api-Version: {}\r\nConnection: {conn}\r\n\r\n",
             self.status,
             status_text(self.status),
             self.content_type,
-            self.body.len()
+            self.body.len(),
+            crate::sweep::memo::MODEL_VERSION
         )?;
         w.write_all(&self.body)
+    }
+}
+
+/// The stable error `kind` implied by a status code alone — what
+/// [`Response::error`] stamps into the envelope when the route has no
+/// more specific classification.
+pub fn default_error_kind(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        409 => "conflict",
+        413 => "payload_too_large",
+        422 => "invalid_request",
+        500 => "internal",
+        _ => "error",
     }
 }
 
@@ -801,7 +835,11 @@ mod tests {
         Response::error(404, "nope").write_to(&mut out).unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
-        assert!(s.contains("\"error\": \"nope\""));
+        let version = format!("Deepnvm-Api-Version: {}\r\n", crate::sweep::memo::MODEL_VERSION);
+        assert!(s.contains(&version), "{s}");
+        assert!(s.contains("\"code\": 404"), "{s}");
+        assert!(s.contains("\"kind\": \"not_found\""), "{s}");
+        assert!(s.contains("\"message\": \"nope\""), "{s}");
     }
 
     #[test]

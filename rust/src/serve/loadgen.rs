@@ -3,12 +3,15 @@
 //!
 //! `N` worker threads each hold one keep-alive connection
 //! ([`super::http::Client`]) and drive a mixed `POST /solve` +
-//! `POST /sweep` workload against `--addr` for `--duration` seconds.
-//! The mix is a ratio (`--mix 9:1` = nine solves per sweep), rotated
-//! deterministically per thread so the blend holds at any concurrency.
+//! `POST /sweep` + `POST /optimize` workload against `--addr` for
+//! `--duration` seconds. The mix is a ratio (`--mix 9:1` = nine solves
+//! per sweep; `--mix 8:1:1` adds one branch-and-bound `/optimize` per
+//! cycle — the heavy-query path), rotated deterministically per thread
+//! so the blend holds at any concurrency.
 //!
 //! Latencies land in the same registry `GET /metrics` serves, as
-//! `deepnvm_loadgen_request_duration_ns{kind="solve"|"sweep"}` — the
+//! `deepnvm_loadgen_request_duration_ns{kind="solve"|"sweep"|"optimize"}`
+//! — the
 //! report's quantiles are computed from those histograms (via
 //! before/after [`HistSnapshot::minus`] deltas, so a loadgen run in a
 //! long-lived process reports only its own window), which keeps the
@@ -38,6 +41,8 @@ static SOLVE_NS: LazyHistogram =
     LazyHistogram::new("deepnvm_loadgen_request_duration_ns{kind=\"solve\"}");
 static SWEEP_NS: LazyHistogram =
     LazyHistogram::new("deepnvm_loadgen_request_duration_ns{kind=\"sweep\"}");
+static OPTIMIZE_NS: LazyHistogram =
+    LazyHistogram::new("deepnvm_loadgen_request_duration_ns{kind=\"optimize\"}");
 static ERRORS: LazyCounter = LazyCounter::new("deepnvm_loadgen_errors_total");
 
 /// Configuration for one loadgen run (the CLI's `loadgen --addr
@@ -54,6 +59,8 @@ pub struct LoadgenConfig {
     pub solve_weight: u32,
     /// Sweep requests per mix cycle.
     pub sweep_weight: u32,
+    /// Optimize (branch-and-bound) requests per mix cycle.
+    pub optimize_weight: u32,
     /// Overall p99 gate in milliseconds; `None` disables gating.
     pub p99_ms: Option<f64>,
 }
@@ -66,20 +73,29 @@ impl Default for LoadgenConfig {
             concurrency: 4,
             solve_weight: 9,
             sweep_weight: 1,
+            optimize_weight: 0,
             p99_ms: None,
         }
     }
 }
 
-/// Parse a `--mix` ratio like `"9:1"` into (solve, sweep) weights.
-pub fn parse_mix(s: &str) -> Result<(u32, u32)> {
-    let (sv, sw) = s
-        .split_once(':')
-        .with_context(|| format!("--mix wants SOLVE:SWEEP (e.g. 9:1), got {s:?}"))?;
-    let sv: u32 = sv.trim().parse().with_context(|| format!("bad solve weight {sv:?}"))?;
-    let sw: u32 = sw.trim().parse().with_context(|| format!("bad sweep weight {sw:?}"))?;
-    ensure!(sv + sw > 0, "--mix {s:?} would send no requests");
-    Ok((sv, sw))
+/// Parse a `--mix` ratio like `"9:1"` or `"8:1:1"` into
+/// (solve, sweep, optimize) weights; the optimize weight defaults to 0
+/// so the historical two-kind form keeps meaning what it always meant.
+pub fn parse_mix(s: &str) -> Result<(u32, u32, u32)> {
+    let mut parts = s.split(':');
+    let mut next = |what: &str| -> Result<u32> {
+        let p = parts
+            .next()
+            .with_context(|| format!("--mix wants SOLVE:SWEEP[:OPTIMIZE] (e.g. 9:1), got {s:?}"))?;
+        p.trim().parse().with_context(|| format!("bad {what} weight {p:?}"))
+    };
+    let sv = next("solve")?;
+    let sw = next("sweep")?;
+    let so = if s.matches(':').count() >= 2 { next("optimize")? } else { 0 };
+    ensure!(parts.next().is_none(), "--mix {s:?} has too many components");
+    ensure!(sv + sw + so > 0, "--mix {s:?} would send no requests");
+    Ok((sv, sw, so))
 }
 
 /// Latency summary for one request kind.
@@ -104,6 +120,7 @@ pub struct LoadgenReport {
     pub p99_ms: f64,
     pub solve: KindStats,
     pub sweep: KindStats,
+    pub optimize: KindStats,
     pub wall: Duration,
 }
 
@@ -113,9 +130,10 @@ impl LoadgenReport {
         self.p99_ms <= limit_ms
     }
 
-    /// The human report `deepnvm loadgen` prints.
+    /// The human report `deepnvm loadgen` prints. The optimize line
+    /// only appears when the mix actually sent optimize requests.
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "loadgen: {} requests in {:.1}s ({:.0} req/s), {} errors\n\
              loadgen: overall  p50 {:.3} ms  p99 {:.3} ms\n\
              loadgen: solve    {} requests  p50 {:.3} ms  p99 {:.3} ms\n\
@@ -132,7 +150,14 @@ impl LoadgenReport {
             self.sweep.requests,
             self.sweep.p50_ms,
             self.sweep.p99_ms,
-        )
+        );
+        if self.optimize.requests > 0 {
+            out.push_str(&format!(
+                "\nloadgen: optimize {} requests  p50 {:.3} ms  p99 {:.3} ms",
+                self.optimize.requests, self.optimize.p50_ms, self.optimize.p99_ms,
+            ));
+        }
+        out
     }
 }
 
@@ -156,6 +181,20 @@ fn sweep_bodies() -> Vec<String> {
     ]
 }
 
+/// `/optimize` bodies: small workload grids, so a soak exercises the
+/// branch-and-bound path (column solves, bounds, incumbent search)
+/// at memo-hit steady state rather than re-solving circuits forever.
+fn optimize_bodies() -> Vec<String> {
+    vec![
+        r#"{"techs": ["stt", "sot"], "caps_mb": [1, 2], "dnns": ["AlexNet"],
+            "phases": ["inference"], "batches": [1, 4], "objective": "edp", "jobs": 1}"#
+            .to_string(),
+        r#"{"techs": ["stt"], "caps_mb": [1, 2], "dnns": ["AlexNet"],
+            "phases": ["training"], "batches": [1, 4], "objective": "energy", "jobs": 1}"#
+            .to_string(),
+    ]
+}
+
 fn kind_stats(delta: &crate::obs::HistSnapshot) -> KindStats {
     KindStats {
         requests: delta.count,
@@ -171,7 +210,7 @@ fn kind_stats(delta: &crate::obs::HistSnapshot) -> KindStats {
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     ensure!(cfg.concurrency > 0, "--concurrency must be at least 1");
     ensure!(
-        cfg.solve_weight + cfg.sweep_weight > 0,
+        cfg.solve_weight + cfg.sweep_weight + cfg.optimize_weight > 0,
         "the mix would send no requests"
     );
     match http::call(&cfg.addr, "GET", "/healthz", "", PREFLIGHT_TIMEOUT) {
@@ -182,29 +221,36 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
 
     let solve_before = SOLVE_NS.handle().snapshot();
     let sweep_before = SWEEP_NS.handle().snapshot();
+    let optimize_before = OPTIMIZE_NS.handle().snapshot();
     let errors_before = ERRORS.value();
     let solves = solve_bodies();
     let sweeps = sweep_bodies();
-    let cycle = (cfg.solve_weight + cfg.sweep_weight) as u64;
+    let optimizes = optimize_bodies();
+    let cycle = (cfg.solve_weight + cfg.sweep_weight + cfg.optimize_weight) as u64;
     let started = Instant::now();
     let deadline = started + cfg.duration;
 
     std::thread::scope(|scope| {
         for t in 0..cfg.concurrency {
-            let (solves, sweeps) = (&solves, &sweeps);
+            let (solves, sweeps, optimizes) = (&solves, &sweeps, &optimizes);
             scope.spawn(move || {
                 let mut client = http::Client::new(&cfg.addr, REQUEST_TIMEOUT);
                 // Offset each thread's rotation so the fleet of
                 // threads interleaves kinds instead of phase-locking.
                 let mut i = t as u64;
                 while Instant::now() < deadline {
-                    let is_solve = i % cycle < cfg.solve_weight as u64;
-                    let (path, body, hist) = if is_solve {
+                    // Position within one mix cycle: solves first,
+                    // then sweeps, then optimizes.
+                    let pos = i % cycle;
+                    let (path, body, hist) = if pos < cfg.solve_weight as u64 {
                         let b = &solves[(i / cycle) as usize % solves.len()];
                         ("/solve", b, &SOLVE_NS)
-                    } else {
+                    } else if pos < (cfg.solve_weight + cfg.sweep_weight) as u64 {
                         let b = &sweeps[(i / cycle) as usize % sweeps.len()];
                         ("/sweep", b, &SWEEP_NS)
+                    } else {
+                        let b = &optimizes[(i / cycle) as usize % optimizes.len()];
+                        ("/optimize", b, &OPTIMIZE_NS)
                     };
                     let t0 = Instant::now();
                     match client.call("POST", path, body) {
@@ -220,12 +266,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let wall = started.elapsed();
     let solve_delta = SOLVE_NS.handle().snapshot().minus(&solve_before);
     let sweep_delta = SWEEP_NS.handle().snapshot().minus(&sweep_before);
-    // The overall quantiles come from federating the two per-kind
-    // windows — the same bucket-wise merge `/scheduler/metrics` uses.
+    let optimize_delta = OPTIMIZE_NS.handle().snapshot().minus(&optimize_before);
+    // The overall quantiles come from federating the per-kind windows
+    // — the same bucket-wise merge `/scheduler/metrics` uses.
     let overall = Histogram::new();
     overall.merge_snapshot(&solve_delta);
     overall.merge_snapshot(&sweep_delta);
-    let requests = solve_delta.count + sweep_delta.count;
+    overall.merge_snapshot(&optimize_delta);
+    let requests = solve_delta.count + sweep_delta.count + optimize_delta.count;
     Ok(LoadgenReport {
         requests,
         errors: ERRORS.value() - errors_before,
@@ -234,6 +282,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         p99_ms: overall.quantile(0.99) as f64 / 1e6,
         solve: kind_stats(&solve_delta),
         sweep: kind_stats(&sweep_delta),
+        optimize: kind_stats(&optimize_delta),
         wall,
     })
 }
@@ -244,17 +293,21 @@ mod tests {
 
     #[test]
     fn mix_parses_and_rejects_nonsense() {
-        assert_eq!(parse_mix("9:1").unwrap(), (9, 1));
-        assert_eq!(parse_mix("1:0").unwrap(), (1, 0));
-        assert_eq!(parse_mix(" 3 : 2 ").unwrap(), (3, 2));
+        assert_eq!(parse_mix("9:1").unwrap(), (9, 1, 0));
+        assert_eq!(parse_mix("1:0").unwrap(), (1, 0, 0));
+        assert_eq!(parse_mix(" 3 : 2 ").unwrap(), (3, 2, 0));
+        assert_eq!(parse_mix("8:1:1").unwrap(), (8, 1, 1));
+        assert_eq!(parse_mix("0:0:5").unwrap(), (0, 0, 5));
         assert!(parse_mix("9").is_err());
         assert!(parse_mix("a:b").is_err());
         assert!(parse_mix("0:0").is_err());
+        assert!(parse_mix("0:0:0").is_err());
+        assert!(parse_mix("1:2:3:4").is_err());
     }
 
     #[test]
     fn report_renders_and_gates() {
-        let r = LoadgenReport {
+        let mut r = LoadgenReport {
             requests: 100,
             errors: 0,
             qps: 50.0,
@@ -262,6 +315,7 @@ mod tests {
             p99_ms: 4.0,
             solve: KindStats { requests: 90, p50_ms: 1.0, p99_ms: 4.0 },
             sweep: KindStats { requests: 10, p50_ms: 2.0, p99_ms: 4.0 },
+            optimize: KindStats { requests: 0, p50_ms: 0.0, p99_ms: 0.0 },
             wall: Duration::from_secs(2),
         };
         assert!(r.meets_p99(4.0));
@@ -269,6 +323,11 @@ mod tests {
         let text = r.render();
         assert!(text.contains("100 requests"), "{text}");
         assert!(text.contains("p99 4.000 ms"), "{text}");
+        // a two-kind mix stays a two-line per-kind summary
+        assert!(!text.contains("optimize"), "{text}");
+        r.optimize = KindStats { requests: 5, p50_ms: 3.0, p99_ms: 6.0 };
+        let text = r.render();
+        assert!(text.contains("optimize 5 requests"), "{text}");
     }
 
     #[test]
@@ -286,8 +345,9 @@ mod tests {
     fn body_pools_are_nonempty_and_distinct() {
         let sv = solve_bodies();
         let sw = sweep_bodies();
-        assert!(sv.len() >= 4 && sw.len() >= 2);
-        for b in sv.iter().chain(sw.iter()) {
+        let so = optimize_bodies();
+        assert!(sv.len() >= 4 && sw.len() >= 2 && so.len() >= 2);
+        for b in sv.iter().chain(sw.iter()).chain(so.iter()) {
             assert!(crate::util::json::parse(b).is_ok(), "{b}");
         }
     }

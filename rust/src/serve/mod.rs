@@ -116,8 +116,8 @@ pub fn start(cfg: &ServeConfig, memo: &'static Memo) -> Result<Server> {
 pub fn run(cfg: &ServeConfig) -> Result<()> {
     let server = start(cfg, memo::global())?;
     println!(
-        "deepnvm serve: listening on http://{} (GET / for usage; /healthz, \
-         /memo/stats, /memo/export, /metrics, /trace; POST /solve, /sweep, \
+        "deepnvm serve: listening on http://{} (GET / for the route table; /healthz, \
+         /memo/stats, /memo/export, /metrics, /trace; POST /solve, /sweep, /optimize, \
          /memo/merge, /shard/run)",
         server.local_addr()
     );

@@ -2,16 +2,25 @@
 //!
 //! | route              | method | body / query                                   |
 //! |--------------------|--------|------------------------------------------------|
-//! | `/`                | GET    | plain-text usage                               |
-//! | `/healthz`         | GET    | liveness + uptime + request counter            |
+//! | `/`                | GET    | generated route table (the API reference)      |
+//! | `/healthz`         | GET    | liveness + uptime + `api_version`              |
 //! | `/memo/stats`      | GET    | cache population and solve/eval counters       |
 //! | `/solve`           | POST   | one grid point -> tuned config (+ eval)        |
 //! | `/sweep`           | POST   | `SweepSpec` JSON -> spec-ordered report rows   |
+//! | `/optimize`        | POST   | `OptimizeRequest` -> branch-and-bound winner   |
 //! | `/memo/export`     | GET    | full memo document (shard exchange format)     |
 //! | `/memo/merge`      | POST   | memo document -> per-entry merge accounting    |
 //! | `/shard/run`       | POST   | shard `SweepSpec` -> run into memo + export    |
 //! | `/metrics`         | GET    | Prometheus text exposition of the obs registry |
 //! | `/trace`           | GET    | span ring as Chrome trace-event JSON           |
+//!
+//! The v1 API contract: every POST body goes through one
+//! [`parse_body`] layer; every 4xx/5xx is the typed envelope
+//! `{"error": {"code", "kind", "message"}}` with a stable
+//! machine-readable `kind` ([`error_response`]); every response —
+//! success or error — carries a `Deepnvm-Api-Version` header bound to
+//! [`memo::MODEL_VERSION`] (stamped in `http::Response::write_to_with`,
+//! so no handler can forget it).
 //!
 //! `/sweep` renders through the exact same report pipeline as the CLI
 //! (`reports::sweep_report_with`, `fig9_with`, `fig10_with`), so the
@@ -24,31 +33,97 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::reports::{self, Report};
+use crate::device::UncalibratedNode;
 use crate::obs::{self, Counter, Registry};
 use crate::sweep::spec::{
-    parse_phase, parse_tech, resolve_dnn, spec_from_json, DEFAULT_CAPACITIES_MB,
-    MAX_BATCH, MAX_CAPACITY_MB,
+    optimize_request_from_json, optimize_response_to_json, parse_phase, parse_tech, resolve_dnn,
+    spec_from_json, DEFAULT_CAPACITIES_MB, MAX_BATCH, MAX_CAPACITY_MB,
 };
-use crate::sweep::{self, memo, GridPoint, Memo, WorkloadPoint};
+use crate::sweep::{self, memo, GridPoint, Memo, SweepSpec, WorkloadPoint};
 use crate::util::json::Json;
 
 use super::http::{Request, Response};
 use super::shard;
 
-const USAGE: &str = "\
-deepnvm serve — resident sweep-query server
+/// One row of the API reference. Dispatch's 405 matrix and the
+/// generated `GET /` table both derive from [`ROUTES`], so a new route
+/// self-documents by construction.
+struct RouteInfo {
+    method: &'static str,
+    path: &'static str,
+    request: &'static str,
+    response: &'static str,
+}
 
-  GET  /healthz           liveness
-  GET  /memo/stats        cache population + solve/eval counters
-  POST /solve             {\"tech\": \"stt\", \"capacity_mb\": 3, \"dnn\"?, \"phase\"?, \"batch\"?}
-  POST /sweep             SweepSpec JSON (+ \"jobs\", \"pareto\", \"report\": sweep|fig9|fig10)
-  GET  /memo/export       full memo document (the sweep_memo.json format)
-  POST /memo/merge        memo document from a shard worker
-  POST /shard/run         SweepSpec JSON: run the shard into the resident memo,
-                          return the export (the `deepnvm coordinate` protocol)
-  GET  /metrics           Prometheus text: route latencies, memo hit/miss, solves
-  GET  /trace             span ring as Chrome trace-event JSON (chrome://tracing)
-";
+const ROUTES: [RouteInfo; 11] = [
+    RouteInfo {
+        method: "GET",
+        path: "/",
+        request: "-",
+        response: "this route table + the error-envelope and versioning contract",
+    },
+    RouteInfo {
+        method: "GET",
+        path: "/healthz",
+        request: "-",
+        response: "liveness: status, uptime_s, requests, clock_ns, api_version",
+    },
+    RouteInfo {
+        method: "GET",
+        path: "/memo/stats",
+        request: "-",
+        response: "cache population + solve/eval counters",
+    },
+    RouteInfo {
+        method: "POST",
+        path: "/solve",
+        request: "{tech, capacity_mb, node_nm?, dnn?, phase?, batch?}",
+        response: "tuned config for one grid point (+ workload eval)",
+    },
+    RouteInfo {
+        method: "POST",
+        path: "/sweep",
+        request: "SweepSpec (+ jobs?, pareto?, render?, report?: sweep|fig9|fig10)",
+        response: "spec-ordered report rows, byte-identical to the CLI CSV",
+    },
+    RouteInfo {
+        method: "POST",
+        path: "/optimize",
+        request: "SweepSpec + objective?: edp|edap|energy|latency|capacity, \
+                  area_max_mm2?, leakage_max_w?, frontier?, jobs?",
+        response: "branch-and-bound winner (or Pareto frontier) + search accounting",
+    },
+    RouteInfo {
+        method: "GET",
+        path: "/memo/export",
+        request: "-",
+        response: "full memo document (the sweep_memo.json shard exchange format)",
+    },
+    RouteInfo {
+        method: "POST",
+        path: "/memo/merge",
+        request: "memo document",
+        response: "per-entry merge accounting",
+    },
+    RouteInfo {
+        method: "POST",
+        path: "/shard/run",
+        request: "SweepSpec (+ jobs?)",
+        response: "run the shard into the resident memo, return the scoped export",
+    },
+    RouteInfo {
+        method: "GET",
+        path: "/metrics",
+        request: "-",
+        response: "Prometheus text: route latencies, memo hit/miss, optimize pruning",
+    },
+    RouteInfo {
+        method: "GET",
+        path: "/trace",
+        request: "-",
+        response: "span ring as Chrome trace-event JSON (chrome://tracing)",
+    },
+];
 
 /// Shared state behind every route: the resident memo cache plus the
 /// metric registry requests land in. One instance lives for the whole
@@ -127,35 +202,23 @@ pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
 
 fn dispatch(ctx: &ServerCtx, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/") => Response::text(200, USAGE),
+        ("GET", "/") => route_index(),
         ("GET", "/healthz") => healthz(ctx),
         ("GET", "/memo/stats") => memo_stats(ctx),
         ("POST", "/solve") => solve(ctx, req),
         ("POST", "/sweep") => sweep_query(ctx, req),
+        ("POST", "/optimize") => optimize_query(ctx, req),
         ("GET", "/memo/export") => shard::export(ctx, req),
         ("POST", "/memo/merge") => shard::merge(ctx, req),
         ("POST", "/shard/run") => shard_run(ctx, req),
         ("GET", "/metrics") => metrics_text(ctx),
         ("GET", "/trace") => trace_dump(),
-        (_, path) if KNOWN_PATHS.contains(&path) => {
+        (_, path) if ROUTES.iter().any(|r| r.path == path) => {
             Response::error(405, "method not allowed for this route")
         }
-        _ => Response::error(404, "no such route (GET / for usage)"),
+        _ => Response::error(404, "no such route (GET / for the route table)"),
     }
 }
-
-const KNOWN_PATHS: [&str; 10] = [
-    "/",
-    "/healthz",
-    "/memo/stats",
-    "/solve",
-    "/sweep",
-    "/memo/export",
-    "/memo/merge",
-    "/shard/run",
-    "/metrics",
-    "/trace",
-];
 
 /// Static metric label and span name per route, so the hot path never
 /// builds label strings out of attacker-controlled paths (unknown
@@ -167,6 +230,7 @@ fn route_meta(path: &str) -> (&'static str, &'static str) {
         "/memo/stats" => ("/memo/stats", "http./memo/stats"),
         "/solve" => ("/solve", "http./solve"),
         "/sweep" => ("/sweep", "http./sweep"),
+        "/optimize" => ("/optimize", "http./optimize"),
         "/memo/export" => ("/memo/export", "http./memo/export"),
         "/memo/merge" => ("/memo/merge", "http./memo/merge"),
         "/shard/run" => ("/shard/run", "http./shard/run"),
@@ -176,9 +240,105 @@ fn route_meta(path: &str) -> (&'static str, &'static str) {
     }
 }
 
+/// `GET /` — the generated API reference: one row per [`ROUTES`] entry
+/// plus the envelope and versioning contract, so `/optimize` and every
+/// future route self-document.
+fn route_index() -> Response {
+    let mut j = Json::obj();
+    j.set("service", Json::Str("deepnvm serve".into()));
+    j.set("api_version", Json::Num(memo::MODEL_VERSION as f64));
+    j.set(
+        "error_envelope",
+        Json::Str("every 4xx/5xx body is {\"error\": {code, kind, message}}; kind is stable".into()),
+    );
+    j.set(
+        "version_header",
+        Json::Str("every response carries Deepnvm-Api-Version".into()),
+    );
+    let rows = ROUTES
+        .iter()
+        .map(|r| {
+            let mut o = Json::obj();
+            o.set("method", Json::Str(r.method.into()));
+            o.set("path", Json::Str(r.path.into()));
+            o.set("request", Json::Str(r.request.into()));
+            o.set("response", Json::Str(r.response.into()));
+            o
+        })
+        .collect();
+    j.set("routes", Json::Arr(rows));
+    Response::json(200, &j)
+}
+
+/// The one request-parse layer behind every POST route: decode the
+/// JSON body, then run the route's codec over the document. Malformed
+/// JSON is a 400 `bad_json`; a codec rejection maps through
+/// [`error_response`] onto its stable 422 kind. The raw document rides
+/// along so routes can read transport options (`jobs`, `pareto`,
+/// `render`) beside the typed payload.
+pub(crate) fn parse_body<T>(
+    req: &Request,
+    decode: impl FnOnce(&Json) -> Result<T>,
+) -> Result<(Json, T), Response> {
+    let body = match req.body_json() {
+        Ok(b) => b,
+        Err(e) => {
+            return Err(Response::error_kind(400, "bad_json", &format!("bad JSON body: {e}")))
+        }
+    };
+    match decode(&body) {
+        Ok(t) => Ok((body, t)),
+        Err(e) => Err(error_response(&e)),
+    }
+}
+
+/// Map a route-level failure onto the typed envelope: known typed
+/// errors anywhere in the chain pick their stable `kind`; everything
+/// else is the generic spec-validation 422.
+pub(crate) fn error_response(e: &anyhow::Error) -> Response {
+    let kind = if e.chain().any(|c| c.downcast_ref::<UncalibratedNode>().is_some()) {
+        "uncalibrated_node"
+    } else if e.chain().any(|c| c.downcast_ref::<sweep::optimize::Infeasible>().is_some()) {
+        "infeasible"
+    } else if e.chain().any(|c| c.downcast_ref::<UnknownReport>().is_some()) {
+        "unknown_report"
+    } else {
+        "invalid_spec"
+    };
+    Response::error_kind(422, kind, &format!("{e:#}"))
+}
+
+/// Typed rejection for `"report"` values outside sweep|fig9|fig10 —
+/// its own stable error kind, distinct from spec validation.
+#[derive(Debug)]
+struct UnknownReport(String);
+
+impl std::fmt::Display for UnknownReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown report '{}' (sweep|fig9|fig10)", self.0)
+    }
+}
+
+impl std::error::Error for UnknownReport {}
+
+/// The per-request worker clamp shared by `/sweep`, `/shard/run` and
+/// `/optimize`: a body may ask for FEWER workers than the operator
+/// budget (e.g. jobs=1 to force the serial schedule), never more — one
+/// query must not be able to spawn unbounded OS threads.
+fn jobs_clamp(ctx: &ServerCtx, body: &Json) -> usize {
+    body.get("jobs")
+        .and_then(Json::as_u64)
+        .map(|v| (v as usize).clamp(1, ctx.jobs.max(1)))
+        .unwrap_or(ctx.jobs)
+}
+
 fn healthz(ctx: &ServerCtx) -> Response {
     let mut j = Json::obj();
     j.set("status", Json::Str("ok".into()));
+    // The API version is the model version: a response is only
+    // meaningful relative to the calibrated model that produced it,
+    // so the two can never drift apart.
+    j.set("api_version", Json::Num(memo::MODEL_VERSION as f64));
     // Monotonic process uptime from the obs epoch — the same clock
     // the span traces and `/metrics` use. Key kept from the ad-hoc
     // era; the value source is now the registry-backed one.
@@ -267,7 +427,9 @@ fn solve_point_from_json(j: &Json) -> Result<GridPoint> {
         bail!("'node_nm' {node_nm} is out of range");
     }
     if !crate::device::node_calibrated(node_nm as u32) {
-        bail!("{}", crate::device::UncalibratedNode(node_nm as u32));
+        // Keep the typed error in the chain: the envelope layer maps
+        // it onto the `uncalibrated_node` kind.
+        return Err(UncalibratedNode(node_nm as u32).into());
     }
     let node_nm = node_nm as u32;
     let workload = match j.get("dnn") {
@@ -303,21 +465,17 @@ fn solve_point_from_json(j: &Json) -> Result<GridPoint> {
 }
 
 fn solve(ctx: &ServerCtx, req: &Request) -> Response {
-    let body = match req.body_json() {
-        Ok(b) => b,
-        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
-    };
-    let point = match solve_point_from_json(&body) {
-        Ok(p) => p,
-        Err(e) => return Response::error(422, &e.to_string()),
+    let (_, point) = match parse_body(req, solve_point_from_json) {
+        Ok(v) => v,
+        Err(resp) => return resp,
     };
     let cached = ctx.memo.has_point(&point);
     // The point is validated above, but the evaluation stays fallible:
-    // an uncalibrated node that slips past any parser becomes a 422,
-    // never a panicked worker thread.
+    // an uncalibrated node that slips past any parser becomes a typed
+    // 422, never a panicked worker thread.
     let result = match sweep::evaluate_point(&point, ctx.memo) {
         Ok(r) => r,
-        Err(e) => return Response::error(422, &format!("{e:#}")),
+        Err(e) => return error_response(&e),
     };
     let mut j = Json::obj();
     j.set("cached", Json::Bool(cached));
@@ -334,22 +492,32 @@ fn caps_from_json(body: &Json) -> Result<Vec<u64>> {
         .unwrap_or_else(|| DEFAULT_CAPACITIES_MB.to_vec()))
 }
 
+/// The typed `/sweep` payload: which report pipeline to run and its
+/// decoded input, resolved inside [`parse_body`] so an unknown report
+/// or a bad spec both surface through the one envelope layer.
+enum ReportQuery {
+    Sweep(SweepSpec),
+    Fig9(Vec<u64>),
+    Fig10(Vec<u64>),
+}
+
+fn report_query_from_json(body: &Json) -> Result<ReportQuery> {
+    match body.get("report").and_then(Json::as_str).unwrap_or("sweep") {
+        "sweep" => Ok(ReportQuery::Sweep(spec_from_json(body)?)),
+        "fig9" => Ok(ReportQuery::Fig9(caps_from_json(body)?)),
+        "fig10" => Ok(ReportQuery::Fig10(caps_from_json(body)?)),
+        other => Err(UnknownReport(other.to_string()).into()),
+    }
+}
+
 fn sweep_query(ctx: &ServerCtx, req: &Request) -> Response {
-    let body = match req.body_json() {
-        Ok(b) => b,
-        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    let (body, query) = match parse_body(req, report_query_from_json) {
+        Ok(v) => v,
+        Err(resp) => return resp,
     };
-    // A request may ask for FEWER workers than the operator budget
-    // (e.g. jobs=1 to force the serial schedule), never more — one
-    // query must not be able to spawn unbounded OS threads.
-    let jobs = body
-        .get("jobs")
-        .and_then(Json::as_u64)
-        .map(|v| (v as usize).clamp(1, ctx.jobs.max(1)))
-        .unwrap_or(ctx.jobs);
+    let jobs = jobs_clamp(ctx, &body);
     let pareto = body.get("pareto").and_then(Json::as_bool).unwrap_or(false);
     let render = body.get("render").and_then(Json::as_bool).unwrap_or(false);
-    let kind = body.get("report").and_then(Json::as_str).unwrap_or("sweep");
 
     // Solve/eval deltas over this request — with concurrent writers
     // they are approximate, but on a prewarmed server they read 0 and
@@ -357,35 +525,14 @@ fn sweep_query(ctx: &ServerCtx, req: &Request) -> Response {
     let solves_before = ctx.memo.solve_count();
     let evals_before = ctx.memo.eval_count();
 
-    let report: Report = match kind {
-        "sweep" => {
-            let spec = match spec_from_json(&body) {
-                Ok(s) => s,
-                Err(e) => return Response::error(422, &e.to_string()),
-            };
-            match reports::sweep_report_with(&spec, jobs, pareto, ctx.memo) {
-                Ok(r) => r,
-                Err(e) => return Response::error(422, &format!("{e:#}")),
-            }
-        }
-        "fig9" | "fig10" => {
-            let caps = match caps_from_json(&body) {
-                Ok(c) => c,
-                Err(e) => return Response::error(422, &e.to_string()),
-            };
-            let r = if kind == "fig9" {
-                reports::fig9_with(&caps, jobs, ctx.memo)
-            } else {
-                reports::fig10_with(&caps, jobs, ctx.memo)
-            };
-            match r {
-                Ok(r) => r,
-                Err(e) => return Response::error(422, &format!("{e:#}")),
-            }
-        }
-        other => {
-            return Response::error(422, &format!("unknown report '{other}' (sweep|fig9|fig10)"))
-        }
+    let run: Result<Report> = match &query {
+        ReportQuery::Sweep(spec) => reports::sweep_report_with(spec, jobs, pareto, ctx.memo),
+        ReportQuery::Fig9(caps) => reports::fig9_with(caps, jobs, ctx.memo),
+        ReportQuery::Fig10(caps) => reports::fig10_with(caps, jobs, ctx.memo),
+    };
+    let report = match run {
+        Ok(r) => r,
+        Err(e) => return error_response(&e),
     };
 
     let mut j = report.csv.to_json();
@@ -415,24 +562,16 @@ fn sweep_query(ctx: &ServerCtx, req: &Request) -> Response {
 /// `SweepSpec` document; `jobs` is clamped to the operator budget
 /// exactly like `/sweep`.
 fn shard_run(ctx: &ServerCtx, req: &Request) -> Response {
-    let body = match req.body_json() {
-        Ok(b) => b,
-        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    let (body, spec) = match parse_body(req, spec_from_json) {
+        Ok(v) => v,
+        Err(resp) => return resp,
     };
-    let jobs = body
-        .get("jobs")
-        .and_then(Json::as_u64)
-        .map(|v| (v as usize).clamp(1, ctx.jobs.max(1)))
-        .unwrap_or(ctx.jobs);
-    let spec = match spec_from_json(&body) {
-        Ok(s) => s,
-        Err(e) => return Response::error(422, &e.to_string()),
-    };
+    let jobs = jobs_clamp(ctx, &body);
     let solves_before = ctx.memo.solve_count();
     let evals_before = ctx.memo.eval_count();
     let res = match sweep::run(&spec, jobs, ctx.memo()) {
         Ok(r) => r,
-        Err(e) => return Response::error(422, &format!("{e:#}")),
+        Err(e) => return error_response(&e),
     };
     let mut j = Json::obj();
     j.set("points", Json::Num(res.points.len() as f64));
@@ -447,6 +586,23 @@ fn shard_run(ctx: &ServerCtx, req: &Request) -> Response {
     let shard_points: Vec<GridPoint> = res.points.iter().map(|r| r.point).collect();
     j.set("export", ctx.memo().to_json_for(&shard_points));
     Response::json(200, &j)
+}
+
+/// `POST /optimize` — branch-and-bound search over the implicit grid
+/// (see [`sweep::optimize`]). The body is a `/sweep` grid plus
+/// `objective`, the design budgets and `frontier`; the response is the
+/// winning point (bit-identical to exhaustive `/sweep` argmin) and the
+/// pruned/evaluated accounting the CI ratio gate reads.
+fn optimize_query(ctx: &ServerCtx, req: &Request) -> Response {
+    let (body, oreq) = match parse_body(req, optimize_request_from_json) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let jobs = jobs_clamp(ctx, &body);
+    match sweep::optimize::run(&oreq, jobs, ctx.memo) {
+        Ok(r) => Response::json(200, &optimize_response_to_json(&r)),
+        Err(e) => error_response(&e),
+    }
 }
 
 #[cfg(test)]
@@ -503,7 +659,98 @@ mod tests {
         assert_eq!(handle(&c, &get("/solve")).status, 405);
         assert_eq!(handle(&c, &post("/healthz", "")).status, 405);
         assert_eq!(handle(&c, &get("/shard/run")).status, 405);
-        assert_eq!(c.request_count(), 7);
+        assert_eq!(handle(&c, &get("/optimize")).status, 405);
+        assert_eq!(c.request_count(), 8);
+    }
+
+    #[test]
+    fn route_table_is_generated_and_lists_every_route() {
+        let c = ctx();
+        let r = handle(&c, &get("/"));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        assert_eq!(
+            j.get("api_version").unwrap().as_u64(),
+            Some(memo::MODEL_VERSION as u64)
+        );
+        let rows = j.get("routes").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), ROUTES.len(), "one generated row per route");
+        let paths: Vec<&str> =
+            rows.iter().map(|r| r.get("path").unwrap().as_str().unwrap()).collect();
+        assert!(paths.contains(&"/optimize"), "{paths:?}");
+        for row in rows {
+            assert!(row.get("method").unwrap().as_str().is_some());
+            assert!(row.get("request").unwrap().as_str().is_some());
+            assert!(row.get("response").unwrap().as_str().is_some());
+        }
+    }
+
+    #[test]
+    fn error_envelope_carries_stable_kinds() {
+        let c = ctx();
+        let kind_of = |r: &Response| {
+            let j = body_json(r);
+            let e = j.get("error").unwrap();
+            assert_eq!(e.get("code").unwrap().as_u64(), Some(r.status as u64));
+            assert!(e.get("message").unwrap().as_str().is_some());
+            e.get("kind").unwrap().as_str().unwrap().to_string()
+        };
+        let r = handle(&c, &post("/solve", "{nope"));
+        assert_eq!((r.status, kind_of(&r).as_str()), (400, "bad_json"));
+        let r = handle(&c, &post("/sweep", r#"{"techs": ["dram"]}"#));
+        assert_eq!((r.status, kind_of(&r).as_str()), (422, "invalid_spec"));
+        let r = handle(&c, &post("/sweep", r#"{"report": "fig99"}"#));
+        assert_eq!((r.status, kind_of(&r).as_str()), (422, "unknown_report"));
+        let r = handle(&c, &post("/solve", r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 9}"#));
+        assert_eq!((r.status, kind_of(&r).as_str()), (422, "uncalibrated_node"));
+        let infeasible = r#"{"techs": ["stt"], "caps_mb": [1], "dnns": [], "area_max_mm2": 1e-9}"#;
+        let r = handle(&c, &post("/optimize", infeasible));
+        assert_eq!((r.status, kind_of(&r).as_str()), (422, "infeasible"));
+        let r = handle(&c, &get("/nope"));
+        assert_eq!((r.status, kind_of(&r).as_str()), (404, "not_found"));
+        let r = handle(&c, &get("/solve"));
+        assert_eq!((r.status, kind_of(&r).as_str()), (405, "method_not_allowed"));
+    }
+
+    #[test]
+    fn optimize_route_matches_sweep_argmin() {
+        let c = ctx();
+        let body = r#"{"techs": ["stt", "sot"], "caps_mb": [1, 2], "dnns": ["AlexNet"],
+                       "phases": ["inference"], "batches": [1, 4], "jobs": 1}"#;
+        let r = handle(&c, &post("/optimize", body));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        assert_eq!(j.get("objective").unwrap().as_str(), Some("edp"));
+        let total = j.get("points_total").unwrap().as_u64().unwrap();
+        let ev = j.get("points_evaluated").unwrap().as_u64().unwrap();
+        assert_eq!(j.get("points_pruned").unwrap().as_u64(), Some(total - ev));
+        assert_eq!(total, 2 * 2 * 2);
+
+        // the winner is the exhaustive first-wins argmin over the same
+        // grid on a fresh memo
+        let spec = spec_from_json(&crate::util::json::parse(body).unwrap()).unwrap();
+        let all = sweep::run(&spec, 1, &Memo::new()).unwrap();
+        let mut best: Option<(f64, usize)> = None;
+        for (i, p) in all.points.iter().enumerate() {
+            let v = p.eval.map(|e| e.edp).unwrap_or(f64::INFINITY);
+            if best.is_none_or(|(bv, _)| v < bv) {
+                best = Some((v, i));
+            }
+        }
+        let (want_v, wi) = best.unwrap();
+        let want = &all.points[wi];
+        let w = j.get("winner").unwrap();
+        assert_eq!(w.get("capacity_mb").unwrap().as_u64(), Some(want.point.capacity_mb));
+        assert_eq!(w.get("tech").unwrap().as_str(), Some(want.point.tech.name()));
+        assert_eq!(w.get("batch").unwrap().as_u64().map(|b| b as usize), {
+            want.point.workload.map(|wl| wl.batch)
+        });
+        assert_eq!(j.get("best_value").unwrap().as_f64(), Some(want_v));
+        assert_eq!(
+            w.get("eval").unwrap().get("edp").unwrap().as_f64(),
+            want.eval.map(|e| e.edp),
+            "the winner document is bit-identical to the sweep's"
+        );
     }
 
     #[test]

@@ -27,11 +27,13 @@ pub fn export(ctx: &ServerCtx, _req: &Request) -> Response {
 
 /// `POST /memo/merge` — union a shard's exported cache into the
 /// resident one. Responds with per-entry accounting; a model-version
-/// mismatch is a 409 and merges nothing.
+/// mismatch is a 409 (typed envelope + the accounting fields, so a
+/// coordinator can still read `version_ok` off the error body) and
+/// merges nothing.
 pub fn merge(ctx: &ServerCtx, req: &Request) -> Response {
-    let doc = match req.body_json() {
-        Ok(d) => d,
-        Err(e) => return Response::error(400, &format!("bad JSON body: {e}")),
+    let (_, doc) = match super::routes::parse_body(req, |j| Ok(j.clone())) {
+        Ok(v) => v,
+        Err(resp) => return resp,
     };
     let st = ctx.memo().merge_json(&doc);
     let mut j = Json::obj();
@@ -42,8 +44,18 @@ pub fn merge(ctx: &ServerCtx, req: &Request) -> Response {
     j.set("circuit_entries", Json::Num(ctx.memo().circuit_len() as f64));
     j.set("traffic_entries", Json::Num(ctx.memo().traffic_len() as f64));
     j.set("point_entries", Json::Num(ctx.memo().point_len() as f64));
-    let status = if st.version_ok { 200 } else { 409 };
-    Response::json(status, &j)
+    if st.version_ok {
+        return Response::json(200, &j);
+    }
+    let mut e = Json::obj();
+    e.set("code", Json::Num(409.0));
+    e.set("kind", Json::Str("version_mismatch".into()));
+    e.set(
+        "message",
+        Json::Str("shard document was built against another model version; nothing merged".into()),
+    );
+    j.set("error", e);
+    Response::json(409, &j)
 }
 
 /// Split a spec into at most `n` disjoint shards along the capacity

@@ -26,11 +26,14 @@
 
 pub mod exec;
 pub mod memo;
+pub mod optimize;
 pub mod pareto;
 pub mod spec;
 
 pub use memo::Memo;
-pub use spec::{Filter, GridPoint, SweepSpec, WorkloadPoint};
+pub use spec::{
+    Filter, GridPoint, OptimizeRequest, OptimizeResponse, OptObjective, SweepSpec, WorkloadPoint,
+};
 
 use anyhow::Result;
 use std::collections::HashSet;

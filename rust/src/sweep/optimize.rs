@@ -1,0 +1,781 @@
+//! Branch-and-bound search over the implicit sweep grid — "search, not
+//! sweep".
+//!
+//! The closed-form batch axis (PR 5) made single-point evaluation
+//! nearly free, which moves the cost of a design query from *model
+//! evaluation* to *grid enumeration*. This module answers `POST
+//! /optimize` / `deepnvm optimize` queries ("best config under
+//! area ≤ A, node ∈ {7, 5}") without materializing the grid:
+//!
+//! 1. **Admissible lower bounds.** Dropping the `ceil` terms of
+//!    [`TxTerm`](crate::workload::traffic::TxTerm) /
+//!    [`DramTerm`](crate::workload::traffic::DramTerm) yields an affine
+//!    traffic bound ([`BatchLine::lower_bound_at`]) that is monotone in
+//!    batch and independent of capacity, so one evaluation bounds a
+//!    whole (capacity, batch) rectangle. A second, tighter bound keeps
+//!    the exact ceil arithmetic and exploits monotonicity directly:
+//!    DRAM traffic never increases with capacity at a fixed batch, so
+//!    the rectangle's largest capacity plus a field-wise floor of the
+//!    tuned PPAs bounds every point in a capacity range. Both bounds
+//!    flow through the *same* [`evaluate`] expression tree as the exact
+//!    path — f64 rounding is monotone, so admissibility survives
+//!    floating point.
+//! 2. **Best-first search.** A min-heap over (bound, spec-order) pops
+//!    the most promising rectangle first: slices (one per node × tech ×
+//!    dnn × phase) triaged by the affine bound, capacity ranges split
+//!    binary with the tight bound, singleton points carrying their
+//!    exact value. The incumbent comes from a coarse corner seed, and
+//!    because the heap is ordered lexicographically the first prunable
+//!    pop proves everything still enqueued is prunable too.
+//! 3. **Bit-identical winners.** Every candidate the search actually
+//!    accepts is folded through [`super::evaluate_point`] — the same
+//!    memoized path the exhaustive sweep uses — and ties are broken by
+//!    spec-expansion order, so the winner (value *and* bytes) is
+//!    exactly what `argmin` over [`super::run`] would have returned.
+//!
+//! Constraint budgets (`area_max_mm2`, `leakage_max_w`) are properties
+//! of the tuned circuit alone, so an infeasible (tech, capacity, node)
+//! column disappears before the workload axes are even considered; the
+//! `techs` / `nodes_nm` spec axes double as membership constraints.
+//! Multi-objective `frontier` mode reuses [`super::pareto`] over the
+//! feasible grid (exhaustive by construction — a frontier needs every
+//! non-dominated point).
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::analysis::energy::{evaluate, DramCost, Evaluation};
+use crate::device::MemTech;
+use crate::nvsim::explorer::TunedConfig;
+use crate::nvsim::model::CachePpa;
+use crate::obs::{LazyCounter, Span};
+use crate::workload::models::Phase;
+use crate::workload::traffic::BatchLine;
+
+use super::spec::{OptimizeRequest, OptimizeResponse, OptObjective};
+use super::{exec, pareto, GridPoint, Memo, MB, PointResult};
+
+static OPT_REQUESTS: LazyCounter = LazyCounter::new("deepnvm_optimize_requests_total");
+static OPT_EVALUATED: LazyCounter = LazyCounter::new("deepnvm_optimize_points_evaluated_total");
+static OPT_PRUNED: LazyCounter = LazyCounter::new("deepnvm_optimize_points_pruned_total");
+
+/// No grid point survived the design budgets. Typed so the serve layer
+/// can map it onto the `infeasible` error kind instead of a generic
+/// 4xx string.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Infeasible {
+    pub area_max_mm2: Option<f64>,
+    pub leakage_max_w: Option<f64>,
+}
+
+impl fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "no grid point satisfies the design budgets")?;
+        if let Some(a) = self.area_max_mm2 {
+            write!(f, " area <= {a} mm2")?;
+        }
+        if let Some(l) = self.leakage_max_w {
+            write!(f, " leakage <= {l} W")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Infeasible {}
+
+/// The scalar the search minimizes for one evaluated point — shared
+/// with the exhaustive-argmin property tests so both sides can never
+/// disagree about what "best" means. `Capacity` is maximized, scored
+/// as its negation; workload objectives are infinite on circuit-only
+/// points (they never reach here through [`run`], which rejects that
+/// combination up front).
+pub fn objective_value(objective: OptObjective, r: &PointResult) -> f64 {
+    match objective {
+        OptObjective::Edp => r.eval.map(|e| e.edp).unwrap_or(f64::INFINITY),
+        OptObjective::Edap => match r.eval {
+            Some(e) => e.edp * r.tuned.ppa.area,
+            None => r.tuned.ppa.edap(),
+        },
+        OptObjective::Energy => {
+            r.eval.map(|e| e.energy_j).unwrap_or(f64::INFINITY)
+        }
+        OptObjective::Latency => r.eval.map(|e| e.time_s).unwrap_or(f64::INFINITY),
+        OptObjective::Capacity => -(r.point.capacity_mb as f64),
+    }
+}
+
+/// The same scalar, read off a (possibly lower-bounding) [`Evaluation`]
+/// plus the range's smallest area / largest capacity. At a singleton
+/// point fed the exact stats and PPA this reproduces
+/// [`objective_value`] bit for bit — the identity that lets heap order
+/// stand in for exhaustive comparison.
+fn objective_bound(
+    objective: OptObjective,
+    e: &Evaluation,
+    area_min: f64,
+    cap_max_mb: u64,
+) -> f64 {
+    match objective {
+        OptObjective::Edp => e.edp(),
+        OptObjective::Edap => e.edp() * area_min,
+        OptObjective::Energy => e.energy(),
+        OptObjective::Latency => e.time_total,
+        OptObjective::Capacity => -(cap_max_mb as f64),
+    }
+}
+
+/// Field-wise floor of a set of tuned PPAs: a synthetic cache at least
+/// as good as every real design in the range on every axis, hence an
+/// admissible stand-in inside [`evaluate`] (which is monotone
+/// nondecreasing in every PPA field).
+fn ppa_floor(ppas: &[CachePpa]) -> CachePpa {
+    let mut m = ppas[0];
+    for p in &ppas[1..] {
+        m.read_latency = m.read_latency.min(p.read_latency);
+        m.write_latency = m.write_latency.min(p.write_latency);
+        m.read_energy = m.read_energy.min(p.read_energy);
+        m.write_energy = m.write_energy.min(p.write_energy);
+        m.leakage_power = m.leakage_power.min(p.leakage_power);
+        m.area = m.area.min(p.area);
+    }
+    m
+}
+
+/// One (node, tech, dnn, phase) slab of the grid: its feasible
+/// capacity column (spec order) and batch row (spec order) span a
+/// rectangle of grid points the search bounds as a unit.
+struct Slice {
+    tech: MemTech,
+    node_nm: u32,
+    dnn: &'static str,
+    phase: Phase,
+    caps_mb: Vec<u64>,
+    batches: Vec<usize>,
+    /// Tuned designs aligned with `caps_mb`.
+    ppas: Vec<CachePpa>,
+    line: std::sync::Arc<BatchLine>,
+}
+
+impl Slice {
+    fn point(&self, cap_i: usize, batch_i: usize) -> GridPoint {
+        GridPoint {
+            tech: self.tech,
+            capacity_mb: self.caps_mb[cap_i],
+            node_nm: self.node_nm,
+            workload: Some(super::WorkloadPoint {
+                dnn: self.dnn,
+                phase: self.phase,
+                batch: self.batches[batch_i],
+            }),
+        }
+    }
+
+    /// Tight bound over caps `lo..=hi` (spec-order indices) and the
+    /// full batch row: exact ceil traffic at the range's numerically
+    /// largest capacity (DRAM spill is nonincreasing in capacity at a
+    /// fixed batch) against the field-wise PPA floor. The batch axis
+    /// is scanned explicitly — the spill branch can flip with batch,
+    /// so batch monotonicity is not assumed.
+    fn range_bound(&self, objective: OptObjective, lo: usize, hi: usize) -> f64 {
+        let ppa = ppa_floor(&self.ppas[lo..=hi]);
+        let cap_max = *self.caps_mb[lo..=hi].iter().max().unwrap();
+        let l2_max = cap_max * MB;
+        let dram = DramCost::default();
+        let mut best = f64::INFINITY;
+        for &b in &self.batches {
+            let e = evaluate(&self.line.at_capacity(b, l2_max), &ppa, Some(dram));
+            best = best.min(objective_bound(objective, &e, ppa.area, cap_max));
+        }
+        best
+    }
+
+    /// Cheap triage bound for the whole slice: the ceil-dropped affine
+    /// traffic line at the smallest batch (capacity-independent by
+    /// construction) against the slice-wide PPA floor.
+    fn affine_bound(&self, objective: OptObjective) -> f64 {
+        let b_min = *self.batches.iter().min().unwrap();
+        let ppa = ppa_floor(&self.ppas);
+        let cap_max = *self.caps_mb.iter().max().unwrap();
+        let stats = self.line.lower_bound_at(b_min);
+        let e = evaluate(&stats, &ppa, Some(DramCost::default()));
+        objective_bound(objective, &e, ppa.area, cap_max)
+    }
+}
+
+/// What a heap node still owes the search.
+enum Task {
+    /// A whole slice, triaged by its affine bound.
+    Slice(usize),
+    /// Caps `lo..=hi` of a slice, bounded by [`Slice::range_bound`].
+    CapRange { slice: usize, lo: usize, hi: usize },
+    /// A single grid point; its bound *is* its exact objective value.
+    Point { slice: usize, cap_i: usize, batch_i: usize },
+}
+
+/// Min-heap entry: `(bound, spec-order of the rectangle's first
+/// point)`. Lexicographic order makes the heap's pop order a proof —
+/// once the best remaining bound cannot beat the incumbent (ties
+/// resolved by spec order, matching exhaustive first-wins argmin),
+/// nothing behind it can either.
+struct Node {
+    bound: f64,
+    order: usize,
+    task: Task,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Node {}
+
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the smallest
+        // (bound, order) on top.
+        other
+            .bound
+            .total_cmp(&self.bound)
+            .then_with(|| other.order.cmp(&self.order))
+    }
+}
+
+/// `(value, order) >= (inc_value, inc_order)` lexicographically — the
+/// prune test (a tie on value loses to an earlier spec position).
+fn lex_ge(value: f64, order: usize, inc_value: f64, inc_order: usize) -> bool {
+    match value.total_cmp(&inc_value) {
+        Ordering::Greater => true,
+        Ordering::Less => false,
+        Ordering::Equal => order >= inc_order,
+    }
+}
+
+/// Run one optimize query. `jobs` parallelizes the up-front circuit
+/// solves (and the exhaustive sweep in frontier mode); the
+/// branch-and-bound itself is sequential — it evaluates so few points
+/// that thread handoff would dominate.
+pub fn run(req: &OptimizeRequest, jobs: usize, memo: &Memo) -> Result<OptimizeResponse> {
+    OPT_REQUESTS.inc();
+    let _span = Span::enter("optimize.search");
+
+    let points = req.spec.expand()?;
+    let points_total = points.len() as u64;
+    if points.is_empty() {
+        bail!("the grid is empty after filters; nothing to optimize");
+    }
+
+    // Solve every distinct circuit column once, in parallel — cheap
+    // relative to the workload grid (caps × techs × nodes vs the full
+    // product) and exactly what feasibility and the PPA floors need.
+    let mut seen = HashSet::new();
+    let mut columns: Vec<(MemTech, u64, u32)> = Vec::new();
+    for p in &points {
+        if seen.insert((p.tech, p.capacity_mb, p.node_nm)) {
+            columns.push((p.tech, p.capacity_mb, p.node_nm));
+        }
+    }
+    let jobs = if jobs == 0 { exec::default_jobs() } else { jobs };
+    let mut tuned: HashMap<(MemTech, u64, u32), TunedConfig> = HashMap::new();
+    for (col, solved) in columns.iter().zip(exec::run_ordered(
+        &columns,
+        jobs,
+        |&(tech, mb, node)| memo.tuned_at(tech, mb * MB, node),
+    )) {
+        tuned.insert(*col, solved?);
+    }
+    let feasible: Vec<GridPoint> = points
+        .iter()
+        .filter(|p| req.feasible(&tuned[&(p.tech, p.capacity_mb, p.node_nm)].ppa))
+        .copied()
+        .collect();
+    if feasible.is_empty() {
+        return Err(Infeasible {
+            area_max_mm2: req.area_max_mm2,
+            leakage_max_w: req.leakage_max_w,
+        }
+        .into());
+    }
+
+    if req.frontier {
+        return frontier_mode(req, jobs, memo, points_total);
+    }
+
+    let workload_grid = points[0].workload.is_some();
+    if !workload_grid {
+        if req.objective.needs_workload() {
+            bail!(
+                "objective '{}' needs a workload axis; this grid is circuit-only \
+                 (add 'dnns' or pick edap|capacity)",
+                req.objective.name()
+            );
+        }
+        return circuit_only(req, memo, &feasible, &tuned, points_total);
+    }
+
+    // Spec-expansion position of every surviving point: the global
+    // tie-break order, shared bit for bit with exhaustive argmin.
+    let order_of: HashMap<GridPoint, usize> =
+        points.iter().enumerate().map(|(i, p)| (*p, i)).collect();
+
+    // Feasible points arrive grouped (node, tech) outer, capacity next,
+    // (dnn, phase) inner, batch innermost — so each slice's capacity
+    // column and batch row fill in spec order.
+    let mut slice_of: HashMap<(u32, MemTech, &'static str, Phase), usize> =
+        HashMap::new();
+    let mut slices: Vec<Slice> = Vec::new();
+    for p in &feasible {
+        let w = p.workload.expect("workload grid");
+        let key = (p.node_nm, p.tech, w.dnn, w.phase);
+        let si = *slice_of.entry(key).or_insert_with(|| {
+            slices.push(Slice {
+                tech: p.tech,
+                node_nm: p.node_nm,
+                dnn: w.dnn,
+                phase: w.phase,
+                caps_mb: Vec::new(),
+                batches: Vec::new(),
+                ppas: Vec::new(),
+                line: memo.traffic_line(w.dnn, w.phase),
+            });
+            slices.len() - 1
+        });
+        let s = &mut slices[si];
+        if s.caps_mb.last() != Some(&p.capacity_mb) {
+            s.caps_mb.push(p.capacity_mb);
+            s.ppas.push(tuned[&(p.tech, p.capacity_mb, p.node_nm)].ppa);
+        }
+        if s.caps_mb.len() == 1 {
+            s.batches.push(w.batch);
+        }
+    }
+
+    let mut evaluated: HashSet<GridPoint> = HashSet::new();
+    let mut incumbent: Option<(f64, usize, PointResult)> = None;
+    let mut offer = |gp: GridPoint,
+                     evaluated: &mut HashSet<GridPoint>,
+                     incumbent: &mut Option<(f64, usize, PointResult)>|
+     -> Result<()> {
+        if !evaluated.insert(gp) {
+            return Ok(());
+        }
+        let r = super::evaluate_point(&gp, memo)?;
+        let value = objective_value(req.objective, &r);
+        let order = order_of[&gp];
+        let beats = match incumbent {
+            None => true,
+            Some((iv, io, _)) => !lex_ge(value, order, *iv, *io),
+        };
+        if beats {
+            *incumbent = Some((value, order, r));
+        }
+        Ok(())
+    };
+
+    // Heap of every slice under its affine triage bound.
+    let mut heap: BinaryHeap<Node> = BinaryHeap::new();
+    let mut triage: Vec<(f64, usize)> = Vec::with_capacity(slices.len());
+    for (si, s) in slices.iter().enumerate() {
+        let bound = s.affine_bound(req.objective);
+        let order = order_of[&s.point(0, 0)];
+        triage.push((bound, order));
+        heap.push(Node { bound, order, task: Task::Slice(si) });
+    }
+
+    // Seed the incumbent from the first corner of the three most
+    // promising slices so pruning has something to cut against before
+    // the first rectangle is split.
+    let mut seed: Vec<usize> = (0..slices.len()).collect();
+    seed.sort_by(|&a, &b| {
+        triage[a].0.total_cmp(&triage[b].0).then_with(|| triage[a].1.cmp(&triage[b].1))
+    });
+    for &si in seed.iter().take(3) {
+        offer(slices[si].point(0, 0), &mut evaluated, &mut incumbent)?;
+    }
+
+    while let Some(node) = heap.pop() {
+        if let Some((iv, io, _)) = &incumbent {
+            // The heap pops in (bound, order) order: the first
+            // prunable node proves every remaining node prunable.
+            if lex_ge(node.bound, node.order, *iv, *io) {
+                break;
+            }
+        }
+        match node.task {
+            Task::Slice(si) => {
+                let s = &slices[si];
+                let hi = s.caps_mb.len() - 1;
+                let bound = s.range_bound(req.objective, 0, hi);
+                heap.push(Node {
+                    bound,
+                    order: node.order,
+                    task: Task::CapRange { slice: si, lo: 0, hi },
+                });
+            }
+            Task::CapRange { slice: si, lo, hi } if lo < hi => {
+                let s = &slices[si];
+                let mid = lo + (hi - lo) / 2;
+                for (a, b) in [(lo, mid), (mid + 1, hi)] {
+                    heap.push(Node {
+                        bound: s.range_bound(req.objective, a, b),
+                        order: order_of[&s.point(a, 0)],
+                        task: Task::CapRange { slice: si, lo: a, hi: b },
+                    });
+                }
+            }
+            Task::CapRange { slice: si, lo, hi: _ } => {
+                let s = &slices[si];
+                let ppa = s.ppas[lo];
+                let l2 = s.caps_mb[lo] * MB;
+                let dram = DramCost::default();
+                for (bi, &b) in s.batches.iter().enumerate() {
+                    // Exact stats, exact PPA: this bound IS the
+                    // point's objective value, so the heap pops the
+                    // true minimum first.
+                    let e = evaluate(&s.line.at_capacity(b, l2), &ppa, Some(dram));
+                    let bound =
+                        objective_bound(req.objective, &e, ppa.area, s.caps_mb[lo]);
+                    heap.push(Node {
+                        bound,
+                        order: order_of[&s.point(lo, bi)],
+                        task: Task::Point { slice: si, cap_i: lo, batch_i: bi },
+                    });
+                }
+            }
+            Task::Point { slice: si, cap_i, batch_i } => {
+                offer(slices[si].point(cap_i, batch_i), &mut evaluated, &mut incumbent)?;
+            }
+        }
+    }
+
+    let (best_value, _, winner) = incumbent.expect("seeded incumbent");
+    let points_evaluated = evaluated.len() as u64;
+    OPT_EVALUATED.add(points_evaluated);
+    OPT_PRUNED.add(points_total - points_evaluated);
+    Ok(OptimizeResponse {
+        objective: req.objective,
+        winner: Some(winner),
+        best_value: Some(best_value),
+        frontier: Vec::new(),
+        points_total,
+        points_evaluated,
+        points_pruned: points_total - points_evaluated,
+    })
+}
+
+/// Circuit-only scalar objectives (`edap`, `capacity`): the objective
+/// is a pure function of the already-solved tuned designs, so argmin
+/// runs over the columns directly and only the winner is folded into
+/// a memoized [`PointResult`].
+fn circuit_only(
+    req: &OptimizeRequest,
+    memo: &Memo,
+    feasible: &[GridPoint],
+    tuned: &HashMap<(MemTech, u64, u32), TunedConfig>,
+    points_total: u64,
+) -> Result<OptimizeResponse> {
+    let mut best: Option<(f64, usize)> = None;
+    for (i, p) in feasible.iter().enumerate() {
+        let ppa = tuned[&(p.tech, p.capacity_mb, p.node_nm)].ppa;
+        let value = match req.objective {
+            OptObjective::Edap => ppa.edap(),
+            OptObjective::Capacity => -(p.capacity_mb as f64),
+            _ => unreachable!("workload objectives rejected earlier"),
+        };
+        let beats = match best {
+            None => true,
+            Some((bv, _)) => value.total_cmp(&bv) == Ordering::Less,
+        };
+        if beats {
+            best = Some((value, i));
+        }
+    }
+    let (best_value, wi) = best.expect("feasible set is non-empty");
+    let winner = super::evaluate_point(&feasible[wi], memo)?;
+    OPT_EVALUATED.inc();
+    OPT_PRUNED.add(points_total - 1);
+    Ok(OptimizeResponse {
+        objective: req.objective,
+        winner: Some(winner),
+        best_value: Some(best_value),
+        frontier: Vec::new(),
+        points_total,
+        points_evaluated: 1,
+        points_pruned: points_total - 1,
+    })
+}
+
+/// Frontier mode: exhaustive by necessity (every non-dominated point
+/// must be proven non-dominated), grouped the way absolute EDP is
+/// comparable — within one (dnn, phase, batch) workload cell — and
+/// unioned back into spec order.
+fn frontier_mode(
+    req: &OptimizeRequest,
+    jobs: usize,
+    memo: &Memo,
+    points_total: u64,
+) -> Result<OptimizeResponse> {
+    let results = super::run(&req.spec, jobs, memo)?;
+    let feas: Vec<PointResult> = results
+        .points
+        .into_iter()
+        .filter(|p| req.feasible(&p.tuned.ppa))
+        .collect();
+    if feas.is_empty() {
+        return Err(Infeasible {
+            area_max_mm2: req.area_max_mm2,
+            leakage_max_w: req.leakage_max_w,
+        }
+        .into());
+    }
+    let mut groups: Vec<(Option<(&str, Phase, usize)>, Vec<usize>)> = Vec::new();
+    for (i, p) in feas.iter().enumerate() {
+        let key = p.point.workload.map(|w| (w.dnn, w.phase, w.batch));
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+    let objectives = pareto::edp_area_capacity();
+    let mut keep: Vec<usize> = Vec::new();
+    for (_, idxs) in &groups {
+        let items: Vec<PointResult> = idxs.iter().map(|&i| feas[i].clone()).collect();
+        for fi in pareto::frontier_indices(&items, &objectives) {
+            keep.push(idxs[fi]);
+        }
+    }
+    keep.sort_unstable();
+    OPT_EVALUATED.add(points_total);
+    Ok(OptimizeResponse {
+        objective: req.objective,
+        winner: None,
+        best_value: None,
+        frontier: keep.into_iter().map(|i| feas[i].clone()).collect(),
+        points_total,
+        points_evaluated: points_total,
+        points_pruned: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::optimize_request_from_json;
+    use crate::sweep::{Filter, SweepSpec};
+    use crate::util::json;
+
+    fn req(spec: SweepSpec, objective: OptObjective) -> OptimizeRequest {
+        OptimizeRequest {
+            spec,
+            objective,
+            area_max_mm2: None,
+            leakage_max_w: None,
+            frontier: false,
+        }
+    }
+
+    /// Exhaustive reference: sweep the whole grid, filter feasibility,
+    /// first-wins argmin on the objective.
+    fn exhaustive_argmin(
+        r: &OptimizeRequest,
+        memo: &Memo,
+    ) -> Option<(f64, PointResult)> {
+        let all = super::super::run(&r.spec, 2, memo).unwrap();
+        let mut best: Option<(f64, PointResult)> = None;
+        for p in all.points {
+            if !r.feasible(&p.tuned.ppa) {
+                continue;
+            }
+            let v = objective_value(r.objective, &p);
+            if best.as_ref().is_none_or(|(bv, _)| v.total_cmp(bv) == Ordering::Less)
+            {
+                best = Some((v, p));
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn search_matches_exhaustive_argmin_bit_for_bit() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::SttMram, MemTech::SotMram],
+            capacities_mb: vec![1, 2, 4],
+            dnns: vec!["AlexNet".into()],
+            phases: Phase::ALL.to_vec(),
+            batches: vec![1, 4, 16, 64],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let memo = Memo::new();
+        for objective in OptObjective::ALL {
+            let r = req(spec.clone(), objective);
+            let got = run(&r, 2, &memo).unwrap();
+            let (want_v, want_p) = exhaustive_argmin(&r, &memo).unwrap();
+            let w = got.winner.expect("scalar mode returns a winner");
+            assert_eq!(w.point, want_p.point, "{}", objective.name());
+            assert_eq!(got.best_value, Some(want_v), "{}", objective.name());
+            // bit-identity of the full result document, not just the key
+            assert_eq!(w.tuned.ppa.area, want_p.tuned.ppa.area);
+            assert_eq!(
+                w.eval.map(|e| e.edp),
+                want_p.eval.map(|e| e.edp),
+                "{}",
+                objective.name()
+            );
+            assert_eq!(
+                got.points_evaluated + got.points_pruned,
+                got.points_total
+            );
+        }
+    }
+
+    #[test]
+    fn search_prunes_most_of_a_wide_grid() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::Sram, MemTech::SttMram, MemTech::SotMram],
+            capacities_mb: vec![1, 2, 4, 8, 16, 32],
+            dnns: vec!["AlexNet".into(), "ResNet-18".into()],
+            phases: Phase::ALL.to_vec(),
+            batches: vec![1, 2, 4, 8, 16, 32, 64, 128],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let memo = Memo::new();
+        let r = req(spec, OptObjective::Edp);
+        let got = run(&r, 2, &memo).unwrap();
+        assert_eq!(got.points_total, 3 * 6 * 2 * 2 * 8);
+        assert!(
+            got.points_evaluated * 10 <= got.points_total,
+            "evaluated {} of {}",
+            got.points_evaluated,
+            got.points_total
+        );
+        // and the winner still matches the exhaustive reference
+        let (_, want) = exhaustive_argmin(&r, &memo).unwrap();
+        assert_eq!(got.winner.unwrap().point, want.point);
+    }
+
+    #[test]
+    fn budgets_prune_and_infeasible_is_typed() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::SttMram],
+            capacities_mb: vec![1, 2],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let memo = Memo::new();
+        let mut r = req(spec, OptObjective::Edp);
+        r.area_max_mm2 = Some(1e-6);
+        let err = run(&r, 1, &memo).unwrap_err();
+        let inf = err
+            .chain()
+            .find_map(|c| c.downcast_ref::<Infeasible>())
+            .expect("typed Infeasible in the chain");
+        assert_eq!(inf.area_max_mm2, Some(1e-6));
+        assert!(format!("{inf}").contains("design budgets"));
+    }
+
+    #[test]
+    fn circuit_only_grids_answer_edap_and_reject_workload_objectives() {
+        let spec = SweepSpec::circuit_only(
+            vec![MemTech::SttMram, MemTech::SotMram],
+            vec![1, 2, 4],
+        );
+        let memo = Memo::new();
+        let got = run(&req(spec.clone(), OptObjective::Edap), 2, &memo).unwrap();
+        let w = got.winner.unwrap();
+        assert_eq!(got.points_evaluated, 1);
+        assert_eq!(got.points_pruned, got.points_total - 1);
+        assert_eq!(got.best_value, Some(w.tuned.ppa.edap()));
+        // exhaustive check over the tuned columns
+        let all = super::super::run(&spec, 2, &memo).unwrap();
+        let min = all
+            .points
+            .iter()
+            .map(|p| p.tuned.ppa.edap())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(got.best_value, Some(min));
+
+        let err = run(&req(spec, OptObjective::Edp), 1, &memo).unwrap_err();
+        assert!(format!("{err:#}").contains("needs a workload axis"), "{err:#}");
+    }
+
+    #[test]
+    fn capacity_objective_maximizes_under_filters() {
+        let spec = SweepSpec {
+            filters: vec![Filter::CapacityAtMost(8)],
+            ..SweepSpec::circuit_only(vec![MemTech::SotMram], vec![1, 4, 8, 32])
+        };
+        let got = run(&req(spec, OptObjective::Capacity), 1, &Memo::new()).unwrap();
+        assert_eq!(got.winner.unwrap().point.capacity_mb, 8);
+        assert_eq!(got.best_value, Some(-8.0));
+    }
+
+    #[test]
+    fn frontier_mode_reuses_pareto_per_workload_cell() {
+        let body = json::parse(
+            r#"{"techs": ["stt", "sot"], "caps_mb": [1, 2, 4],
+                "dnns": ["AlexNet"], "phases": ["inference"],
+                "frontier": true}"#,
+        )
+        .unwrap();
+        let r = optimize_request_from_json(&body).unwrap();
+        let memo = Memo::new();
+        let got = run(&r, 2, &memo).unwrap();
+        assert!(got.winner.is_none() && got.best_value.is_none());
+        assert!(!got.frontier.is_empty());
+        assert_eq!(got.points_evaluated, got.points_total);
+        assert_eq!(got.points_pruned, 0);
+        // every frontier point is non-dominated within its cell
+        let objectives = pareto::edp_area_capacity();
+        for a in &got.frontier {
+            for b in &got.frontier {
+                if a.point != b.point {
+                    assert!(!pareto::dominates(b, a, &objectives));
+                }
+            }
+        }
+        // spec order is preserved
+        let all = r.spec.expand().unwrap();
+        let pos: Vec<usize> = got
+            .frontier
+            .iter()
+            .map(|p| all.iter().position(|q| *q == p.point).unwrap())
+            .collect();
+        assert!(pos.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn counters_account_for_every_implicit_point() {
+        let spec = SweepSpec {
+            techs: vec![MemTech::SttMram],
+            capacities_mb: vec![1, 2],
+            dnns: vec!["SqueezeNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![1, 2, 4],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let before = (OPT_EVALUATED.value(), OPT_PRUNED.value());
+        let got = run(&req(spec, OptObjective::Latency), 1, &Memo::new()).unwrap();
+        assert_eq!(got.points_total, 6);
+        assert_eq!(got.points_evaluated + got.points_pruned, 6);
+        // other optimize tests share the process-wide counters, so the
+        // deltas are at-least, not exact
+        assert!(OPT_EVALUATED.value() - before.0 >= got.points_evaluated);
+        assert!(OPT_PRUNED.value() - before.1 >= got.points_pruned);
+    }
+}

@@ -194,7 +194,9 @@ impl SweepSpec {
         }
         for &node in &self.nodes_nm {
             if !crate::device::node_calibrated(node) {
-                bail!("{}", crate::device::UncalibratedNode(node));
+                // Typed, not stringly: the serve layer downcasts this
+                // to map it onto the `uncalibrated_node` error kind.
+                return Err(crate::device::UncalibratedNode(node).into());
             }
         }
         for &mb in &self.capacities_mb {
@@ -507,6 +509,189 @@ pub fn parse_phase(s: &str) -> Result<Phase> {
     }
 }
 
+/// Scalar objectives `POST /optimize` and `deepnvm optimize` accept.
+/// All are minimized except `Capacity`, which is maximized (scored
+/// internally as its negation so one comparison rule covers all five).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptObjective {
+    Edp,
+    Edap,
+    Energy,
+    Latency,
+    Capacity,
+}
+
+impl OptObjective {
+    pub const ALL: [OptObjective; 5] = [
+        OptObjective::Edp,
+        OptObjective::Edap,
+        OptObjective::Energy,
+        OptObjective::Latency,
+        OptObjective::Capacity,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptObjective::Edp => "edp",
+            OptObjective::Edap => "edap",
+            OptObjective::Energy => "energy",
+            OptObjective::Latency => "latency",
+            OptObjective::Capacity => "capacity",
+        }
+    }
+
+    /// Objectives that project workload traffic through the energy
+    /// model; a circuit-only grid cannot answer them.
+    pub fn needs_workload(self) -> bool {
+        matches!(
+            self,
+            OptObjective::Edp | OptObjective::Energy | OptObjective::Latency
+        )
+    }
+}
+
+/// Parse an objective name from CLI or HTTP input.
+pub fn parse_objective(s: &str) -> Result<OptObjective> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "edp" => Ok(OptObjective::Edp),
+        "edap" => Ok(OptObjective::Edap),
+        "energy" => Ok(OptObjective::Energy),
+        "latency" => Ok(OptObjective::Latency),
+        "capacity" => Ok(OptObjective::Capacity),
+        other => bail!("unknown objective '{other}' (edp|edap|energy|latency|capacity)"),
+    }
+}
+
+/// One `/optimize` request: the implicit grid (a full [`SweepSpec`],
+/// whose `techs`/`nodes_nm` axes double as the membership constraints
+/// `tech ∈ {…}` / `node ∈ {…}`) plus the objective and the scalar
+/// design budgets.
+#[derive(Clone, Debug)]
+pub struct OptimizeRequest {
+    pub spec: SweepSpec,
+    pub objective: OptObjective,
+    /// Feasibility budget: tuned cache area (mm²) must not exceed this.
+    pub area_max_mm2: Option<f64>,
+    /// Feasibility budget: tuned leakage power (W) must not exceed this.
+    pub leakage_max_w: Option<f64>,
+    /// Multi-objective mode: return the EDP/area/capacity Pareto
+    /// frontier of the feasible grid instead of a scalar winner.
+    pub frontier: bool,
+}
+
+impl OptimizeRequest {
+    /// Constraint check for one tuned design. Batch-independent, so an
+    /// infeasible (tech, capacity, node) column prunes its whole
+    /// workload rectangle before any point is evaluated.
+    pub fn feasible(&self, ppa: &crate::nvsim::model::CachePpa) -> bool {
+        self.area_max_mm2.is_none_or(|a| ppa.area * 1e6 <= a)
+            && self.leakage_max_w.is_none_or(|l| ppa.leakage_power <= l)
+    }
+}
+
+/// An optional positive finite budget value (`"area_max_mm2"`,
+/// `"leakage_max_w"`).
+fn budget(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let b = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'{key}' must be a number"))?;
+            if !b.is_finite() || b <= 0.0 {
+                bail!("'{key}' must be a positive finite number");
+            }
+            Ok(Some(b))
+        }
+    }
+}
+
+/// Parse an [`OptimizeRequest`] from JSON. The grid axes parse exactly
+/// as a `/sweep` body ([`spec_from_json`] — absent axes default, and
+/// unknown keys are ignored); `objective` defaults to `edp`.
+pub fn optimize_request_from_json(j: &Json) -> Result<OptimizeRequest> {
+    let spec = spec_from_json(j)?;
+    let objective = match j.get("objective") {
+        None | Some(Json::Null) => OptObjective::Edp,
+        Some(v) => parse_objective(
+            v.as_str()
+                .ok_or_else(|| anyhow!("'objective' must be a string"))?,
+        )?,
+    };
+    Ok(OptimizeRequest {
+        spec,
+        objective,
+        area_max_mm2: budget(j, "area_max_mm2")?,
+        leakage_max_w: budget(j, "leakage_max_w")?,
+        frontier: j.get("frontier").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+/// Serialize an [`OptimizeRequest`] — the wire format of `POST
+/// /optimize` (also what the `deepnvm optimize` CLI builds internally,
+/// so both surfaces can never drift apart).
+pub fn optimize_request_to_json(r: &OptimizeRequest) -> Json {
+    let mut o = spec_to_json(&r.spec);
+    o.set("objective", Json::Str(r.objective.name().to_string()));
+    if let Some(a) = r.area_max_mm2 {
+        o.set("area_max_mm2", Json::Num(a));
+    }
+    if let Some(l) = r.leakage_max_w {
+        o.set("leakage_max_w", Json::Num(l));
+    }
+    if r.frontier {
+        o.set("frontier", Json::Bool(true));
+    }
+    o
+}
+
+/// The `/optimize` result: the winning grid point (absent in frontier
+/// mode), the Pareto frontier (empty in scalar mode), and the search
+/// accounting that the pruning-ratio CI gate reads.
+#[derive(Clone, Debug)]
+pub struct OptimizeResponse {
+    pub objective: OptObjective,
+    pub winner: Option<super::PointResult>,
+    /// The winner's objective score ([`super::optimize::objective_value`]).
+    pub best_value: Option<f64>,
+    pub frontier: Vec<super::PointResult>,
+    /// Implicit grid size (post-filter spec expansion count).
+    pub points_total: u64,
+    /// Grid points folded through [`super::evaluate_point`].
+    pub points_evaluated: u64,
+    /// `points_total - points_evaluated`: never materialized.
+    pub points_pruned: u64,
+}
+
+/// Serialize an [`OptimizeResponse`]; the winner and frontier entries
+/// use the same point document as `/solve` results and memo exports.
+pub fn optimize_response_to_json(r: &OptimizeResponse) -> Json {
+    let mut o = Json::obj();
+    o.set("objective", Json::Str(r.objective.name().to_string()));
+    o.set(
+        "winner",
+        match &r.winner {
+            Some(w) => super::memo::point_to_json(w),
+            None => Json::Null,
+        },
+    );
+    o.set(
+        "best_value",
+        match r.best_value {
+            Some(v) => Json::Num(v),
+            None => Json::Null,
+        },
+    );
+    o.set(
+        "frontier",
+        Json::Arr(r.frontier.iter().map(super::memo::point_to_json).collect()),
+    );
+    o.set("points_total", Json::Num(r.points_total as f64));
+    o.set("points_evaluated", Json::Num(r.points_evaluated as f64));
+    o.set("points_pruned", Json::Num(r.points_pruned as f64));
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -725,5 +910,92 @@ mod tests {
         assert!(parse_tech("dram").is_err());
         assert_eq!(parse_phase("T").unwrap(), Phase::Training);
         assert!(parse_phase("both").is_err());
+    }
+
+    #[test]
+    fn objective_names_roundtrip() {
+        for obj in OptObjective::ALL {
+            assert_eq!(parse_objective(obj.name()).unwrap(), obj);
+        }
+        assert_eq!(parse_objective(" EDAP ").unwrap(), OptObjective::Edap);
+        assert!(parse_objective("throughput").is_err());
+        assert!(OptObjective::Edp.needs_workload());
+        assert!(OptObjective::Latency.needs_workload());
+        assert!(!OptObjective::Edap.needs_workload());
+        assert!(!OptObjective::Capacity.needs_workload());
+    }
+
+    #[test]
+    fn optimize_request_json_roundtrip_and_defaults() {
+        // empty body: default grid, EDP objective, no budgets
+        let d = optimize_request_from_json(&Json::obj()).unwrap();
+        assert_eq!(d.objective, OptObjective::Edp);
+        assert!(d.area_max_mm2.is_none() && d.leakage_max_w.is_none());
+        assert!(!d.frontier);
+
+        let j = crate::util::json::parse(
+            r#"{"objective": "energy", "techs": ["stt"], "caps_mb": [1, 2],
+                "dnns": ["AlexNet"], "phases": ["inference"],
+                "area_max_mm2": 25.0, "leakage_max_w": 0.5, "frontier": true}"#,
+        )
+        .unwrap();
+        let r = optimize_request_from_json(&j).unwrap();
+        assert_eq!(r.objective, OptObjective::Energy);
+        assert_eq!(r.spec.techs, vec![MemTech::SttMram]);
+        assert_eq!(r.area_max_mm2, Some(25.0));
+        assert_eq!(r.leakage_max_w, Some(0.5));
+        assert!(r.frontier);
+
+        // the serializer round-trips through the parser
+        let back = optimize_request_from_json(&optimize_request_to_json(&r)).unwrap();
+        assert_eq!(back.objective, r.objective);
+        assert_eq!(back.spec.capacities_mb, r.spec.capacities_mb);
+        assert_eq!(back.area_max_mm2, r.area_max_mm2);
+        assert_eq!(back.leakage_max_w, r.leakage_max_w);
+        assert!(back.frontier);
+
+        for bad in [
+            r#"{"objective": "fastest"}"#,
+            r#"{"objective": 3}"#,
+            r#"{"area_max_mm2": -1}"#,
+            r#"{"area_max_mm2": "big"}"#,
+            r#"{"leakage_max_w": 0}"#,
+        ] {
+            let j = crate::util::json::parse(bad).unwrap();
+            assert!(optimize_request_from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn feasibility_budgets_bind_on_ppa() {
+        let ppa = crate::nvsim::model::CachePpa {
+            read_latency: 1e-9,
+            write_latency: 2e-9,
+            read_energy: 1e-10,
+            write_energy: 2e-10,
+            leakage_power: 0.3,
+            area: 20e-6, // 20 mm²
+        };
+        let mut r = optimize_request_from_json(&Json::obj()).unwrap();
+        assert!(r.feasible(&ppa), "no budgets: everything is feasible");
+        r.area_max_mm2 = Some(25.0);
+        r.leakage_max_w = Some(0.5);
+        assert!(r.feasible(&ppa));
+        r.area_max_mm2 = Some(19.0);
+        assert!(!r.feasible(&ppa), "area budget binds");
+        r.area_max_mm2 = Some(25.0);
+        r.leakage_max_w = Some(0.2);
+        assert!(!r.feasible(&ppa), "leakage budget binds");
+    }
+
+    #[test]
+    fn uncalibrated_node_error_is_typed() {
+        let s = SweepSpec { nodes_nm: vec![9], ..SweepSpec::default() };
+        let err = s.expand().unwrap_err();
+        assert!(
+            err.chain()
+                .any(|c| c.downcast_ref::<crate::device::UncalibratedNode>().is_some()),
+            "{err:#}"
+        );
     }
 }

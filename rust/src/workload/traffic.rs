@@ -183,6 +183,20 @@ impl TxTerm {
         ceil_div(elems * ELEM, TX_BYTES)
     }
 
+    /// Real-arithmetic lower bound on [`TxTerm::at`] for every batch
+    /// `>= b`: both ceils (the supertile pass count and the final
+    /// transaction rounding) are dropped, and every coefficient is
+    /// nonnegative, so the affine value at the rectangle's low-batch
+    /// corner bounds the whole batch range. The branch-and-bound
+    /// optimizer's slice triage rides on this.
+    pub fn lower_bound(&self, b: u64) -> f64 {
+        let elems = self.base as f64
+            + self.slope as f64 * b as f64
+            + self.ceil_mult as f64 * self.ceil_unit as f64 * b as f64
+                / SUPERTILE as f64;
+        elems * ELEM as f64 / TX_BYTES as f64
+    }
+
     /// Whether the term is a batch-independent constant.
     fn is_const(&self) -> bool {
         self.slope == 0 && self.ceil_mult == 0
@@ -238,6 +252,18 @@ impl DramTerm {
             }
         }
         (ceil_div(reads, TX_BYTES), ceil_div(writes, TX_BYTES))
+    }
+
+    /// Compulsory-only `(read, write)` lower bound on [`DramTerm::at`]
+    /// for every batch `>= b` and ANY L2 capacity: the capacity-spill
+    /// term only ever adds reads and the transaction ceil only rounds
+    /// up, so dropping both is admissible no matter where the spill
+    /// branch lands.
+    pub fn lower_bound(&self, b: u64) -> (f64, f64) {
+        let a_bytes = (self.a_base + self.a_slope * b) as f64;
+        let b_bytes = (self.b_base + self.b_slope * b) as f64;
+        let c_bytes = (self.c_base + self.c_slope * b) as f64;
+        ((a_bytes + b_bytes) / TX_BYTES as f64, c_bytes / TX_BYTES as f64)
     }
 }
 
@@ -305,6 +331,47 @@ impl BatchLine {
             s.dram_writes += w;
         }
         s
+    }
+
+    /// Admissible lower bound on [`BatchLine::at_capacity`] for every
+    /// batch `>= b` and ANY L2 capacity: L2 terms with their ceils
+    /// dropped, DRAM reduced to its compulsory stream. Every closed-
+    /// form coefficient is nonnegative, so each component is
+    /// nondecreasing in the batch — a whole (capacity, batch)
+    /// rectangle is bounded by its low-batch corner. The final floor
+    /// backs off by one part in 1e9 so f64 rounding can never lift a
+    /// bound above the exact integer count it must stay under.
+    pub fn lower_bound_at(&self, b: usize) -> WorkloadStats {
+        let floor = |x: f64| (x * (1.0 - 1e-9)).max(0.0) as u64;
+        let b = b as u64;
+        let mut reads = self.const_reads as f64;
+        let mut writes = self.const_writes as f64;
+        for t in &self.l2_reads {
+            reads += t.lower_bound(b);
+        }
+        for t in &self.l2_writes {
+            writes += t.lower_bound(b);
+        }
+        for t in &self.streams {
+            let tx = t.lower_bound(b);
+            reads += tx;
+            // the exact path adds tx_int / 2 (integer), >= tx/2 - 1/2
+            writes += tx / 2.0 - 0.5;
+        }
+        let mut dram_reads = 0.0;
+        let mut dram_writes = 0.0;
+        for d in &self.dram {
+            let (r, w) = d.lower_bound(b);
+            dram_reads += r;
+            dram_writes += w;
+        }
+        WorkloadStats {
+            l2_reads: floor(reads),
+            l2_writes: floor(writes),
+            dram_reads: floor(dram_reads),
+            dram_writes: floor(dram_writes),
+            macs: self.macs_slope * b,
+        }
     }
 
     fn push_read(&mut self, t: TxTerm) {
@@ -681,6 +748,29 @@ mod tests {
             let ds = small.run(d, ph, b).dram_total();
             let dl = large.run(d, ph, b).dram_total();
             assert!(dl <= ds, "{}: dram {} -> {}", d.name, ds, dl);
+        });
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_exact_stats() {
+        // The optimizer's rectangle bound: the ceil-dropped line at the
+        // low-batch corner must stay at or below the exact stats for
+        // every batch >= b and every capacity.
+        proptest::check(60, |g| {
+            let zoo = Dnn::zoo();
+            let d = g.choose(&zoo);
+            let ph = *g.choose(&Phase::ALL);
+            let line = TrafficModel::default().line(d, ph);
+            let b = g.usize_in(1, 96);
+            let hi = b + g.usize_in(0, 64);
+            let l2 = *g.choose(&[1u64 << 20, 3 << 20, 24 << 20]);
+            let lb = line.lower_bound_at(b);
+            let exact = line.at_capacity(hi, l2);
+            assert!(lb.l2_reads <= exact.l2_reads, "{} {}", d.name, ph.name());
+            assert!(lb.l2_writes <= exact.l2_writes, "{}", d.name);
+            assert!(lb.dram_reads <= exact.dram_reads, "{}", d.name);
+            assert!(lb.dram_writes <= exact.dram_writes, "{}", d.name);
+            assert!(lb.macs <= exact.macs);
         });
     }
 

@@ -1,0 +1,240 @@
+//! End-to-end guarantees of the `/optimize` search engine:
+//!
+//! (a) on seeded random sub-grids, branch-and-bound returns the same
+//!     winner as an exhaustive first-wins argmin over `sweep::run` —
+//!     for every objective, bit-for-bit on the winning evaluation and
+//!     the objective score, with the reference computed on an
+//!     independent memo (so the identity is a property of the model,
+//!     not of cache sharing);
+//! (b) a pinned golden query — min EDP, area <= 25 mm², node in
+//!     {7, 5} — is answered by the exhaustive argmin, satisfies its
+//!     own constraints, reproduces bit-for-bit on a warm rerun, and
+//!     does not materialize the full grid;
+//! (c) an unsatisfiable budget surfaces as the typed
+//!     [`optimize::Infeasible`] error, never a free-text string.
+
+use deepnvm::device::MemTech;
+use deepnvm::sweep::{self, optimize, Memo, OptObjective, OptimizeRequest, SweepSpec};
+use deepnvm::util::rng::Rng;
+use deepnvm::workload::models::Phase;
+
+/// Exhaustive reference: evaluate the whole grid, filter by the
+/// request's budgets, and take the first-wins argmin of the objective
+/// in spec order — the semantics the search must reproduce exactly.
+fn exhaustive_winner(
+    req: &OptimizeRequest,
+    memo: &Memo,
+) -> Option<(sweep::PointResult, f64)> {
+    let res = sweep::run(&req.spec, 2, memo).expect("reference sweep");
+    let mut best: Option<(sweep::PointResult, f64)> = None;
+    for p in &res.points {
+        if !req.feasible(&p.tuned.ppa) {
+            continue;
+        }
+        let v = optimize::objective_value(req.objective, p);
+        let better = match &best {
+            None => true,
+            Some((_, bv)) => v < *bv,
+        };
+        if better {
+            best = Some((p.clone(), v));
+        }
+    }
+    best
+}
+
+/// Random nonempty subset of `pool`, preserving pool order (the order
+/// axes carry in a spec), with at most `max` members.
+fn pick<T: Copy>(rng: &mut Rng, pool: &[T], max: usize) -> Vec<T> {
+    let k = rng.range_usize(1, max.min(pool.len()));
+    let mut idx: Vec<usize> = (0..pool.len()).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx.into_iter().map(|i| pool[i]).collect()
+}
+
+fn check_against_exhaustive(
+    trial: usize,
+    req: &OptimizeRequest,
+    search_memo: &Memo,
+    ref_memo: &Memo,
+) {
+    let got = optimize::run(req, 2, search_memo);
+    let want = exhaustive_winner(req, ref_memo);
+    match (got, want) {
+        (Ok(resp), Some((p, v))) => {
+            let w = resp.winner.unwrap_or_else(|| {
+                panic!("trial {trial} {:?}: no winner, expected {:?}", req.objective, p.point)
+            });
+            assert_eq!(w.point, p.point, "trial {trial} {:?}", req.objective);
+            assert_eq!(
+                resp.best_value.unwrap().to_bits(),
+                v.to_bits(),
+                "trial {trial} {:?}: objective score must be bit-identical",
+                req.objective
+            );
+            match (w.eval, p.eval) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+                    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+                    assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+                }
+                (None, None) => {}
+                other => panic!("trial {trial}: eval presence mismatch {other:?}"),
+            }
+            assert_eq!(
+                resp.points_evaluated + resp.points_pruned,
+                resp.points_total,
+                "trial {trial}: search accounting must cover the grid"
+            );
+        }
+        (Err(e), None) => {
+            assert!(
+                e.chain().any(|c| c.downcast_ref::<optimize::Infeasible>().is_some()),
+                "trial {trial}: infeasible grids must fail typed, got: {e:#}"
+            );
+        }
+        (Ok(resp), None) => panic!(
+            "trial {trial} {:?}: search returned {:?} on an infeasible grid",
+            req.objective, resp.winner
+        ),
+        (Err(e), Some((p, _))) => panic!(
+            "trial {trial} {:?}: search errored ({e:#}) but {:?} is feasible",
+            req.objective, p.point
+        ),
+    }
+}
+
+// ---------------------------------------------------------------- (a)
+
+#[test]
+fn search_matches_exhaustive_argmin_on_seeded_random_grids() {
+    let mut rng = Rng::new(0x5EED_0071);
+    let search_memo = Memo::new();
+    let ref_memo = Memo::new();
+    let cap_pool = [1u64, 2, 3, 4, 8];
+    let node_pool = [16u32, 7, 5];
+    let dnn_pool = ["AlexNet", "ResNet-18", "SqueezeNet"];
+    let batch_pool = [1usize, 2, 4, 8, 16, 32];
+
+    for trial in 0..8 {
+        let with_workload = rng.chance(0.75);
+        let spec = SweepSpec {
+            techs: pick(&mut rng, &MemTech::ALL, 3),
+            capacities_mb: pick(&mut rng, &cap_pool, 3),
+            dnns: if with_workload {
+                pick(&mut rng, &dnn_pool, 2).into_iter().map(String::from).collect()
+            } else {
+                vec![]
+            },
+            phases: pick(&mut rng, &Phase::ALL, 2),
+            batches: if with_workload { pick(&mut rng, &batch_pool, 3) } else { vec![] },
+            nodes_nm: pick(&mut rng, &node_pool, 2),
+            filters: vec![],
+        };
+        let area_max_mm2 = rng.chance(0.4).then(|| rng.range_f64(0.5, 40.0));
+        let leakage_max_w = rng.chance(0.3).then(|| rng.range_f64(0.05, 4.0));
+
+        let objectives: &[OptObjective] = if with_workload {
+            &OptObjective::ALL
+        } else {
+            &[OptObjective::Edap, OptObjective::Capacity]
+        };
+        for &objective in objectives {
+            let req = OptimizeRequest {
+                spec: spec.clone(),
+                objective,
+                area_max_mm2,
+                leakage_max_w,
+                frontier: false,
+            };
+            check_against_exhaustive(trial, &req, &search_memo, &ref_memo);
+        }
+        if !with_workload {
+            // a circuit-only grid cannot answer workload objectives
+            let req = OptimizeRequest {
+                spec: spec.clone(),
+                objective: OptObjective::Edp,
+                area_max_mm2: None,
+                leakage_max_w: None,
+                frontier: false,
+            };
+            assert!(
+                optimize::run(&req, 2, &search_memo).is_err(),
+                "trial {trial}: EDP over a circuit-only grid must be rejected"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (b)
+
+#[test]
+fn golden_min_edp_area_25mm2_nodes_7_and_5() {
+    let req = OptimizeRequest {
+        spec: SweepSpec {
+            techs: MemTech::ALL.to_vec(),
+            capacities_mb: vec![1, 2, 4, 8, 16, 32],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![1, 4, 16, 64],
+            nodes_nm: vec![7, 5],
+            filters: vec![],
+        },
+        objective: OptObjective::Edp,
+        area_max_mm2: Some(25.0),
+        leakage_max_w: None,
+        frontier: false,
+    };
+    let memo = Memo::new();
+    let resp = optimize::run(&req, 2, &memo).unwrap();
+    let w = resp.winner.expect("small caps fit 25 mm² at 7/5 nm");
+
+    // the winner satisfies its own constraints...
+    assert!(req.spec.nodes_nm.contains(&w.point.node_nm), "{:?}", w.point);
+    assert!(w.tuned.ppa.area * 1e6 <= 25.0, "area {} m²", w.tuned.ppa.area);
+    // ...and IS the exhaustive argmin, on an independent memo
+    let (best, bv) = exhaustive_winner(&req, &Memo::new()).expect("feasible");
+    assert_eq!(w.point, best.point);
+    assert_eq!(
+        w.eval.unwrap().edp.to_bits(),
+        best.eval.unwrap().edp.to_bits(),
+        "winner evaluation must be bit-identical to the exhaustive one"
+    );
+    assert_eq!(resp.best_value.unwrap().to_bits(), bv.to_bits());
+
+    // pinned determinism: a warm rerun reproduces the result exactly
+    let again = optimize::run(&req, 2, &memo).unwrap();
+    assert_eq!(again.winner.unwrap().point, w.point);
+    assert_eq!(
+        again.best_value.unwrap().to_bits(),
+        resp.best_value.unwrap().to_bits()
+    );
+
+    // the search earns its keep: strictly fewer evaluations than grid
+    assert!(
+        resp.points_evaluated < resp.points_total,
+        "search must not materialize the whole grid: {resp:?}"
+    );
+}
+
+// ---------------------------------------------------------------- (c)
+
+#[test]
+fn unsatisfiable_budget_is_the_typed_infeasible_error() {
+    let req = OptimizeRequest {
+        spec: SweepSpec::circuit_only(vec![MemTech::SttMram], vec![1]),
+        objective: OptObjective::Edap,
+        area_max_mm2: Some(1e-9),
+        leakage_max_w: None,
+        frontier: false,
+    };
+    let err = optimize::run(&req, 2, &Memo::new()).unwrap_err();
+    let inf = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<optimize::Infeasible>())
+        .unwrap_or_else(|| panic!("expected Infeasible in the chain, got: {err:#}"));
+    assert_eq!(inf.area_max_mm2, Some(1e-9));
+    assert!(inf.leakage_max_w.is_none());
+}

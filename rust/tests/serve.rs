@@ -11,7 +11,11 @@
 //! (c) `/solve` answers from cache on repeat, and protocol errors map
 //!     to 4xx, never a hang or a worker death;
 //! (d) `/metrics` and `/trace` expose live telemetry — the series and
-//!     spans this file's own traffic creates, not a static page.
+//!     spans this file's own traffic creates, not a static page;
+//! (f) every response carries the `Deepnvm-Api-Version` header, every
+//!     4xx/5xx body carries the typed `{"error": {code, kind,
+//!     message}}` envelope with a stable kind, and `/optimize` answers
+//!     a live search (and a typed 422 on an infeasible budget).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -500,6 +504,7 @@ fn loadgen_soaks_a_live_server_and_reports_quantiles() {
         concurrency: 2,
         solve_weight: 3,
         sweep_weight: 1,
+        optimize_weight: 1,
         p99_ms: None,
     };
     let report = loadgen::run(&cfg).unwrap();
@@ -507,8 +512,10 @@ fn loadgen_soaks_a_live_server_and_reports_quantiles() {
     assert_eq!(report.errors, 0, "{report:?}");
     assert!(report.qps > 0.0, "{report:?}");
     assert!(
-        report.solve.requests > 0 && report.sweep.requests > 0,
-        "the 3:1 mix must exercise both kinds: {report:?}"
+        report.solve.requests > 0
+            && report.sweep.requests > 0
+            && report.optimize.requests > 0,
+        "the 3:1:1 mix must exercise all three kinds: {report:?}"
     );
     assert!(report.p50_ms <= report.p99_ms, "{report:?}");
     assert!(report.meets_p99(f64::INFINITY));
@@ -522,4 +529,111 @@ fn loadgen_soaks_a_live_server_and_reports_quantiles() {
         text.contains("deepnvm_loadgen_request_duration_ns_count{kind=\"solve\"}"),
         "{text}"
     );
+}
+
+// ---------------------------------------------------------------- (f)
+
+/// Parse the error envelope `{"error": {code, kind, message}}` out of
+/// a response body and return (code, kind).
+fn envelope(text: &str) -> (u64, String) {
+    let j = json::parse(text).unwrap_or_else(|e| panic!("unparseable body {text:?}: {e}"));
+    let e = j.get("error").unwrap_or_else(|| panic!("no envelope in {text}"));
+    (
+        e.get("code").unwrap().as_u64().unwrap(),
+        e.get("kind").unwrap().as_str().unwrap().to_string(),
+    )
+}
+
+#[test]
+fn typed_errors_and_api_version_over_live_http() {
+    let memo = leaked_memo();
+    let server = boot(memo);
+
+    // the version header rides EVERY response — success and error alike
+    for reqline in [
+        "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n".to_string(),
+        "GET /bogus HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n".to_string(),
+    ] {
+        let mut s = TcpStream::connect(server.local_addr()).unwrap();
+        s.write_all(reqline.as_bytes()).unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let (head, _) = raw.split_once("\r\n\r\n").unwrap();
+        assert!(
+            head.contains(&format!(
+                "Deepnvm-Api-Version: {}",
+                deepnvm::sweep::memo::MODEL_VERSION
+            )),
+            "{head}"
+        );
+    }
+
+    // /healthz advertises the same version in-band
+    let (_, text) = get(&server, "/healthz");
+    let j = json::parse(&text).unwrap();
+    assert_eq!(
+        j.get("api_version").unwrap().as_u64(),
+        Some(deepnvm::sweep::memo::MODEL_VERSION as u64)
+    );
+
+    // GET / is the generated route table, and it lists /optimize
+    let (status, text) = get(&server, "/");
+    assert_eq!(status, 200);
+    let j = json::parse(&text).unwrap();
+    let routes: Vec<&str> = j
+        .get("routes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|r| r.get("path").and_then(Json::as_str))
+        .collect();
+    assert!(routes.contains(&"/optimize"), "{routes:?}");
+
+    // one stable kind per error class, asserted over the wire
+    let (status, text) = post(&server, "/solve", "{oops");
+    assert_eq!((status, envelope(&text)), (400, (400, "bad_json".into())));
+
+    let (status, text) = post(&server, "/solve", r#"{"tech": "stt"}"#);
+    assert_eq!((status, envelope(&text)), (422, (422, "invalid_spec".into())));
+
+    let (status, text) =
+        post(&server, "/solve", r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 9}"#);
+    assert_eq!((status, envelope(&text)), (422, (422, "uncalibrated_node".into())));
+
+    let (status, text) = post(&server, "/sweep", r#"{"report": "fig99"}"#);
+    assert_eq!((status, envelope(&text)), (422, (422, "unknown_report".into())));
+
+    let (status, text) = get(&server, "/bogus");
+    assert_eq!((status, envelope(&text)), (404, (404, "not_found".into())));
+
+    let (status, text) = get(&server, "/sweep");
+    assert_eq!((status, envelope(&text)), (405, (405, "method_not_allowed".into())));
+
+    // /optimize: a live search answers, and an impossible area budget
+    // is a typed 422, not a free-text string
+    let (status, text) = post(
+        &server,
+        "/optimize",
+        r#"{"techs": ["stt", "sot"], "caps_mb": [1, 2], "dnns": ["AlexNet"],
+            "phases": ["inference"], "batches": [1, 4], "objective": "edp",
+            "jobs": 2}"#,
+    );
+    assert_eq!(status, 200, "{text}");
+    let j = json::parse(&text).unwrap();
+    let winner = j.get("winner").unwrap();
+    assert_ne!(winner, &Json::Null, "{text}");
+    assert!(winner.get("eval").unwrap().get("edp").unwrap().as_f64().unwrap() > 0.0);
+    let total = j.get("points_total").unwrap().as_u64().unwrap();
+    let evaluated = j.get("points_evaluated").unwrap().as_u64().unwrap();
+    let pruned = j.get("points_pruned").unwrap().as_u64().unwrap();
+    assert_eq!((total, evaluated + pruned), (8, 8), "{text}");
+
+    let (status, text) = post(
+        &server,
+        "/optimize",
+        r#"{"techs": ["stt"], "caps_mb": [1], "dnns": [], "objective": "edap",
+            "area_max_mm2": 1e-9}"#,
+    );
+    assert_eq!((status, envelope(&text)), (422, (422, "infeasible".into())));
 }
