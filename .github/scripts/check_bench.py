@@ -185,6 +185,36 @@ if sweep is not None:
             f"BENCH_sweep.json: batch_sweep_batches {batches} < 16 "
             "(the batch sweep must be wide enough to prove the axis is free)"
         )
+    # hybrid tech axis: a way-partitioned selection composes its PPA
+    # from the two cached pure partner solves — the sweep must record
+    # ZERO circuit solves beyond the pure partners, cold and warm alike
+    hybrid_extra = recorded(
+        sweep, "BENCH_sweep.json", "hybrid_sweep_extra_circuit_solves"
+    )
+    hybrid_extra_ceiling = acc.get("hybrid_sweep_extra_circuit_solves_max", 0)
+    if hybrid_extra is not None and hybrid_extra > hybrid_extra_ceiling:
+        failures.append(
+            "BENCH_sweep.json: hybrid_sweep_extra_circuit_solves "
+            f"{hybrid_extra} > allowed {hybrid_extra_ceiling} "
+            "(hybrids must compose from cached pure solves)"
+        )
+    hybrid_warm = recorded(
+        sweep, "BENCH_sweep.json", "hybrid_sweep_warm_rerun_circuit_solves"
+    )
+    hybrid_warm_ceiling = acc.get("hybrid_sweep_warm_rerun_circuit_solves_max", 0)
+    if hybrid_warm is not None and hybrid_warm > hybrid_warm_ceiling:
+        failures.append(
+            "BENCH_sweep.json: hybrid_sweep_warm_rerun_circuit_solves "
+            f"{hybrid_warm} > allowed {hybrid_warm_ceiling}"
+        )
+    hybrid_sels = recorded(
+        sweep, "BENCH_sweep.json", "hybrid_sweep_tech_selections"
+    )
+    if hybrid_sels is not None and hybrid_sels < 10:
+        failures.append(
+            f"BENCH_sweep.json: hybrid_sweep_tech_selections {hybrid_sels} "
+            "< 10 (the hybrid sweep must span a real way/steer grid)"
+        )
     # /optimize search: branch-and-bound must prune at least
     # optimize_prune_ratio_min grid points per point evaluated (the
     # whole reason the search beats the sweep)
@@ -214,6 +244,10 @@ if sweep is not None:
     ratio_gate(
         "BENCH_sweep.json", sweep, "batch_sweep_warm_ms", "batch_sweep_cold_ms",
         why="the warm batch sweep must beat its cold run",
+    )
+    ratio_gate(
+        "BENCH_sweep.json", sweep, "hybrid_sweep_warm_ms", "hybrid_sweep_cold_ms",
+        why="the warm hybrid sweep must beat its cold run",
     )
 
 serve = load("BENCH_serve.json")

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Gate CI on the `deepnvm validate --json` cross-validation report.
+
+The report replays (dnn, phase, capacity) cells through both the
+analytic traffic model and the trace-driven hierarchy simulation and
+records per-cell relative DRAM-transaction error. This gate fails when:
+
+- the report is missing, unparseable, or carries no cells;
+- any cell's rel_err exceeds the bound the report itself carries
+  (deepnvm::gpusim::validate::MAX_REL_ERR — the binary already exits
+  nonzero on a breach, but re-checking the artifact keeps the gate
+  honest even if the exit-code plumbing regresses);
+- either substrate recorded zero DRAM transactions anywhere (a cell
+  that moved no data validated nothing).
+
+Usage: check_validate.py <validate.json>
+"""
+
+import json
+import pathlib
+import sys
+
+failures = []
+
+if len(sys.argv) != 2:
+    print("usage: check_validate.py <validate.json>", file=sys.stderr)
+    sys.exit(2)
+
+path = pathlib.Path(sys.argv[1])
+if not path.exists():
+    print(f"{path}: missing (did `deepnvm validate --json` run?)", file=sys.stderr)
+    sys.exit(1)
+try:
+    doc = json.loads(path.read_text())
+except ValueError as e:
+    print(f"{path}: unparseable ({e})", file=sys.stderr)
+    sys.exit(1)
+
+cells = doc.get("cells", [])
+bound = doc.get("bound")
+if not cells:
+    failures.append("report carries no cells")
+if bound is None:
+    failures.append("report carries no bound")
+
+for c in cells:
+    tag = f"{c.get('dnn')}/{c.get('phase')}/{c.get('capacity_mb')}MB"
+    if not c.get("analytic_dram"):
+        failures.append(f"{tag}: analytic_dram is zero or missing")
+    if not c.get("sim_dram"):
+        failures.append(f"{tag}: sim_dram is zero or missing")
+    rel = c.get("rel_err")
+    if rel is None:
+        failures.append(f"{tag}: rel_err missing")
+    elif bound is not None and rel > bound:
+        failures.append(f"{tag}: rel_err {rel:.4f} > bound {bound}")
+
+if doc.get("pass") is not True:
+    failures.append(f"report did not self-report pass (max_rel_err "
+                    f"{doc.get('max_rel_err')}, bound {bound})")
+
+if failures:
+    print("validate acceptance FAILED:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+
+worst = max((c.get("rel_err", 0.0) for c in cells), default=0.0)
+print(f"validate acceptance OK: {len(cells)} cell(s), "
+      f"max rel_err {worst:.4f} <= bound {bound}")

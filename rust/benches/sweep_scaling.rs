@@ -9,6 +9,8 @@ mod bench_common;
 use std::time::Instant;
 
 use deepnvm::device::MemTech;
+use deepnvm::nvsim::TechSel;
+use deepnvm::sweep::spec::parse_tech_sel;
 use deepnvm::sweep::{self, exec, Memo, SweepSpec};
 use deepnvm::util::bench::{self, Bench};
 use deepnvm::util::json::Json;
@@ -118,7 +120,7 @@ fn main() {
         Dnn::zoo().iter().map(|d| d.name.to_string()).collect()
     };
     let batch_spec = SweepSpec {
-        techs: vec![MemTech::SttMram],
+        techs: vec![MemTech::SttMram.into()],
         capacities_mb: vec![3],
         dnns: batch_dnns,
         phases: Phase::ALL.to_vec(),
@@ -148,12 +150,55 @@ fn main() {
     );
     assert_eq!(batch_warm_traffic, 0, "warm batch sweep must not re-lower");
 
+    // Hybrid tech axis: way-partitioned SRAM/MRAM selections compose
+    // their PPA from the two cached pure partner solves. A steer/way
+    // sweep over many hybrid selections must therefore cost exactly
+    // the pure partner solves (2 per capacity here) — zero extra
+    // circuit work per hybrid — and the warm rerun must solve nothing.
+    let mut hybrid_techs = TechSel::pures(&[MemTech::Sram, MemTech::SttMram]);
+    for ways in [2u32, 4, 8, 12] {
+        for steer in ["0.25", "0.5", "0.85"] {
+            hybrid_techs
+                .push(parse_tech_sel(&format!("hybrid-stt:{ways}@{steer}")).unwrap());
+        }
+    }
+    let hybrid_spec = SweepSpec {
+        techs: hybrid_techs,
+        capacities_mb: if quick { vec![2] } else { vec![2, 8] },
+        dnns: vec![],
+        phases: Phase::ALL.to_vec(),
+        batches: vec![],
+        nodes_nm: vec![16],
+        filters: vec![],
+    };
+    let hybrid_points = hybrid_spec.expand().expect("hybrid bench spec").len();
+    let hybrid_memo = Memo::new();
+    let t_hybrid_cold = timed("bench_hybrid_sweep_cold", &hybrid_spec, jobs, &hybrid_memo);
+    let hybrid_solves = hybrid_memo.solve_count();
+    let t_hybrid_warm = timed("bench_hybrid_sweep_warm", &hybrid_spec, jobs, &hybrid_memo);
+    let hybrid_warm_solves = hybrid_memo.solve_count() - hybrid_solves;
+    let pure_partner_solves = 2 * hybrid_spec.capacities_mb.len() as u64;
+    println!(
+        "  hybrid sweep ({} selections, {hybrid_points} points) {:>5.2} ms cold \
+         ({hybrid_solves} solves for {pure_partner_solves} pure partners), \
+         {:.2} ms warm ({hybrid_warm_solves} new solves)",
+        hybrid_spec.techs.len(),
+        t_hybrid_cold * 1e3,
+        t_hybrid_warm * 1e3,
+    );
+    assert_eq!(
+        hybrid_solves, pure_partner_solves,
+        "hybrid selections must compose from cached pure solves, \
+         never solve circuits of their own"
+    );
+    assert_eq!(hybrid_warm_solves, 0, "warm hybrid sweep must not re-solve");
+
     // Optimize: branch-and-bound argmin over a wide implicit grid. The
     // search returns the exhaustive argmin bit-for-bit (tests prove
     // that) while materializing a fraction of the grid — the pruning
     // ratio recorded here is CI-gated at >= 10x.
     let opt_spec = SweepSpec {
-        techs: MemTech::ALL.to_vec(),
+        techs: TechSel::pure_all(),
         capacities_mb: if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8] },
         dnns: batch_spec.dnns.clone(),
         phases: Phase::ALL.to_vec(),
@@ -209,6 +254,10 @@ fn main() {
     // batches the axis carries
     acc.set("batch_sweep_traffic_evals_max", Json::Num(workload_pairs as f64));
     acc.set("batch_sweep_warm_rerun_traffic_evals_max", Json::Num(0.0));
+    // every hybrid selection rides its two pure partner solves:
+    // extra = total - partners must be zero, cold and warm alike
+    acc.set("hybrid_sweep_extra_circuit_solves_max", Json::Num(0.0));
+    acc.set("hybrid_sweep_warm_rerun_circuit_solves_max", Json::Num(0.0));
     // branch-and-bound must prune at least 10 grid points for every
     // one it evaluates on the wide search grid
     acc.set("optimize_prune_ratio_min", Json::Num(10.0));
@@ -245,6 +294,23 @@ fn main() {
     );
     set_hist_ms(&mut j, "batch_sweep_cold_ms", "bench_batch_sweep_cold");
     set_hist_ms(&mut j, "batch_sweep_warm_ms", "bench_batch_sweep_warm");
+    j.set("hybrid_sweep_tech_selections", Json::Num(hybrid_spec.techs.len() as f64));
+    j.set("hybrid_sweep_grid_points", Json::Num(hybrid_points as f64));
+    j.set("hybrid_sweep_circuit_solves", Json::Num(hybrid_solves as f64));
+    j.set(
+        "hybrid_sweep_pure_partner_solves",
+        Json::Num(pure_partner_solves as f64),
+    );
+    j.set(
+        "hybrid_sweep_extra_circuit_solves",
+        Json::Num((hybrid_solves - pure_partner_solves) as f64),
+    );
+    j.set(
+        "hybrid_sweep_warm_rerun_circuit_solves",
+        Json::Num(hybrid_warm_solves as f64),
+    );
+    set_hist_ms(&mut j, "hybrid_sweep_cold_ms", "bench_hybrid_sweep_cold");
+    set_hist_ms(&mut j, "hybrid_sweep_warm_ms", "bench_hybrid_sweep_warm");
     set_hist_ms(&mut j, "optimize_ms", "bench_optimize_search");
     j.set("optimize_grid_points", Json::Num(opt.points_total as f64));
     j.set("optimize_points_evaluated", Json::Num(opt.points_evaluated as f64));

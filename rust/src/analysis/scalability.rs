@@ -11,6 +11,7 @@
 
 use crate::device::MemTech;
 use crate::nvsim::explorer::TunedConfig;
+use crate::nvsim::TechSel;
 use crate::sweep::{self, SweepSpec};
 use crate::workload::models::{Dnn, Phase};
 
@@ -81,7 +82,7 @@ pub fn workload_sweep_with(
         return Ok(Vec::new()); // total on empty input, like the legacy loop
     }
     let spec = SweepSpec {
-        techs: vec![MemTech::SttMram, MemTech::SotMram],
+        techs: TechSel::pures(&[MemTech::SttMram, MemTech::SotMram]),
         capacities_mb: capacities_mb.to_vec(),
         dnns: Dnn::zoo().iter().map(|d| d.name.to_string()).collect(),
         phases: Phase::ALL.to_vec(),
@@ -171,7 +172,7 @@ pub fn node_sweep_with(
         .into_iter()
         .map(|p| NodePoint {
             node_nm: p.point.node_nm,
-            tech: p.point.tech,
+            tech: p.point.tech.pure().expect("circuit_only specs are pure"),
             capacity_mb: p.point.capacity_mb,
             read_latency: p.tuned.ppa.read_latency,
             write_latency: p.tuned.ppa.write_latency,

@@ -6,7 +6,8 @@ use anyhow::{bail, Context, Result};
 use super::reports::{self, Report};
 use super::store::Store;
 use crate::device::MemTech;
-use crate::sweep::spec::{parse_phase, parse_tech};
+use crate::nvsim::TechSel;
+use crate::sweep::spec::{parse_phase, parse_tech_sel};
 use crate::sweep::{Filter, SweepSpec};
 use crate::workload::models::{Dnn, Phase};
 
@@ -62,6 +63,12 @@ DESIGN-SPACE ENGINE:
                 over keep-alive connections, report QPS and p50/p99,
                 and optionally gate on --p99-ms (nonzero exit on
                 breach)
+  validate      Cross-validate the analytic traffic model against the
+                trace-driven hierarchy simulation: replay every
+                requested (dnn, phase, capacity) cell through both and
+                tabulate per-cell relative DRAM-transaction error
+                (nonzero exit when any cell exceeds the documented
+                bound)
 
 OTHER:
   e2e-train     Train the TinyCNN artifact via PJRT (needs `make artifacts`)
@@ -80,7 +87,10 @@ OPTIONS:
                   DEEPNVM_TRACE_RING env var; must precede first span)
 
 SWEEP OPTIONS:
-  --techs LIST    sram,stt,sot (default: all three)
+  --techs LIST    sram,stt,sot, or way-partitioned hybrids spelled
+                  hybrid-<nvm>:<sram_ways>@<steer> (e.g.
+                  hybrid-stt:4@0.85: 4 of 16 ways SRAM, 85% of writes
+                  steered to them); default: the three pure techs
   --caps LIST     capacities in MB (default: 1,2,4,8,16,32)
   --dnns LIST     zoo workloads, or 'none' for a circuit-only PPA sweep
   --phases LIST   inference,training (default: both)
@@ -126,7 +136,17 @@ LOADGEN OPTIONS:
   --concurrency N worker threads, one keep-alive connection each
                   (default 4)
   --mix SV:SW[:SO] solve:sweep[:optimize] request ratio (default 9:1)
+  --hot-frac F    draw fraction F of /solve bodies from the small hot
+                  pool (cache-hit path) and 1-F from a 114-key cold
+                  tail of hybrid points, reporting per-class p50/p99
   --p99-ms MS     fail (exit 1) when overall p99 exceeds MS
+
+VALIDATE OPTIONS:
+  --dnns LIST     workloads to replay (default: AlexNet,SqueezeNet)
+  --phases LIST   inference,training (default: inference)
+  --caps LIST     L2 capacities in MB, 1..=64 (default: 3,8)
+  --batches N     a single batch size (default 1)
+  --json          emit the report as JSON instead of the CSV table
 
 EXAMPLE:
   deepnvm sweep --techs stt,sot --caps 2,8,32 --dnns AlexNet,ResNet-18 \\
@@ -148,7 +168,7 @@ pub struct CliOptions {
     pub batches_explicit: bool,
     pub steps: usize,
     // sweep axes (empty = command defaults)
-    pub techs: Vec<MemTech>,
+    pub techs: Vec<TechSel>,
     pub caps: Vec<u64>,
     pub dnns: Vec<String>,
     pub phases: Vec<Phase>,
@@ -188,8 +208,12 @@ pub struct CliOptions {
     pub concurrency: usize,
     /// Loadgen solve:sweep[:optimize] ratio (`--mix`).
     pub mix: String,
+    /// Loadgen hot-set fraction (`--hot-frac`).
+    pub hot_frac: Option<f64>,
     /// Loadgen p99 gate in milliseconds (`--p99-ms`).
     pub p99_ms: Option<f64>,
+    /// Emit JSON instead of the human table (`validate --json`).
+    pub json: bool,
     /// Search objective for `optimize` (`--objective`).
     pub objective: crate::sweep::OptObjective,
     /// Area budget in mm² for `optimize` (`--area-max`).
@@ -231,7 +255,9 @@ impl Default for CliOptions {
             duration_secs: 10,
             concurrency: 4,
             mix: "9:1".into(),
+            hot_frac: None,
             p99_ms: None,
+            json: false,
             objective: crate::sweep::OptObjective::Edp,
             area_max: None,
             leak_max: None,
@@ -278,7 +304,7 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
             "--techs" => {
                 o.techs = split_list(value()?)
                     .iter()
-                    .map(|s| parse_tech(s))
+                    .map(|s| parse_tech_sel(s))
                     .collect::<Result<_>>()?;
                 if o.techs.is_empty() {
                     bail!("--techs needs at least one value");
@@ -404,6 +430,16 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
                 crate::serve::loadgen::parse_mix(&v)?;
                 o.mix = v;
             }
+            "--hot-frac" => {
+                let f: f64 = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --hot-frac: {e}"))?;
+                if !f.is_finite() || !(0.0..=1.0).contains(&f) {
+                    bail!("--hot-frac must be in [0, 1]");
+                }
+                o.hot_frac = Some(f);
+            }
+            "--json" => o.json = true,
             "--p99-ms" => {
                 let ms: f64 = value()?
                     .parse()
@@ -451,7 +487,8 @@ fn scal_caps(quick: bool) -> Vec<u64> {
 
 /// Build the sweep spec for `deepnvm sweep` from CLI options.
 pub fn sweep_spec_from(o: &CliOptions) -> Result<SweepSpec> {
-    let techs = if o.techs.is_empty() { MemTech::ALL.to_vec() } else { o.techs.clone() };
+    let techs =
+        if o.techs.is_empty() { TechSel::pures(&MemTech::ALL) } else { o.techs.clone() };
     let caps = if o.caps.is_empty() { scal_caps(o.quick) } else { o.caps.clone() };
     let circuit_only =
         o.dnns.len() == 1 && o.dnns[0].eq_ignore_ascii_case("none");
@@ -758,6 +795,7 @@ fn loadgen_cmd(o: &CliOptions) -> Result<()> {
         solve_weight,
         sweep_weight,
         optimize_weight,
+        hot_frac: o.hot_frac,
         p99_ms: o.p99_ms,
     };
     let report = crate::serve::loadgen::run(&cfg)?;
@@ -776,6 +814,44 @@ fn loadgen_cmd(o: &CliOptions) -> Result<()> {
             );
         }
         println!("loadgen: p99 {:.3} ms is within the {limit} ms gate", report.p99_ms);
+    }
+    Ok(())
+}
+
+/// `deepnvm validate`: replay the requested (dnn, phase, capacity)
+/// cells through both the analytic traffic model and the trace-driven
+/// hierarchy simulation, print the per-cell error table (or `--json`),
+/// and fail when any cell's relative error exceeds the documented
+/// bound — so CI can gate on the exit code directly.
+fn validate_cmd(o: &CliOptions) -> Result<()> {
+    let mut req = crate::gpusim::validate::ValidateRequest::default();
+    if !o.dnns.is_empty() {
+        req.dnns = o.dnns.clone();
+    }
+    if !o.phases.is_empty() {
+        req.phases = o.phases.clone();
+    }
+    if !o.caps.is_empty() {
+        req.capacities_mb = o.caps.clone();
+    }
+    if o.batches_explicit {
+        if o.batches.len() != 1 {
+            bail!("validate replays one batch size: give --batches a single value");
+        }
+        req.batch = o.batches[0];
+    }
+    let report = crate::gpusim::validate::run(&req)?;
+    if o.json {
+        println!("{}", crate::gpusim::validate::report_to_json(&report).to_pretty());
+    } else {
+        print!("{}", crate::gpusim::validate::render_table(&report));
+    }
+    if !report.pass() {
+        bail!(
+            "max relative error {:.4} exceeds the {:.2} bound",
+            report.max_rel_err(),
+            report.bound
+        );
     }
     Ok(())
 }
@@ -887,6 +963,13 @@ pub fn run_cli(args: &[String]) -> i32 {
             }
         },
         "loadgen" => match loadgen_cmd(&o) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+        "validate" => match validate_cmd(&o) {
             Ok(()) => 0,
             Err(e) => {
                 eprintln!("error: {e:#}");
@@ -1129,6 +1212,58 @@ mod tests {
         // the optimize kind rides the same flag
         let o = parse_args(&sv(&["loadgen", "--mix", "8:1:1"])).unwrap();
         assert_eq!(o.mix, "8:1:1");
+    }
+
+    #[test]
+    fn parses_hot_frac() {
+        let o = parse_args(&sv(&["loadgen", "--hot-frac", "0.85"])).unwrap();
+        assert_eq!(o.hot_frac, Some(0.85));
+        let o = parse_args(&sv(&["loadgen"])).unwrap();
+        assert!(o.hot_frac.is_none());
+        assert!(parse_args(&sv(&["loadgen", "--hot-frac", "1.5"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--hot-frac", "-0.1"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--hot-frac", "nan"])).is_err());
+        assert!(parse_args(&sv(&["loadgen", "--hot-frac"])).is_err());
+    }
+
+    #[test]
+    fn parses_hybrid_techs() {
+        let o = parse_args(&sv(&[
+            "sweep", "--techs", "stt,hybrid-stt:4@0.85", "--caps", "2", "--dnns",
+            "none",
+        ]))
+        .unwrap();
+        assert_eq!(o.techs.len(), 2);
+        assert_eq!(o.techs[0], MemTech::SttMram);
+        assert_eq!(o.techs[1].name(), "hybrid-stt:4@0.85");
+        let spec = sweep_spec_from(&o).unwrap();
+        assert_eq!(spec.expand().unwrap().len(), 2, "2 techs x 1 cap, circuit-only");
+
+        // an SRAM partner, too many ways, or a bad steer all fail at parse
+        assert!(parse_args(&sv(&["sweep", "--techs", "hybrid-sram:4@0.85"])).is_err());
+        assert!(parse_args(&sv(&["sweep", "--techs", "hybrid-stt:40@0.85"])).is_err());
+        assert!(parse_args(&sv(&["sweep", "--techs", "hybrid-stt:4@1.5"])).is_err());
+    }
+
+    #[test]
+    fn validate_cmd_gates_on_the_bound() {
+        let o = parse_args(&sv(&[
+            "validate", "--dnns", "SqueezeNet", "--phases", "inference", "--caps",
+            "3",
+        ]))
+        .unwrap();
+        assert!(validate_cmd(&o).is_ok());
+
+        let o = parse_args(&sv(&["validate", "--dnns", "NoSuchNet", "--caps", "3"]))
+            .unwrap();
+        assert!(validate_cmd(&o).is_err());
+
+        // validate replays exactly one batch size
+        let o = parse_args(&sv(&["validate", "--batches", "1,2"])).unwrap();
+        assert!(validate_cmd(&o).is_err());
+
+        let o = parse_args(&sv(&["validate", "--json"])).unwrap();
+        assert!(o.json);
     }
 
     #[test]

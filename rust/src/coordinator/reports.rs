@@ -693,7 +693,7 @@ mod tests {
     #[test]
     fn sweep_report_renders_grid_and_frontier() {
         let spec = SweepSpec {
-            techs: vec![MemTech::Sram, MemTech::SotMram],
+            techs: crate::nvsim::TechSel::pures(&[MemTech::Sram, MemTech::SotMram]),
             capacities_mb: vec![1, 2],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Inference],

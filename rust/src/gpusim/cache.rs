@@ -239,6 +239,63 @@ mod tests {
     }
 
     #[test]
+    fn write_allocate_marks_dirty_and_clean_evictions_are_silent() {
+        let mut c = small(WritePolicy::BackAllocate);
+        // write miss allocates the line and marks it dirty
+        let r = c.access(0, true);
+        assert!(!r.hit && r.filled && r.writeback.is_none());
+        assert_eq!(c.dirty_lines(), 1);
+        // a read fill is clean: evicting it later must stay silent
+        c.access(512, false);
+        c.access(0, true); // refresh line 0, leaving 512 as LRU victim
+        let r = c.access(1024, false); // evicts clean line 512
+        assert!(!r.hit && r.filled);
+        assert_eq!(r.writeback, None, "clean victims are silent");
+        assert_eq!(c.dirty_lines(), 1, "the dirty line survives the eviction");
+    }
+
+    #[test]
+    fn write_through_never_accumulates_dirty_lines() {
+        let mut c = small(WritePolicy::ThroughNoAllocate);
+        // read-allocate then write-hit: the line stays clean (the
+        // write went through to the next level)
+        c.access(0x3000, false);
+        assert!(c.access(0x3000, true).hit);
+        c.access(0x4000, true); // write miss: no allocation either
+        assert_eq!(c.dirty_lines(), 0, "write-through lines are never dirty");
+        // and evictions from a write-through cache never write back
+        for i in 0..16u64 {
+            assert_eq!(c.access(i * 512, false).writeback, None);
+        }
+    }
+
+    #[test]
+    fn lru_eviction_order_is_exact_over_repeated_conflict_fills() {
+        let mut c = small(WritePolicy::BackAllocate);
+        // conflict chain in set 0 (stride 512): with 2 ways, each fill
+        // beyond the second evicts exactly the least recently touched
+        c.access(0, false);
+        c.access(512, false);
+        c.access(1024, false); // evicts 0
+        assert!(!c.access(0, false).hit, "0 was the LRU victim"); // evicts 512
+        assert!(!c.access(512, false).hit, "512 rotated out next"); // evicts 1024
+        assert!(!c.access(1024, false).hit, "1024 rotated out in turn");
+        // the two most recently filled lines survive
+        assert!(c.access(512, false).hit);
+        assert!(c.access(1024, false).hit);
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back_victim_base_address() {
+        let mut c = small(WritePolicy::BackAllocate);
+        c.access(512, true); // dirty line at 512
+        c.access(0, false);
+        let r = c.access(1024, false); // evicts 512
+        assert_eq!(r.writeback, Some(512), "writeback carries the victim base");
+        assert_eq!(c.dirty_lines(), 0, "an evicted dirty line leaves the count");
+    }
+
+    #[test]
     fn prop_working_set_within_capacity_always_hits_after_warmup() {
         proptest::check(30, |g| {
             let ways = *g.choose(&[2usize, 4, 8]);

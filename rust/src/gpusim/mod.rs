@@ -17,12 +17,18 @@
 //!
 //! Traces come from [`crate::workload::trace`] — the same tiled-GEMM
 //! schedule the analytic traffic model counts, so the two layers
-//! cross-validate (rust/tests/traffic_vs_gpusim.rs).
+//! cross-validate (rust/tests/traffic_vs_gpusim.rs). That
+//! cross-validation is also a first-class query: `deepnvm validate`
+//! (and `POST /validate` on the server) replays a requested
+//! (dnn, phase, capacity) slice through both substrates via
+//! [`validate`] and reports per-cell relative DRAM-transaction error,
+//! gated in CI against [`validate::MAX_REL_ERR`].
 
 pub mod cache;
 pub mod config;
 pub mod dram;
 pub mod gpu;
+pub mod validate;
 
 pub use cache::{Cache, CacheConfig};
 pub use config::GpuConfig;

@@ -1,0 +1,319 @@
+//! Cross-validation of the analytic traffic model against the
+//! trace-driven hierarchy simulation, packaged as a queryable report
+//! (`deepnvm validate` / `POST /validate`).
+//!
+//! The paper validates its nvprof-derived traffic counts by replaying
+//! the same tiled-GEMM schedule through an extended GPGPU-Sim and
+//! comparing total DRAM transactions (§III-D, Fig. 6). This module is
+//! that experiment as a first-class query: for every requested
+//! (dnn, phase, capacity) cell it
+//!
+//! 1. sums the analytic [`TrafficModel`] over the network's GEMM-backed
+//!    layers (pool/eltwise layers exist only analytically — the trace
+//!    generator does not schedule them, so they are excluded from both
+//!    sides),
+//! 2. replays the [`crate::workload::trace::DnnTrace`] schedule through
+//!    [`GpuSim`](super::GpuSim) at the same L2 capacity, and
+//! 3. reports both DRAM transaction totals and their relative error.
+//!
+//! The report's `max_rel_err` is the citable headline number; CI's
+//! `validate-smoke` job gates it against [`MAX_REL_ERR`], the same
+//! bound `rust/tests/traffic_vs_gpusim.rs` pins (the analytic spill
+//! model is deliberately simple, so agreement is ballpark — within
+//! 2.5x either way — not exact).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::workload::models::{Dnn, Phase};
+use crate::workload::traffic::{TrafficModel, WorkloadStats};
+
+use super::gpu::simulate_dnn;
+use super::GpuConfig;
+
+/// Documented ceiling on per-cell relative DRAM-transaction error —
+/// |sim - analytic| / analytic <= 1.5 corresponds to the 0.4x..2.5x
+/// agreement band the cross-validation tests pin. CI fails the
+/// `validate-smoke` job when any cell exceeds it.
+pub const MAX_REL_ERR: f64 = 1.5;
+
+const MB: u64 = 1024 * 1024;
+
+/// One validation query: the (dnn, phase, capacity) slice to replay.
+#[derive(Clone, Debug)]
+pub struct ValidateRequest {
+    pub dnns: Vec<String>,
+    pub phases: Vec<Phase>,
+    pub capacities_mb: Vec<u64>,
+    pub batch: usize,
+}
+
+impl Default for ValidateRequest {
+    /// The smoke slice: the two cheapest zoo networks, inference, the
+    /// GTX 1080 Ti's stock 3 MB plus one grown capacity — small enough
+    /// for CI, wide enough to exercise the capacity axis.
+    fn default() -> Self {
+        ValidateRequest {
+            dnns: vec!["AlexNet".into(), "SqueezeNet".into()],
+            phases: vec![Phase::Inference],
+            capacities_mb: vec![3, 8],
+            batch: 1,
+        }
+    }
+}
+
+/// One (dnn, phase, capacity) cell of the report.
+#[derive(Clone, Debug)]
+pub struct ValidateCell {
+    pub dnn: &'static str,
+    pub phase: Phase,
+    pub capacity_mb: u64,
+    pub batch: usize,
+    /// Analytic GEMM-only DRAM transactions ([`WorkloadStats::dram_total`]).
+    pub analytic_dram: u64,
+    /// Simulated DRAM transactions over the same schedule.
+    pub sim_dram: u64,
+    /// |sim - analytic| / analytic.
+    pub rel_err: f64,
+}
+
+/// The full report: every requested cell plus the bound it is judged
+/// against.
+#[derive(Clone, Debug)]
+pub struct ValidateReport {
+    pub cells: Vec<ValidateCell>,
+    /// The gate the report was produced under ([`MAX_REL_ERR`]).
+    pub bound: f64,
+}
+
+impl ValidateReport {
+    /// Worst per-cell relative error — the citable headline.
+    pub fn max_rel_err(&self) -> f64 {
+        self.cells.iter().map(|c| c.rel_err).fold(0.0, f64::max)
+    }
+
+    pub fn pass(&self) -> bool {
+        self.max_rel_err() <= self.bound
+    }
+}
+
+/// Analytic DRAM traffic restricted to the GEMM-backed layers — the
+/// portion of the network the trace generator schedules.
+fn gemm_only_stats(dnn: &Dnn, phase: Phase, batch: usize, l2_bytes: u64) -> WorkloadStats {
+    let m = TrafficModel { l2_bytes, ..Default::default() };
+    let mut s = WorkloadStats::default();
+    for l in &dnn.layers {
+        if l.gemm_dims(batch).is_some() {
+            s.add(&m.layer_stats(l, phase, batch));
+        }
+    }
+    s
+}
+
+/// Run one validation query: replay every requested cell through both
+/// substrates and tabulate the disagreement.
+pub fn run(req: &ValidateRequest) -> Result<ValidateReport> {
+    if req.dnns.is_empty() || req.phases.is_empty() || req.capacities_mb.is_empty() {
+        bail!("validate needs at least one dnn, phase and capacity");
+    }
+    if req.batch == 0 {
+        bail!("batch must be >= 1");
+    }
+    let mut cells = Vec::new();
+    for name in &req.dnns {
+        let dnn = Dnn::by_name(name)
+            .with_context(|| format!("unknown workload '{name}' (not in the zoo)"))?;
+        for &phase in &req.phases {
+            for &mb in &req.capacities_mb {
+                if mb == 0 || mb > 64 {
+                    bail!("capacity {mb} MB outside the simulable 1..=64 range");
+                }
+                let l2 = mb * MB;
+                let analytic = gemm_only_stats(&dnn, phase, req.batch, l2);
+                let sim = simulate_dnn(GpuConfig::gtx1080ti(l2), &dnn, phase, req.batch);
+                let a = analytic.dram_total();
+                let s = sim.dram_total();
+                let rel_err = (s as f64 - a as f64).abs() / (a.max(1) as f64);
+                cells.push(ValidateCell {
+                    dnn: dnn.name,
+                    phase,
+                    capacity_mb: mb,
+                    batch: req.batch,
+                    analytic_dram: a,
+                    sim_dram: s,
+                    rel_err,
+                });
+            }
+        }
+    }
+    Ok(ValidateReport { cells, bound: MAX_REL_ERR })
+}
+
+/// Parse a `POST /validate` body. Every field is optional; omitted
+/// fields take the smoke-slice defaults.
+pub fn request_from_json(j: &Json) -> Result<ValidateRequest> {
+    let mut req = ValidateRequest::default();
+    if let Some(arr) = j.get("dnns").and_then(Json::as_arr) {
+        req.dnns = arr
+            .iter()
+            .map(|d| d.as_str().map(str::to_string).context("dnns must be strings"))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(arr) = j.get("phases").and_then(Json::as_arr) {
+        req.phases = arr
+            .iter()
+            .map(|p| {
+                p.as_str()
+                    .context("phases must be strings")
+                    .and_then(crate::sweep::spec::parse_phase)
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(arr) = j.get("caps_mb").and_then(Json::as_arr) {
+        req.capacities_mb = arr
+            .iter()
+            .map(|c| c.as_u64().context("caps_mb must be positive integers"))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(b) = j.get("batch") {
+        req.batch = b.as_usize().context("batch must be a positive integer")?;
+    }
+    Ok(req)
+}
+
+/// Serialize a report (the `/validate` response body and the
+/// `deepnvm validate --json` output).
+pub fn report_to_json(r: &ValidateReport) -> Json {
+    let cells = r
+        .cells
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("dnn", Json::Str(c.dnn.to_string()));
+            o.set("phase", Json::Str(c.phase.name().to_string()));
+            o.set("capacity_mb", Json::Num(c.capacity_mb as f64));
+            o.set("batch", Json::Num(c.batch as f64));
+            o.set("analytic_dram", Json::Num(c.analytic_dram as f64));
+            o.set("sim_dram", Json::Num(c.sim_dram as f64));
+            o.set("rel_err", Json::Num(c.rel_err));
+            o
+        })
+        .collect();
+    let mut out = Json::obj();
+    out.set("cells", Json::Arr(cells));
+    out.set("bound", Json::Num(r.bound));
+    out.set("max_rel_err", Json::Num(r.max_rel_err()));
+    out.set("pass", Json::Bool(r.pass()));
+    out
+}
+
+/// Human-readable table (the default `deepnvm validate` output).
+pub fn render_table(r: &ValidateReport) -> String {
+    let mut out = String::new();
+    out.push_str("dnn,phase,capacity_mb,batch,analytic_dram,sim_dram,rel_err\n");
+    for c in &r.cells {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{:.4}\n",
+            c.dnn, c.phase.name(), c.capacity_mb, c.batch, c.analytic_dram,
+            c.sim_dram, c.rel_err,
+        ));
+    }
+    out.push_str(&format!(
+        "max_rel_err {:.4} bound {:.2} -> {}\n",
+        r.max_rel_err(),
+        r.bound,
+        if r.pass() { "PASS" } else { "FAIL" },
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_slice_stays_within_the_documented_bound() {
+        let report = run(&ValidateRequest {
+            dnns: vec!["SqueezeNet".into()],
+            phases: vec![Phase::Inference],
+            capacities_mb: vec![3],
+            batch: 1,
+        })
+        .unwrap();
+        assert_eq!(report.cells.len(), 1);
+        let c = &report.cells[0];
+        assert!(c.analytic_dram > 0 && c.sim_dram > 0);
+        assert!(
+            report.pass(),
+            "rel_err {} exceeds the documented bound {}",
+            c.rel_err,
+            report.bound
+        );
+    }
+
+    #[test]
+    fn report_covers_the_full_request_product_in_order() {
+        let report = run(&ValidateRequest {
+            dnns: vec!["AlexNet".into(), "SqueezeNet".into()],
+            phases: vec![Phase::Inference],
+            capacities_mb: vec![2, 8],
+            batch: 1,
+        })
+        .unwrap();
+        assert_eq!(report.cells.len(), 4, "dnns x phases x caps");
+        let keys: Vec<(&str, u64)> =
+            report.cells.iter().map(|c| (c.dnn, c.capacity_mb)).collect();
+        assert_eq!(
+            keys,
+            vec![("AlexNet", 2), ("AlexNet", 8), ("SqueezeNet", 2), ("SqueezeNet", 8)]
+        );
+        // growing the L2 never increases simulated DRAM traffic
+        for w in report.cells.chunks(2) {
+            assert!(
+                w[1].sim_dram <= w[0].sim_dram,
+                "{}: larger L2 must not spill more",
+                w[0].dnn
+            );
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_typed_errors() {
+        assert!(run(&ValidateRequest { dnns: vec![], ..Default::default() }).is_err());
+        assert!(run(&ValidateRequest {
+            dnns: vec!["NoSuchNet".into()],
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run(&ValidateRequest {
+            capacities_mb: vec![0],
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run(&ValidateRequest { batch: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn json_round_trip_and_rendering() {
+        let body = crate::util::json::parse(
+            r#"{"dnns": ["SqueezeNet"], "phases": ["inference"],
+                "caps_mb": [3], "batch": 1}"#,
+        )
+        .unwrap();
+        let req = request_from_json(&body).unwrap();
+        assert_eq!(req.dnns, vec!["SqueezeNet".to_string()]);
+        assert_eq!(req.capacities_mb, vec![3]);
+        let report = run(&req).unwrap();
+        let j = report_to_json(&report);
+        assert_eq!(j.get("cells").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.get("max_rel_err").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(j.get("pass").unwrap().as_bool(), Some(report.pass()));
+        let table = render_table(&report);
+        assert!(table.contains("SqueezeNet,inference,3,1,"));
+        assert!(table.lines().count() == 3, "header + 1 cell + summary");
+        // defaults fill omitted fields
+        let req = request_from_json(&crate::util::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(req.phases, vec![Phase::Inference]);
+        assert_eq!(req.capacities_mb, vec![3, 8]);
+    }
+}

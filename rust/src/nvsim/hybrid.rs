@@ -9,12 +9,139 @@
 //! effective write cost is a mix weighted by the steering hit rate;
 //! reads sample ways uniformly. Leakage and area compose linearly from
 //! the per-technology designs.
+//!
+//! [`TechSel`] is the sweep-facing handle: a grid's tech axis is a list
+//! of selections, each either a pure [`MemTech`] or a
+//! [`HybridSel`] way partition. The sweep memo composes hybrid PPA from
+//! its cached pure circuit solves via [`compose_ppa`], so a hybrid
+//! point never triggers a separate circuit solve.
 
-use crate::device::MemTech;
+use std::fmt;
 
-use super::explorer::tuned_cache;
+use crate::device::{MemTech, UncalibratedNode};
+
+use super::explorer::tuned_cache_at;
 use super::model::CachePpa;
 use super::org::ASSOC;
+
+/// A way-partitioned hybrid selection: `sram_ways` of the cache's
+/// [`ASSOC`] ways in SRAM, the rest in `nvm`, with the placement
+/// policy landing `steer()` of writes in the SRAM ways. Steering is
+/// stored in basis points so the selection stays `Copy + Eq + Hash`
+/// and binds bit-exactly into grid keys and shard payload hashes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct HybridSel {
+    pub nvm: MemTech,
+    /// Ways implemented in SRAM (0..=ASSOC); the rest are NVM.
+    pub sram_ways: u8,
+    /// Write-steering efficiency in basis points (8500 = 0.85).
+    pub steer_bp: u16,
+}
+
+impl HybridSel {
+    /// Steering efficiency as a fraction in [0, 1].
+    pub fn steer(&self) -> f64 {
+        self.steer_bp as f64 / 1e4
+    }
+
+    fn nvm_code(&self) -> &'static str {
+        match self.nvm {
+            MemTech::SttMram => "stt",
+            MemTech::SotMram => "sot",
+            // rejected by every construction path; named for Display
+            MemTech::Sram => "sram",
+        }
+    }
+
+    /// Canonical spelling, e.g. `hybrid-stt:4@0.85` — the inverse of
+    /// `sweep::spec::parse_tech_sel`.
+    pub fn name(&self) -> String {
+        format!("hybrid-{}:{}@{}", self.nvm_code(), self.sram_ways, self.steer())
+    }
+}
+
+/// One selection on the sweep's tech axis: a pure technology or a
+/// way-partitioned hybrid. `Copy + Eq + Hash` so grid points stay
+/// value types and the hybrid parameters bind into every content
+/// address (grid keys, point payload hashes) with no extra plumbing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TechSel {
+    Pure(MemTech),
+    Hybrid(HybridSel),
+}
+
+impl TechSel {
+    /// Canonical name (pure names match [`MemTech::name`]); the
+    /// inverse of `sweep::spec::parse_tech_sel`.
+    pub fn name(&self) -> String {
+        match self {
+            TechSel::Pure(t) => t.name().to_string(),
+            TechSel::Hybrid(h) => h.name(),
+        }
+    }
+
+    /// Whether the selection stores bits in an NVM (hybrids do: the
+    /// bulk ways are NVM; only pure SRAM is not).
+    pub fn is_nvm(&self) -> bool {
+        match self {
+            TechSel::Pure(t) => t.is_nvm(),
+            TechSel::Hybrid(_) => true,
+        }
+    }
+
+    /// The pure technology, if this is not a hybrid.
+    pub fn pure(&self) -> Option<MemTech> {
+        match self {
+            TechSel::Pure(t) => Some(*t),
+            TechSel::Hybrid(_) => None,
+        }
+    }
+
+    /// The pure circuit solves this selection's PPA composes from.
+    pub fn circuit_deps(&self) -> Vec<MemTech> {
+        match self {
+            TechSel::Pure(t) => vec![*t],
+            TechSel::Hybrid(h) => vec![MemTech::Sram, h.nvm],
+        }
+    }
+
+    /// Wrap a pure-technology list (the common construction).
+    pub fn pures(techs: &[MemTech]) -> Vec<TechSel> {
+        techs.iter().copied().map(TechSel::Pure).collect()
+    }
+
+    /// All pure technologies — the default tech axis.
+    pub fn pure_all() -> Vec<TechSel> {
+        Self::pures(&MemTech::ALL)
+    }
+}
+
+impl From<MemTech> for TechSel {
+    fn from(t: MemTech) -> TechSel {
+        TechSel::Pure(t)
+    }
+}
+
+// A selection equals a bare technology iff it is that pure technology
+// (hybrids never alias a pure tech). Keeps grid comparisons readable
+// at every pre-hybrid call site.
+impl PartialEq<MemTech> for TechSel {
+    fn eq(&self, other: &MemTech) -> bool {
+        self.pure() == Some(*other)
+    }
+}
+
+impl PartialEq<TechSel> for MemTech {
+    fn eq(&self, other: &TechSel) -> bool {
+        other.pure() == Some(*self)
+    }
+}
+
+impl fmt::Display for TechSel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
 
 /// A hybrid way-partitioned design.
 #[derive(Clone, Copy, Debug)]
@@ -28,43 +155,64 @@ pub struct HybridDesign {
     pub ppa: CachePpa,
 }
 
-/// Compose the PPA of a hybrid cache at `capacity_bytes`.
+/// Compose hybrid PPA from the two partners' tuned designs.
 ///
 /// A way-partitioned hybrid is *one* array organization whose way
 /// groups are fabricated in different technologies, so the composition
 /// uses the full-capacity EDAP-tuned design of each technology (wire
 /// lengths, decoders and H-tree are shared) and scales the per-way
 /// quantities (leakage, area, per-access cell costs) by the way
-/// fraction. This keeps the sweep free of exact-capacity enumeration
-/// artifacts and is monotone by construction.
-pub fn hybrid(
-    nvm: MemTech,
-    capacity_bytes: u64,
-    sram_ways: u32,
-    steer: f64,
-) -> HybridDesign {
-    assert!(nvm.is_nvm(), "hybrid partner must be an NVM");
+/// fraction. Every field is affine in the SRAM way fraction (writes:
+/// piecewise-affine, constant on the steered plateau), which is what
+/// lets the optimizer's per-slice lower bounds stay admissible for
+/// hybrid columns with no extra math.
+pub fn compose_ppa(s: &CachePpa, n: &CachePpa, sram_ways: u32, steer: f64) -> CachePpa {
     assert!(sram_ways as usize <= ASSOC);
     let f_sram = sram_ways as f64 / ASSOC as f64;
     let f_nvm = 1.0 - f_sram;
-
-    let s = tuned_cache(MemTech::Sram, capacity_bytes).ppa;
-    let n = tuned_cache(nvm, capacity_bytes).ppa;
-
     // Reads sample ways by capacity share; writes follow the steering
     // policy (steered writes pay SRAM cost, the rest pay NVM cost).
     // Steering cannot place more writes in SRAM ways than exist; with
     // no SRAM ways it places none.
     let w_sram = if sram_ways == 0 { 0.0 } else { steer.max(f_sram) };
-    let ppa = CachePpa {
+    CachePpa {
         read_latency: f_sram * s.read_latency + f_nvm * n.read_latency,
         write_latency: w_sram * s.write_latency + (1.0 - w_sram) * n.write_latency,
         read_energy: f_sram * s.read_energy + f_nvm * n.read_energy,
         write_energy: w_sram * s.write_energy + (1.0 - w_sram) * n.write_energy,
         leakage_power: f_sram * s.leakage_power + f_nvm * n.leakage_power,
         area: f_sram * s.area + f_nvm * n.area,
-    };
-    HybridDesign { nvm, sram_ways, steer, ppa }
+    }
+}
+
+/// Compose the PPA of a hybrid cache at `capacity_bytes` on the
+/// paper's 16 nm node (legacy entry point; see [`hybrid_at`]).
+pub fn hybrid(
+    nvm: MemTech,
+    capacity_bytes: u64,
+    sram_ways: u32,
+    steer: f64,
+) -> HybridDesign {
+    hybrid_at(nvm, capacity_bytes, sram_ways, steer, 16).expect("16 nm is calibrated")
+}
+
+/// As [`hybrid`] at an explicit process node: both partner designs are
+/// tuned with that node's interconnect and bitcell calibration, so a
+/// 7 nm hybrid inherits 7 nm SRAM leakage and 7 nm MRAM density — not
+/// the 16 nm table. Returns a typed error for uncalibrated nodes.
+pub fn hybrid_at(
+    nvm: MemTech,
+    capacity_bytes: u64,
+    sram_ways: u32,
+    steer: f64,
+    node_nm: u32,
+) -> Result<HybridDesign, UncalibratedNode> {
+    assert!(nvm.is_nvm(), "hybrid partner must be an NVM");
+    assert!(sram_ways as usize <= ASSOC);
+    let s = tuned_cache_at(MemTech::Sram, capacity_bytes, node_nm)?.ppa;
+    let n = tuned_cache_at(nvm, capacity_bytes, node_nm)?.ppa;
+    let ppa = compose_ppa(&s, &n, sram_ways, steer);
+    Ok(HybridDesign { nvm, sram_ways, steer, ppa })
 }
 
 /// Sweep SRAM-way counts for one NVM partner.
@@ -78,6 +226,7 @@ pub fn sweep(nvm: MemTech, capacity_bytes: u64, steer: f64) -> Vec<HybridDesign>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nvsim::tuned_cache;
 
     const MB: u64 = 1024 * 1024;
 
@@ -154,5 +303,70 @@ mod tests {
     #[should_panic(expected = "hybrid partner must be an NVM")]
     fn rejects_sram_sram_hybrid() {
         hybrid(MemTech::Sram, 3 * MB, 4, 0.8);
+    }
+
+    #[test]
+    fn hybrid_at_is_node_distinct() {
+        // 16 nm through the node-aware entry point is the legacy design
+        let legacy = hybrid(MemTech::SttMram, 3 * MB, 4, 0.85);
+        let at16 = hybrid_at(MemTech::SttMram, 3 * MB, 4, 0.85, 16).unwrap();
+        assert_eq!(format!("{:?}", legacy.ppa), format!("{:?}", at16.ppa));
+
+        // a 7 nm hybrid composes from 7 nm partner designs — denser
+        // and genuinely different from the 16 nm composition (the bug
+        // this pins: the old path always solved partners at 16 nm)
+        let n7 = hybrid_at(MemTech::SttMram, 3 * MB, 4, 0.85, 7).unwrap();
+        assert!(n7.ppa.area < at16.ppa.area, "7nm hybrid must be denser");
+        assert_ne!(
+            format!("{:?}", n7.ppa),
+            format!("{:?}", at16.ppa),
+            "hybrid nodes must not alias"
+        );
+        // uncalibrated nodes error instead of panicking
+        assert!(hybrid_at(MemTech::SttMram, 3 * MB, 4, 0.85, 9).is_err());
+    }
+
+    #[test]
+    fn composition_is_affine_in_way_fraction() {
+        // On the steered plateau (steer >= f_sram) every PPA field is
+        // affine in sram_ways — the premise the optimizer's per-slice
+        // lower bounds rest on.
+        let h4 = hybrid(MemTech::SttMram, 3 * MB, 4, 0.85).ppa;
+        let h8 = hybrid(MemTech::SttMram, 3 * MB, 8, 0.85).ppa;
+        let h12 = hybrid(MemTech::SttMram, 3 * MB, 12, 0.85).ppa;
+        for (mid, lo, hi) in [
+            (h8.read_latency, h4.read_latency, h12.read_latency),
+            (h8.read_energy, h4.read_energy, h12.read_energy),
+            (h8.leakage_power, h4.leakage_power, h12.leakage_power),
+            (h8.area, h4.area, h12.area),
+        ] {
+            let interp = 0.5 * (lo + hi);
+            assert!((mid - interp).abs() <= 1e-9 * mid.abs().max(interp.abs()));
+        }
+        // and writes are constant on the plateau
+        assert_eq!(h4.write_latency.to_bits(), h12.write_latency.to_bits());
+    }
+
+    #[test]
+    fn techsel_names_and_helpers() {
+        let stt: TechSel = MemTech::SttMram.into();
+        assert_eq!(stt.name(), "STT-MRAM");
+        assert_eq!(stt.pure(), Some(MemTech::SttMram));
+        assert_eq!(stt.circuit_deps(), vec![MemTech::SttMram]);
+        assert!(stt.is_nvm() && !TechSel::Pure(MemTech::Sram).is_nvm());
+
+        let h = TechSel::Hybrid(HybridSel {
+            nvm: MemTech::SttMram,
+            sram_ways: 4,
+            steer_bp: 8500,
+        });
+        assert_eq!(h.name(), "hybrid-stt:4@0.85");
+        assert_eq!(h.to_string(), "hybrid-stt:4@0.85");
+        assert_eq!(h.pure(), None);
+        assert!(h.is_nvm(), "hybrid bulk ways are NVM");
+        assert_eq!(h.circuit_deps(), vec![MemTech::Sram, MemTech::SttMram]);
+
+        assert_eq!(TechSel::pure_all().len(), MemTech::ALL.len());
+        assert!(TechSel::pure_all().iter().all(|t| t.pure().is_some()));
     }
 }

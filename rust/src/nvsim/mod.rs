@@ -32,6 +32,7 @@ pub mod org;
 pub mod tech;
 
 pub use explorer::{explore, tuned_cache, tuned_cache_at, OptTarget, TunedConfig};
+pub use hybrid::{compose_ppa, hybrid_at, HybridDesign, HybridSel, TechSel};
 pub use model::{CacheDesign, CachePpa};
 pub use org::{AccessMode, CacheOrg};
 pub use tech::TechParams;

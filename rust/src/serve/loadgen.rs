@@ -43,6 +43,13 @@ static SWEEP_NS: LazyHistogram =
     LazyHistogram::new("deepnvm_loadgen_request_duration_ns{kind=\"sweep\"}");
 static OPTIMIZE_NS: LazyHistogram =
     LazyHistogram::new("deepnvm_loadgen_request_duration_ns{kind=\"optimize\"}");
+// Solve latency split by key class when `--hot-frac` is set: the hot
+// set replays a handful of keys (memo-hit steady state), the cold
+// tail walks a wide pool of distinct keys (point-cache misses).
+static HOT_NS: LazyHistogram =
+    LazyHistogram::new("deepnvm_loadgen_request_duration_ns{class=\"hot\"}");
+static COLD_NS: LazyHistogram =
+    LazyHistogram::new("deepnvm_loadgen_request_duration_ns{class=\"cold\"}");
 static ERRORS: LazyCounter = LazyCounter::new("deepnvm_loadgen_errors_total");
 
 /// Configuration for one loadgen run (the CLI's `loadgen --addr
@@ -61,6 +68,10 @@ pub struct LoadgenConfig {
     pub sweep_weight: u32,
     /// Optimize (branch-and-bound) requests per mix cycle.
     pub optimize_weight: u32,
+    /// Fraction of solve requests drawn from the small hot key set
+    /// (the rest walk the wide cold-tail pool). `None` keeps the
+    /// historical all-hot behavior and omits the per-class report.
+    pub hot_frac: Option<f64>,
     /// Overall p99 gate in milliseconds; `None` disables gating.
     pub p99_ms: Option<f64>,
 }
@@ -74,6 +85,7 @@ impl Default for LoadgenConfig {
             solve_weight: 9,
             sweep_weight: 1,
             optimize_weight: 0,
+            hot_frac: None,
             p99_ms: None,
         }
     }
@@ -121,6 +133,10 @@ pub struct LoadgenReport {
     pub solve: KindStats,
     pub sweep: KindStats,
     pub optimize: KindStats,
+    /// Per-class solve latency; present only when `--hot-frac` split
+    /// the key mix.
+    pub hot: Option<KindStats>,
+    pub cold: Option<KindStats>,
     pub wall: Duration,
 }
 
@@ -157,6 +173,18 @@ impl LoadgenReport {
                 self.optimize.requests, self.optimize.p50_ms, self.optimize.p99_ms,
             ));
         }
+        if let Some(h) = &self.hot {
+            out.push_str(&format!(
+                "\nloadgen: hot      {} requests  p50 {:.3} ms  p99 {:.3} ms",
+                h.requests, h.p50_ms, h.p99_ms,
+            ));
+        }
+        if let Some(c) = &self.cold {
+            out.push_str(&format!(
+                "\nloadgen: cold     {} requests  p50 {:.3} ms  p99 {:.3} ms",
+                c.requests, c.p50_ms, c.p99_ms,
+            ));
+        }
         out
     }
 }
@@ -172,6 +200,29 @@ fn solve_bodies() -> Vec<String> {
         }
     }
     v
+}
+
+/// The cold tail: a wide pool of distinct solve keys. Hybrid steer /
+/// way variations give hundreds of distinct grid points that all
+/// compose from the same two cached pure partner solves, so cold
+/// requests exercise the point-cache-miss path without re-running
+/// Algorithm 1 per key.
+fn cold_bodies() -> Vec<String> {
+    let mut v = Vec::new();
+    for ways in [2u32, 4, 6, 8, 10, 12] {
+        for bp in (500..10_000).step_by(500) {
+            let steer = bp as f64 / 1e4;
+            v.push(format!(r#"{{"tech": "hybrid-stt:{ways}@{steer}", "capacity_mb": 2}}"#));
+        }
+    }
+    v
+}
+
+/// Deterministic hot/cold classification of the `i`-th request on a
+/// thread: percent-of-cycle against the configured fraction, so the
+/// realized mix matches `hot_frac` exactly over any 100 requests.
+fn is_hot(i: u64, hot_frac: f64) -> bool {
+    (i % 100) < (hot_frac * 100.0).round().clamp(0.0, 100.0) as u64
 }
 
 fn sweep_bodies() -> Vec<String> {
@@ -213,6 +264,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         cfg.solve_weight + cfg.sweep_weight + cfg.optimize_weight > 0,
         "the mix would send no requests"
     );
+    if let Some(f) = cfg.hot_frac {
+        ensure!(f.is_finite() && (0.0..=1.0).contains(&f), "--hot-frac must be in [0, 1]");
+    }
     match http::call(&cfg.addr, "GET", "/healthz", "", PREFLIGHT_TIMEOUT) {
         Ok((200, _)) => {}
         Ok((status, _)) => bail!("{} answered {status} to /healthz", cfg.addr),
@@ -222,8 +276,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let solve_before = SOLVE_NS.handle().snapshot();
     let sweep_before = SWEEP_NS.handle().snapshot();
     let optimize_before = OPTIMIZE_NS.handle().snapshot();
+    let hot_before = HOT_NS.handle().snapshot();
+    let cold_before = COLD_NS.handle().snapshot();
     let errors_before = ERRORS.value();
     let solves = solve_bodies();
+    let colds = cold_bodies();
     let sweeps = sweep_bodies();
     let optimizes = optimize_bodies();
     let cycle = (cfg.solve_weight + cfg.sweep_weight + cfg.optimize_weight) as u64;
@@ -232,7 +289,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
 
     std::thread::scope(|scope| {
         for t in 0..cfg.concurrency {
-            let (solves, sweeps, optimizes) = (&solves, &sweeps, &optimizes);
+            let (solves, colds, sweeps, optimizes) = (&solves, &colds, &sweeps, &optimizes);
             scope.spawn(move || {
                 let mut client = http::Client::new(&cfg.addr, REQUEST_TIMEOUT);
                 // Offset each thread's rotation so the fleet of
@@ -242,8 +299,19 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     // Position within one mix cycle: solves first,
                     // then sweeps, then optimizes.
                     let pos = i % cycle;
+                    let mut class = None;
                     let (path, body, hist) = if pos < cfg.solve_weight as u64 {
-                        let b = &solves[(i / cycle) as usize % solves.len()];
+                        let b = match cfg.hot_frac {
+                            Some(f) if !is_hot(i, f) => {
+                                class = Some(&COLD_NS);
+                                &colds[(i / cycle) as usize % colds.len()]
+                            }
+                            Some(_) => {
+                                class = Some(&HOT_NS);
+                                &solves[(i / cycle) as usize % solves.len()]
+                            }
+                            None => &solves[(i / cycle) as usize % solves.len()],
+                        };
                         ("/solve", b, &SOLVE_NS)
                     } else if pos < (cfg.solve_weight + cfg.sweep_weight) as u64 {
                         let b = &sweeps[(i / cycle) as usize % sweeps.len()];
@@ -254,7 +322,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     };
                     let t0 = Instant::now();
                     match client.call("POST", path, body) {
-                        Ok((200, _)) => hist.record_duration(t0.elapsed()),
+                        Ok((200, _)) => {
+                            let elapsed = t0.elapsed();
+                            hist.record_duration(elapsed);
+                            if let Some(c) = class {
+                                c.record_duration(elapsed);
+                            }
+                        }
                         Ok(_) | Err(_) => ERRORS.inc(),
                     }
                     i += 1;
@@ -283,6 +357,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         solve: kind_stats(&solve_delta),
         sweep: kind_stats(&sweep_delta),
         optimize: kind_stats(&optimize_delta),
+        hot: cfg
+            .hot_frac
+            .map(|_| kind_stats(&HOT_NS.handle().snapshot().minus(&hot_before))),
+        cold: cfg
+            .hot_frac
+            .map(|_| kind_stats(&COLD_NS.handle().snapshot().minus(&cold_before))),
         wall,
     })
 }
@@ -316,6 +396,8 @@ mod tests {
             solve: KindStats { requests: 90, p50_ms: 1.0, p99_ms: 4.0 },
             sweep: KindStats { requests: 10, p50_ms: 2.0, p99_ms: 4.0 },
             optimize: KindStats { requests: 0, p50_ms: 0.0, p99_ms: 0.0 },
+            hot: None,
+            cold: None,
             wall: Duration::from_secs(2),
         };
         assert!(r.meets_p99(4.0));
@@ -325,9 +407,29 @@ mod tests {
         assert!(text.contains("p99 4.000 ms"), "{text}");
         // a two-kind mix stays a two-line per-kind summary
         assert!(!text.contains("optimize"), "{text}");
+        // hot/cold lines only appear when --hot-frac was given
+        assert!(!text.contains("hot"), "{text}");
         r.optimize = KindStats { requests: 5, p50_ms: 3.0, p99_ms: 6.0 };
+        r.hot = Some(KindStats { requests: 76, p50_ms: 0.5, p99_ms: 1.0 });
+        r.cold = Some(KindStats { requests: 14, p50_ms: 2.5, p99_ms: 5.0 });
         let text = r.render();
         assert!(text.contains("optimize 5 requests"), "{text}");
+        assert!(text.contains("hot      76 requests"), "{text}");
+        assert!(text.contains("cold     14 requests"), "{text}");
+    }
+
+    #[test]
+    fn hot_frac_splits_the_index_space_exactly() {
+        for (f, want) in [(0.0, 0), (0.85, 850), (1.0, 1000)] {
+            let hits = (0..1000u64).filter(|&i| is_hot(i, f)).count();
+            assert_eq!(hits, want, "hot_frac {f}");
+        }
+        // out-of-range run() inputs are rejected before any thread spawns
+        for bad in [-0.1, 1.1, f64::NAN] {
+            let cfg = LoadgenConfig { hot_frac: Some(bad), ..LoadgenConfig::default() };
+            let err = run(&cfg).unwrap_err().to_string();
+            assert!(err.contains("hot-frac"), "{err}");
+        }
     }
 
     #[test]
@@ -346,9 +448,21 @@ mod tests {
         let sv = solve_bodies();
         let sw = sweep_bodies();
         let so = optimize_bodies();
+        let co = cold_bodies();
         assert!(sv.len() >= 4 && sw.len() >= 2 && so.len() >= 2);
-        for b in sv.iter().chain(sw.iter()).chain(so.iter()) {
+        assert_eq!(co.len(), 114, "6 way counts x 19 steer points");
+        for b in sv.iter().chain(sw.iter()).chain(so.iter()).chain(co.iter()) {
             assert!(crate::util::json::parse(b).is_ok(), "{b}");
+        }
+        // every cold body is a distinct point key (a genuine cold tail)
+        let uniq: std::collections::HashSet<&String> = co.iter().collect();
+        assert_eq!(uniq.len(), co.len());
+        // and every cold tech spelling actually parses as a hybrid
+        for b in &co {
+            let j = crate::util::json::parse(b).unwrap();
+            let t = j.get("tech").unwrap().as_str().unwrap().to_string();
+            let sel = crate::sweep::spec::parse_tech_sel(&t).unwrap();
+            assert!(sel.pure().is_none(), "{t} should be hybrid");
         }
     }
 }

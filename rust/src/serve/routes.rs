@@ -11,6 +11,7 @@
 //! | `/memo/export`     | GET    | full memo document (shard exchange format)     |
 //! | `/memo/merge`      | POST   | memo document -> per-entry merge accounting    |
 //! | `/shard/run`       | POST   | shard `SweepSpec` -> run into memo + export    |
+//! | `/validate`        | POST   | (dnns, phases, caps) -> sim-vs-analytic table  |
 //! | `/metrics`         | GET    | Prometheus text exposition of the obs registry |
 //! | `/trace`           | GET    | span ring as Chrome trace-event JSON           |
 //!
@@ -35,9 +36,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::reports::{self, Report};
 use crate::device::UncalibratedNode;
 use crate::obs::{self, Counter, Registry};
+use crate::gpusim::validate;
 use crate::sweep::spec::{
-    optimize_request_from_json, optimize_response_to_json, parse_phase, parse_tech, resolve_dnn,
-    spec_from_json, DEFAULT_CAPACITIES_MB, MAX_BATCH, MAX_CAPACITY_MB,
+    optimize_request_from_json, optimize_response_to_json, parse_phase, parse_tech_sel,
+    resolve_dnn, spec_from_json, DEFAULT_CAPACITIES_MB, MAX_BATCH, MAX_CAPACITY_MB,
 };
 use crate::sweep::{self, memo, GridPoint, Memo, SweepSpec, WorkloadPoint};
 use crate::util::json::Json;
@@ -55,7 +57,7 @@ struct RouteInfo {
     response: &'static str,
 }
 
-const ROUTES: [RouteInfo; 11] = [
+const ROUTES: [RouteInfo; 12] = [
     RouteInfo {
         method: "GET",
         path: "/",
@@ -77,7 +79,8 @@ const ROUTES: [RouteInfo; 11] = [
     RouteInfo {
         method: "POST",
         path: "/solve",
-        request: "{tech, capacity_mb, node_nm?, dnn?, phase?, batch?}",
+        request: "{tech: sram|stt|sot|hybrid-<nvm>:<ways>@<steer>, capacity_mb, \
+                  node_nm?, dnn?, phase?, batch?}",
         response: "tuned config for one grid point (+ workload eval)",
     },
     RouteInfo {
@@ -110,6 +113,12 @@ const ROUTES: [RouteInfo; 11] = [
         path: "/shard/run",
         request: "SweepSpec (+ jobs?)",
         response: "run the shard into the resident memo, return the scoped export",
+    },
+    RouteInfo {
+        method: "POST",
+        path: "/validate",
+        request: "{dnns?, phases?, caps_mb?, batch?} (defaults: the smoke slice)",
+        response: "per-(dnn, phase, capacity) analytic-vs-simulated DRAM table + max_rel_err",
     },
     RouteInfo {
         method: "GET",
@@ -211,6 +220,7 @@ fn dispatch(ctx: &ServerCtx, req: &Request) -> Response {
         ("GET", "/memo/export") => shard::export(ctx, req),
         ("POST", "/memo/merge") => shard::merge(ctx, req),
         ("POST", "/shard/run") => shard_run(ctx, req),
+        ("POST", "/validate") => validate_query(req),
         ("GET", "/metrics") => metrics_text(ctx),
         ("GET", "/trace") => trace_dump(),
         (_, path) if ROUTES.iter().any(|r| r.path == path) => {
@@ -234,6 +244,7 @@ fn route_meta(path: &str) -> (&'static str, &'static str) {
         "/memo/export" => ("/memo/export", "http./memo/export"),
         "/memo/merge" => ("/memo/merge", "http./memo/merge"),
         "/shard/run" => ("/shard/run", "http./shard/run"),
+        "/validate" => ("/validate", "http./validate"),
         "/metrics" => ("/metrics", "http./metrics"),
         "/trace" => ("/trace", "http./trace"),
         _ => ("other", "http.other"),
@@ -403,10 +414,10 @@ fn memo_stats(ctx: &ServerCtx) -> Response {
 /// Parse the `/solve` body into one grid point. Validation happens
 /// here, before the point can reach the solver's asserts.
 fn solve_point_from_json(j: &Json) -> Result<GridPoint> {
-    let tech = parse_tech(
+    let tech = parse_tech_sel(
         j.get("tech")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("'tech' (sram|stt|sot) is required"))?,
+            .ok_or_else(|| anyhow!("'tech' (sram|stt|sot|hybrid-<nvm>:<ways>@<steer>) is required"))?,
     )?;
     let capacity_mb = j
         .get("capacity_mb")
@@ -588,6 +599,23 @@ fn shard_run(ctx: &ServerCtx, req: &Request) -> Response {
     Response::json(200, &j)
 }
 
+/// `POST /validate` — replay a (dnn, phase, capacity) slice through
+/// both the analytic traffic model and the trace-driven gpusim and
+/// return the per-cell DRAM-transaction comparison (see
+/// [`validate`]). Purely compute-bound and memo-independent: the two
+/// substrates are rebuilt per query so the comparison can never be
+/// contaminated by resident state.
+fn validate_query(req: &Request) -> Response {
+    let (_, vreq) = match parse_body(req, validate::request_from_json) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    match validate::run(&vreq) {
+        Ok(report) => Response::json(200, &validate::report_to_json(&report)),
+        Err(e) => error_response(&e),
+    }
+}
+
 /// `POST /optimize` — branch-and-bound search over the implicit grid
 /// (see [`sweep::optimize`]). The body is a `/sweep` grid plus
 /// `objective`, the design budgets and `frontier`; the response is the
@@ -741,7 +769,7 @@ mod tests {
         let want = &all.points[wi];
         let w = j.get("winner").unwrap();
         assert_eq!(w.get("capacity_mb").unwrap().as_u64(), Some(want.point.capacity_mb));
-        assert_eq!(w.get("tech").unwrap().as_str(), Some(want.point.tech.name()));
+        assert_eq!(w.get("tech").unwrap().as_str(), Some(want.point.tech.name().as_str()));
         assert_eq!(w.get("batch").unwrap().as_u64().map(|b| b as usize), {
             want.point.workload.map(|wl| wl.batch)
         });
@@ -923,9 +951,20 @@ mod tests {
         assert_eq!(w.phase, Phase::Training);
         assert_eq!(w.batch, 64, "paper batch applies by default");
 
+        // hybrid selections are first-class /solve techs
+        let p = solve_point_from_json(
+            &crate::util::json::parse(r#"{"tech": "hybrid-stt:4@0.85", "capacity_mb": 2}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(p.tech.name(), "hybrid-stt:4@0.85");
+        assert!(p.tech.is_nvm());
+
         for bad in [
             r#"{}"#,
             r#"{"tech": "dram", "capacity_mb": 1}"#,
+            r#"{"tech": "hybrid-sram:4@0.85", "capacity_mb": 1}"#,
+            r#"{"tech": "hybrid-stt:17@0.85", "capacity_mb": 1}"#,
             r#"{"tech": "stt"}"#,
             r#"{"tech": "stt", "capacity_mb": 0}"#,
             r#"{"tech": "stt", "capacity_mb": 1, "node_nm": 9}"#,
@@ -1027,6 +1066,70 @@ mod tests {
         // malformed and invalid bodies
         assert_eq!(handle(&c, &post("/solve", "{not json")).status, 400);
         assert_eq!(handle(&c, &post("/solve", r#"{"tech": "x"}"#)).status, 422);
+    }
+
+    #[test]
+    fn hybrid_solve_composes_from_pure_partners() {
+        let c = ctx();
+        let r = handle(
+            &c,
+            &post("/solve", r#"{"tech": "hybrid-stt:4@0.85", "capacity_mb": 2}"#),
+        );
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        let got = j
+            .get("result")
+            .unwrap()
+            .get("tuned")
+            .unwrap()
+            .get("ppa")
+            .unwrap()
+            .get("write_latency")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        // bit-identical to the direct hybrid designer at the same knobs
+        let want = crate::nvsim::hybrid_at(MemTech::SttMram, 2 * MB, 4, 0.85, 16)
+            .unwrap()
+            .ppa
+            .write_latency;
+        assert_eq!(got, want, "the route must serve the composed PPA verbatim");
+        // one solve per pure partner, none for the hybrid itself
+        assert_eq!(c.memo().solve_count(), 2);
+        // warm rerun is a pure cache hit
+        let r = handle(
+            &c,
+            &post("/solve", r#"{"tech": "hybrid-stt:4@0.85", "capacity_mb": 2}"#),
+        );
+        assert_eq!(body_json(&r).get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(c.memo().solve_count(), 2);
+    }
+
+    #[test]
+    fn validate_route_replays_both_substrates() {
+        let c = ctx();
+        let body = r#"{"dnns": ["SqueezeNet"], "phases": ["inference"],
+                       "caps_mb": [3], "batch": 1}"#;
+        let r = handle(&c, &post("/validate", body));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let cell = &cells[0];
+        assert_eq!(cell.get("dnn").unwrap().as_str(), Some("SqueezeNet"));
+        assert!(cell.get("analytic_dram").unwrap().as_u64().unwrap() > 0);
+        assert!(cell.get("sim_dram").unwrap().as_u64().unwrap() > 0);
+        assert!(j.get("max_rel_err").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(j.get("pass").unwrap().as_bool(), Some(true));
+
+        // bad bodies map through the standard envelope
+        assert_eq!(handle(&c, &post("/validate", "{nope")).status, 400);
+        assert_eq!(
+            handle(&c, &post("/validate", r#"{"dnns": ["NoSuchNet"]}"#)).status,
+            422
+        );
+        // and the route is POST-only like the other query routes
+        assert_eq!(handle(&c, &get("/validate")).status, 405);
     }
 
     #[test]

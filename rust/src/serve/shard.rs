@@ -110,7 +110,7 @@ mod tests {
 
     fn spec() -> SweepSpec {
         SweepSpec {
-            techs: MemTech::ALL.to_vec(),
+            techs: crate::nvsim::TechSel::pures(&MemTech::ALL),
             capacities_mb: vec![1, 2, 4, 8, 16],
             dnns: vec!["AlexNet".into()],
             phases: Phase::ALL.to_vec(),
@@ -174,7 +174,7 @@ mod tests {
         // cut a {16, 7} nm grid, run each shard on its own worker memo,
         // merge, and replay the full cross-node grid from cache alone.
         let full = SweepSpec {
-            techs: vec![MemTech::SttMram],
+            techs: vec![MemTech::SttMram.into()],
             capacities_mb: vec![1, 2, 4],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Inference],

@@ -33,13 +33,13 @@ use crate::coordinator::store::Store;
 use crate::device::{node_calibrated, MemTech, UncalibratedNode};
 use crate::nvsim::explorer::{tuned_cache_at, OptTarget, TunedConfig};
 use crate::nvsim::org::{AccessMode, CacheOrg};
-use crate::nvsim::CachePpa;
+use crate::nvsim::{compose_ppa, CachePpa, TechSel};
 use crate::obs::{LazyCounter, LazyHistogram, Span};
 use crate::util::json::{self, Json};
 use crate::workload::models::{Dnn, Phase};
 use crate::workload::traffic::{BatchLine, DramTerm, TrafficModel, TxTerm, SUPERTILE};
 
-use super::spec::{parse_phase, parse_tech, resolve_dnn, GridPoint, WorkloadPoint};
+use super::spec::{parse_phase, parse_tech, parse_tech_sel, resolve_dnn, GridPoint, WorkloadPoint};
 use super::{PointResult, WorkloadEval};
 
 /// Bump when any model feeding the sweep changes numerically; stale
@@ -51,8 +51,12 @@ use super::{PointResult, WorkloadEval};
 /// coefficients, whose payload hashes bind the coefficient payload to
 /// its workload key; v2 documents, whose entries were derived strictly
 /// per batch, are rejected wholesale so shard merges can never mix the
-/// two generations.
-pub const MODEL_VERSION: u32 = 3;
+/// two generations. v4: the hybrid tech axis — point keys now carry a
+/// [`TechSel`] spelling (`hybrid-stt:4@0.85`) whose way-partition
+/// parameters are part of the content address, so v3 documents (whose
+/// keys only ever named pure technologies) are retired rather than
+/// merged into a grid they cannot describe.
+pub const MODEL_VERSION: u32 = 4;
 
 /// File name of the persisted cache inside a results directory.
 pub const MEMO_FILE: &str = "sweep_memo.json";
@@ -334,6 +338,31 @@ impl Memo {
         Ok(*self.circuit.lock().unwrap().entry(key).or_insert(solved))
     }
 
+    /// EDAP-optimal design for a tech-axis *selection*. Pure
+    /// selections are plain [`Memo::tuned_at`] queries. Hybrid
+    /// selections compose from the two cached pure partner solves via
+    /// [`compose_ppa`] — the circuit layer stays pure-tech only, so a
+    /// hybrid point never costs a solve of its own and never parks an
+    /// entry the merge path could not re-derive. The returned config
+    /// carries the NVM partner's organization (the array geometry is
+    /// shared) with the composed PPA.
+    pub fn tuned_sel_at(
+        &self,
+        sel: TechSel,
+        capacity_bytes: u64,
+        node_nm: u32,
+    ) -> Result<TunedConfig, UncalibratedNode> {
+        match sel {
+            TechSel::Pure(t) => self.tuned_at(t, capacity_bytes, node_nm),
+            TechSel::Hybrid(h) => {
+                let s = self.tuned_at(MemTech::Sram, capacity_bytes, node_nm)?;
+                let n = self.tuned_at(h.nvm, capacity_bytes, node_nm)?;
+                let ppa = compose_ppa(&s.ppa, &n.ppa, h.sram_ways as u32, h.steer());
+                Ok(TunedConfig { ppa, ..n })
+            }
+        }
+    }
+
     /// Whether a circuit solve is already cached for this key.
     pub fn has_circuit(&self, tech: MemTech, capacity_bytes: u64, node_nm: u32) -> bool {
         let key = CircuitKey { tech, capacity_bytes, node_nm };
@@ -490,11 +519,13 @@ impl Memo {
         for p in wanted {
             pset.insert(*p);
             let bytes = p.capacity_mb * MB;
-            cset.insert(CircuitKey {
-                tech: p.tech,
-                capacity_bytes: bytes,
-                node_nm: p.node_nm,
-            });
+            for tech in p.tech.circuit_deps() {
+                cset.insert(CircuitKey {
+                    tech,
+                    capacity_bytes: bytes,
+                    node_nm: p.node_nm,
+                });
+            }
             if let Some(w) = p.workload {
                 cset.insert(CircuitKey {
                     tech: MemTech::Sram,
@@ -1083,7 +1114,7 @@ pub fn point_to_json(r: &PointResult) -> Json {
     o.set("key", Json::Str(p.key()));
     o.set("hash", Json::Str(format!("{:016x}", p.key_hash())));
     o.set("payload_hash", Json::Str(point_payload_hash(r)));
-    o.set("tech", Json::Str(p.tech.name().to_string()));
+    o.set("tech", Json::Str(p.tech.name()));
     o.set("capacity_mb", Json::Num(p.capacity_mb as f64));
     o.set("node_nm", Json::Num(p.node_nm as f64));
     match p.workload {
@@ -1113,7 +1144,7 @@ pub fn point_to_json(r: &PointResult) -> Json {
 /// and payload hashes are NOT verified here — [`Memo::merge_json`]
 /// does that).
 pub fn point_from_json(j: &Json) -> Option<PointResult> {
-    let tech = parse_tech(j.get("tech")?.as_str()?).ok()?;
+    let tech = parse_tech_sel(j.get("tech")?.as_str()?).ok()?;
     let capacity_mb = j.get("capacity_mb")?.as_f64()? as u64;
     let node_nm = j.get("node_nm")?.as_f64()? as u32;
     let workload = match j.get("dnn") {
@@ -1233,7 +1264,7 @@ mod tests {
         let m = Memo::with_capacity(2);
         assert_eq!(m.point_capacity(), Some(2));
         let pt = |mb| GridPoint {
-            tech: MemTech::Sram,
+            tech: MemTech::Sram.into(),
             capacity_mb: mb,
             node_nm: 16,
             workload: None,
@@ -1283,7 +1314,7 @@ mod tests {
         for mb in 1..=3u64 {
             evaluate_point(
                 &GridPoint {
-                    tech: MemTech::SttMram,
+                    tech: MemTech::SttMram.into(),
                     capacity_mb: mb,
                     node_nm: 16,
                     workload: None,
@@ -1305,7 +1336,7 @@ mod tests {
         // circuit-only points at 2 and 3 MB
         let m = Memo::new();
         let wl = GridPoint {
-            tech: MemTech::SttMram,
+            tech: MemTech::SttMram.into(),
             capacity_mb: 1,
             node_nm: 16,
             workload: Some(WorkloadPoint {
@@ -1318,7 +1349,7 @@ mod tests {
         for mb in [2u64, 3] {
             crate::sweep::evaluate_point(
                 &GridPoint {
-                    tech: MemTech::SotMram,
+                    tech: MemTech::SotMram.into(),
                     capacity_mb: mb,
                     node_nm: 16,
                     workload: None,
@@ -1456,6 +1487,61 @@ mod tests {
         let st = fresh.merge_json(&json::parse(&text).unwrap());
         assert_eq!((st.accepted, st.rejected), (1, 0));
         assert!(fresh.has_circuit(MemTech::Sram, MB, 7));
+    }
+
+    #[test]
+    fn merge_rejects_tampered_hybrid_parameters() {
+        use crate::sweep::evaluate_point;
+        use crate::sweep::spec::{parse_tech_sel, GridPoint};
+
+        // a hybrid circuit-only point: two pure partner solves plus
+        // one composed point entry
+        let m = Memo::new();
+        let pt = GridPoint {
+            tech: parse_tech_sel("hybrid-stt:4@0.85").unwrap(),
+            capacity_mb: 2,
+            node_nm: 16,
+            workload: None,
+        };
+        evaluate_point(&pt, &m).unwrap();
+        assert_eq!(m.solve_count(), 2, "hybrid composes from SRAM + STT solves");
+        assert_eq!(m.circuit_len(), 2, "no hybrid entry parks in the circuit cache");
+        let text = m.to_json().to_pretty();
+        assert!(text.contains("hybrid-stt:4@0.85"), "{text}");
+
+        // a forged way split rewrites the tech spelling consistently
+        // across the point's tech and key fields, but the stored
+        // identity hash is bound to the original key string
+        let forged = text.replace("hybrid-stt:4@0.85", "hybrid-stt:8@0.85");
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&forged).unwrap());
+        assert!(st.version_ok);
+        assert_eq!(st.rejected, 1, "relabeled way split must not merge");
+        assert_eq!(fresh.point_len(), 0);
+
+        // a forged steer fraction takes the same rejection path
+        let forged = text.replace("hybrid-stt:4@0.85", "hybrid-stt:4@0.6");
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&forged).unwrap());
+        assert_eq!(st.rejected, 1, "relabeled steer must not merge");
+        assert_eq!(fresh.point_len(), 0);
+
+        // an out-of-range way count never parses, so the entry cannot
+        // even reach the hash checks
+        let forged = text.replace("hybrid-stt:4@0.85", "hybrid-stt:99@0.85");
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&forged).unwrap());
+        assert_eq!(st.rejected, 1, "unparseable hybrid must not merge");
+        assert_eq!(fresh.point_len(), 0);
+
+        // the untampered document merges with exact accounting (two
+        // circuit deps + the point) and replays without solving
+        let fresh = Memo::new();
+        let st = fresh.merge_json(&json::parse(&text).unwrap());
+        assert_eq!((st.accepted, st.skipped, st.rejected), (3, 0, 0));
+        evaluate_point(&pt, &fresh).unwrap();
+        assert_eq!(fresh.solve_count(), 0, "hybrid replay must be solve-free");
+        assert_eq!(fresh.eval_count(), 0);
     }
 
     #[test]
@@ -1618,7 +1704,7 @@ mod tests {
         m.tuned(MemTech::SttMram, MB);
         crate::sweep::evaluate_point(
             &GridPoint {
-                tech: MemTech::SttMram,
+                tech: MemTech::SttMram.into(),
                 capacity_mb: 1,
                 node_nm: 16,
                 workload: Some(WorkloadPoint {

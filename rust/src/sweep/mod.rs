@@ -34,6 +34,7 @@ pub use memo::Memo;
 pub use spec::{
     Filter, GridPoint, OptimizeRequest, OptimizeResponse, OptObjective, SweepSpec, WorkloadPoint,
 };
+pub use crate::nvsim::{HybridSel, TechSel};
 
 use anyhow::Result;
 use std::collections::HashSet;
@@ -81,7 +82,7 @@ pub fn evaluate_point(point: &GridPoint, memo: &Memo) -> Result<PointResult> {
     // Any circuit.solve / traffic.lower spans nest under this one.
     let _span = crate::obs::Span::enter("point.evaluate");
     let bytes = point.capacity_mb * MB;
-    let tuned = memo.tuned_at(point.tech, bytes, point.node_nm)?;
+    let tuned = memo.tuned_sel_at(point.tech, bytes, point.node_nm)?;
     let eval = match point.workload {
         None => None,
         Some(w) => {
@@ -144,15 +145,17 @@ pub fn run(spec: &SweepSpec, jobs: usize, memo: &Memo) -> Result<SweepResults> {
 
     // Phase 1: distinct *uncached* circuit solves (the expensive
     // NVSim-style enumerations), deduplicated up front so parallel
-    // workers never duplicate a solve. Workload points also need the
-    // SRAM baseline.
+    // workers never duplicate a solve. A hybrid selection depends on
+    // its two pure partner solves (never a solve of its own); workload
+    // points also need the SRAM baseline.
     let mut seen = HashSet::new();
     let mut circuits: Vec<(MemTech, u64, u32)> = Vec::new();
     for p in &points {
-        for tech in [Some(p.tech), p.workload.map(|_| MemTech::Sram)]
-            .into_iter()
-            .flatten()
-        {
+        let mut deps = p.tech.circuit_deps();
+        if p.workload.is_some() {
+            deps.push(MemTech::Sram);
+        }
+        for tech in deps {
             if seen.insert((tech, p.capacity_mb, p.node_nm))
                 && !memo.has_circuit(tech, p.capacity_mb * MB, p.node_nm)
             {
@@ -191,7 +194,7 @@ mod tests {
     #[test]
     fn run_covers_spec_in_order() {
         let spec = SweepSpec {
-            techs: vec![MemTech::Sram, MemTech::SotMram],
+            techs: TechSel::pures(&[MemTech::Sram, MemTech::SotMram]),
             capacities_mb: vec![1, 2],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Inference],
@@ -214,7 +217,7 @@ mod tests {
     #[test]
     fn sram_points_normalize_to_exactly_one() {
         let spec = SweepSpec {
-            techs: vec![MemTech::Sram],
+            techs: vec![MemTech::Sram.into()],
             capacities_mb: vec![2],
             dnns: vec!["SqueezeNet".into()],
             phases: vec![Phase::Training],
@@ -232,7 +235,7 @@ mod tests {
     #[test]
     fn multi_node_run_solves_per_node_and_keeps_nodes_distinct() {
         let spec = SweepSpec {
-            techs: vec![MemTech::SttMram],
+            techs: vec![MemTech::SttMram.into()],
             capacities_mb: vec![1],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Inference],
@@ -266,7 +269,7 @@ mod tests {
         // work with the batch count: one lowering per (dnn, phase),
         // shared by every batch AND every capacity.
         let spec = SweepSpec {
-            techs: vec![MemTech::SttMram],
+            techs: vec![MemTech::SttMram.into()],
             capacities_mb: vec![1, 2],
             dnns: vec!["AlexNet".into()],
             phases: Phase::ALL.to_vec(),
@@ -289,7 +292,7 @@ mod tests {
     #[test]
     fn tuned_configs_deduplicate_across_workloads() {
         let spec = SweepSpec {
-            techs: vec![MemTech::SttMram],
+            techs: vec![MemTech::SttMram.into()],
             capacities_mb: vec![1],
             dnns: vec!["AlexNet".into(), "VGG-16".into()],
             phases: Phase::ALL.to_vec(),
@@ -300,5 +303,43 @@ mod tests {
         let res = run(&spec, 1, &Memo::new()).unwrap();
         assert_eq!(res.points.len(), 4);
         assert_eq!(res.tuned_configs().len(), 1);
+    }
+
+    #[test]
+    fn hybrid_points_compose_from_pure_solves() {
+        use crate::sweep::spec::parse_tech_sel;
+        let hybrid = parse_tech_sel("hybrid-stt:4@0.85").unwrap();
+        let spec = SweepSpec {
+            techs: vec![hybrid, MemTech::SttMram.into()],
+            capacities_mb: vec![2],
+            dnns: vec!["AlexNet".into()],
+            phases: vec![Phase::Inference],
+            batches: vec![],
+            nodes_nm: vec![16],
+            filters: vec![],
+        };
+        let memo = Memo::new();
+        let res = run(&spec, 2, &memo).unwrap();
+        assert_eq!(res.points.len(), 2);
+        // the hybrid composes from the SRAM + STT solves the grid
+        // already needs: exactly 2 circuit solves total, not 3
+        assert_eq!(memo.solve_count(), 2);
+        let h = &res.points[0];
+        let pure = &res.points[1];
+        assert_eq!(h.point.tech, hybrid);
+        // composed PPA sits strictly between its endpoints
+        assert!(h.tuned.ppa.write_latency < pure.tuned.ppa.write_latency);
+        assert!(h.tuned.ppa.leakage_power > pure.tuned.ppa.leakage_power);
+        // and matches the standalone node-aware hybrid model bit-exactly
+        let direct = crate::nvsim::hybrid_at(MemTech::SttMram, 2 * MB, 4, 0.85, 16)
+            .unwrap();
+        assert_eq!(h.tuned.ppa.write_latency.to_bits(), direct.ppa.write_latency.to_bits());
+        assert_eq!(h.tuned.ppa.area.to_bits(), direct.ppa.area.to_bits());
+        // workload eval exists and normalizes against SRAM
+        assert!(h.eval.is_some());
+        // a warm rerun is pure cache hits
+        run(&spec, 2, &memo).unwrap();
+        assert_eq!(memo.solve_count(), 2);
+        assert_eq!(memo.eval_count(), 2);
     }
 }

@@ -51,6 +51,7 @@ use crate::analysis::energy::{evaluate, DramCost, Evaluation};
 use crate::device::MemTech;
 use crate::nvsim::explorer::TunedConfig;
 use crate::nvsim::model::CachePpa;
+use crate::nvsim::TechSel;
 use crate::obs::{LazyCounter, Span};
 use crate::workload::models::Phase;
 use crate::workload::traffic::BatchLine;
@@ -130,7 +131,12 @@ fn objective_bound(
 /// Field-wise floor of a set of tuned PPAs: a synthetic cache at least
 /// as good as every real design in the range on every axis, hence an
 /// admissible stand-in inside [`evaluate`] (which is monotone
-/// nondecreasing in every PPA field).
+/// nondecreasing in every PPA field). Hybrid selections need no
+/// special casing: [`crate::nvsim::compose_ppa`] is affine in the SRAM
+/// way fraction (writes constant on the steered plateau), so a
+/// column's composed PPA is itself a convex mix of its pure partners
+/// and the elementwise floor over *actual* column PPAs — which is what
+/// flows in here — still under-approximates every point in the range.
 fn ppa_floor(ppas: &[CachePpa]) -> CachePpa {
     let mut m = ppas[0];
     for p in &ppas[1..] {
@@ -148,7 +154,7 @@ fn ppa_floor(ppas: &[CachePpa]) -> CachePpa {
 /// capacity column (spec order) and batch row (spec order) span a
 /// rectangle of grid points the search bounds as a unit.
 struct Slice {
-    tech: MemTech,
+    tech: TechSel,
     node_nm: u32,
     dnn: &'static str,
     phase: Phase,
@@ -275,24 +281,34 @@ pub fn run(req: &OptimizeRequest, jobs: usize, memo: &Memo) -> Result<OptimizeRe
         bail!("the grid is empty after filters; nothing to optimize");
     }
 
-    // Solve every distinct circuit column once, in parallel — cheap
-    // relative to the workload grid (caps × techs × nodes vs the full
-    // product) and exactly what feasibility and the PPA floors need.
+    // Solve every distinct *pure* circuit column once, in parallel —
+    // cheap relative to the workload grid (caps × techs × nodes vs the
+    // full product) and exactly what feasibility and the PPA floors
+    // need. Hybrid selections contribute their SRAM + NVM partner
+    // columns here and then compose from the warm cache below.
     let mut seen = HashSet::new();
     let mut columns: Vec<(MemTech, u64, u32)> = Vec::new();
     for p in &points {
-        if seen.insert((p.tech, p.capacity_mb, p.node_nm)) {
-            columns.push((p.tech, p.capacity_mb, p.node_nm));
+        for tech in p.tech.circuit_deps() {
+            if seen.insert((tech, p.capacity_mb, p.node_nm)) {
+                columns.push((tech, p.capacity_mb, p.node_nm));
+            }
         }
     }
     let jobs = if jobs == 0 { exec::default_jobs() } else { jobs };
-    let mut tuned: HashMap<(MemTech, u64, u32), TunedConfig> = HashMap::new();
-    for (col, solved) in columns.iter().zip(exec::run_ordered(
-        &columns,
-        jobs,
-        |&(tech, mb, node)| memo.tuned_at(tech, mb * MB, node),
-    )) {
-        tuned.insert(*col, solved?);
+    for solved in exec::run_ordered(&columns, jobs, |&(tech, mb, node)| {
+        memo.tuned_at(tech, mb * MB, node)
+    }) {
+        solved?;
+    }
+    let mut tuned: HashMap<(TechSel, u64, u32), TunedConfig> = HashMap::new();
+    for p in &points {
+        let col = (p.tech, p.capacity_mb, p.node_nm);
+        if !tuned.contains_key(&col) {
+            // pure cache hits — every partner column was solved above
+            let cfg = memo.tuned_sel_at(p.tech, p.capacity_mb * MB, p.node_nm)?;
+            tuned.insert(col, cfg);
+        }
     }
     let feasible: Vec<GridPoint> = points
         .iter()
@@ -331,7 +347,7 @@ pub fn run(req: &OptimizeRequest, jobs: usize, memo: &Memo) -> Result<OptimizeRe
     // Feasible points arrive grouped (node, tech) outer, capacity next,
     // (dnn, phase) inner, batch innermost — so each slice's capacity
     // column and batch row fill in spec order.
-    let mut slice_of: HashMap<(u32, MemTech, &'static str, Phase), usize> =
+    let mut slice_of: HashMap<(u32, TechSel, &'static str, Phase), usize> =
         HashMap::new();
     let mut slices: Vec<Slice> = Vec::new();
     for p in &feasible {
@@ -481,7 +497,7 @@ fn circuit_only(
     req: &OptimizeRequest,
     memo: &Memo,
     feasible: &[GridPoint],
-    tuned: &HashMap<(MemTech, u64, u32), TunedConfig>,
+    tuned: &HashMap<(TechSel, u64, u32), TunedConfig>,
     points_total: u64,
 ) -> Result<OptimizeResponse> {
     let mut best: Option<(f64, usize)> = None;
@@ -570,7 +586,7 @@ fn frontier_mode(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sweep::spec::optimize_request_from_json;
+    use crate::sweep::spec::{optimize_request_from_json, parse_tech_sel};
     use crate::sweep::{Filter, SweepSpec};
     use crate::util::json;
 
@@ -607,8 +623,15 @@ mod tests {
 
     #[test]
     fn search_matches_exhaustive_argmin_bit_for_bit() {
+        // the tech axis mixes pure and hybrid selections so the
+        // equivalence proof covers composed PPAs too
         let spec = SweepSpec {
-            techs: vec![MemTech::SttMram, MemTech::SotMram],
+            techs: vec![
+                MemTech::SttMram.into(),
+                parse_tech_sel("hybrid-stt:4@0.85").unwrap(),
+                parse_tech_sel("hybrid-sot:8@0.9").unwrap(),
+                MemTech::SotMram.into(),
+            ],
             capacities_mb: vec![1, 2, 4],
             dnns: vec!["AlexNet".into()],
             phases: Phase::ALL.to_vec(),
@@ -642,7 +665,7 @@ mod tests {
     #[test]
     fn search_prunes_most_of_a_wide_grid() {
         let spec = SweepSpec {
-            techs: vec![MemTech::Sram, MemTech::SttMram, MemTech::SotMram],
+            techs: TechSel::pures(&[MemTech::Sram, MemTech::SttMram, MemTech::SotMram]),
             capacities_mb: vec![1, 2, 4, 8, 16, 32],
             dnns: vec!["AlexNet".into(), "ResNet-18".into()],
             phases: Phase::ALL.to_vec(),
@@ -668,7 +691,7 @@ mod tests {
     #[test]
     fn budgets_prune_and_infeasible_is_typed() {
         let spec = SweepSpec {
-            techs: vec![MemTech::SttMram],
+            techs: vec![MemTech::SttMram.into()],
             capacities_mb: vec![1, 2],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Inference],
@@ -761,7 +784,7 @@ mod tests {
     #[test]
     fn counters_account_for_every_implicit_point() {
         let spec = SweepSpec {
-            techs: vec![MemTech::SttMram],
+            techs: vec![MemTech::SttMram.into()],
             capacities_mb: vec![1, 2],
             dnns: vec!["SqueezeNet".into()],
             phases: vec![Phase::Inference],

@@ -12,6 +12,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::device::MemTech;
+use crate::nvsim::org::ASSOC;
+use crate::nvsim::{HybridSel, TechSel};
 use crate::util::json::Json;
 use crate::workload::models::{Dnn, Phase};
 
@@ -51,7 +53,11 @@ pub struct WorkloadPoint {
 /// own identity: equal points address the same memoized result.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct GridPoint {
-    pub tech: MemTech,
+    /// Tech-axis selection — a pure [`MemTech`] or a way-partitioned
+    /// hybrid ([`TechSel::Hybrid`]). Hybrid parameters are part of the
+    /// point identity, so they bind into [`GridPoint::key`] and every
+    /// payload hash derived from it.
+    pub tech: TechSel,
     pub capacity_mb: u64,
     /// Process node (nm); see
     /// [`crate::device::CALIBRATED_NODES_NM`] for the calibrated set.
@@ -114,7 +120,8 @@ impl Filter {
 /// Axis lists describing one sweep over the cross-layer model.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
-    pub techs: Vec<MemTech>,
+    /// Tech-axis selections (pure technologies and/or hybrids).
+    pub techs: Vec<TechSel>,
     pub capacities_mb: Vec<u64>,
     /// Workload names resolved against the zoo (case-insensitive);
     /// empty = circuit-only sweep (one point per tech x capacity).
@@ -130,7 +137,7 @@ pub struct SweepSpec {
 impl Default for SweepSpec {
     fn default() -> Self {
         SweepSpec {
-            techs: MemTech::ALL.to_vec(),
+            techs: TechSel::pure_all(),
             capacities_mb: DEFAULT_CAPACITIES_MB.to_vec(),
             dnns: Dnn::zoo().iter().map(|d| d.name.to_string()).collect(),
             phases: Phase::ALL.to_vec(),
@@ -145,7 +152,7 @@ impl SweepSpec {
     /// A PPA-only sweep (no workload axis) — the Fig 9 shape.
     pub fn circuit_only(techs: Vec<MemTech>, capacities_mb: Vec<u64>) -> Self {
         SweepSpec {
-            techs,
+            techs: TechSel::pures(&techs),
             capacities_mb,
             dnns: vec![],
             phases: Phase::ALL.to_vec(),
@@ -197,6 +204,21 @@ impl SweepSpec {
                 // Typed, not stringly: the serve layer downcasts this
                 // to map it onto the `uncalibrated_node` error kind.
                 return Err(crate::device::UncalibratedNode(node).into());
+            }
+        }
+        for &tech in &self.techs {
+            if let TechSel::Hybrid(h) = tech {
+                // `parse_tech_sel` already enforces both; this guards
+                // programmatic construction before work is scheduled.
+                if !h.nvm.is_nvm() {
+                    bail!("hybrid partner must be an NVM, not {}", h.nvm);
+                }
+                if h.sram_ways as usize > ASSOC {
+                    bail!(
+                        "hybrid SRAM way count {} exceeds associativity {ASSOC}",
+                        h.sram_ways
+                    );
+                }
             }
         }
         for &mb in &self.capacities_mb {
@@ -339,7 +361,7 @@ pub fn spec_to_json(s: &SweepSpec) -> Json {
     let mut o = Json::obj();
     o.set(
         "techs",
-        Json::Arr(s.techs.iter().map(|t| Json::Str(t.name().to_string())).collect()),
+        Json::Arr(s.techs.iter().map(|t| Json::Str(t.name())).collect()),
     );
     o.set(
         "caps_mb",
@@ -419,7 +441,7 @@ pub fn spec_from_json(j: &Json) -> Result<SweepSpec> {
     if let Some(names) = str_axis(j, "techs")? {
         let mut techs = Vec::with_capacity(names.len());
         for n in &names {
-            techs.push(parse_tech(n)?);
+            techs.push(parse_tech_sel(n)?);
         }
         s.techs = techs;
     }
@@ -498,6 +520,46 @@ pub fn parse_tech(s: &str) -> Result<MemTech> {
         "sot" | "sot-mram" | "sotmram" => Ok(MemTech::SotMram),
         other => bail!("unknown memory technology '{other}' (sram|stt|sot)"),
     }
+}
+
+/// Parse a tech-axis selection: everything [`parse_tech`] accepts,
+/// plus way-partitioned hybrids spelled `hybrid-<nvm>:<ways>@<steer>`
+/// (e.g. `hybrid-stt:4@0.85`) — `ways` SRAM ways out of the cache's
+/// 16-way associativity, `steer` the write-steering fraction in
+/// [0, 1]. The inverse of [`TechSel::name`].
+pub fn parse_tech_sel(s: &str) -> Result<TechSel> {
+    let lowered = s.trim().to_ascii_lowercase();
+    let Some(rest) = lowered.strip_prefix("hybrid-") else {
+        return Ok(TechSel::Pure(parse_tech(s)?));
+    };
+    let usage = "hybrid-<stt|sot>:<ways>@<steer>";
+    let (nvm_s, params) = rest
+        .split_once(':')
+        .ok_or_else(|| anyhow!("hybrid tech '{s}' must be {usage}"))?;
+    let nvm = parse_tech(nvm_s)?;
+    if !nvm.is_nvm() {
+        bail!("hybrid partner must be an NVM, not '{nvm_s}'");
+    }
+    let (ways_s, steer_s) = params
+        .split_once('@')
+        .ok_or_else(|| anyhow!("hybrid tech '{s}' must be {usage}"))?;
+    let sram_ways: u8 = ways_s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("hybrid SRAM way count '{ways_s}' must be an integer"))?;
+    if sram_ways as usize > ASSOC {
+        bail!("hybrid SRAM way count {sram_ways} exceeds associativity {ASSOC}");
+    }
+    let steer: f64 = steer_s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("hybrid steer '{steer_s}' must be a number"))?;
+    if !steer.is_finite() || !(0.0..=1.0).contains(&steer) {
+        bail!("hybrid steer '{steer_s}' must be in [0, 1]");
+    }
+    // quantize to basis points: the resolution the key encodes
+    let steer_bp = (steer * 1e4).round() as u16;
+    Ok(TechSel::Hybrid(HybridSel { nvm, sram_ways, steer_bp }))
 }
 
 /// Parse a phase name from CLI input.
@@ -699,7 +761,7 @@ mod tests {
     #[test]
     fn expansion_counts_and_order() {
         let spec = SweepSpec {
-            techs: vec![MemTech::Sram, MemTech::SttMram],
+            techs: TechSel::pures(&[MemTech::Sram, MemTech::SttMram]),
             capacities_mb: vec![1, 2],
             dnns: vec!["AlexNet".into(), "VGG-16".into()],
             phases: Phase::ALL.to_vec(),
@@ -837,7 +899,7 @@ mod tests {
     #[test]
     fn spec_json_roundtrip() {
         let spec = SweepSpec {
-            techs: vec![MemTech::SttMram, MemTech::SotMram],
+            techs: TechSel::pures(&[MemTech::SttMram, MemTech::SotMram]),
             capacities_mb: vec![2, 8],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Training],
@@ -910,6 +972,106 @@ mod tests {
         assert!(parse_tech("dram").is_err());
         assert_eq!(parse_phase("T").unwrap(), Phase::Training);
         assert!(parse_phase("both").is_err());
+    }
+
+    #[test]
+    fn parse_tech_sel_covers_pures_and_hybrids() {
+        // pure names parse exactly as parse_tech
+        assert_eq!(parse_tech_sel("STT").unwrap(), MemTech::SttMram);
+        assert_eq!(parse_tech_sel("sram").unwrap(), MemTech::Sram);
+
+        let h = parse_tech_sel("hybrid-stt:4@0.85").unwrap();
+        assert_eq!(
+            h,
+            TechSel::Hybrid(HybridSel {
+                nvm: MemTech::SttMram,
+                sram_ways: 4,
+                steer_bp: 8500,
+            })
+        );
+        // name() is the inverse, including through full MemTech names
+        assert_eq!(parse_tech_sel(&h.name()).unwrap(), h);
+        assert_eq!(
+            parse_tech_sel(" HYBRID-SOT-MRAM:2@0.9 ").unwrap(),
+            TechSel::Hybrid(HybridSel {
+                nvm: MemTech::SotMram,
+                sram_ways: 2,
+                steer_bp: 9000,
+            })
+        );
+        for t in TechSel::pure_all() {
+            assert_eq!(parse_tech_sel(&t.name()).unwrap(), t);
+        }
+
+        for bad in [
+            "hybrid-sram:4@0.85", // partner must be NVM
+            "hybrid-stt:17@0.85", // ways beyond associativity
+            "hybrid-stt:4@1.5",   // steer out of range
+            "hybrid-stt:4@-0.1",
+            "hybrid-stt:4@nan",
+            "hybrid-stt:4",       // missing steer
+            "hybrid-stt",         // missing ways
+            "hybrid-dram:4@0.85",
+        ] {
+            assert!(parse_tech_sel(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn hybrid_points_expand_and_key_apart() {
+        let spec = SweepSpec {
+            techs: vec![
+                MemTech::SttMram.into(),
+                parse_tech_sel("hybrid-stt:4@0.85").unwrap(),
+                parse_tech_sel("hybrid-stt:8@0.85").unwrap(),
+            ],
+            ..SweepSpec::circuit_only(vec![], vec![2])
+        };
+        let pts = spec.expand().unwrap();
+        assert_eq!(pts.len(), 3);
+        // the hybrid parameters are part of the content key, so a
+        // tampered sram_ways/steer can never alias another point
+        let keys: std::collections::HashSet<String> =
+            pts.iter().map(|p| p.key()).collect();
+        assert_eq!(keys.len(), 3);
+        assert!(pts[1].key().contains("hybrid-stt:4@0.85"), "{}", pts[1].key());
+
+        // hybrids survive the JSON codec round-trip
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(back.techs, spec.techs);
+
+        // NvmOnly keeps hybrids (their bulk ways are NVM)
+        let filtered = SweepSpec {
+            filters: vec![Filter::NvmOnly],
+            ..spec.clone()
+        };
+        assert_eq!(filtered.expand().unwrap().len(), 3);
+        // TechIs matches pure techs only
+        let pure_only = SweepSpec {
+            filters: vec![Filter::TechIs(MemTech::SttMram)],
+            ..spec.clone()
+        };
+        assert_eq!(pure_only.expand().unwrap().len(), 1);
+
+        // programmatic construction is still validated at expand()
+        let bad = SweepSpec {
+            techs: vec![TechSel::Hybrid(HybridSel {
+                nvm: MemTech::Sram,
+                sram_ways: 4,
+                steer_bp: 8500,
+            })],
+            ..SweepSpec::circuit_only(vec![], vec![2])
+        };
+        assert!(bad.expand().is_err());
+        let bad_ways = SweepSpec {
+            techs: vec![TechSel::Hybrid(HybridSel {
+                nvm: MemTech::SttMram,
+                sram_ways: 17,
+                steer_bp: 8500,
+            })],
+            ..SweepSpec::circuit_only(vec![], vec![2])
+        };
+        assert!(bad_ways.expand().is_err());
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //!     [`optimize::Infeasible`] error, never a free-text string.
 
 use deepnvm::device::MemTech;
+use deepnvm::nvsim::TechSel;
+use deepnvm::sweep::spec::parse_tech_sel;
 use deepnvm::sweep::{self, optimize, Memo, OptObjective, OptimizeRequest, SweepSpec};
 use deepnvm::util::rng::Rng;
 use deepnvm::workload::models::Phase;
@@ -117,11 +119,19 @@ fn search_matches_exhaustive_argmin_on_seeded_random_grids() {
     let node_pool = [16u32, 7, 5];
     let dnn_pool = ["AlexNet", "ResNet-18", "SqueezeNet"];
     let batch_pool = [1usize, 2, 4, 8, 16, 32];
+    // The tech axis draws from pures AND way-partitioned hybrids, so
+    // the argmin identity is checked across hybrid composition too.
+    let tech_pool: Vec<TechSel> = {
+        let mut v = TechSel::pure_all();
+        v.push(parse_tech_sel("hybrid-stt:4@0.85").unwrap());
+        v.push(parse_tech_sel("hybrid-sot:8@0.9").unwrap());
+        v
+    };
 
     for trial in 0..8 {
         let with_workload = rng.chance(0.75);
         let spec = SweepSpec {
-            techs: pick(&mut rng, &MemTech::ALL, 3),
+            techs: pick(&mut rng, &tech_pool, 3),
             capacities_mb: pick(&mut rng, &cap_pool, 3),
             dnns: if with_workload {
                 pick(&mut rng, &dnn_pool, 2).into_iter().map(String::from).collect()
@@ -174,7 +184,7 @@ fn search_matches_exhaustive_argmin_on_seeded_random_grids() {
 fn golden_min_edp_area_25mm2_nodes_7_and_5() {
     let req = OptimizeRequest {
         spec: SweepSpec {
-            techs: MemTech::ALL.to_vec(),
+            techs: TechSel::pure_all(),
             capacities_mb: vec![1, 2, 4, 8, 16, 32],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Inference],

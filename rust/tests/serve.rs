@@ -145,7 +145,7 @@ fn sweep_default_report_round_trips_spec_options() {
 #[test]
 fn disjoint_shard_merges_reproduce_the_full_grid_memo() {
     let full = SweepSpec {
-        techs: MemTech::ALL.to_vec(),
+        techs: deepnvm::nvsim::TechSel::pures(&MemTech::ALL),
         capacities_mb: vec![1, 2],
         dnns: vec!["AlexNet".into()],
         phases: Phase::ALL.to_vec(),
@@ -202,7 +202,7 @@ fn partial_merge_accounts_exactly_and_leaves_the_memo_consistent() {
     // — shared across the capacities — 2 traffic lines (AlexNet x two
     // phases): 6 entries in shard A's document, 10 in the full one.
     let spec = SweepSpec {
-        techs: vec![MemTech::SttMram],
+        techs: vec![MemTech::SttMram.into()],
         capacities_mb: vec![1, 2],
         dnns: vec!["AlexNet".into()],
         phases: Phase::ALL.to_vec(),
@@ -276,7 +276,7 @@ fn forged_traffic_coefficients_never_poison_the_batch_axis() {
     // serving CORRECT batch rows afterwards (re-deriving the line
     // locally instead of trusting the forged one).
     let spec = SweepSpec {
-        techs: vec![MemTech::SttMram],
+        techs: vec![MemTech::SttMram.into()],
         capacities_mb: vec![1],
         dnns: vec!["AlexNet".into()],
         phases: vec![Phase::Training],
@@ -343,7 +343,7 @@ fn model_version_2_shard_documents_are_rejected_on_merge() {
     let worker = Memo::new();
     let mut doc = shard::run_shard(
         &SweepSpec {
-            techs: vec![MemTech::SttMram],
+            techs: vec![MemTech::SttMram.into()],
             capacities_mb: vec![1],
             dnns: vec!["AlexNet".into()],
             phases: vec![Phase::Inference],
@@ -505,6 +505,7 @@ fn loadgen_soaks_a_live_server_and_reports_quantiles() {
         solve_weight: 3,
         sweep_weight: 1,
         optimize_weight: 1,
+        hot_frac: Some(0.5),
         p99_ms: None,
     };
     let report = loadgen::run(&cfg).unwrap();
@@ -517,10 +518,18 @@ fn loadgen_soaks_a_live_server_and_reports_quantiles() {
             && report.optimize.requests > 0,
         "the 3:1:1 mix must exercise all three kinds: {report:?}"
     );
+    // --hot-frac 0.5 classifies every /solve: both classes must show
+    // up, they must sum to the solve kind, and the cold tail (hybrid
+    // cache-miss bodies) must have been served without errors.
+    let hot = report.hot.as_ref().expect("hot stats with hot_frac set");
+    let cold = report.cold.as_ref().expect("cold stats with hot_frac set");
+    assert!(hot.requests > 0 && cold.requests > 0, "{report:?}");
+    assert_eq!(hot.requests + cold.requests, report.solve.requests, "{report:?}");
     assert!(report.p50_ms <= report.p99_ms, "{report:?}");
     assert!(report.meets_p99(f64::INFINITY));
     assert!(!report.meets_p99(0.0), "bucketed quantiles are never zero");
     assert!(report.render().contains("req/s"));
+    assert!(report.render().contains("hot"), "{}", report.render());
 
     // the soak's latency series is scrape-visible on the same registry
     let (status, text) = get(&server, "/metrics");

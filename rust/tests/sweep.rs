@@ -13,6 +13,8 @@ use deepnvm::coordinator::reports;
 use deepnvm::coordinator::store::Store;
 use deepnvm::device::MemTech;
 use deepnvm::nvsim::explorer::tuned_cache;
+use deepnvm::nvsim::TechSel;
+use deepnvm::sweep::spec::parse_tech_sel;
 use deepnvm::sweep::{self, Memo, SweepSpec};
 use deepnvm::util::stats::{mean, std_dev};
 use deepnvm::util::table::f;
@@ -22,8 +24,13 @@ use deepnvm::workload::traffic::TrafficModel;
 const MB: u64 = 1024 * 1024;
 
 fn small_spec() -> SweepSpec {
+    // The three pure techs plus a way-partitioned hybrid, so every
+    // guarantee below (byte-stable parallel rows, zero-solve warm and
+    // disk-restored reruns) covers the hybrid axis too.
+    let mut techs = TechSel::pure_all();
+    techs.push(parse_tech_sel("hybrid-stt:4@0.85").unwrap());
     SweepSpec {
-        techs: MemTech::ALL.to_vec(),
+        techs,
         capacities_mb: vec![1, 2],
         dnns: vec!["AlexNet".into(), "SqueezeNet".into()],
         phases: Phase::ALL.to_vec(),
@@ -104,7 +111,7 @@ fn batch_axis_sweep_identical_to_per_batch_recompute() {
     // equal to the legacy path that re-ran TrafficModel::run at each
     // (batch, capacity), inlined here verbatim.
     let spec = SweepSpec {
-        techs: vec![MemTech::SttMram, MemTech::SotMram],
+        techs: TechSel::pures(&[MemTech::SttMram, MemTech::SotMram]),
         capacities_mb: vec![2],
         dnns: vec!["AlexNet".into(), "SqueezeNet".into()],
         phases: Phase::ALL.to_vec(),
@@ -128,7 +135,8 @@ fn batch_axis_sweep_identical_to_per_batch_recompute() {
         let dnn = Dnn::by_name(w.dnn).unwrap();
         let traffic = TrafficModel { l2_bytes: bytes, ..Default::default() };
         let stats = traffic.run(&dnn, w.phase, w.batch);
-        let e = evaluate(&stats, &tuned_cache(p.point.tech, bytes).ppa, Some(dram));
+        let tech = p.point.tech.pure().expect("this spec is all-pure");
+        let e = evaluate(&stats, &tuned_cache(tech, bytes).ppa, Some(dram));
         let base = evaluate(&stats, &tuned_cache(MemTech::Sram, bytes).ppa, Some(dram));
         let ev = p.eval.unwrap();
         assert_eq!(ev.energy_j, e.energy(), "{w:?}");
@@ -172,7 +180,7 @@ fn pareto_on_real_grid_prefers_nvm_at_scale() {
     // On a {STT, SOT} x {2, 32} MB AlexNet grid, the frontier must not
     // be empty and every frontier member must be undominated.
     let spec = SweepSpec {
-        techs: vec![MemTech::SttMram, MemTech::SotMram],
+        techs: TechSel::pures(&[MemTech::SttMram, MemTech::SotMram]),
         capacities_mb: vec![2, 32],
         dnns: vec!["AlexNet".into()],
         phases: vec![Phase::Training],
