@@ -74,20 +74,25 @@ def trend_gate(name, doc):
     The BASELINE file pins which keys are trend-tracked and at what
     tolerance; a null committed value means nobody has promoted a
     baseline yet, which skips (with a note) rather than inventing one.
+    Returns (tracked, null) key counts so the caller can tell whether
+    ANY trend gate actually armed across the whole run.
     """
+    tracked = nulls = 0
     base_name = name.replace("BENCH_", "BASELINE_")
     path = root / base_name
     if not path.exists():
         print(f"note: {base_name} missing; trend gates skipped for {name}")
-        return
+        return tracked, nulls
     try:
         base = json.loads(path.read_text())
     except ValueError as e:
         failures.append(f"{base_name}: unparseable ({e})")
-        return
+        return tracked, nulls
     tolerance = base.get("trend_tolerance", 1.5)
     for key, committed in base.get("timings_ms", {}).items():
+        tracked += 1
         if committed is None:
+            nulls += 1
             print(f"note: {base_name}: '{key}' has no committed baseline yet")
             continue
         value = doc.get(key)
@@ -103,6 +108,7 @@ def trend_gate(name, doc):
                 f"baseline {committed:.3f} ms (see {base_name}; promote a new "
                 "baseline only for an intentional change)"
             )
+    return tracked, nulls
 
 
 def promote_baseline(name, doc):
@@ -291,6 +297,7 @@ if dist is not None:
             "(loopback workers must not shed shards)"
         )
 
+trend_tracked = trend_nulls = 0
 for name, doc in (
     ("BENCH_sweep.json", sweep),
     ("BENCH_serve.json", serve),
@@ -301,7 +308,32 @@ for name, doc in (
     if promote:
         promote_baseline(name, doc)
     else:
-        trend_gate(name, doc)
+        tracked, nulls = trend_gate(name, doc)
+        trend_tracked += tracked
+        trend_nulls += nulls
+
+if not promote and trend_tracked > 0 and trend_nulls == trend_tracked:
+    # Every trend-tracked key is still null: not a failure (the gates
+    # are documented to skip-with-a-note until someone promotes), but
+    # it must never scroll past silently — an all-null run means the
+    # trend gates have NEVER fired and the perf trajectory is entirely
+    # unguarded.
+    banner = (
+        f"WARNING: all {trend_tracked} trend-tracked baseline keys are "
+        "null — no trend gate is armed"
+    )
+    print("=" * len(banner))
+    print(banner)
+    print(
+        "  Every BASELINE_*.json timings_ms entry is still null, so the\n"
+        "  regression trend gates above all skipped. Run a real CI bench\n"
+        "  pass with --promote and commit the updated BASELINE files to\n"
+        "  arm them."
+    )
+    print("=" * len(banner))
+    # surface the same text as a GitHub Actions warning annotation so it
+    # shows on the run summary, not just in the step log
+    print(f"::warning file=.github/scripts/check_bench.py::{banner}")
 
 if failures:
     print("bench acceptance FAILED:")

@@ -118,6 +118,11 @@ SERVE OPTIONS:
   --addr A:P      bind address (default 127.0.0.1:8090; :0 = ephemeral)
   --prewarm       solve the full paper grid before accepting traffic,
                   so steady-state queries perform zero circuit solves
+  --auth-key KEY  shared secret (or the DEEPNVM_AUTH_KEY env var): when
+                  set, mutating POST routes require a valid
+                  X-Deepnvm-Auth HMAC tag (401 `unauthorized` otherwise)
+  --queue-cap N   accept-queue bound (default 4x jobs); over-cap
+                  connections are shed with 503 + Retry-After
   --jobs, --out, --memo-cap as above
 
 COORDINATE OPTIONS:
@@ -128,6 +133,9 @@ COORDINATE OPTIONS:
   --deadline-secs S  per-shard dispatch deadline (default 120)
   --status-addr A:P  serve GET /scheduler/status and /scheduler/metrics
                      (federated fleet metrics) here during the run
+  --auth-key KEY     sign every POST /shard/run with X-Deepnvm-Auth
+                     (or the DEEPNVM_AUTH_KEY env var; must match the
+                     workers' key)
   --jobs, --out, --cold as above (the merged memo persists to --out)
 
 LOADGEN OPTIONS:
@@ -140,6 +148,9 @@ LOADGEN OPTIONS:
                   pool (cache-hit path) and 1-F from a 114-key cold
                   tail of hybrid points, reporting per-class p50/p99
   --p99-ms MS     fail (exit 1) when overall p99 exceeds MS
+  --auth-key KEY  sign every POST with X-Deepnvm-Auth (or the
+                  DEEPNVM_AUTH_KEY env var), for soaking a hardened
+                  server
 
 VALIDATE OPTIONS:
   --dnns LIST     workloads to replay (default: AlexNet,SqueezeNet)
@@ -185,6 +196,11 @@ pub struct CliOptions {
     pub addr: String,
     /// Prewarm the full paper grid before `serve` accepts traffic.
     pub prewarm: bool,
+    /// Shared secret for serve / coordinate / loadgen (`--auth-key`;
+    /// `None` falls back to the `DEEPNVM_AUTH_KEY` env var).
+    pub auth_key: Option<String>,
+    /// Accept-queue bound for `serve` (`--queue-cap`; `None` = 4x jobs).
+    pub queue_cap: Option<usize>,
     /// Worker fleet for `coordinate` (`--workers`).
     pub workers: Vec<String>,
     /// SweepSpec JSON file for `coordinate` (`--spec`); None = build
@@ -245,6 +261,8 @@ impl Default for CliOptions {
             memo_cap: None,
             addr: "127.0.0.1:8090".into(),
             prewarm: false,
+            auth_key: None,
+            queue_cap: None,
             workers: vec![],
             spec_file: None,
             retries: 3,
@@ -367,6 +385,22 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
                 o.addr = value()?.clone();
             }
             "--prewarm" => o.prewarm = true,
+            "--auth-key" => {
+                let key = value()?.clone();
+                if key.is_empty() {
+                    bail!("--auth-key must not be empty");
+                }
+                o.auth_key = Some(key);
+            }
+            "--queue-cap" => {
+                let cap: usize = value()?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --queue-cap: {e}"))?;
+                if cap == 0 {
+                    bail!("--queue-cap must be at least 1");
+                }
+                o.queue_cap = Some(cap);
+            }
             "--workers" => {
                 o.workers = split_list(value()?)
                     .iter()
@@ -475,6 +509,16 @@ pub fn parse_args(args: &[String]) -> Result<CliOptions> {
         }
     }
     Ok(o)
+}
+
+/// The shared fleet secret: the explicit `--auth-key` flag, else the
+/// `DEEPNVM_AUTH_KEY` env var (the same fallback on serve, coordinate,
+/// and loadgen, so one exported variable keys a whole fleet).
+fn resolve_auth_key(o: &CliOptions) -> Option<String> {
+    o.auth_key
+        .clone()
+        .or_else(|| std::env::var("DEEPNVM_AUTH_KEY").ok())
+        .filter(|k| !k.is_empty())
 }
 
 fn scal_caps(quick: bool) -> Vec<u64> {
@@ -665,6 +709,7 @@ fn coordinate_cmd(o: &CliOptions, trace_written: &mut bool) -> Result<()> {
         deadline: std::time::Duration::from_secs(o.deadline_secs),
         jobs: o.jobs,
         status_addr: o.status_addr.clone(),
+        auth_key: resolve_auth_key(o),
     };
     let memo = crate::sweep::memo::global();
     let store = Store::new(&o.out);
@@ -797,6 +842,7 @@ fn loadgen_cmd(o: &CliOptions) -> Result<()> {
         optimize_weight,
         hot_frac: o.hot_frac,
         p99_ms: o.p99_ms,
+        auth_key: resolve_auth_key(o),
     };
     let report = crate::serve::loadgen::run(&cfg)?;
     println!("{}", report.render());
@@ -939,6 +985,8 @@ pub fn run_cli(args: &[String]) -> i32 {
                 prewarm: o.prewarm,
                 memo_cap: o.memo_cap,
                 out: o.out.clone(),
+                auth_key: resolve_auth_key(&o),
+                queue_cap: o.queue_cap,
             };
             match crate::serve::run(&cfg) {
                 Ok(()) => 0,
@@ -1062,10 +1110,35 @@ mod tests {
         assert_eq!(o.memo_cap, Some(500));
         assert_eq!(o.jobs, 3);
         assert_eq!(o.out, "/tmp/r");
+        assert!(o.auth_key.is_none() && o.queue_cap.is_none());
 
         assert!(parse_args(&sv(&["serve", "--memo-cap", "0"])).is_err());
         assert!(parse_args(&sv(&["serve", "--memo-cap", "x"])).is_err());
         assert!(parse_args(&sv(&["serve", "--addr"])).is_err());
+    }
+
+    #[test]
+    fn parses_hardening_options() {
+        let o = parse_args(&sv(&[
+            "serve", "--auth-key", "fleet-secret", "--queue-cap", "64",
+        ]))
+        .unwrap();
+        assert_eq!(o.auth_key.as_deref(), Some("fleet-secret"));
+        assert_eq!(o.queue_cap, Some(64));
+
+        // coordinate and loadgen take the same key flag
+        let o = parse_args(&sv(&[
+            "coordinate", "--workers", "h:1", "--auth-key", "k",
+        ]))
+        .unwrap();
+        assert_eq!(o.auth_key.as_deref(), Some("k"));
+        let o = parse_args(&sv(&["loadgen", "--auth-key", "k"])).unwrap();
+        assert_eq!(o.auth_key.as_deref(), Some("k"));
+
+        assert!(parse_args(&sv(&["serve", "--auth-key", ""])).is_err());
+        assert!(parse_args(&sv(&["serve", "--auth-key"])).is_err());
+        assert!(parse_args(&sv(&["serve", "--queue-cap", "0"])).is_err());
+        assert!(parse_args(&sv(&["serve", "--queue-cap", "x"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Shared-secret request authentication for the serve plane.
+//!
+//! The shard-exchange payload hash (`sweep::memo`) is a content
+//! address, not a MAC: anyone who can reach a worker can forge a
+//! hash-consistent document. This module closes that hole with a
+//! keyed signature over every mutating request: the sender computes
+//! `HMAC-SHA256(key, "METHOD\npath\nhex(SHA-256(body))")` and carries
+//! the lower-hex tag in the [`AUTH_HEADER`] request header; the server
+//! recomputes it and compares in constant time. The digest-of-body
+//! indirection keeps the canonical string small and printable whatever
+//! the body size (a full-grid memo export is ~1 MB).
+//!
+//! Everything here is std-only — the offline vendor set has no crypto
+//! crates — so SHA-256 (FIPS 180-4) and HMAC (RFC 2104) are
+//! implemented from scratch and pinned against the published test
+//! vectors below. The one non-obvious property worth stating: the
+//! comparison must not short-circuit on the first differing byte, or
+//! the tag becomes guessable one byte at a time from response timing.
+
+/// Request header carrying the hex HMAC tag.
+pub const AUTH_HEADER: &str = "X-Deepnvm-Auth";
+
+// ------------------------------------------------------------ SHA-256
+
+const H0: [u32; 8] = [
+    0x6a09_e667, 0xbb67_ae85, 0x3c6e_f372, 0xa54f_f53a, 0x510e_527f, 0x9b05_688c,
+    0x1f83_d9ab, 0x5be0_cd19,
+];
+
+#[rustfmt::skip]
+const K: [u32; 64] = [
+    0x428a_2f98, 0x7137_4491, 0xb5c0_fbcf, 0xe9b5_dba5, 0x3956_c25b, 0x59f1_11f1,
+    0x923f_82a4, 0xab1c_5ed5, 0xd807_aa98, 0x1283_5b01, 0x2431_85be, 0x550c_7dc3,
+    0x72be_5d74, 0x80de_b1fe, 0x9bdc_06a7, 0xc19b_f174, 0xe49b_69c1, 0xefbe_4786,
+    0x0fc1_9dc6, 0x240c_a1cc, 0x2de9_2c6f, 0x4a74_84aa, 0x5cb0_a9dc, 0x76f9_88da,
+    0x983e_5152, 0xa831_c66d, 0xb003_27c8, 0xbf59_7fc7, 0xc6e0_0bf3, 0xd5a7_9147,
+    0x06ca_6351, 0x1429_2967, 0x27b7_0a85, 0x2e1b_2138, 0x4d2c_6dfc, 0x5338_0d13,
+    0x650a_7354, 0x766a_0abb, 0x81c2_c92e, 0x9272_2c85, 0xa2bf_e8a1, 0xa81a_664b,
+    0xc24b_8b70, 0xc76c_51a3, 0xd192_e819, 0xd699_0624, 0xf40e_3585, 0x106a_a070,
+    0x19a4_c116, 0x1e37_6c08, 0x2748_774c, 0x34b0_bcb5, 0x391c_0cb3, 0x4ed8_aa4a,
+    0x5b9c_ca4f, 0x682e_6ff3, 0x748f_82ee, 0x78a5_636f, 0x84c8_7814, 0x8cc7_0208,
+    0x90be_fffa, 0xa450_6ceb, 0xbef9_a3f7, 0xc671_78f2,
+];
+
+fn compress(state: &mut [u32; 8], block: &[u8]) {
+    debug_assert_eq!(block.len(), 64);
+    let mut w = [0u32; 64];
+    for (i, word) in w.iter_mut().take(16).enumerate() {
+        *word = u32::from_be_bytes(block[i * 4..i * 4 + 4].try_into().expect("4-byte chunk"));
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[i - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = *state;
+    for (k, wi) in K.iter().zip(w.iter()) {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = h
+            .wrapping_add(s1)
+            .wrapping_add(ch)
+            .wrapping_add(*k)
+            .wrapping_add(*wi);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        h = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    for (s, v) in state.iter_mut().zip([a, b, c, d, e, f, g, h]) {
+        *s = s.wrapping_add(v);
+    }
+}
+
+/// SHA-256 digest of `data` (FIPS 180-4).
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut state = H0;
+    let mut blocks = data.chunks_exact(64);
+    for block in blocks.by_ref() {
+        compress(&mut state, block);
+    }
+    // Padding: 0x80, zeros to 56 mod 64, then the bit length big-endian.
+    let rem = blocks.remainder();
+    let mut tail = [0u8; 128];
+    tail[..rem.len()].copy_from_slice(rem);
+    tail[rem.len()] = 0x80;
+    let tail_len = if rem.len() < 56 { 64 } else { 128 };
+    let bits = (data.len() as u64).wrapping_mul(8);
+    tail[tail_len - 8..tail_len].copy_from_slice(&bits.to_be_bytes());
+    for block in tail[..tail_len].chunks_exact(64) {
+        compress(&mut state, block);
+    }
+    let mut out = [0u8; 32];
+    for (chunk, v) in out.chunks_exact_mut(4).zip(state) {
+        chunk.copy_from_slice(&v.to_be_bytes());
+    }
+    out
+}
+
+// --------------------------------------------------------------- HMAC
+
+const BLOCK: usize = 64;
+
+/// HMAC-SHA256 of `msg` under `key` (RFC 2104): keys longer than the
+/// 64-byte block are hashed first, shorter ones zero-padded.
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; BLOCK];
+    if key.len() > BLOCK {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut inner = Vec::with_capacity(BLOCK + msg.len());
+    inner.extend(k.iter().map(|b| b ^ 0x36));
+    inner.extend_from_slice(msg);
+    let inner_hash = sha256(&inner);
+    let mut outer = Vec::with_capacity(BLOCK + 32);
+    outer.extend(k.iter().map(|b| b ^ 0x5c));
+    outer.extend_from_slice(&inner_hash);
+    sha256(&outer)
+}
+
+/// Lower-hex rendering of a digest.
+pub fn hex(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push(char::from_digit((b >> 4) as u32, 16).expect("nibble"));
+        out.push(char::from_digit((b & 0xf) as u32, 16).expect("nibble"));
+    }
+    out
+}
+
+/// Constant-time byte equality: the accumulated OR visits every byte
+/// whatever the inputs, so a mismatch's position never shows up in the
+/// comparison's duration. Length is not secret (both sides are
+/// fixed-width hex tags), so a length mismatch may return early.
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+// ---------------------------------------------------- request signing
+
+/// The canonical string a tag commits to: method (upper-cased), path,
+/// and the hex SHA-256 of the body, newline-joined. Query strings are
+/// deliberately excluded — no mutating route reads them — and the body
+/// digest binds the payload without inflating the signed string.
+fn canonical(method: &str, path: &str, body: &[u8]) -> String {
+    format!("{}\n{}\n{}", method.to_ascii_uppercase(), path, hex(&sha256(body)))
+}
+
+/// Compute the [`AUTH_HEADER`] tag for a request.
+pub fn sign(key: &str, method: &str, path: &str, body: &[u8]) -> String {
+    hex(&hmac_sha256(key.as_bytes(), canonical(method, path, body).as_bytes()))
+}
+
+/// Verify a presented tag against the key, in constant time.
+pub fn verify(key: &str, method: &str, path: &str, body: &[u8], tag: &str) -> bool {
+    let expect = sign(key, method, path, body);
+    ct_eq(expect.as_bytes(), tag.trim().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // FIPS 180-4 / NIST CAVP vectors.
+    #[test]
+    fn sha256_matches_the_published_vectors() {
+        assert_eq!(
+            hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(&sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // two-block message (56 bytes forces the padding into a second block)
+        assert_eq!(
+            hex(&sha256(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq")),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // exactly one block of input: padding becomes its own block
+        assert_eq!(
+            hex(&sha256(&[0x61u8; 64])),
+            "ffe054fe7ae0cb6dc65c3af9b61d5209f439851db43d0ba5997337df154668eb"
+        );
+        assert_eq!(
+            hex(&sha256(&[0x61u8; 1_000_000])),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    // RFC 4231 HMAC-SHA-256 test cases 1, 2, and 6.
+    #[test]
+    fn hmac_sha256_matches_rfc_4231() {
+        assert_eq!(
+            hex(&hmac_sha256(&[0x0b; 20], b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        assert_eq!(
+            hex(&hmac_sha256(b"Jefe", b"what do ya want for nothing?")),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // a 131-byte key exercises the hash-the-key branch
+        assert_eq!(
+            hex(&hmac_sha256(
+                &[0xaa; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            )),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn constant_time_eq_and_tag_round_trip() {
+        assert!(ct_eq(b"same", b"same"));
+        assert!(!ct_eq(b"same", b"sane"));
+        assert!(!ct_eq(b"short", b"longer"));
+
+        let tag = sign("k3y", "POST", "/memo/merge", b"{\"a\": 1}");
+        assert_eq!(tag.len(), 64, "hex HMAC-SHA256 is 64 chars");
+        assert!(verify("k3y", "POST", "/memo/merge", b"{\"a\": 1}", &tag));
+        assert!(verify("k3y", "post", "/memo/merge", b"{\"a\": 1}", &tag), "method case-folds");
+        assert!(verify("k3y", "POST", "/memo/merge", b"{\"a\": 1}", &format!(" {tag} ")));
+
+        // every component of the canonical string is load-bearing
+        assert!(!verify("k3y", "POST", "/memo/merge", b"{\"a\": 2}", &tag));
+        assert!(!verify("k3y", "POST", "/shard/run", b"{\"a\": 1}", &tag));
+        assert!(!verify("k3y", "PUT", "/memo/merge", b"{\"a\": 1}", &tag));
+        assert!(!verify("other", "POST", "/memo/merge", b"{\"a\": 1}", &tag));
+        let mut flipped = tag.clone();
+        let last = flipped.pop().unwrap();
+        flipped.push(if last == '0' { '1' } else { '0' });
+        assert!(!verify("k3y", "POST", "/memo/merge", b"{\"a\": 1}", &flipped));
+        assert!(!verify("k3y", "POST", "/memo/merge", b"{\"a\": 1}", ""));
+    }
+}

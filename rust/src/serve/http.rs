@@ -40,11 +40,24 @@ const IO_TIMEOUT: Duration = Duration::from_secs(30);
 /// Cap on requests served over one keep-alive connection, so a single
 /// chatty client cannot hold a pool worker forever.
 pub const MAX_KEEPALIVE_REQUESTS: u32 = 1024;
+/// Default accept-queue bound per pool worker: with `jobs` workers the
+/// server admits up to `jobs * DEFAULT_QUEUE_CAP_PER_JOB` queued
+/// connections before shedding (override with `--queue-cap`).
+pub const DEFAULT_QUEUE_CAP_PER_JOB: usize = 4;
+/// `Retry-After` seconds advertised on a shed connection. Queued work
+/// drains in milliseconds once a worker frees up, so the hint is short;
+/// clients layer jittered exponential backoff on top of it.
+pub const RETRY_AFTER_SECS: u64 = 1;
 
 // Accepted-connection count and queue depth across every in-process
 // server (the production binary runs one), feeding `GET /metrics`.
 static CONNECTIONS: LazyCounter = LazyCounter::new("deepnvm_http_connections_total");
 static QUEUE_DEPTH: LazyGauge = LazyGauge::new("deepnvm_http_queue_depth");
+// Load-shedding telemetry: connections refused at the admission gate,
+// and the deepest the accept queue has ever been (high-water marks are
+// monotone, so a Counter with `set_max` fits).
+static SHED: LazyCounter = LazyCounter::new("deepnvm_http_shed_total");
+static QUEUE_HIGHWATER: LazyCounter = LazyCounter::new("deepnvm_http_queue_highwater");
 
 /// Typed parse error for an over-limit body, so the connection
 /// handler can answer 413 instead of a generic 400.
@@ -124,6 +137,11 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers beyond the fixed block
+    /// ([`Response::write_to_with`] stamps content type/length, the API
+    /// version, and connection intent itself) — the shed path rides
+    /// `Retry-After` here.
+    pub extra_headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -132,6 +150,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: j.to_pretty().into_bytes(),
+            extra_headers: Vec::new(),
         }
     }
 
@@ -140,7 +159,14 @@ impl Response {
             status,
             content_type: "text/plain; charset=utf-8",
             body: body.as_bytes().to_vec(),
+            extra_headers: Vec::new(),
         }
+    }
+
+    /// Attach one extra response header.
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.extra_headers.push((name, value));
+        self
     }
 
     /// A JSON error body in the v1 typed envelope with the `kind`
@@ -178,12 +204,19 @@ impl Response {
         write!(
             w,
             "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
-             Deepnvm-Api-Version: {}\r\nConnection: {conn}\r\n\r\n",
+             Deepnvm-Api-Version: {}\r\n{}Connection: {conn}\r\n\r\n",
             self.status,
             status_text(self.status),
             self.content_type,
             self.body.len(),
-            crate::sweep::memo::MODEL_VERSION
+            crate::sweep::memo::MODEL_VERSION,
+            header_lines(
+                &self
+                    .extra_headers
+                    .iter()
+                    .map(|(n, v)| (*n, v.as_str()))
+                    .collect::<Vec<_>>()
+            ),
         )?;
         w.write_all(&self.body)
     }
@@ -195,12 +228,14 @@ impl Response {
 pub fn default_error_kind(status: u16) -> &'static str {
     match status {
         400 => "bad_request",
+        401 => "unauthorized",
         404 => "not_found",
         405 => "method_not_allowed",
         409 => "conflict",
         413 => "payload_too_large",
         422 => "invalid_request",
         500 => "internal",
+        503 => "overloaded",
         _ => "error",
     }
 }
@@ -209,12 +244,14 @@ fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
+        401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
         413 => "Payload Too Large",
         422 => "Unprocessable Entity",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
@@ -285,13 +322,22 @@ fn parse_head<R: BufRead>(reader: &mut R) -> Result<(Request, usize)> {
         headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
     }
 
-    let content_length = headers
-        .iter()
-        .find(|(n, _)| n == "content-length")
-        .map(|(_, v)| v.parse::<usize>())
-        .transpose()
-        .context("bad content-length")?
-        .unwrap_or(0);
+    // All Content-Length copies must agree: honoring the first of two
+    // differing values is exactly the framing ambiguity request
+    // smuggling exploits, so a conflict is a hard 400.
+    let mut content_length: Option<usize> = None;
+    for (n, v) in &headers {
+        if n == "content-length" {
+            let parsed = v.parse::<usize>().context("bad content-length")?;
+            match content_length {
+                Some(prev) if prev != parsed => {
+                    bail!("conflicting content-length headers ({prev} vs {parsed})")
+                }
+                _ => content_length = Some(parsed),
+            }
+        }
+    }
+    let content_length = content_length.unwrap_or(0);
     if content_length > MAX_BODY_BYTES {
         return Err(PayloadTooLarge(content_length).into());
     }
@@ -436,15 +482,23 @@ pub struct Client {
     addr: String,
     timeout: Duration,
     conn: Option<BufReader<TcpStream>>,
+    retry_after: Option<u64>,
 }
 
 impl Client {
     pub fn new(addr: &str, timeout: Duration) -> Client {
-        Client { addr: addr.to_string(), timeout, conn: None }
+        Client { addr: addr.to_string(), timeout, conn: None, retry_after: None }
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// `Retry-After` seconds from the most recent response, if the
+    /// server sent the header (a shed 503 always does). Callers doing
+    /// their own retry loop feed this into [`backoff_delay`].
+    pub fn last_retry_after(&self) -> Option<Duration> {
+        self.retry_after.map(Duration::from_secs)
     }
 
     fn connect(&self) -> Result<BufReader<TcpStream>> {
@@ -523,20 +577,32 @@ impl Client {
             .and_then(|()| stream.write_all(body.as_bytes()))
             .and_then(|()| stream.flush())
             .with_context(|| format!("cannot send request to {}", self.addr))?;
-        let (status, close, text) =
+        let resp =
             read_response(reader).with_context(|| format!("bad response from {}", self.addr))?;
-        if close {
+        if resp.close {
             self.conn = None;
         }
-        Ok((status, text))
+        self.retry_after = resp.retry_after;
+        Ok((resp.status, resp.body))
     }
+}
+
+/// One framed response as [`read_response`] parses it off the wire.
+struct FramedResponse {
+    status: u16,
+    /// The peer announced `Connection: close` (possibly inside a token
+    /// list), so the pooled connection must not be reused.
+    close: bool,
+    /// `Retry-After` seconds, when the peer sent the header — the
+    /// backoff hint a shed (503) answer carries.
+    retry_after: Option<u64>,
+    body: String,
 }
 
 /// Read one framed response — status line, headers, exactly
 /// `Content-Length` body bytes — without consuming past it, so a
-/// keep-alive connection stays aligned for the next exchange. Returns
-/// `(status, peer_will_close, body)`.
-fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(u16, bool, String)> {
+/// keep-alive connection stays aligned for the next exchange.
+fn read_response(reader: &mut BufReader<TcpStream>) -> Result<FramedResponse> {
     let mut budget = MAX_HEADER_BYTES;
     let mut line = String::new();
     let n = read_limited_line(reader, &mut line, budget)?;
@@ -551,6 +617,7 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(u16, bool, String
         .ok_or_else(|| anyhow!("malformed status line '{}'", line.trim()))?;
     let mut content_length: Option<usize> = None;
     let mut close = false;
+    let mut retry_after = None;
     loop {
         let mut h = String::new();
         let n = read_limited_line(reader, &mut h, budget)?;
@@ -567,8 +634,10 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(u16, bool, String
             let value = value.trim();
             if name == "content-length" {
                 content_length = Some(value.parse().context("bad content-length in response")?);
-            } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+            } else if name == "connection" && connection_tokens(value).0 {
                 close = true;
+            } else if name == "retry-after" {
+                retry_after = value.parse::<u64>().ok();
             }
         }
     }
@@ -578,7 +647,35 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(u16, bool, String
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body).context("connection closed inside the response body")?;
-    Ok((status, close, String::from_utf8_lossy(&body).into_owned()))
+    Ok(FramedResponse {
+        status,
+        close,
+        retry_after,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Jittered exponential backoff delay for a retry `attempt` (0-based):
+/// 100 ms doubling per attempt, capped at 5 s, plus up to 50% additive
+/// jitter so a fleet of shed clients does not re-arrive in lockstep. A
+/// server-provided `Retry-After` floors the result — the server knows
+/// its drain rate better than the client does.
+pub fn backoff_delay(attempt: u32, retry_after: Option<Duration>) -> Duration {
+    const BASE_MS: u64 = 100;
+    const CAP_MS: u64 = 5_000;
+    let exp = BASE_MS.saturating_mul(1u64 << attempt.min(10)).min(CAP_MS);
+    // Cheap decorrelation without an RNG dependency: sub-second clock
+    // nanoseconds are plenty uniform for spreading a retry convoy.
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| u64::from(d.subsec_nanos()))
+        .unwrap_or(0);
+    let jitter = nanos % (exp / 2 + 1);
+    let delay = Duration::from_millis(exp + jitter);
+    match retry_after {
+        Some(floor) => delay.max(floor),
+        None => delay,
+    }
 }
 
 type Handler = dyn Fn(&Request) -> Response + Send + Sync;
@@ -602,10 +699,27 @@ pub struct Server {
 
 impl Server {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
-    /// start serving `handler` on `jobs` worker threads.
+    /// start serving `handler` on `jobs` worker threads, with the
+    /// accept queue bounded at the default cap
+    /// (`jobs * `[`DEFAULT_QUEUE_CAP_PER_JOB`]).
     pub fn bind(
         addr: &str,
         jobs: usize,
+        handler: impl Fn(&Request) -> Response + Send + Sync + 'static,
+    ) -> Result<Server> {
+        Server::bind_with(addr, jobs, None, handler)
+    }
+
+    /// [`Server::bind`] with an explicit accept-queue cap. Connections
+    /// arriving while `queue_cap` connections already wait are shed
+    /// immediately with `503` + `Retry-After` instead of queueing
+    /// without bound — an overloaded server stays answerable (the
+    /// workers keep draining) rather than accumulating every socket a
+    /// flood can open.
+    pub fn bind_with(
+        addr: &str,
+        jobs: usize,
+        queue_cap: Option<usize>,
         handler: impl Fn(&Request) -> Response + Send + Sync + 'static,
     ) -> Result<Server> {
         let listener =
@@ -615,6 +729,7 @@ impl Server {
         let shared = Arc::new(Shared::default());
 
         let jobs = jobs.max(1);
+        let queue_cap = queue_cap.unwrap_or(jobs * DEFAULT_QUEUE_CAP_PER_JOB).max(1);
         let mut workers = Vec::with_capacity(jobs);
         for _ in 0..jobs {
             let shared = Arc::clone(&shared);
@@ -623,7 +738,7 @@ impl Server {
         }
         let accept = {
             let shared = Arc::clone(&shared);
-            std::thread::spawn(move || accept_loop(&listener, &shared))
+            std::thread::spawn(move || accept_loop(&listener, &shared, queue_cap))
         };
         Ok(Server { addr: local, shared, accept: Some(accept), workers })
     }
@@ -680,7 +795,7 @@ impl Drop for Server {
     }
 }
 
-fn accept_loop(listener: &TcpListener, shared: &Shared) {
+fn accept_loop(listener: &TcpListener, shared: &Shared, queue_cap: usize) {
     for stream in listener.incoming() {
         if shared.stop.load(Ordering::SeqCst) {
             break;
@@ -689,12 +804,33 @@ fn accept_loop(listener: &TcpListener, shared: &Shared) {
             shared.conns.fetch_add(1, Ordering::Relaxed);
             CONNECTIONS.inc();
             let mut q = shared.queue.lock().unwrap();
+            if q.len() >= queue_cap {
+                drop(q);
+                shed(s);
+                continue;
+            }
             q.push_back(s);
+            QUEUE_HIGHWATER.handle().set_max(q.len() as u64);
             QUEUE_DEPTH.add(1);
             drop(q);
             shared.ready.notify_one();
         }
     }
+}
+
+/// Refuse one over-cap connection: answer `503` with `Retry-After` and
+/// the typed `overloaded` envelope, then close. Runs on the accept
+/// thread, so the write timeout is short — the response is ~150 bytes
+/// and fits any socket send buffer; a peer that cannot take even that
+/// is simply dropped.
+fn shed(stream: TcpStream) {
+    SHED.inc();
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let resp = Response::error(503, "accept queue full; back off and retry")
+        .with_header("Retry-After", RETRY_AFTER_SECS.to_string());
+    let mut w = &stream;
+    let _ = resp.write_to(&mut w);
+    let _ = stream.shutdown(Shutdown::Both);
 }
 
 fn worker_loop(shared: &Shared, handler: &Arc<Handler>) {
@@ -719,8 +855,32 @@ fn worker_loop(shared: &Shared, handler: &Arc<Handler>) {
     }
 }
 
+/// Interpret a `Connection` header value as the comma-separated token
+/// list RFC 9110 defines, returning `(has_close, has_keep_alive)`.
+/// Exact-matching the whole value would misread real traffic two ways:
+/// `keep-alive, X-Custom` (a client naming a hop-by-hop header) would
+/// silently downgrade to close, and `close, X-Custom` from a proxy
+/// would be missed entirely, desyncing the connection framing.
+fn connection_tokens(value: &str) -> (bool, bool) {
+    let mut close = false;
+    let mut keep_alive = false;
+    for token in value.split(',') {
+        let token = token.trim();
+        if token.eq_ignore_ascii_case("close") {
+            close = true;
+        } else if token.eq_ignore_ascii_case("keep-alive") {
+            keep_alive = true;
+        }
+    }
+    (close, keep_alive)
+}
+
 fn wants_keep_alive(req: &Request) -> bool {
-    req.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("keep-alive"))
+    // `close` wins over `keep-alive` if a confused peer sends both.
+    req.header("connection").is_some_and(|v| {
+        let (close, keep_alive) = connection_tokens(v);
+        keep_alive && !close
+    })
 }
 
 fn handle_connection(stream: TcpStream, handler: &Arc<Handler>) {
@@ -840,6 +1000,17 @@ mod tests {
         assert!(s.contains("\"code\": 404"), "{s}");
         assert!(s.contains("\"kind\": \"not_found\""), "{s}");
         assert!(s.contains("\"message\": \"nope\""), "{s}");
+
+        // extra headers land between the fixed block and Connection
+        let mut out = Vec::new();
+        Response::error(503, "busy")
+            .with_header("Retry-After", "1".to_string())
+            .write_to(&mut out)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 1\r\n"), "{s}");
+        assert!(s.contains("\"kind\": \"overloaded\""), "{s}");
     }
 
     #[test]
@@ -957,12 +1128,176 @@ mod tests {
         for i in 0..3 {
             let req = format!("GET /r{i} HTTP/1.1\r\nConnection: keep-alive\r\n\r\n");
             writer.write_all(req.as_bytes()).unwrap();
-            let (status, close, body) = read_response(&mut reader).unwrap();
-            assert_eq!(status, 200);
-            assert!(!close, "server advertises keep-alive back");
-            assert_eq!(body, format!("echo /r{i}"));
+            let r = read_response(&mut reader).unwrap();
+            assert_eq!(r.status, 200);
+            assert!(!r.close, "server advertises keep-alive back");
+            assert_eq!(r.body, format!("echo /r{i}"));
         }
         assert_eq!(server.connections_served(), 1, "three requests, one connection");
+    }
+
+    #[test]
+    fn connection_header_token_lists_negotiate_keep_alive() {
+        let server = Server::bind("127.0.0.1:0", 1, |req| {
+            Response::text(200, &format!("echo {}", req.path))
+        })
+        .unwrap();
+        let s = TcpStream::connect(server.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut writer = s.try_clone().unwrap();
+        let mut reader = BufReader::new(s);
+        // a token list naming keep-alive plus a hop-by-hop header must
+        // NOT silently downgrade to close
+        for i in 0..2 {
+            let req =
+                format!("GET /r{i} HTTP/1.1\r\nConnection: keep-alive, X-Custom\r\n\r\n");
+            writer.write_all(req.as_bytes()).unwrap();
+            let r = read_response(&mut reader).unwrap();
+            assert_eq!(r.status, 200);
+            assert!(!r.close, "keep-alive inside a token list must hold");
+            assert_eq!(r.body, format!("echo /r{i}"));
+        }
+        // close wins over keep-alive whatever the order
+        writer
+            .write_all(b"GET /last HTTP/1.1\r\nConnection: keep-alive, close\r\n\r\n")
+            .unwrap();
+        let r = read_response(&mut reader).unwrap();
+        assert_eq!(r.status, 200);
+        assert!(r.close, "close anywhere in the list wins");
+        assert_eq!(
+            server.connections_served(),
+            1,
+            "all three exchanges rode one connection"
+        );
+    }
+
+    #[test]
+    fn client_detects_close_inside_a_token_list() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let responder = std::thread::spawn(move || {
+            // A proxy-style peer: answers, announces close inside a
+            // token list, and hangs up. Missing the token would leave a
+            // dead socket pooled.
+            for _ in 0..2 {
+                let (mut s, _) = listener.accept().unwrap();
+                let mut buf = [0u8; 512];
+                let _ = s.read(&mut buf);
+                let _ = s.write_all(
+                    b"HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\n\
+                      Content-Length: 2\r\nConnection: close, X-Hop\r\n\r\nok",
+                );
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        });
+        let mut c = Client::new(&addr, Duration::from_secs(5));
+        assert_eq!(c.call("GET", "/", "").unwrap(), (200, "ok".to_string()));
+        assert!(c.conn.is_none(), "token-list close must evict the pooled connection");
+        assert_eq!(c.call("GET", "/", "").unwrap(), (200, "ok".to_string()));
+        responder.join().unwrap();
+    }
+
+    #[test]
+    fn conflicting_duplicate_content_lengths_are_rejected() {
+        // agreeing duplicates parse fine
+        let ok = parse("POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nab")
+            .unwrap();
+        assert_eq!(ok.body_str().unwrap(), "ab");
+        // differing duplicates are the request-smuggling shape: hard error
+        assert!(parse(
+            "POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 5\r\n\r\nhello"
+        )
+        .is_err());
+        // and over a live socket that surfaces as a 400
+        let server = Server::bind("127.0.0.1:0", 1, |_req| Response::text(200, "nope")).unwrap();
+        let mut s = TcpStream::connect(server.local_addr()).unwrap();
+        s.write_all(
+            b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 5\r\n\r\nhello",
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 400"), "{buf}");
+    }
+
+    #[test]
+    fn over_cap_connections_are_shed_and_the_server_stays_live() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let handler_gate = Arc::clone(&gate);
+        let shed_before = SHED.value();
+        let server = Server::bind_with("127.0.0.1:0", 1, Some(2), move |_req| {
+            let (lock, cv) = &*handler_gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            Response::text(200, "served")
+        })
+        .unwrap();
+        let addr = server.local_addr();
+
+        // Flood: the worker blocks on the gate, so at most 1 in-flight
+        // + 2 queued connections can be admitted; within a few attempts
+        // one MUST be shed with an immediate 503 (admitted connections
+        // stay silent until the gate opens).
+        let mut admitted = Vec::new();
+        let mut shed_response = None;
+        for _ in 0..20 {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+            s.write_all(b"GET / HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            let mut buf = String::new();
+            match s.read_to_string(&mut buf) {
+                Ok(_) if buf.starts_with("HTTP/1.1 503") => {
+                    shed_response = Some(buf);
+                    break;
+                }
+                _ => admitted.push(s),
+            }
+        }
+        let resp = shed_response.expect("the flood must hit the admission gate");
+        assert!(resp.to_ascii_lowercase().contains("retry-after: 1"), "{resp}");
+        assert!(resp.contains("\"kind\": \"overloaded\""), "{resp}");
+        assert!(resp.contains("\"code\": 503"), "{resp}");
+        assert!(SHED.value() > shed_before);
+        assert!(
+            admitted.len() <= 3,
+            "1 in-flight + queue cap 2, but {} connections were admitted",
+            admitted.len()
+        );
+
+        // open the gate: every admitted connection drains with a 200 —
+        // shedding never cancels accepted work
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for mut s in admitted {
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+        }
+        // and the server is live for fresh traffic after the flood
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"GET /after HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+    }
+
+    #[test]
+    fn backoff_delay_grows_and_honors_retry_after() {
+        let d0 = backoff_delay(0, None);
+        assert!(d0 >= Duration::from_millis(100) && d0 <= Duration::from_millis(151), "{d0:?}");
+        let d3 = backoff_delay(3, None);
+        assert!(d3 >= Duration::from_millis(800) && d3 <= Duration::from_millis(1201), "{d3:?}");
+        // the exponent caps: even absurd attempts stay bounded
+        assert!(backoff_delay(40, None) <= Duration::from_millis(7_501));
+        // a server hint floors the delay
+        assert!(backoff_delay(0, Some(Duration::from_secs(2))) >= Duration::from_secs(2));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::obs::{Histogram, LazyCounter, LazyHistogram};
 
+use super::auth;
 use super::http;
 
 /// Per-request socket deadline. Generous: the gate is on quantiles,
@@ -74,6 +75,10 @@ pub struct LoadgenConfig {
     pub hot_frac: Option<f64>,
     /// Overall p99 gate in milliseconds; `None` disables gating.
     pub p99_ms: Option<f64>,
+    /// Shared secret (`--auth-key` / `DEEPNVM_AUTH_KEY`): when set,
+    /// every POST is signed with an `X-Deepnvm-Auth` tag so the soak
+    /// can target a hardened server.
+    pub auth_key: Option<String>,
 }
 
 impl Default for LoadgenConfig {
@@ -87,6 +92,7 @@ impl Default for LoadgenConfig {
             optimize_weight: 0,
             hot_frac: None,
             p99_ms: None,
+            auth_key: None,
         }
     }
 }
@@ -295,6 +301,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 // Offset each thread's rotation so the fleet of
                 // threads interleaves kinds instead of phase-locking.
                 let mut i = t as u64;
+                // Consecutive 503 sheds on this connection: drives the
+                // exponential backoff curve, reset by any success.
+                let mut shed_streak = 0u32;
                 while Instant::now() < deadline {
                     // Position within one mix cycle: solves first,
                     // then sweeps, then optimizes.
@@ -321,13 +330,40 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                         ("/optimize", b, &OPTIMIZE_NS)
                     };
                     let t0 = Instant::now();
-                    match client.call("POST", path, body) {
+                    let reply = match &cfg.auth_key {
+                        Some(key) => {
+                            let tag = auth::sign(key, "POST", path, body.as_bytes());
+                            client.call_with(
+                                "POST",
+                                path,
+                                &[(auth::AUTH_HEADER, tag.as_str())],
+                                body,
+                            )
+                        }
+                        None => client.call("POST", path, body),
+                    };
+                    match reply {
                         Ok((200, _)) => {
+                            shed_streak = 0;
                             let elapsed = t0.elapsed();
                             hist.record_duration(elapsed);
                             if let Some(c) = class {
                                 c.record_duration(elapsed);
                             }
+                        }
+                        Ok((503, _)) => {
+                            // The server shed us: count the error, then
+                            // back off (honoring Retry-After) instead
+                            // of contributing to the flood.
+                            ERRORS.inc();
+                            let wait = http::backoff_delay(
+                                shed_streak,
+                                client.last_retry_after(),
+                            );
+                            shed_streak = shed_streak.saturating_add(1);
+                            std::thread::sleep(
+                                wait.min(deadline.saturating_duration_since(Instant::now())),
+                            );
                         }
                         Ok(_) | Err(_) => ERRORS.inc(),
                     }

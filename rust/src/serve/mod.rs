@@ -15,6 +15,7 @@
 //! Dependency-free by construction: `std::net` + the in-tree
 //! `util::json`, matching the offline vendor set.
 
+pub mod auth;
 pub mod http;
 pub mod loadgen;
 pub mod routes;
@@ -52,6 +53,13 @@ pub struct ServeConfig {
     /// Results directory: the memo warms from and persists to
     /// `<out>/sweep_memo.json` there.
     pub out: String,
+    /// Shared secret (`--auth-key` / `DEEPNVM_AUTH_KEY`): when set,
+    /// mutating POST routes require a valid `X-Deepnvm-Auth` tag.
+    pub auth_key: Option<String>,
+    /// Accept-queue bound (`--queue-cap`); `None` = the default
+    /// `jobs * `[`http::DEFAULT_QUEUE_CAP_PER_JOB`]. Over-cap
+    /// connections are shed with `503` + `Retry-After`.
+    pub queue_cap: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +70,8 @@ impl Default for ServeConfig {
             prewarm: false,
             memo_cap: None,
             out: "results".into(),
+            auth_key: None,
+            queue_cap: None,
         }
     }
 }
@@ -108,8 +118,8 @@ pub fn start(cfg: &ServeConfig, memo: &'static Memo) -> Result<Server> {
         }
     }
 
-    let ctx = Arc::new(ServerCtx::new(memo, jobs));
-    Server::bind(&cfg.addr, jobs, move |req| routes::handle(&ctx, req))
+    let ctx = Arc::new(ServerCtx::new(memo, jobs).with_auth_key(cfg.auth_key.clone()));
+    Server::bind_with(&cfg.addr, jobs, cfg.queue_cap, move |req| routes::handle(&ctx, req))
 }
 
 /// Foreground CLI mode: serve the process-wide memo until killed.
@@ -121,6 +131,9 @@ pub fn run(cfg: &ServeConfig) -> Result<()> {
          /memo/merge, /shard/run)",
         server.local_addr()
     );
+    if cfg.auth_key.is_some() {
+        println!("deepnvm serve: authentication enabled (mutating POSTs require X-Deepnvm-Auth)");
+    }
     server.join();
     Ok(())
 }

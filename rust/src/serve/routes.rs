@@ -44,8 +44,15 @@ use crate::sweep::spec::{
 use crate::sweep::{self, memo, GridPoint, Memo, SweepSpec, WorkloadPoint};
 use crate::util::json::Json;
 
+use super::auth;
 use super::http::{Request, Response};
 use super::shard;
+
+use crate::obs::LazyCounter;
+
+// Requests refused at the authentication gate (fleet-visible: a spike
+// means a misconfigured peer or an active probe).
+static AUTH_REJECTS: LazyCounter = LazyCounter::new("deepnvm_http_auth_rejects_total");
 
 /// One row of the API reference. Dispatch's 405 matrix and the
 /// generated `GET /` table both derive from [`ROUTES`], so a new route
@@ -147,6 +154,10 @@ pub struct ServerCtx {
     /// The one request counter — `healthz`, `/metrics` and
     /// [`ServerCtx::request_count`] all read this same cell.
     requests: Arc<Counter>,
+    /// Shared secret for [`auth`] verification. `None` (the default)
+    /// leaves the server open — the pre-hardening behavior; set, every
+    /// mutating POST must carry a valid `X-Deepnvm-Auth` tag.
+    auth_key: Option<String>,
 }
 
 impl ServerCtx {
@@ -159,7 +170,13 @@ impl ServerCtx {
     /// instrumentation elsewhere in the process.
     pub fn with_registry(memo: &'static Memo, jobs: usize, metrics: &'static Registry) -> Self {
         let requests = metrics.counter("deepnvm_http_requests_total");
-        ServerCtx { memo, jobs, metrics, requests }
+        ServerCtx { memo, jobs, metrics, requests, auth_key: None }
+    }
+
+    /// Require signed mutating requests (`--auth-key` plumbs here).
+    pub fn with_auth_key(mut self, key: Option<String>) -> Self {
+        self.auth_key = key;
+        self
     }
 
     /// The resident cache this server answers from.
@@ -209,7 +226,41 @@ pub fn handle(ctx: &ServerCtx, req: &Request) -> Response {
     resp
 }
 
+/// The routes that mutate resident state or start heavy work — the
+/// surface the authentication gate covers when a key is configured.
+/// Read-only probes (`/healthz`, `/metrics`, `/memo/export`, …) stay
+/// open so unauthenticated health checks and scrapers keep working.
+const PROTECTED_ROUTES: [&str; 6] =
+    ["/memo/merge", "/shard/run", "/solve", "/sweep", "/optimize", "/validate"];
+
+/// Enforce the shared-secret signature on protected routes. Returns
+/// the 401 to answer with, or `None` to let dispatch proceed. The gate
+/// runs before any handler touches the body, so a rejected
+/// `/memo/merge` has merged exactly zero entries.
+fn check_auth(ctx: &ServerCtx, req: &Request) -> Option<Response> {
+    let key = ctx.auth_key.as_deref()?;
+    if req.method != "POST" || !PROTECTED_ROUTES.contains(&req.path.as_str()) {
+        return None;
+    }
+    let valid = req
+        .header(auth::AUTH_HEADER)
+        .is_some_and(|tag| auth::verify(key, &req.method, &req.path, &req.body, tag));
+    if valid {
+        None
+    } else {
+        AUTH_REJECTS.inc();
+        Some(Response::error_kind(
+            401,
+            "unauthorized",
+            &format!("missing or invalid {} signature", auth::AUTH_HEADER),
+        ))
+    }
+}
+
 fn dispatch(ctx: &ServerCtx, req: &Request) -> Response {
+    if let Some(reject) = check_auth(ctx, req) {
+        return reject;
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/") => route_index(),
         ("GET", "/healthz") => healthz(ctx),
@@ -265,6 +316,15 @@ fn route_index() -> Response {
     j.set(
         "version_header",
         Json::Str("every response carries Deepnvm-Api-Version".into()),
+    );
+    j.set(
+        "auth",
+        Json::Str(
+            "with --auth-key set, mutating POST routes require an X-Deepnvm-Auth tag: \
+             hex HMAC-SHA256(key, \"METHOD\\npath\\nhex(sha256(body))\"); \
+             failures are 401 kind=unauthorized"
+                .into(),
+        ),
     );
     let rows = ROUTES
         .iter()
@@ -379,6 +439,7 @@ fn metrics_text(ctx: &ServerCtx) -> Response {
         status: 200,
         content_type: "text/plain; version=0.0.4; charset=utf-8",
         body: ctx.metrics.prometheus_text().into_bytes(),
+        extra_headers: Vec::new(),
     }
 }
 
@@ -711,6 +772,62 @@ mod tests {
             assert!(row.get("request").unwrap().as_str().is_some());
             assert!(row.get("response").unwrap().as_str().is_some());
         }
+    }
+
+    fn signed_post(key: &str, path: &str, body: &str) -> Request {
+        let mut r = post(path, body);
+        // parse_request lowercases stored header names
+        r.headers.push((
+            auth::AUTH_HEADER.to_ascii_lowercase(),
+            auth::sign(key, "POST", path, body.as_bytes()),
+        ));
+        r
+    }
+
+    #[test]
+    fn auth_gate_rejects_unsigned_and_tampered_mutations() {
+        let c = ctx().with_auth_key(Some("fleet-secret".into()));
+        let kind_of = |r: &Response| {
+            body_json(r).get("error").unwrap().get("kind").unwrap().as_str().unwrap().to_string()
+        };
+
+        // unsigned mutating POSTs: 401 unauthorized, and /memo/merge
+        // merges exactly zero entries
+        for path in ["/solve", "/sweep", "/optimize", "/validate", "/shard/run", "/memo/merge"] {
+            let r = handle(&c, &post(path, r#"{"tech": "stt", "capacity_mb": 1}"#));
+            assert_eq!((r.status, kind_of(&r).as_str()), (401, "unauthorized"), "{path}");
+        }
+        assert_eq!(c.memo().circuit_len() + c.memo().point_len(), 0, "nothing ran");
+
+        // a correctly signed request is served
+        let body = r#"{"tech": "stt", "capacity_mb": 1}"#;
+        let r = handle(&c, &signed_post("fleet-secret", "/solve", body));
+        assert_eq!(r.status, 200, "{:?}", String::from_utf8_lossy(&r.body));
+
+        // a tag signed over a different body (tampered in flight) fails
+        let mut r = post("/solve", body);
+        r.headers.push((
+            auth::AUTH_HEADER.to_ascii_lowercase(),
+            auth::sign("fleet-secret", "POST", "/solve", b"{\"tech\": \"sot\"}"),
+        ));
+        assert_eq!(handle(&c, &r).status, 401);
+        // ...as does a tag under the wrong key
+        assert_eq!(handle(&c, &signed_post("wrong-key", "/solve", body)).status, 401);
+
+        // read routes stay open: probes and scrapers need no key
+        assert_eq!(handle(&c, &get("/healthz")).status, 200);
+        assert_eq!(handle(&c, &get("/metrics")).status, 200);
+        assert_eq!(handle(&c, &get("/memo/export")).status, 200);
+        // and wrong-method/unknown-path precedence is untouched
+        assert_eq!(handle(&c, &get("/solve")).status, 405);
+        assert_eq!(handle(&c, &get("/nope")).status, 404);
+    }
+
+    #[test]
+    fn no_auth_key_means_the_open_pre_hardening_behavior() {
+        let c = ctx();
+        let r = handle(&c, &post("/solve", r#"{"tech": "stt", "capacity_mb": 1}"#));
+        assert_eq!(r.status, 200);
     }
 
     #[test]

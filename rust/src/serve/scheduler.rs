@@ -50,6 +50,7 @@ use crate::sweep::spec::spec_to_json;
 use crate::sweep::{self, Memo, SweepSpec};
 use crate::util::json::{self, Json};
 
+use super::auth;
 use super::http::{self, Response, Server};
 use super::shard::split_caps;
 
@@ -65,6 +66,13 @@ const PROBE_TIMEOUT: Duration = Duration::from_secs(3);
 /// Idle re-check interval for worker threads waiting on the queue (a
 /// backstop for missed wakeups; completion is condvar-notified).
 const POLL: Duration = Duration::from_millis(50);
+
+/// How many times one dispatch re-sends after a `503` shed before the
+/// failure surfaces to the reassignment path. Each wait is a jittered
+/// exponential backoff ([`http::backoff_delay`]) floored by the
+/// worker's `Retry-After`, so a briefly saturated worker drains
+/// instead of burning the shard's retry budget.
+const SHED_RETRIES: u32 = 4;
 
 /// How many idle polls a worker waits before re-taking a shard it
 /// already failed itself. The wait gives a healthy peer a window to
@@ -102,6 +110,10 @@ pub struct ScheduleConfig {
     /// Bind a status server here (`GET /scheduler/status`); `None`
     /// disables it.
     pub status_addr: Option<String>,
+    /// Shared secret for an authenticated fleet (`--auth-key` /
+    /// `DEEPNVM_AUTH_KEY`): when set, every `POST /shard/run` carries
+    /// an `X-Deepnvm-Auth` tag. Must match the workers' key.
+    pub auth_key: Option<String>,
 }
 
 impl Default for ScheduleConfig {
@@ -112,6 +124,7 @@ impl Default for ScheduleConfig {
             deadline: Duration::from_secs(120),
             jobs: 0,
             status_addr: None,
+            auth_key: None,
         }
     }
 }
@@ -799,14 +812,19 @@ fn fleet_metrics(sh: &Shared) -> Response {
         status: 200,
         content_type: "text/plain; version=0.0.4; charset=utf-8",
         body: body.into_bytes(),
+        extra_headers: Vec::new(),
     }
 }
 
 /// Dispatch one shard: `POST /shard/run` with the shard spec (plus the
 /// jobs hint) over the worker's pooled connection and return its memo
 /// export. Any transport error, timeout, or non-200 is the caller's
-/// cue to reassign. The dispatch histogram records transport-complete
-/// round trips only — a severed socket must not pollute the timeline.
+/// cue to reassign — except a `503` shed, which is retried in place
+/// with jittered exponential backoff (floored by the worker's
+/// `Retry-After`) up to [`SHED_RETRIES`] times: an over-cap worker is
+/// busy, not broken, and reassignment would just move the flood. The
+/// dispatch histogram records transport-complete round trips only — a
+/// severed socket must not pollute the timeline.
 fn run_shard_on(
     client: &mut http::Client,
     shard: &SweepSpec,
@@ -818,19 +836,39 @@ fn run_shard_on(
     if cfg.jobs > 0 {
         body.set("jobs", Json::Num(cfg.jobs as f64));
     }
-    DISPATCHES.inc();
+    let body = body.to_string();
     // Stamp the dispatch so the worker's root span joins this trace:
     // its record comes back via `GET /trace` with `remoteParent` set
     // to the dispatch span id, which is what fleet_trace flow-links.
     let header = trace::trace_header_value(trace::trace_id(), parent_span);
-    let t0 = Instant::now();
-    let (status, text) = client.call_with(
-        "POST",
-        "/shard/run",
-        &[(trace::TRACE_HEADER, header.as_str())],
-        &body.to_string(),
-    )?;
-    DISPATCH_NS.record_duration(t0.elapsed());
+    let mut headers: Vec<(&str, String)> = vec![(trace::TRACE_HEADER, header)];
+    if let Some(key) = &cfg.auth_key {
+        headers.push((
+            auth::AUTH_HEADER,
+            auth::sign(key, "POST", "/shard/run", body.as_bytes()),
+        ));
+    }
+    let header_refs: Vec<(&str, &str)> =
+        headers.iter().map(|(n, v)| (*n, v.as_str())).collect();
+    let mut shed_attempt = 0u32;
+    let (status, text) = loop {
+        DISPATCHES.inc();
+        let t0 = Instant::now();
+        let (status, text) = client.call_with("POST", "/shard/run", &header_refs, &body)?;
+        DISPATCH_NS.record_duration(t0.elapsed());
+        if status == 503 && shed_attempt < SHED_RETRIES {
+            let delay = http::backoff_delay(shed_attempt, client.last_retry_after());
+            eprintln!(
+                "scheduler: worker {addr} shed the dispatch (503); backing off \
+                 {delay:?} before retry {} of {SHED_RETRIES}",
+                shed_attempt + 1
+            );
+            std::thread::sleep(delay);
+            shed_attempt += 1;
+            continue;
+        }
+        break (status, text);
+    };
     if status != 200 {
         let detail = json::parse(&text)
             .ok()

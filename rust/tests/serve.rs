@@ -15,13 +15,19 @@
 //! (f) every response carries the `Deepnvm-Api-Version` header, every
 //!     4xx/5xx body carries the typed `{"error": {code, kind,
 //!     message}}` envelope with a stable kind, and `/optimize` answers
-//!     a live search (and a typed 422 on an infeasible budget).
+//!     a live search (and a typed 422 on an infeasible budget);
+//! (g) with an auth key set, unsigned/tampered/wrong-key mutating
+//!     requests are typed 401s that leave the memo bit-identical, a
+//!     fully signed fleet exchange converges exactly like an open one,
+//!     and flooding past the accept-queue cap sheds with 503 +
+//!     `Retry-After` while the server stays live.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
 use deepnvm::analysis::scalability;
+use deepnvm::serve::auth;
 use deepnvm::serve::http::Server;
 use deepnvm::serve::routes::{self, ServerCtx};
 use deepnvm::serve::shard;
@@ -42,11 +48,22 @@ fn boot(memo: &'static Memo) -> Server {
     Server::bind("127.0.0.1:0", 2, move |req| routes::handle(&ctx, req)).unwrap()
 }
 
-/// Raw one-shot HTTP client: returns (status, body).
-fn request(server: &Server, method: &str, path: &str, body: &str) -> (u16, String) {
+/// Raw one-shot HTTP client: returns (status, body). With `tag`, the
+/// request carries an `X-Deepnvm-Auth` header.
+fn request_tagged(
+    server: &Server,
+    method: &str,
+    path: &str,
+    body: &str,
+    tag: Option<&str>,
+) -> (u16, String) {
     let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    let auth_line = match tag {
+        Some(t) => format!("{}: {t}\r\n", auth::AUTH_HEADER),
+        None => String::new(),
+    };
     let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n{auth_line}\r\n{body}",
         body.len()
     );
     s.write_all(req.as_bytes()).unwrap();
@@ -60,6 +77,10 @@ fn request(server: &Server, method: &str, path: &str, body: &str) -> (u16, Strin
         .unwrap();
     let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
     (status, body)
+}
+
+fn request(server: &Server, method: &str, path: &str, body: &str) -> (u16, String) {
+    request_tagged(server, method, path, body, None)
 }
 
 fn get(server: &Server, path: &str) -> (u16, String) {
@@ -507,6 +528,7 @@ fn loadgen_soaks_a_live_server_and_reports_quantiles() {
         optimize_weight: 1,
         hot_frac: Some(0.5),
         p99_ms: None,
+        auth_key: None,
     };
     let report = loadgen::run(&cfg).unwrap();
     assert!(report.requests > 0, "{report:?}");
@@ -645,4 +667,189 @@ fn typed_errors_and_api_version_over_live_http() {
             "area_max_mm2": 1e-9}"#,
     );
     assert_eq!((status, envelope(&text)), (422, (422, "infeasible".into())));
+}
+
+// ---------------------------------------------------------------- (g)
+// Hardening: authenticated exchange and bounded admission, end to end.
+
+fn boot_with_auth(memo: &'static Memo, key: &str) -> Server {
+    let ctx = Arc::new(ServerCtx::new(memo, 2).with_auth_key(Some(key.to_string())));
+    Server::bind("127.0.0.1:0", 2, move |req| routes::handle(&ctx, req)).unwrap()
+}
+
+#[test]
+fn unsigned_and_tampered_merges_are_401_and_leave_the_memo_bit_identical() {
+    let key = "fleet-secret";
+    let memo = leaked_memo();
+    let server = boot_with_auth(memo, key);
+
+    // A signed merge of a clean shard export is accepted...
+    let worker = Memo::new();
+    let export = shard::run_shard(
+        &SweepSpec::circuit_only(vec![MemTech::SttMram], vec![1]),
+        1,
+        &worker,
+    )
+    .unwrap()
+    .to_pretty();
+    let tag = auth::sign(key, "POST", "/memo/merge", export.as_bytes());
+    let (status, text) =
+        request_tagged(&server, "POST", "/memo/merge", &export, Some(&tag));
+    assert_eq!(status, 200, "{text}");
+    let j = json::parse(&text).unwrap();
+    assert!(j.get("accepted").unwrap().as_u64().unwrap() > 0, "{text}");
+
+    // ...and becomes the baseline every rejected merge is compared to.
+    // GET routes stay open: export needs no signature.
+    let (status, baseline) = get(&server, "/memo/export");
+    assert_eq!(status, 200);
+    let resident =
+        (memo.circuit_len(), memo.traffic_len(), memo.point_len());
+
+    // A second, disjoint export: valid content, three invalid ways in.
+    let export2 = shard::run_shard(
+        &SweepSpec::circuit_only(vec![MemTech::SotMram], vec![2]),
+        1,
+        &Memo::new(),
+    )
+    .unwrap()
+    .to_pretty();
+    let tag2 = auth::sign(key, "POST", "/memo/merge", export2.as_bytes());
+
+    // (1) unsigned
+    let (status, text) = post(&server, "/memo/merge", &export2);
+    assert_eq!((status, envelope(&text)), (401, (401, "unauthorized".into())), "{text}");
+    // (2) valid tag over a body that was then tampered with
+    let tampered = format!("{export2} ");
+    let (status, text) =
+        request_tagged(&server, "POST", "/memo/merge", &tampered, Some(&tag2));
+    assert_eq!((status, envelope(&text)), (401, (401, "unauthorized".into())), "{text}");
+    // (3) tag minted under the wrong key
+    let forged = auth::sign("not-the-key", "POST", "/memo/merge", export2.as_bytes());
+    let (status, text) =
+        request_tagged(&server, "POST", "/memo/merge", &export2, Some(&forged));
+    assert_eq!((status, envelope(&text)), (401, (401, "unauthorized".into())), "{text}");
+
+    // Zero entries merged by any of the three: the memo is bit-identical.
+    assert_eq!(
+        (memo.circuit_len(), memo.traffic_len(), memo.point_len()),
+        resident,
+        "a rejected merge must not change residency"
+    );
+    let (_, after) = get(&server, "/memo/export");
+    assert_eq!(after, baseline, "a rejected merge must leave the export bit-identical");
+
+    // The same document with its honest tag proves the rejections were
+    // about the signature, not the payload.
+    let (status, text) =
+        request_tagged(&server, "POST", "/memo/merge", &export2, Some(&tag2));
+    assert_eq!(status, 200, "{text}");
+
+    // /solve is gated the same way: unsigned 401, signed 200.
+    let solve = r#"{"tech": "stt", "capacity_mb": 1}"#;
+    let (status, text) = post(&server, "/solve", solve);
+    assert_eq!((status, envelope(&text)), (401, (401, "unauthorized".into())), "{text}");
+    let tag = auth::sign(key, "POST", "/solve", solve.as_bytes());
+    let (status, text) = request_tagged(&server, "POST", "/solve", solve, Some(&tag));
+    assert_eq!(status, 200, "{text}");
+}
+
+#[test]
+fn a_signed_fleet_exchange_converges_identically_to_an_open_one() {
+    // The same two-shard exchange, once over an open server and once
+    // over an authenticated one with every merge signed: the resident
+    // memos must export byte-for-byte the same entry counts and answer
+    // the full grid with zero solves either way.
+    let key = "fleet-secret";
+    let spec = SweepSpec::circuit_only(vec![MemTech::SttMram, MemTech::SotMram], vec![1, 2]);
+    let shards = shard::split_caps(&spec, 2);
+    assert_eq!(shards.len(), 2);
+    let exports: Vec<String> = shards
+        .iter()
+        .map(|s| shard::run_shard(s, 1, &Memo::new()).unwrap().to_pretty())
+        .collect();
+
+    let open_memo = leaked_memo();
+    let open = boot(open_memo);
+    for e in &exports {
+        assert_eq!(post(&open, "/memo/merge", e).0, 200);
+    }
+
+    let auth_memo = leaked_memo();
+    let authed = boot_with_auth(auth_memo, key);
+    for e in &exports {
+        let tag = auth::sign(key, "POST", "/memo/merge", e.as_bytes());
+        let (status, text) =
+            request_tagged(&authed, "POST", "/memo/merge", e, Some(&tag));
+        assert_eq!(status, 200, "{text}");
+    }
+
+    assert_eq!(open_memo.circuit_len(), auth_memo.circuit_len());
+    assert_eq!(open_memo.point_len(), auth_memo.point_len());
+    let body = r#"{"techs": ["stt", "sot"], "caps_mb": [1, 2], "dnns": []}"#;
+    let tag = auth::sign(key, "POST", "/sweep", body.as_bytes());
+    let (_, open_rows) = post(&open, "/sweep", body);
+    let (_, auth_rows) = request_tagged(&authed, "POST", "/sweep", body, Some(&tag));
+    let or = json::parse(&open_rows).unwrap();
+    let ar = json::parse(&auth_rows).unwrap();
+    assert_eq!(or.get("rows"), ar.get("rows"), "identical grids either way");
+    assert_eq!(ar.get("solves").unwrap().as_u64(), Some(0), "zero solves on replay");
+}
+
+#[test]
+fn floods_past_the_queue_cap_are_shed_and_the_routes_stack_stays_live() {
+    use std::time::Duration;
+
+    let memo = leaked_memo();
+    let ctx = Arc::new(ServerCtx::new(memo, 1));
+    // One worker, accept queue capped at 1: capacity for at most two
+    // admitted connections (one being served + one queued).
+    let server =
+        Server::bind_with("127.0.0.1:0", 1, Some(1), move |req| routes::handle(&ctx, req))
+            .unwrap();
+
+    // Flood with silent connections. An admitted one pins a worker (or
+    // a queue slot) inside the 30 s read timeout and stays mute within
+    // the probe window; a shed one answers 503 immediately.
+    let mut held: Vec<TcpStream> = Vec::new();
+    let mut shed_raw = None;
+    for _ in 0..20 {
+        let mut s = TcpStream::connect(server.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        let mut buf = String::new();
+        match s.read_to_string(&mut buf) {
+            Ok(_) if buf.starts_with("HTTP/1.1 503") => {
+                shed_raw = Some(buf);
+                break;
+            }
+            _ => held.push(s),
+        }
+    }
+    let raw = shed_raw.expect("flooding past the cap must shed a connection");
+
+    // The shed response is the full typed contract: 503, Retry-After,
+    // and the stable `overloaded` envelope kind.
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap();
+    assert!(head.contains("Retry-After: 1"), "{head}");
+    assert_eq!(envelope(body), (503, "overloaded".into()), "{body}");
+    // Queue stayed bounded: nothing past one in-flight plus one queued
+    // was ever admitted.
+    assert!(held.len() <= 2, "{} connections admitted past the cap", held.len());
+
+    // Freeing the flood frees the server: health and solve answer again.
+    drop(held);
+    assert_eq!(get(&server, "/healthz").0, 200);
+    let (status, text) =
+        post(&server, "/solve", r#"{"tech": "stt", "capacity_mb": 1}"#);
+    assert_eq!(status, 200, "{text}");
+
+    // The shed is scrape-visible on the shared registry.
+    let (status, text) = get(&server, "/metrics");
+    assert_eq!(status, 200);
+    let shed_line = text
+        .lines()
+        .find(|l| l.starts_with("deepnvm_http_shed_total"))
+        .unwrap_or_else(|| panic!("no shed counter in:\n{text}"));
+    let count: u64 = shed_line.split_whitespace().last().unwrap().parse().unwrap();
+    assert!(count >= 1, "{shed_line}");
 }
